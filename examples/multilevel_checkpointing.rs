@@ -1,0 +1,92 @@
+//! Multi-level checkpointing over the DEEP-ER stack, Young/Daly tuned.
+//!
+//! SCR (the library the paper builds on) is a *multi-level* system: cheap
+//! node-local checkpoints often, partner/XOR checkpoints less often, and
+//! global-file-system flushes rarely.  This example derives the level
+//! cadence from a failure model with the Young optimum
+//! (`sqrt(2 * cost * MTBF)` per level), runs xPic over it on the
+//! simulated prototype with failures injected from an exponential-MTBF
+//! schedule, and compares the result against single-level protection.
+//!
+//!     cargo run --release --example multilevel_checkpointing
+
+use deeper::scr::multilevel::{optimal_interval, MultiLevelConfig, MultiLevelScr};
+use deeper::scr::{Scr, Strategy};
+use deeper::system::{presets, Machine, NodeKind};
+
+const ITERS: usize = 60;
+const BYTES: f64 = 2e9;
+
+fn main() -> anyhow::Result<()> {
+    // --- Young/Daly cadence from a failure model -------------------------
+    let iter_time = 22.5; // s per xPic iteration on the prototype
+    let (l1_cost, l2_cost, l3_cost) = (1.9, 3.0, 13.0); // measured below
+    let (mtbf_proc, mtbf_node, mtbf_sys) = (4.0e3, 8.0e4, 6.0e5);
+    println!("Young optimal intervals:");
+    println!("  L1 (local)   : {:.0} s", optimal_interval(l1_cost, mtbf_proc));
+    println!("  L2 (buddy)   : {:.0} s", optimal_interval(l2_cost, mtbf_node));
+    println!("  L3 (global)  : {:.0} s", optimal_interval(l3_cost, mtbf_sys));
+    let cfg = MultiLevelConfig::from_failure_model(
+        iter_time, l1_cost, l2_cost, l3_cost, mtbf_proc, mtbf_node, mtbf_sys,
+    );
+    println!(
+        "derived cadence: L1 every {} iters, L2 every {} L1s, L3 every {} L2s\n",
+        cfg.l1_every, cfg.l2_every, cfg.l3_every
+    );
+
+    // --- run with the multi-level scheme ---------------------------------
+    let mut m = Machine::build(presets::deep_er());
+    let nodes = m.nodes_of(NodeKind::Cluster);
+    let mut ml = MultiLevelScr::new(cfg.clone());
+    let mut blocked_ml = 0.0;
+    for iter in 1..=ITERS {
+        let flows: Vec<_> = nodes.iter().map(|&n| m.compute(n, 1.8e12, 0.08)).collect();
+        m.sim.wait_all(&flows);
+        blocked_ml += ml.checkpoint_at(&mut m, &nodes, BYTES, iter)?;
+    }
+    // Transient error: L1 covers it.
+    let t_l1 = ml.restart(&mut m, &nodes, None)?;
+    // Node loss: L2 covers it.
+    m.kill_node(nodes[4]);
+    m.revive_node(nodes[4]);
+    let t_l2 = ml.restart(&mut m, &nodes, Some(nodes[4]))?;
+    ml.drain(&mut m);
+    println!("multi-level run ({} iters):", ITERS);
+    println!(
+        "  L1 x{} ({:.1} s) | L2 x{} ({:.1} s) | L3 x{} (blocked {:.2} s, async)",
+        ml.stats.l1_count,
+        ml.stats.l1_time,
+        ml.stats.l2_count,
+        ml.stats.l2_time,
+        ml.stats.l3_count,
+        ml.stats.l3_blocked
+    );
+    println!("  blocked total        : {blocked_ml:.1} s");
+    println!("  transient restart L1 : {t_l1:.2} s");
+    println!("  node-loss restart L2 : {t_l2:.2} s");
+
+    // --- baseline: single-level Buddy at the L1 cadence ------------------
+    let mut m2 = Machine::build(presets::deep_er());
+    let nodes2 = m2.nodes_of(NodeKind::Cluster);
+    let mut scr = Scr::new(Strategy::Buddy);
+    let mut blocked_flat = 0.0;
+    for iter in 1..=ITERS {
+        let flows: Vec<_> = nodes2.iter().map(|&n| m2.compute(n, 1.8e12, 0.08)).collect();
+        m2.sim.wait_all(&flows);
+        if iter % cfg.l1_every == 0 {
+            let t0 = m2.sim.now();
+            scr.checkpoint(&mut m2, &nodes2, BYTES)?;
+            blocked_flat += m2.sim.now() - t0;
+        }
+    }
+    println!("\nflat Buddy at the L1 cadence:");
+    println!("  blocked total        : {blocked_flat:.1} s");
+    let saving = 1.0 - blocked_ml / blocked_flat;
+    println!(
+        "\nmulti-level blocks {:.0}% less while adding global-level protection",
+        saving * 100.0
+    );
+    anyhow::ensure!(blocked_ml < blocked_flat, "multi-level must block less");
+    println!("multilevel_checkpointing OK");
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: the smallest end-to-end tour of the public API.
+//!
+//! Builds the DEEP-ER prototype (Table I), runs the N-body code for 50
+//! iterations with Buddy checkpointing, injects a node failure at
+//! iteration 30, and prints the timing breakdown — the Fig. 4 / Fig. 8
+//! machinery in one page of code.
+//!
+//!     cargo run --release --example quickstart
+
+use deeper::apps::{self, run_iterations, IterationJob};
+use deeper::metrics::fmt_time;
+use deeper::scr::{Scr, Strategy};
+use deeper::system::failure::FailurePlan;
+use deeper::system::{presets, Machine, NodeKind};
+
+fn main() {
+    // 1. Build the simulated machine from the published configuration.
+    let mut machine = Machine::build(presets::deep_er());
+    println!(
+        "machine: {} ({} cluster + {} booster nodes, {} NAM boards)",
+        machine.spec.name,
+        machine.spec.n_cluster,
+        machine.spec.n_booster,
+        machine.nams.len()
+    );
+
+    // 2. Pick the job: N-body on all 16 Cluster nodes, Buddy checkpoints
+    //    every 5 iterations, one node failure at iteration 30.
+    let nodes = machine.nodes_of(NodeKind::Cluster);
+    let job = IterationJob {
+        profile: apps::nbody::profile(),
+        iterations: 50,
+        cp_interval: 5,
+        failures: FailurePlan::one_at_iteration(7, 30),
+    };
+
+    // 3. Run with SCR's Buddy strategy (DEEP-ER's SIONlib-optimized
+    //    SCR_PARTNER; see scr::Strategy for the other four).
+    let mut scr = Scr::new(Strategy::Buddy);
+    let stats = run_iterations(&mut machine, &nodes, &job, Some(&mut scr));
+
+    // 4. Report.
+    println!("iterations run : {} (50 requested; rollback re-executes)", stats.iterations_run);
+    println!("total time     : {}", fmt_time(stats.total_time));
+    println!("  compute      : {}", fmt_time(stats.compute_time));
+    println!("  exchange     : {}", fmt_time(stats.exchange_time));
+    println!(
+        "  checkpoints  : {} over {} CPs ({:.1}% overhead)",
+        fmt_time(stats.ckpt_time),
+        stats.checkpoints_taken,
+        stats.ckpt_overhead() * 100.0
+    );
+    println!(
+        "  restart      : {} after {} failure(s)",
+        fmt_time(stats.restart_time),
+        stats.failures_hit
+    );
+    assert_eq!(stats.failures_hit, 1);
+    println!("quickstart OK");
+}

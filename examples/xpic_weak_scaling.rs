@@ -1,0 +1,67 @@
+//! xPic weak-scaling I/O study — the Fig. 6 + Fig. 7 scenarios as a
+//! configurable driver.
+//!
+//! Sweeps node counts on two testbeds:
+//! * QPACE3 (672x KNL): global BeeGFS vs BeeOND-on-RAM-disk (Fig. 6),
+//!   including the derived application-level speedup the paper quotes
+//!   as ~7x at full scale.
+//! * DEEP-ER Cluster: node-local NVMe vs node-local HDD (Fig. 7).
+//!
+//!     cargo run --release --example xpic_weak_scaling [-- --max-nodes 672]
+
+use deeper::apps::xpic;
+use deeper::beegfs::beeond::{concurrent_cache_write, concurrent_global_write, CacheDevice};
+use deeper::beegfs::{BeeOnd, CacheMode};
+use deeper::system::{presets, Machine};
+use deeper::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let max_nodes = args.get_usize("max-nodes", 672);
+
+    // ---------------- Fig. 6: QPACE3 ----------------
+    println!("== xPic on QPACE3: 10 GB/node, global BeeGFS vs BeeOND (RAM-disk) ==");
+    println!(
+        "{:>7} {:>14} {:>14} {:>12} {:>12}",
+        "nodes", "global s", "local s", "IO speedup", "app speedup"
+    );
+    let bytes = xpic::profile_qpace3().ckpt_bytes_per_node;
+    // Compute phase per I/O phase, from the xPic QPACE3 profile: the
+    // app-level speedup depends on how much compute amortizes the I/O.
+    let p = xpic::profile_qpace3();
+    let compute_phase = 10.0 * p.flops_per_iter_per_node / (2.5e12 * p.cpu_efficiency) * 0.031;
+    for &n in &[16usize, 32, 64, 128, 256, 512, 672] {
+        if n > max_nodes {
+            break;
+        }
+        let nodes: Vec<usize> = (0..n).collect();
+        let mut m1 = Machine::build(presets::qpace3().with_cluster_nodes(n));
+        let t_global = concurrent_global_write(&mut m1, &nodes, bytes);
+        let mut m2 = Machine::build(presets::qpace3().with_cluster_nodes(n));
+        let mut cache = BeeOnd::new(CacheDevice::RamDisk, CacheMode::Async);
+        let t_local = concurrent_cache_write(&mut m2, &mut cache, &nodes, bytes, 64);
+        let app_speedup = (compute_phase + t_global) / (compute_phase + t_local);
+        println!(
+            "{n:>7} {t_global:>14.3} {t_local:>14.3} {:>11.1}x {:>11.1}x",
+            t_global / t_local,
+            app_speedup
+        );
+    }
+
+    // ---------------- Fig. 7: DEEP-ER NVMe vs HDD ----------------
+    println!();
+    println!("== xPic on DEEP-ER Cluster: 8 GB, node-local NVMe vs HDD ==");
+    println!("{:>7} {:>12} {:>12} {:>10}", "nodes", "NVMe s", "HDD s", "speedup");
+    let bytes = xpic::profile_deep_er().ckpt_bytes_per_node;
+    for &n in &[1usize, 2, 4, 8, 16] {
+        let nodes: Vec<usize> = (0..n).collect();
+        let mut m1 = Machine::build(presets::deep_er());
+        let mut c1 = BeeOnd::new(CacheDevice::Nvme, CacheMode::Async);
+        let t_nvme = concurrent_cache_write(&mut m1, &mut c1, &nodes, bytes, 24);
+        let mut m2 = Machine::build(presets::deep_er());
+        let mut c2 = BeeOnd::new(CacheDevice::Hdd, CacheMode::Async);
+        let t_hdd = concurrent_cache_write(&mut m2, &mut c2, &nodes, bytes, 24);
+        println!("{n:>7} {t_nvme:>12.2} {t_hdd:>12.2} {:>9.1}x", t_hdd / t_nvme);
+    }
+    println!("xpic_weak_scaling OK");
+}

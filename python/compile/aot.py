@@ -1,0 +1,81 @@
+"""AOT compile path: lower every L2 entry point to HLO text + a manifest.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published ``xla`` 0.1.6 crate links) rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/README.md and gen_hlo.py.
+
+Outputs (under --out-dir, default ``artifacts/``):
+  <name>.hlo.txt   — one per entry point in model.aot_entry_points()
+  manifest.json    — input/output shapes+dtypes per artifact, consumed by
+                     rust/src/runtime to marshal PJRT literals.
+
+Run via ``make artifacts`` (a no-op when inputs are unchanged).  This is the
+only place Python runs; the rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+_DTYPE_NAMES = {"float32": "f32", "int32": "i32", "float64": "f64", "int64": "i64"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple, even for single-output functions)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(aval) -> dict:
+    dtype = _DTYPE_NAMES.get(str(aval.dtype), str(aval.dtype))
+    return {"shape": list(aval.shape), "dtype": dtype}
+
+
+def lower_all(out_dir: pathlib.Path) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for name, fn, example_args in model.aot_entry_points():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        out_avals = lowered.out_info
+        flat_out, _ = jax.tree_util.tree_flatten(out_avals)
+        manifest["artifacts"].append({
+            "name": name,
+            "file": fname,
+            "inputs": [_spec(a) for a in example_args],
+            "outputs": [_spec(o) for o in flat_out],
+        })
+        print(f"  {fname}: {len(text)} chars, "
+              f"{len(example_args)} inputs -> {len(flat_out)} outputs")
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact directory (default: ../artifacts, i.e. repo root)")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    print(f"lowering {len(model.aot_entry_points())} entry points -> {out_dir}")
+    lower_all(out_dir)
+    print("aot done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: tiled all-pairs N-body gravity forces.
+
+This is the compute hot-spot of the DEEP-ER N-body co-design code (Fig. 4 of
+the paper).  The kernel follows the classic tile-the-interaction pattern,
+re-thought for the TPU memory hierarchy per DESIGN.md section
+"Hardware-Adaptation":
+
+  * i-particles are resident in VMEM (one BlockSpec tile per grid step),
+  * j-particles are streamed tile-by-tile with an accumulating fori_loop,
+  * the inner pairwise update is a dense f32 FMA pipeline (VPU/MXU friendly).
+
+``interpret=True`` is mandatory: real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute.  Correctness is pinned against
+``ref.nbody_forces_ref`` by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes (perf pass, EXPERIMENTS.md section Perf L1 iteration 1:
+# 128 -> 256 halves the number of full j-stream passes over HBM and
+# amortizes grid overhead; the (TILE_I, TILE_J, 3) pairwise temporaries
+# reach ~1 MB VMEM, ~6% of the 16 MB budget).
+TILE_I = 256
+TILE_J = 256
+
+
+def _nbody_kernel(pos_i_ref, pos_all_ref, mass_all_ref, acc_ref, *, eps2: float, tile_j: int):
+    """One grid step: forces on a tile of i-particles from all j-particles."""
+    pos_i = pos_i_ref[...]  # (TILE_I, 3) resident tile
+    n_j = pos_all_ref.shape[0]
+    n_tiles = n_j // tile_j
+
+    def body(jt, acc):
+        # Stream one j-tile from the full (HBM-resident) particle array.
+        pos_j = pl.load(pos_all_ref, (pl.dslice(jt * tile_j, tile_j), slice(None)))
+        mass_j = pl.load(mass_all_ref, (pl.dslice(jt * tile_j, tile_j),))
+        # Pairwise displacement (TILE_I, tile_j, 3): the dense FMA core.
+        d = pos_j[None, :, :] - pos_i[:, None, :]
+        r2 = jnp.sum(d * d, axis=-1) + eps2
+        inv_r = jax.lax.rsqrt(r2)
+        w = mass_j[None, :] * inv_r * inv_r * inv_r  # m_j / r^3
+        return acc + jnp.sum(w[:, :, None] * d, axis=1)
+
+    acc = jax.lax.fori_loop(0, n_tiles, body, jnp.zeros_like(pos_i))
+    acc_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("tile_i", "tile_j"))
+def nbody_forces(pos: jax.Array, mass: jax.Array, *, eps2: float = 1e-4,
+                 tile_i: int = TILE_I, tile_j: int = TILE_J) -> jax.Array:
+    """Gravitational accelerations ``a_i = sum_j m_j (x_j - x_i) / (r^2+eps2)^1.5``.
+
+    Args:
+      pos:  (N, 3) f32 particle positions; N must be a multiple of the tiles.
+      mass: (N,)   f32 particle masses.
+    Returns:
+      (N, 3) f32 accelerations.
+    """
+    n = pos.shape[0]
+    tile_i = min(tile_i, n)
+    tile_j = min(tile_j, n)
+    if n % tile_i or n % tile_j:
+        raise ValueError(f"N={n} must be a multiple of tile_i={tile_i} and tile_j={tile_j}")
+    kernel = functools.partial(_nbody_kernel, eps2=eps2, tile_j=tile_j)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tile_i,),
+        in_specs=[
+            pl.BlockSpec((tile_i, 3), lambda i: (i, 0)),       # resident i-tile
+            pl.BlockSpec((n, 3), lambda i: (0, 0)),            # streamed j-source
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_i, 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 3), pos.dtype),
+        interpret=True,  # CPU-PJRT execution; Mosaic path is TPU-only
+    )(pos, pos, mass)
+
+
+def nbody_forces_call(pos: jax.Array, mass: jax.Array, eps2: float = 1e-4) -> jax.Array:
+    """Non-jit wrapper used by model.py inside larger jitted graphs."""
+    n = pos.shape[0]
+    tile_i = min(TILE_I, n)
+    tile_j = min(TILE_J, n)
+    kernel = functools.partial(_nbody_kernel, eps2=eps2, tile_j=tile_j)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tile_i,),
+        in_specs=[
+            pl.BlockSpec((tile_i, 3), lambda i: (i, 0)),
+            pl.BlockSpec((n, 3), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_i, 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 3), pos.dtype),
+        interpret=True,
+    )(pos, pos, mass)

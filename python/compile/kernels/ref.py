@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness anchors: no Pallas, no tiling — straightforward
+dense jnp formulations of the same math.  pytest (python/tests/) pins every
+kernel against its oracle, and hypothesis sweeps shapes/seeds.  They are
+also what the L1 perf targets are measured against (>=0.5x of the pure-jnp
+reference's roofline, per DESIGN.md section 8).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def nbody_forces_ref(pos: jax.Array, mass: jax.Array, eps2: float = 1e-4) -> jax.Array:
+    """a_i = sum_j m_j (x_j - x_i) / (|x_j - x_i|^2 + eps2)^(3/2)."""
+    d = pos[None, :, :] - pos[:, None, :]            # (N, N, 3)
+    r2 = jnp.sum(d * d, axis=-1) + eps2              # (N, N)
+    inv_r3 = r2 ** -1.5
+    w = mass[None, :] * inv_r3
+    return jnp.sum(w[:, :, None] * d, axis=1)
+
+
+def xor_parity_ref(blocks: jax.Array) -> jax.Array:
+    """Fold (N, M) int32 blocks with XOR along axis 0."""
+    out = blocks[0]
+    for i in range(1, blocks.shape[0]):
+        out = out ^ blocks[i]
+    return out
+
+
+def boris_push_ref(x, v, e, b, *, qm: float, dt: float):
+    """Textbook Boris push; all arrays (N, 3) f32."""
+    half = qm * dt * 0.5
+    v_minus = v + half * e
+    t = half * b
+    v_prime = v_minus + jnp.cross(v_minus, t)
+    s = 2.0 / (1.0 + jnp.sum(t * t, axis=1, keepdims=True))
+    v_plus = v_minus + s * jnp.cross(v_prime, t)
+    v_new = v_plus + half * e
+    return x + dt * v_new, v_new
+
+
+def wave_step_ref(p, p_prev, c2, *, dt: float, dx: float):
+    """2nd-order acoustic wave step, zero Dirichlet boundary ring."""
+    coef = (dt / dx) ** 2
+    lap = (jnp.roll(p, 1, 0) + jnp.roll(p, -1, 0)
+           + jnp.roll(p, 1, 1) + jnp.roll(p, -1, 1) - 4.0 * p)
+    out = 2.0 * p - p_prev + coef * c2 * lap
+    out = out.at[0, :].set(0.0).at[-1, :].set(0.0)
+    out = out.at[:, 0].set(0.0).at[:, -1].set(0.0)
+    return out
+
+
+def dgtd_step_ref(e, pol, k, f, *, dt: float, alpha: float, beta: float):
+    """Element-local DGTD Maxwell-Debye update."""
+    ke = e @ k.T
+    e_new = e + dt * (ke + f - pol)
+    pol_new = pol + dt * (alpha * e - beta * pol)
+    return e_new, pol_new

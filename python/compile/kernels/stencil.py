@@ -1,0 +1,139 @@
+"""L1 Pallas kernels: FWI acoustic wave stencil and GERShWIN DGTD element update.
+
+FWI (paper Section IV, Fig. 10) propagates acoustic waves through a velocity
+model: a 2nd-order-in-time, 2nd-order-in-space scheme over a 2D pressure
+field,
+
+    p_next = 2 p - p_prev + (c dt / dx)^2 * lap(p)
+
+with homogeneous Dirichlet boundaries.  The stencil is expressed over a
+halo-padded VMEM-resident block: the interior block rows are the Pallas grid,
+each grid step loads its block plus a one-cell halo (overlapping BlockSpec
+reads are legal — blocks are read-only).
+
+GERShWIN (Fig. 5) is a Discontinuous Galerkin Time Domain solver for the 3D
+Maxwell-Debye system.  Its hot loop is element-local dense algebra: for each
+element, apply the stiffness/flux operator to the local dofs and integrate
+the Debye polarization ODE (auxiliary differential equation).  That maps onto
+the MXU as a batched (elements x dof x dof) matmul — exactly the shape the
+systolic array wants — plus an elementwise ADE update on the VPU:
+
+    e' = e + dt * (K e + f - p)
+    p' = p + dt * (alpha e - beta p)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_ROWS = 64   # interior rows per FWI grid step (perf pass: 32 -> 64)
+TILE_ELEMS = 64  # DGTD elements per grid step
+
+
+# --------------------------------------------------------------------------
+# FWI: 5-point acoustic wave stencil
+# --------------------------------------------------------------------------
+
+def _wave_kernel(p_ref, p_prev_ref, c2_ref, out_ref, *, coef: float, tile: int):
+    """Row-block r: read rows [r*T, r*T+T+2) of halo'd p, write T interior rows.
+
+    ``p_ref`` is the full (H, W) field; the halo'd row window is streamed in
+    with an explicit dynamic slice (this is the HBM->VMEM schedule: block r
+    overlaps its neighbours by one halo row on each side).
+    """
+    r = pl.program_id(0)
+    w = p_ref.shape[1]
+    p = pl.load(p_ref, (pl.dslice(r * tile, tile + 2), slice(None)))  # (T+2, W)
+    p_prev = p_prev_ref[...]  # (T, W) interior rows of this block
+    c2 = c2_ref[...]          # (T, W)
+    lap_i = (p[:-2, 1:-1] + p[2:, 1:-1] + p[1:-1, :-2] + p[1:-1, 2:]
+             - 4.0 * p[1:-1, 1:-1])
+    interior = (2.0 * p[1:-1, 1:-1] - p_prev[:, 1:-1]
+                + coef * c2[:, 1:-1] * lap_i)
+    out_ref[...] = jnp.pad(interior, ((0, 0), (1, 1)))  # zero Dirichlet in x
+
+
+def wave_step_call(p: jax.Array, p_prev: jax.Array, c2: jax.Array,
+                   *, dt: float, dx: float) -> jax.Array:
+    """One wave-equation step on an (H, W) f32 grid, Dirichlet boundaries.
+
+    ``c2`` is squared velocity per cell.  H-2 must be a multiple of
+    TILE_ROWS (the boundary rows stay zero and are written by padding).
+    """
+    h, w = p.shape
+    interior_rows = h - 2
+    tile = TILE_ROWS if interior_rows % TILE_ROWS == 0 else interior_rows
+    if interior_rows % tile:
+        raise ValueError(f"H-2={interior_rows} not divisible by tile={tile}")
+    coef = (dt / dx) ** 2
+
+    kernel = functools.partial(_wave_kernel, coef=coef, tile=tile)
+    interior = pl.pallas_call(
+        kernel,
+        grid=(interior_rows // tile,),
+        in_specs=[
+            pl.BlockSpec((h, w), lambda r: (0, 0)),  # full field; halo'd slice in-kernel
+            pl.BlockSpec((tile, w), lambda r: (r, 0)),
+            pl.BlockSpec((tile, w), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, w), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((interior_rows, w), p.dtype),
+        interpret=True,  # CPU-PJRT execution; Mosaic path is TPU-only
+    )(p, p_prev[1:-1], c2[1:-1])
+    return jnp.pad(interior, ((1, 1), (0, 0)))  # zero Dirichlet in y
+
+
+@functools.partial(jax.jit, static_argnames=("dt", "dx"))
+def wave_step(p, p_prev, c2, *, dt: float, dx: float):
+    return wave_step_call(p, p_prev, c2, dt=dt, dx=dx)
+
+
+# --------------------------------------------------------------------------
+# GERShWIN: DGTD Maxwell-Debye element update
+# --------------------------------------------------------------------------
+
+def _dgtd_kernel(e_ref, pol_ref, k_ref, f_ref, eo_ref, po_ref,
+                 *, dt: float, alpha: float, beta: float):
+    e = e_ref[...]      # (T, D) element dofs
+    pol = pol_ref[...]  # (T, D) Debye polarization dofs
+    k = k_ref[...]      # (D, D) shared element operator
+    f = f_ref[...]      # (T, D) flux/source term
+    # Batched dense operator application: the MXU-shaped core.
+    ke = jnp.dot(e, k.T, preferred_element_type=jnp.float32)
+    eo_ref[...] = e + dt * (ke + f - pol)
+    po_ref[...] = pol + dt * (alpha * e - beta * pol)
+
+
+def dgtd_step_call(e: jax.Array, pol: jax.Array, k: jax.Array, f: jax.Array,
+                   *, dt: float, alpha: float, beta: float) -> tuple[jax.Array, jax.Array]:
+    """One DGTD Maxwell-Debye step.
+
+    e, pol, f: (B, D) f32 per-element dof vectors; k: (D, D) shared operator.
+    Returns (e_new, pol_new).
+    """
+    b, d = e.shape
+    tile = min(TILE_ELEMS, b)
+    if b % tile:
+        raise ValueError(f"B={b} must be a multiple of tile={tile}")
+    kernel = functools.partial(_dgtd_kernel, dt=dt, alpha=alpha, beta=beta)
+    espec = pl.BlockSpec((tile, d), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(b // tile,),
+        in_specs=[espec, espec, pl.BlockSpec((d, d), lambda i: (0, 0)), espec],
+        out_specs=(espec, espec),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, d), e.dtype),
+            jax.ShapeDtypeStruct((b, d), pol.dtype),
+        ),
+        interpret=True,  # CPU-PJRT execution; Mosaic path is TPU-only
+    )(e, pol, k, f)
+
+
+@functools.partial(jax.jit, static_argnames=("dt", "alpha", "beta"))
+def dgtd_step(e, pol, k, f, *, dt: float, alpha: float, beta: float):
+    return dgtd_step_call(e, pol, k, f, dt=dt, alpha=alpha, beta=beta)

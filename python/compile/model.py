@@ -1,0 +1,188 @@
+"""L2: JAX step functions for the DEEP-ER co-design applications.
+
+Each application from the paper (Section IV) gets a jit-able step function
+composed from the L1 Pallas kernels in ``kernels/``:
+
+  * ``nbody_step``    — the N-body code used for the Fig. 4 checkpoint study
+                        (leapfrog over the tiled Pallas force kernel).
+  * ``xpic_step``     — xPic's particle solver + a compact moment/field
+                        update: gather E/B to particles (fused by XLA with
+                        the interpolation), Boris push (Pallas), charge/current
+                        deposit via segment-sum, damped field relaxation.
+  * ``fwi_step``      — FWI acoustic wave propagation (Pallas stencil), plus
+                        a scanned multi-step variant (scan keeps the lowered
+                        HLO small; see DESIGN.md section 8, L2 perf).
+  * ``gershwin_step`` — GERShWIN's DGTD Maxwell-Debye element update
+                        (Pallas batched dense operator + ADE).
+  * ``nam_parity``    — the NAM FPGA's XOR parity fold (Pallas), used by the
+                        NAM XOR checkpoint strategy.
+
+This module is **build-time only**: ``aot.py`` lowers every entry point to
+HLO text in ``artifacts/`` exactly once; the rust coordinator executes the
+artifacts through PJRT and Python never appears on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.nbody import nbody_forces_call
+from .kernels.pic import boris_push_call
+from .kernels.stencil import dgtd_step_call, wave_step_call
+from .kernels.xor_parity import xor_parity_call
+
+# --------------------------------------------------------------------------
+# N-body (Fig. 4 workload)
+# --------------------------------------------------------------------------
+
+NBODY_DT = 1e-3
+NBODY_EPS2 = 1e-4
+
+
+def nbody_step(pos: jax.Array, vel: jax.Array, mass: jax.Array):
+    """One leapfrog (kick-drift) step.  pos/vel (N,3) f32, mass (N,) f32."""
+    acc = nbody_forces_call(pos, mass, eps2=NBODY_EPS2)
+    vel = vel + NBODY_DT * acc
+    pos = pos + NBODY_DT * vel
+    return pos, vel
+
+
+def nbody_energy(pos: jax.Array, vel: jax.Array, mass: jax.Array):
+    """Total energy diagnostic (kinetic + softened potential); a scalar."""
+    kin = 0.5 * jnp.sum(mass * jnp.sum(vel * vel, axis=1))
+    d = pos[None, :, :] - pos[:, None, :]
+    r = jnp.sqrt(jnp.sum(d * d, axis=-1) + NBODY_EPS2)
+    pair = mass[None, :] * mass[:, None] / r
+    pot = -0.5 * (jnp.sum(pair) - jnp.sum(mass * mass) / jnp.sqrt(NBODY_EPS2))
+    return kin + pot
+
+
+# --------------------------------------------------------------------------
+# xPic (Figs. 6-9 workload): compact Moment-Implicit PIC mock-up
+# --------------------------------------------------------------------------
+
+XPIC_QM = -1.0       # charge/mass ratio
+XPIC_DT = 0.05
+XPIC_L = 1.0         # periodic box length
+XPIC_DECAY = 0.95    # field relaxation factor (stands in for the implicit solve)
+
+
+def _cell_index(x: jax.Array, grid: int) -> jax.Array:
+    """Nearest-cell index per particle, periodic box, flattened (G^3)."""
+    g = jnp.floor(x / XPIC_L * grid).astype(jnp.int32) % grid
+    return (g[:, 0] * grid + g[:, 1]) * grid + g[:, 2]
+
+
+def xpic_step(x: jax.Array, v: jax.Array, e_grid: jax.Array, b_grid: jax.Array):
+    """One xPic particle-solver + field-relaxation step.
+
+    x, v:          (P, 3) f32 particle positions (in [0, L)^3) and velocities.
+    e_grid/b_grid: (G^3, 3) f32 fields on the flattened periodic grid.
+    Returns (x', v', e_grid', rho): updated state + charge density (G^3,).
+    """
+    grid = round(int(e_grid.shape[0]) ** (1.0 / 3.0))
+    cells = _cell_index(x, grid)
+    # Gather fields to particles (XLA fuses gather + push prologue).
+    e_p = e_grid[cells]
+    b_p = b_grid[cells]
+    # L1 hot-spot: Boris push over VMEM-resident particle tiles.
+    x_new, v_new = boris_push_call(x, v, e_p, b_p, qm=XPIC_QM, dt=XPIC_DT)
+    x_new = jnp.mod(x_new, XPIC_L)
+    # Moment gathering: charge + current density per cell (segment-sum).
+    cells_new = _cell_index(x_new, grid)
+    n_cells = grid ** 3
+    rho = jax.ops.segment_sum(jnp.ones_like(x_new[:, 0]), cells_new, n_cells)
+    cur = jax.ops.segment_sum(v_new, cells_new, n_cells)
+    # Field solver stand-in: damped response to the gathered moments.
+    mean_rho = jnp.mean(rho)
+    e_new = XPIC_DECAY * e_grid - (1.0 - XPIC_DECAY) * (
+        cur / (1.0 + rho)[:, None] + (rho - mean_rho)[:, None] * 0.1
+    )
+    return x_new, v_new, e_new, rho
+
+
+# --------------------------------------------------------------------------
+# FWI (Fig. 10 workload)
+# --------------------------------------------------------------------------
+
+FWI_DT = 1e-3
+FWI_DX = 1e-2
+
+
+def fwi_step(p: jax.Array, p_prev: jax.Array, c2: jax.Array):
+    """One acoustic wave step; all (H, W) f32.  Returns (p', p)."""
+    p_new = wave_step_call(p, p_prev, c2, dt=FWI_DT, dx=FWI_DX)
+    return p_new, p
+
+
+def fwi_forward(p: jax.Array, p_prev: jax.Array, c2: jax.Array, steps: int = 8):
+    """``steps`` scanned wave steps (scan, not unroll: small HLO, no
+    recompilation per horizon — the L2 perf choice called out in DESIGN.md)."""
+
+    def body(carry, _):
+        p, p_prev = carry
+        return fwi_step(p, p_prev, c2), None
+
+    (p, p_prev), _ = jax.lax.scan(body, (p, p_prev), None, length=steps)
+    return p, p_prev
+
+
+# --------------------------------------------------------------------------
+# GERShWIN (Fig. 5 workload)
+# --------------------------------------------------------------------------
+
+GERSHWIN_DT = 1e-3
+GERSHWIN_ALPHA = 0.25   # Debye ADE: eps_d / tau
+GERSHWIN_BETA = 0.50    # Debye ADE: 1 / tau
+
+
+def gershwin_step(e: jax.Array, pol: jax.Array, k: jax.Array, f: jax.Array):
+    """One DGTD Maxwell-Debye step.  e/pol/f (B, D) f32, k (D, D) f32."""
+    return dgtd_step_call(e, pol, k, f, dt=GERSHWIN_DT,
+                          alpha=GERSHWIN_ALPHA, beta=GERSHWIN_BETA)
+
+
+# --------------------------------------------------------------------------
+# NAM parity engine (Fig. 9 workload)
+# --------------------------------------------------------------------------
+
+def nam_parity(blocks: jax.Array) -> jax.Array:
+    """XOR-fold (N, M) int32 checkpoint blocks into one (M,) parity row."""
+    return xor_parity_call(blocks)
+
+
+# --------------------------------------------------------------------------
+# Canonical AOT shapes (shared by aot.py and the pytest contracts)
+# --------------------------------------------------------------------------
+
+NBODY_N = 1024
+XPIC_P = 4096
+XPIC_G = 16
+FWI_H, FWI_W = 130, 128
+GERSHWIN_B, GERSHWIN_D = 512, 16
+NAM_N, NAM_M = 8, 65536
+
+
+def aot_entry_points():
+    """(name, fn, example_args) for every artifact aot.py emits."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    s = jax.ShapeDtypeStruct
+    return [
+        ("nbody_step", nbody_step,
+         (s((NBODY_N, 3), f32), s((NBODY_N, 3), f32), s((NBODY_N,), f32))),
+        ("nbody_energy", nbody_energy,
+         (s((NBODY_N, 3), f32), s((NBODY_N, 3), f32), s((NBODY_N,), f32))),
+        ("xpic_step", xpic_step,
+         (s((XPIC_P, 3), f32), s((XPIC_P, 3), f32),
+          s((XPIC_G ** 3, 3), f32), s((XPIC_G ** 3, 3), f32))),
+        ("fwi_step", fwi_step,
+         (s((FWI_H, FWI_W), f32), s((FWI_H, FWI_W), f32), s((FWI_H, FWI_W), f32))),
+        ("fwi_forward8", lambda p, pp, c2: fwi_forward(p, pp, c2, steps=8),
+         (s((FWI_H, FWI_W), f32), s((FWI_H, FWI_W), f32), s((FWI_H, FWI_W), f32))),
+        ("gershwin_step", gershwin_step,
+         (s((GERSHWIN_B, GERSHWIN_D), f32), s((GERSHWIN_B, GERSHWIN_D), f32),
+          s((GERSHWIN_D, GERSHWIN_D), f32), s((GERSHWIN_B, GERSHWIN_D), f32))),
+        ("nam_parity", nam_parity, (s((NAM_N, NAM_M), i32),)),
+    ]

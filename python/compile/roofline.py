@@ -1,0 +1,119 @@
+"""L1/L2 perf analysis: VMEM footprints, arithmetic intensity, HLO stats.
+
+interpret=True gives CPU-numpy timings only — NOT a TPU proxy — so the L1
+optimization loop is *structural* (DESIGN.md section 8): per kernel we report
+the VMEM-resident working set implied by the BlockSpecs, the arithmetic
+intensity (flop/byte moved through the fast tier), and the estimated
+MXU/VPU utilization class; per L2 artifact we count HLO ops and fusion
+breaks in the lowered module.
+
+Run:  cd python && python -m compile.roofline
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+
+from . import model
+from .kernels import nbody, pic, stencil, xor_parity
+
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes per TPU core
+
+
+def _mb(b: float) -> str:
+    return f"{b / 1024:.1f} KB" if b < 1024 * 1024 else f"{b / 1048576:.2f} MB"
+
+
+def kernel_reports():
+    """(name, vmem_bytes, flops_per_invocation, bytes_streamed, notes)."""
+    reports = []
+
+    # nbody: i-tile resident (TILE_I x 3 f32 x2 for acc) + streamed j-tile.
+    ti, tj, n = nbody.TILE_I, nbody.TILE_J, model.NBODY_N
+    vmem = (ti * 3 + ti * 3 + tj * 3 + tj) * 4 + ti * tj * 4 * 4  # incl. (ti,tj,3)+r2 temps
+    flops = 2.0 * 20 * n * n  # ~20 flop per pairwise interaction
+    streamed = (n * 3 + n) * 4.0 * (n / ti)  # j-stream re-read per i-tile
+    reports.append(("nbody_forces", vmem, flops, streamed,
+                    f"i-tile {ti} resident, j streamed in {tj}-tiles; FMA-dense (VPU/MXU-adjacent)"))
+
+    # boris push: 6 arrays x (TILE_P,3) resident, elementwise.
+    tp = pic.TILE_P
+    vmem = 6 * tp * 3 * 4
+    flops = 60.0 * model.XPIC_P
+    streamed = 4 * model.XPIC_P * 3 * 4.0
+    reports.append(("boris_push", vmem, flops, streamed,
+                    f"elementwise over {tp}-particle tiles; VPU bound, AI~{60/(16*3):.1f}"))
+
+    # wave stencil: halo'd row block + 3 interior blocks.
+    tr, w = stencil.TILE_ROWS, model.FWI_W
+    vmem = ((tr + 2) * w + 3 * tr * w) * 4
+    flops = 8.0 * model.FWI_H * model.FWI_W
+    streamed = 4 * model.FWI_H * model.FWI_W * 4.0
+    reports.append(("wave_step", vmem, flops, streamed,
+                    f"{tr}-row blocks + 1-row halo; 5-point stencil, AI~0.5 (memory bound)"))
+
+    # dgtd: element tile + shared (D,D) operator -> batched matmul on MXU.
+    te, d = stencil.TILE_ELEMS, model.GERSHWIN_D
+    vmem = (4 * te * d + d * d) * 4
+    flops = 2.0 * model.GERSHWIN_B * d * d + 6.0 * model.GERSHWIN_B * d
+    streamed = 5 * model.GERSHWIN_B * d * 4.0
+    reports.append(("dgtd_step", vmem, flops, streamed,
+                    f"(B={te})x({d}x{d}) batched matmul -> MXU; ADE update on VPU"))
+
+    # xor parity: (N, TILE_M) window.
+    tm, nn, mm = xor_parity.TILE_M, model.NAM_N, model.NAM_M
+    vmem = (nn * tm + tm) * 4
+    flops = 1.0 * nn * mm  # 1 int-op per word per block
+    streamed = (nn + 1) * mm * 4.0
+    reports.append(("xor_parity", vmem, flops, streamed,
+                    f"{nn}-deep XOR fold over {tm}-word lanes; int VPU at stream rate"))
+
+    return reports
+
+
+def hlo_stats(name: str, fn, example_args):
+    """Op-count + fusion stats of the lowered HLO for one L2 entry point."""
+    lowered = jax.jit(fn).lower(*example_args)
+    from .aot import to_hlo_text
+
+    text = to_hlo_text(lowered)
+    ops = re.findall(r"^\s*(?:ROOT\s+)?%?[\w.-]+\s*=\s*\S+\s+(\w+)\(", text, re.M)
+    n_fusion = sum(1 for o in ops if o == "fusion")
+    n_while = sum(1 for o in ops if o == "while")
+    n_transpose = sum(1 for o in ops if o == "transpose")
+    n_copy = sum(1 for o in ops if o == "copy")
+    return {
+        "name": name,
+        "total_ops": len(ops),
+        "fusions": n_fusion,
+        "while_loops": n_while,
+        "transposes": n_transpose,
+        "copies": n_copy,
+        "chars": len(text),
+    }
+
+
+def main() -> None:
+    print("== L1: Pallas kernel working sets (VMEM budget 16 MB/core) ==")
+    print(f"{'kernel':<14} {'VMEM':>10} {'util':>6} {'flops/call':>12} {'AI f/B':>7}  notes")
+    for name, vmem, flops, streamed, notes in kernel_reports():
+        util = vmem / VMEM_BUDGET * 100
+        ai = flops / streamed
+        print(f"{name:<14} {_mb(vmem):>10} {util:>5.1f}% {flops:>12.2e} {ai:>7.2f}  {notes}")
+        assert vmem < VMEM_BUDGET, f"{name} exceeds VMEM budget"
+
+    print()
+    print("== L2: lowered HLO structure ==")
+    print(f"{'artifact':<16} {'ops':>5} {'fusion':>7} {'while':>6} {'transp':>7} {'copy':>5} {'chars':>7}")
+    for name, fn, args in model.aot_entry_points():
+        st = hlo_stats(name, fn, args)
+        print(
+            f"{st['name']:<16} {st['total_ops']:>5} {st['fusions']:>7} "
+            f"{st['while_loops']:>6} {st['transposes']:>7} {st['copies']:>5} {st['chars']:>7}"
+        )
+
+
+if __name__ == "__main__":
+    main()

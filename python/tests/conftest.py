@@ -1,0 +1,7 @@
+"""Make `compile.*` importable regardless of pytest's invocation cwd
+(the CI entry point runs `pytest python/tests/` from the repo root)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))

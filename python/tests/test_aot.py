@@ -1,0 +1,55 @@
+"""AOT pipeline contracts: manifest consistency, HLO text parseability."""
+
+import json
+import pathlib
+
+import pytest
+
+from compile import aot, model
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = ART / "manifest.json"
+    if not path.exists():
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    return json.loads(path.read_text())
+
+
+def test_manifest_covers_all_entry_points(manifest):
+    names = {a["name"] for a in manifest["artifacts"]}
+    expected = {name for name, _, _ in model.aot_entry_points()}
+    assert names == expected
+
+
+def test_manifest_format_is_hlo_text(manifest):
+    assert manifest["format"] == "hlo-text"
+
+
+def test_artifact_files_exist_and_look_like_hlo(manifest):
+    for a in manifest["artifacts"]:
+        path = ART / a["file"]
+        assert path.exists(), a["file"]
+        head = path.read_text()[:200]
+        assert "HloModule" in head, f"{a['file']} does not look like HLO text"
+
+
+def test_manifest_specs_match_entry_points(manifest):
+    by_name = {a["name"]: a for a in manifest["artifacts"]}
+    for name, _, example_args in model.aot_entry_points():
+        entry = by_name[name]
+        assert len(entry["inputs"]) == len(example_args), name
+        for spec, arg in zip(entry["inputs"], example_args):
+            assert spec["shape"] == list(arg.shape), name
+            assert spec["dtype"] in ("f32", "i32"), name
+
+
+def test_lower_all_roundtrip(tmp_path):
+    """Re-lowering into a temp dir reproduces the same artifact set."""
+    man = aot.lower_all(tmp_path)
+    assert (tmp_path / "manifest.json").exists()
+    for a in man["artifacts"]:
+        assert (tmp_path / a["file"]).exists()
+        assert len(a["outputs"]) >= 1

@@ -1,0 +1,108 @@
+"""L2 contracts: app step functions — shapes, dtypes, physics sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def test_nbody_step_shapes():
+    n = model.NBODY_N
+    pos = jax.random.normal(jax.random.PRNGKey(0), (n, 3), jnp.float32)
+    vel = jnp.zeros((n, 3), jnp.float32)
+    mass = jnp.ones((n,), jnp.float32)
+    p2, v2 = jax.jit(model.nbody_step)(pos, vel, mass)
+    assert p2.shape == (n, 3) and v2.shape == (n, 3)
+    assert p2.dtype == jnp.float32
+
+
+def test_nbody_energy_drift_small():
+    """Leapfrog on a small cloud: relative energy drift stays tiny over 20 steps."""
+    n = 128
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    pos = jax.random.normal(ks[0], (n, 3), jnp.float32) * 2.0
+    vel = jax.random.normal(ks[1], (n, 3), jnp.float32) * 0.05
+    mass = jnp.full((n,), 1.0 / n, jnp.float32)
+    e0 = float(model.nbody_energy(pos, vel, mass))
+    step = jax.jit(model.nbody_step)
+    for _ in range(20):
+        pos, vel = step(pos, vel, mass)
+    e1 = float(model.nbody_energy(pos, vel, mass))
+    assert np.isfinite(e1)
+    assert abs(e1 - e0) < 0.05 * abs(e0) + 1e-3
+
+
+def test_xpic_step_contract():
+    p, g = model.XPIC_P, model.XPIC_G
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    x = jax.random.uniform(ks[0], (p, 3), jnp.float32)
+    v = jax.random.normal(ks[1], (p, 3), jnp.float32) * 0.01
+    e = jax.random.normal(ks[2], (g**3, 3), jnp.float32) * 0.1
+    b = jnp.zeros((g**3, 3), jnp.float32)
+    x2, v2, e2, rho = jax.jit(model.xpic_step)(x, v, e, b)
+    assert x2.shape == (p, 3) and v2.shape == (p, 3)
+    assert e2.shape == (g**3, 3) and rho.shape == (g**3,)
+    # Particles stay in the periodic box.
+    xa = np.asarray(x2)
+    assert (xa >= 0).all() and (xa < model.XPIC_L).all()
+    # Charge conservation: every particle lands in exactly one cell.
+    np.testing.assert_allclose(float(jnp.sum(rho)), p, rtol=1e-6)
+
+
+def test_xpic_field_bounded():
+    """Repeated steps with the damped field solver must not blow up."""
+    p, g = 1024, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    x = jax.random.uniform(ks[0], (p, 3), jnp.float32)
+    v = jax.random.normal(ks[1], (p, 3), jnp.float32) * 0.01
+    e = jax.random.normal(ks[2], (g**3, 3), jnp.float32) * 0.1
+    b = jnp.zeros((g**3, 3), jnp.float32)
+    step = jax.jit(model.xpic_step)
+    for _ in range(25):
+        x, v, e, rho = step(x, v, e, b)
+    assert np.isfinite(np.asarray(e)).all()
+    assert float(jnp.max(jnp.abs(e))) < 100.0
+
+
+def test_fwi_step_and_forward_consistent():
+    h, w = model.FWI_H, model.FWI_W
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    p = jax.random.normal(ks[0], (h, w), jnp.float32)
+    p = p.at[0].set(0).at[-1].set(0).at[:, 0].set(0).at[:, -1].set(0)
+    p_prev = p * 0.9
+    c2 = jnp.ones((h, w), jnp.float32)
+    # forward8 == step applied 8 times.
+    pf, pf_prev = jax.jit(lambda a, b, c: model.fwi_forward(a, b, c, steps=8))(p, p_prev, c2)
+    ps, ps_prev = p, p_prev
+    step = jax.jit(model.fwi_step)
+    for _ in range(8):
+        ps, ps_prev = step(ps, ps_prev, c2)
+    np.testing.assert_allclose(np.asarray(pf), np.asarray(ps), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(pf_prev), np.asarray(ps_prev), rtol=1e-4, atol=1e-5)
+
+
+def test_gershwin_step_shapes():
+    b, d = model.GERSHWIN_B, model.GERSHWIN_D
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    e = jax.random.normal(ks[0], (b, d), jnp.float32)
+    pol = jax.random.normal(ks[1], (b, d), jnp.float32)
+    k = jax.random.normal(ks[2], (d, d), jnp.float32) / d
+    f = jax.random.normal(ks[3], (b, d), jnp.float32)
+    e2, p2 = jax.jit(model.gershwin_step)(e, pol, k, f)
+    assert e2.shape == (b, d) and p2.shape == (b, d)
+
+
+def test_nam_parity_matches_numpy():
+    n, m = model.NAM_N, 4096
+    blocks = jax.random.randint(jax.random.PRNGKey(6), (n, m), -2**31, 2**31 - 1, jnp.int32)
+    got = np.asarray(jax.jit(model.nam_parity)(blocks))
+    want = np.bitwise_xor.reduce(np.asarray(blocks), axis=0)
+    assert (got == want).all()
+
+
+def test_aot_entry_points_traceable():
+    """Every AOT entry point lowers without error at its canonical shapes."""
+    for name, fn, example_args in model.aot_entry_points():
+        lowered = jax.jit(fn).lower(*example_args)
+        assert lowered is not None, name

@@ -1,0 +1,71 @@
+"""L1 correctness: tiled Pallas N-body forces vs the dense jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import nbody, ref
+
+
+def _cloud(n, seed=0):
+    kp, km = jax.random.split(jax.random.PRNGKey(seed))
+    pos = jax.random.normal(kp, (n, 3), jnp.float32)
+    mass = jnp.abs(jax.random.normal(km, (n,), jnp.float32)) + 0.1
+    return pos, mass
+
+
+def test_matches_ref_canonical():
+    pos, mass = _cloud(512)
+    got = nbody.nbody_forces(pos, mass)
+    want = ref.nbody_forces_ref(pos, mass)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_single_tile():
+    """N == tile size: grid of one."""
+    pos, mass = _cloud(128)
+    got = nbody.nbody_forces(pos, mass)
+    want = ref.nbody_forces_ref(pos, mass)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_rejects_non_multiple():
+    # 300 > TILE (so no clamping) and not a multiple of it.
+    pos, mass = _cloud(300)
+    with pytest.raises(ValueError, match="multiple"):
+        nbody.nbody_forces(pos, mass)
+
+
+def test_two_body_antisymmetry():
+    """Equal masses: forces are equal and opposite (momentum conservation)."""
+    pos = jnp.array([[0.0, 0.0, 0.0], [1.0, 0.0, 0.0]], jnp.float32)
+    pos = jnp.tile(pos, (64, 1))  # pad to a tile multiple with pairs
+    mass = jnp.ones((128,), jnp.float32)
+    acc = nbody.nbody_forces(pos, mass)
+    total = jnp.sum(acc * mass[:, None], axis=0)
+    np.testing.assert_allclose(np.asarray(total), np.zeros(3), atol=1e-2)
+
+
+def test_symmetric_cloud_zero_net_force():
+    """Momentum conservation on a random cloud: sum_i m_i a_i == 0."""
+    pos, mass = _cloud(256, seed=3)
+    acc = nbody.nbody_forces(pos, mass)
+    net = jnp.sum(acc * mass[:, None], axis=0)
+    scale = jnp.sum(jnp.abs(acc * mass[:, None]))
+    assert float(jnp.linalg.norm(net)) < 1e-4 * float(scale) + 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_tiles=st.integers(min_value=1, max_value=4),
+    tile=st.sampled_from([64, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_shapes(n_tiles, tile, seed):
+    n = n_tiles * tile
+    pos, mass = _cloud(n, seed=seed % 1000)
+    got = nbody.nbody_forces(pos, mass, tile_i=tile, tile_j=tile)
+    want = ref.nbody_forces_ref(pos, mass)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=5e-4)

@@ -1,0 +1,66 @@
+"""L1 correctness: Boris push kernel vs oracle + physical invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pic, ref
+
+
+def _state(n, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.uniform(ks[0], (n, 3), jnp.float32)
+    v = jax.random.normal(ks[1], (n, 3), jnp.float32) * 0.1
+    e = jax.random.normal(ks[2], (n, 3), jnp.float32)
+    b = jax.random.normal(ks[3], (n, 3), jnp.float32)
+    return x, v, e, b
+
+
+def test_matches_ref():
+    x, v, e, b = _state(1024)
+    got_x, got_v = pic.boris_push(x, v, e, b, qm=-1.0, dt=0.01)
+    want_x, want_v = ref.boris_push_ref(x, v, e, b, qm=-1.0, dt=0.01)
+    np.testing.assert_allclose(np.asarray(got_x), np.asarray(want_x), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(want_v), rtol=1e-6, atol=1e-6)
+
+
+def test_pure_magnetic_preserves_speed():
+    """E=0: the Boris rotation must conserve |v| exactly (to fp rounding)."""
+    x, v, _, b = _state(512, seed=2)
+    e = jnp.zeros_like(v)
+    _, v_new = pic.boris_push(x, v, e, b, qm=-1.0, dt=0.05)
+    s0 = np.linalg.norm(np.asarray(v), axis=1)
+    s1 = np.linalg.norm(np.asarray(v_new), axis=1)
+    np.testing.assert_allclose(s1, s0, rtol=1e-5)
+
+
+def test_zero_fields_is_free_drift():
+    x, v, _, _ = _state(256, seed=3)
+    zeros = jnp.zeros_like(v)
+    x_new, v_new = pic.boris_push(x, v, zeros, zeros, qm=-1.0, dt=0.25)
+    np.testing.assert_allclose(np.asarray(v_new), np.asarray(v), rtol=1e-7)
+    np.testing.assert_allclose(np.asarray(x_new), np.asarray(x + 0.25 * v), rtol=1e-6)
+
+
+def test_zero_dt_is_identity():
+    x, v, e, b = _state(256, seed=4)
+    x_new, v_new = pic.boris_push(x, v, e, b, qm=-1.0, dt=0.0)
+    np.testing.assert_allclose(np.asarray(x_new), np.asarray(x))
+    np.testing.assert_allclose(np.asarray(v_new), np.asarray(v))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_tiles=st.integers(min_value=1, max_value=4),
+    qm=st.floats(min_value=-5.0, max_value=5.0, allow_nan=False),
+    dt=st.floats(min_value=0.0, max_value=0.2, allow_nan=False),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_hypothesis_push(n_tiles, qm, dt, seed):
+    n = n_tiles * 256
+    x, v, e, b = _state(n, seed=seed)
+    got_x, got_v = pic.boris_push(x, v, e, b, qm=qm, dt=dt)
+    want_x, want_v = ref.boris_push_ref(x, v, e, b, qm=qm, dt=dt)
+    np.testing.assert_allclose(np.asarray(got_x), np.asarray(want_x), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(want_v), rtol=1e-4, atol=1e-5)

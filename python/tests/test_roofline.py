@@ -1,0 +1,46 @@
+"""Perf-contract tests: VMEM budgets and HLO structure stay within the
+bounds recorded in EXPERIMENTS.md §Perf (regression guard for the
+tiling choices of the L1 optimization pass)."""
+
+import pytest
+
+from compile import roofline
+
+
+def test_all_kernels_fit_vmem_budget():
+    for name, vmem, _flops, _streamed, _notes in roofline.kernel_reports():
+        assert vmem < roofline.VMEM_BUDGET, f"{name}: {vmem} bytes"
+
+
+def test_nbody_is_compute_bound():
+    reports = {r[0]: r for r in roofline.kernel_reports()}
+    _, _, flops, streamed, _ = reports["nbody_forces"]
+    ai = flops / streamed
+    assert ai > 100.0, f"nbody arithmetic intensity regressed: {ai}"
+
+
+def test_wave_is_memory_bound():
+    reports = {r[0]: r for r in roofline.kernel_reports()}
+    _, _, flops, streamed, _ = reports["wave_step"]
+    ai = flops / streamed
+    assert ai < 2.0, f"wave stencil AI should be memory-bound, got {ai}"
+
+
+@pytest.mark.parametrize("name", ["nbody_step", "fwi_forward8", "nam_parity"])
+def test_hlo_stays_compact(name):
+    from compile import model
+
+    entry = {n: (f, a) for n, f, a in model.aot_entry_points()}[name]
+    st = roofline.hlo_stats(name, entry[0], entry[1])
+    assert st["total_ops"] < 600, f"{name} HLO grew to {st['total_ops']} ops"
+    # scan (fwi_forward8) is the only construct allowed to carry a while.
+    if name != "fwi_forward8":
+        assert st["while_loops"] <= 2
+
+
+def test_no_gratuitous_copies():
+    from compile import model
+
+    for name, fn, args in model.aot_entry_points():
+        st = roofline.hlo_stats(name, fn, args)
+        assert st["copies"] <= 2, f"{name}: {st['copies']} copy ops"

@@ -1,0 +1,127 @@
+"""L1 correctness: FWI wave stencil and GERShWIN DGTD kernels vs oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, stencil
+
+
+# --------------------------------------------------------------------------
+# FWI wave stencil
+# --------------------------------------------------------------------------
+
+def _wave_state(h, w, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    p = jax.random.normal(ks[0], (h, w), jnp.float32)
+    # Zero the boundary ring so the Dirichlet conventions of kernel and
+    # oracle coincide for all interior cells.
+    p = p.at[0].set(0).at[-1].set(0).at[:, 0].set(0).at[:, -1].set(0)
+    p_prev = p * 0.95
+    c2 = jnp.abs(jax.random.normal(ks[2], (h, w), jnp.float32)) + 0.5
+    return p, p_prev, c2
+
+
+def test_wave_matches_ref():
+    p, p_prev, c2 = _wave_state(66, 64)
+    got = stencil.wave_step(p, p_prev, c2, dt=1e-3, dx=1e-2)
+    want = ref.wave_step_ref(p, p_prev, c2, dt=1e-3, dx=1e-2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_wave_boundary_stays_zero():
+    p, p_prev, c2 = _wave_state(34, 48, seed=1)
+    out = np.asarray(stencil.wave_step(p, p_prev, c2, dt=1e-3, dx=1e-2))
+    assert (out[0] == 0).all() and (out[-1] == 0).all()
+    assert (out[:, 0] == 0).all() and (out[:, -1] == 0).all()
+
+
+def test_wave_zero_field_stays_zero():
+    z = jnp.zeros((66, 32), jnp.float32)
+    c2 = jnp.ones_like(z)
+    out = np.asarray(stencil.wave_step(z, z, c2, dt=1e-3, dx=1e-2))
+    assert (out == 0).all()
+
+
+def test_wave_cfl_stable_pulse_decays_slowly():
+    """A centred Gaussian pulse under a CFL-stable step keeps bounded energy."""
+    h = w = 66
+    yy, xx = jnp.meshgrid(jnp.arange(h), jnp.arange(w), indexing="ij")
+    p = jnp.exp(-((yy - h / 2) ** 2 + (xx - w / 2) ** 2) / 20.0).astype(jnp.float32)
+    p = p.at[0].set(0).at[-1].set(0).at[:, 0].set(0).at[:, -1].set(0)
+    p_prev = p
+    c2 = jnp.ones_like(p)
+    e0 = float(jnp.sum(p * p))
+    for _ in range(20):
+        p, p_prev = stencil.wave_step(p, p_prev, c2, dt=5e-3, dx=1e-2), p
+    e1 = float(jnp.sum(p * p))
+    assert np.isfinite(e1) and e1 < 4.0 * e0
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    hb=st.integers(min_value=1, max_value=3),
+    w=st.sampled_from([32, 64]),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_hypothesis_wave(hb, w, seed):
+    h = hb * 32 + 2
+    p, p_prev, c2 = _wave_state(h, w, seed=seed)
+    got = stencil.wave_step(p, p_prev, c2, dt=1e-3, dx=1e-2)
+    want = ref.wave_step_ref(p, p_prev, c2, dt=1e-3, dx=1e-2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# GERShWIN DGTD
+# --------------------------------------------------------------------------
+
+def _dgtd_state(b, d, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    e = jax.random.normal(ks[0], (b, d), jnp.float32)
+    pol = jax.random.normal(ks[1], (b, d), jnp.float32) * 0.2
+    k = jax.random.normal(ks[2], (d, d), jnp.float32) / d
+    f = jax.random.normal(ks[3], (b, d), jnp.float32) * 0.1
+    return e, pol, k, f
+
+
+def test_dgtd_matches_ref():
+    e, pol, k, f = _dgtd_state(512, 16)
+    got_e, got_p = stencil.dgtd_step(e, pol, k, f, dt=1e-3, alpha=0.25, beta=0.5)
+    want_e, want_p = ref.dgtd_step_ref(e, pol, k, f, dt=1e-3, alpha=0.25, beta=0.5)
+    np.testing.assert_allclose(np.asarray(got_e), np.asarray(want_e), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(want_p), rtol=1e-5, atol=1e-6)
+
+
+def test_dgtd_zero_dt_identity():
+    e, pol, k, f = _dgtd_state(128, 8, seed=5)
+    got_e, got_p = stencil.dgtd_step(e, pol, k, f, dt=0.0, alpha=0.25, beta=0.5)
+    np.testing.assert_allclose(np.asarray(got_e), np.asarray(e))
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(pol))
+
+
+def test_dgtd_debye_relaxation():
+    """With K=0, f=0, e=0 the polarization decays geometrically at rate beta."""
+    b, d = 64, 8
+    pol = jnp.ones((b, d), jnp.float32)
+    zeros = jnp.zeros((b, d), jnp.float32)
+    k = jnp.zeros((d, d), jnp.float32)
+    _, pol_new = stencil.dgtd_step(zeros, pol, k, zeros, dt=0.1, alpha=0.25, beta=0.5)
+    np.testing.assert_allclose(np.asarray(pol_new), np.full((b, d), 1.0 - 0.1 * 0.5),
+                               rtol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    bb=st.integers(min_value=1, max_value=4),
+    d=st.sampled_from([4, 8, 16]),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_hypothesis_dgtd(bb, d, seed):
+    b = bb * 64
+    e, pol, k, f = _dgtd_state(b, d, seed=seed)
+    got_e, got_p = stencil.dgtd_step(e, pol, k, f, dt=1e-3, alpha=0.25, beta=0.5)
+    want_e, want_p = ref.dgtd_step_ref(e, pol, k, f, dt=1e-3, alpha=0.25, beta=0.5)
+    np.testing.assert_allclose(np.asarray(got_e), np.asarray(want_e), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(want_p), rtol=1e-4, atol=1e-5)

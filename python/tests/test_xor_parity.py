@@ -1,0 +1,77 @@
+"""L1 correctness: NAM parity kernel vs oracle + RAID-5 reconstruction property."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, xor_parity
+
+
+def _blocks(n, m, seed=0):
+    return jax.random.randint(jax.random.PRNGKey(seed), (n, m),
+                              -2**31, 2**31 - 1, jnp.int32)
+
+
+def test_matches_ref():
+    blocks = _blocks(8, 8192)
+    got = xor_parity.xor_parity(blocks)
+    want = ref.xor_parity_ref(blocks)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_two_blocks_is_plain_xor():
+    blocks = _blocks(2, 2048)
+    got = np.asarray(xor_parity.xor_parity(blocks))
+    want = np.asarray(blocks[0]) ^ np.asarray(blocks[1])
+    assert (got == want).all()
+
+
+def test_self_inverse():
+    """parity ^ parity == 0 — XOR folding is an involution."""
+    blocks = _blocks(4, 2048, seed=7)
+    parity = np.asarray(xor_parity.xor_parity(blocks))
+    assert ((parity ^ parity) == 0).all()
+
+
+def test_reconstruction_any_single_loss():
+    """The NAM XOR checkpoint property: any one lost block is recoverable
+    from the parity and the survivors (paper Section III-D1)."""
+    n, m = 6, 4096
+    blocks = _blocks(n, m, seed=3)
+    parity = np.asarray(xor_parity.xor_parity(blocks))
+    host = np.asarray(blocks)
+    for lost in range(n):
+        rebuilt = parity.copy()
+        for i in range(n):
+            if i != lost:
+                rebuilt ^= host[i]
+        assert (rebuilt == host[lost]).all(), f"block {lost} not reconstructed"
+
+
+def test_rejects_wrong_dtype():
+    blocks = jnp.zeros((4, 2048), jnp.float32)
+    with pytest.raises(TypeError, match="int32"):
+        xor_parity.xor_parity(blocks)
+
+
+def test_rejects_unaligned_m():
+    # 10000 > TILE_M (so no clamping) and not a multiple of it.
+    blocks = jnp.zeros((4, 10000), jnp.int32)
+    with pytest.raises(ValueError, match="multiple"):
+        xor_parity.xor_parity(blocks)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=16),
+    m_tiles=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_hypothesis_parity(n, m_tiles, seed):
+    m = m_tiles * 1024
+    blocks = _blocks(n, m, seed=seed)
+    got = xor_parity.xor_parity(blocks, tile_m=1024)
+    want = ref.xor_parity_ref(blocks)
+    assert (np.asarray(got) == np.asarray(want)).all()

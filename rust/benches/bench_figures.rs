@@ -1,0 +1,56 @@
+//! End-to-end benchmark: regenerate every paper exhibit and time the
+//! harness (host time; the printed figures themselves are virtual time).
+//! This is the `cargo bench` face of `repro bench all` — one bench per
+//! paper table AND figure, as the deliverables require.
+//!
+//!     cargo bench --bench bench_figures
+
+use deeper::bench as figs;
+use deeper::microbench::{black_box, Bench};
+
+fn main() {
+    let b = Bench::quick("figures");
+    b.run("table1", || {
+        black_box(figs::table1());
+    });
+    b.run("table2", || {
+        black_box(figs::table2());
+    });
+    b.run("table3", || {
+        black_box(figs::table3());
+    });
+    b.run("fig3_nam_rma", || {
+        black_box(figs::fig3());
+    });
+    b.run("fig4_nbody_ckpt_strategies", || {
+        black_box(figs::fig4());
+    });
+    b.run("fig5_sionlib_gershwin", || {
+        black_box(figs::fig5());
+    });
+    b.run("fig6_qpace3_beeond", || {
+        black_box(figs::fig6());
+    });
+    b.run("fig7_nvme_vs_hdd", || {
+        black_box(figs::fig7());
+    });
+    b.run("fig8_scr_partner", || {
+        black_box(figs::fig8());
+    });
+    b.run("fig9_dist_vs_nam_xor", || {
+        black_box(figs::fig9());
+    });
+    b.run("fig10_fwi_ompss", || {
+        black_box(figs::fig10());
+    });
+
+    // Whole-suite timing (the `make figures` budget: target < 2 min).
+    let b2 = Bench::quick("suite");
+    let stats = b2.run("all_exhibits", || {
+        black_box(figs::all());
+    });
+    println!(
+        "suite/all_exhibits single pass: {:.2} s host time",
+        stats.mean_s()
+    );
+}

@@ -1,0 +1,100 @@
+//! I/O-path ablations — the design choices DESIGN.md calls out:
+//! record-size sensitivity of SIONlib's win, BeeOND sync vs async mode,
+//! MDS service-time sensitivity (what the single-create collective open
+//! is actually worth), and stripe-width scaling of the global FS.
+//!
+//!     cargo bench --bench bench_io
+
+use deeper::beegfs::beeond::CacheDevice;
+use deeper::beegfs::{BeeOnd, CacheMode};
+use deeper::microbench::{black_box, Bench};
+use deeper::sionlib::{write_sionlib, write_task_local, TaskLocalWorkload};
+use deeper::system::{presets, Machine};
+
+fn main() {
+    // -- ablation: record size vs SIONlib speedup ------------------------
+    println!("-- ablation: SIONlib speedup vs record size (8 nodes x 48 tasks, 8 MB/task) --");
+    for records in [1u64, 8, 32, 96, 512] {
+        let w = TaskLocalWorkload {
+            nodes: 8,
+            tasks_per_node: 48,
+            bytes_per_task: 8e6,
+            records_per_task: records,
+        };
+        let mut m1 = Machine::build(presets::deep_er());
+        let base = write_task_local(&mut m1, &w);
+        let mut m2 = Machine::build(presets::deep_er());
+        let sion = write_sionlib(&mut m2, &w);
+        println!(
+            "  {:>7.0} KB records: task-local {:>7.2} s, sionlib {:>6.2} s, speedup {:>5.2}x",
+            8e6 / records as f64 / 1e3,
+            base.write_time,
+            sion.write_time,
+            base.write_time / sion.write_time
+        );
+    }
+
+    // -- ablation: BeeOND sync vs async ----------------------------------
+    println!("\n-- ablation: BeeOND cache mode (4 GB from one node) --");
+    for (label, mode) in [("sync", CacheMode::Sync), ("async", CacheMode::Async)] {
+        let mut m = Machine::build(presets::deep_er());
+        let mut cache = BeeOnd::new(CacheDevice::Nvme, mode);
+        let t0 = m.sim.now();
+        let visible = cache.write(&mut m, 0, 4e9, 4) - t0;
+        let durable = cache.drain(&mut m) - t0;
+        println!("  {label:>5}: visible {visible:>5.2} s, globally durable {durable:>5.2} s");
+    }
+
+    // -- ablation: MDS service time --------------------------------------
+    println!("\n-- ablation: MDS op cost vs task-local write time (8 nodes) --");
+    for mds_ms in [0.2f64, 0.8, 3.2] {
+        let mut spec = presets::deep_er();
+        spec.mds_op_cost = mds_ms * 1e-3;
+        let mut m = Machine::build(spec);
+        let w = TaskLocalWorkload {
+            nodes: 8,
+            tasks_per_node: 48,
+            bytes_per_task: 4e6,
+            records_per_task: 96,
+        };
+        let base = write_task_local(&mut m, &w);
+        println!("  mds={mds_ms:.1} ms: task-local {:.2} s", base.write_time);
+    }
+
+    // -- ablation: storage-server count (stripe width) -------------------
+    println!("\n-- ablation: OSS count vs 16-node aggregate write --");
+    for servers in [1usize, 2, 4, 8] {
+        let mut spec = presets::deep_er();
+        spec.n_storage_servers = servers;
+        let mut m = Machine::build(spec);
+        let nodes: Vec<usize> = (0..16).collect();
+        let t = deeper::beegfs::beeond::concurrent_global_write(&mut m, &nodes, 1e9);
+        println!(
+            "  {servers} OSS: {t:>6.2} s  ({:.2} GB/s aggregate)",
+            16.0 / t
+        );
+    }
+
+    // -- host-time micro: the I/O model itself ---------------------------
+    let b = Bench::quick("io_model");
+    b.run("sionlib_write_8x48", || {
+        let mut m = Machine::build(presets::deep_er());
+        let w = TaskLocalWorkload {
+            nodes: 8,
+            tasks_per_node: 48,
+            bytes_per_task: 4e6,
+            records_per_task: 96,
+        };
+        black_box(write_sionlib(&mut m, &w));
+    });
+    b.run("task_local_write_8x48", || {
+        let mut m = Machine::build(presets::deep_er());
+        let w = TaskLocalWorkload {
+            nodes: 8,
+            tasks_per_node: 48,
+            bytes_per_task: 4e6,
+            records_per_task: 96,
+        };
+        black_box(write_task_local(&mut m, &w));
+    });
+}

@@ -1,0 +1,76 @@
+//! Benchmarks of the SCR strategy write paths and the OmpSs executor —
+//! one bench per paper-evaluation component, plus the ablations DESIGN.md
+//! calls out (XOR group size, NAM board count, payload scaling).
+//!
+//!     cargo bench --bench bench_scr
+
+use deeper::microbench::{black_box, Bench};
+use deeper::ompss::{OmpssRuntime, Resilience};
+use deeper::scr::{Scr, Strategy};
+use deeper::system::failure::FailurePlan;
+use deeper::system::{presets, Machine, NodeKind};
+
+fn ckpt(strategy: Strategy, bytes: f64, group: usize) -> f64 {
+    let mut m = Machine::build(presets::deep_er());
+    let nodes = m.nodes_of(NodeKind::Cluster);
+    let mut scr = Scr::new(strategy).with_group(group);
+    scr.checkpoint(&mut m, &nodes, bytes).unwrap().blocked
+}
+
+fn main() {
+    let b = Bench::quick("scr");
+    for strat in Strategy::ALL {
+        b.run(strat.name(), || {
+            black_box(ckpt(strat, 2e9, 4));
+        });
+    }
+
+    // Ablation: XOR group size (storage vs time trade-off of DistXor).
+    println!("\n-- ablation: DistXor group size (2 GB/node, 16 nodes) --");
+    for group in [2usize, 4, 8, 16] {
+        let t = ckpt(Strategy::DistXor, 2e9, group);
+        let parity = 2e9 / (group as f64 - 1.0);
+        println!(
+            "  group={group:>2}: ckpt {t:.2} s virtual, parity/node {:.0} MB",
+            parity / 1e6
+        );
+    }
+
+    // Ablation: NAM board count (pull bandwidth aggregation).
+    println!("\n-- ablation: NAM board count (2 GB/node, 16 nodes) --");
+    for boards in [1usize, 2, 4] {
+        let mut spec = presets::deep_er();
+        spec.n_nam = boards;
+        let mut m = Machine::build(spec);
+        let nodes = m.nodes_of(NodeKind::Cluster);
+        let mut scr = Scr::new(Strategy::NamXor);
+        let r = scr.checkpoint(&mut m, &nodes, 2e9).unwrap();
+        println!(
+            "  boards={boards}: ckpt {:.2} s virtual, {:.1} GB/s",
+            r.blocked,
+            r.bandwidth / 1e9
+        );
+    }
+
+    // Ablation: payload scaling (Buddy).
+    println!("\n-- ablation: Buddy payload scaling --");
+    for gb in [1.0f64, 2.0, 4.0, 8.0] {
+        let t = ckpt(Strategy::Buddy, gb * 1e9, 4);
+        println!("  {gb:>4.0} GB/node: {t:.2} s virtual");
+    }
+
+    // OmpSs executor throughput (host-time cost of the task engine).
+    let graph = deeper::apps::fwi::task_graph(5, 4, 3e11);
+    let b2 = Bench::quick("ompss");
+    b2.run("fwi_5x4_clean", || {
+        let mut m = Machine::build(presets::marenostrum3());
+        let rt = OmpssRuntime::new(0, Resilience::ResilientOffload);
+        black_box(rt.execute(&mut m, &graph, &[1, 2, 3, 4], &FailurePlan::none()));
+    });
+    b2.run("fwi_5x4_with_failure", || {
+        let mut m = Machine::build(presets::marenostrum3());
+        let rt = OmpssRuntime::new(0, Resilience::ResilientOffload);
+        let fail = FailurePlan::one_at_iteration(0, deeper::apps::fwi::last_task(&graph));
+        black_box(rt.execute(&mut m, &graph, &[1, 2, 3, 4], &fail));
+    });
+}

@@ -1,0 +1,74 @@
+//! Micro-benchmarks of the DES engine hot path (the L3 profile target of
+//! DESIGN.md section 8: >= 1e6 events/s through the fluid scheduler).
+//!
+//!     cargo bench --bench bench_sim_core
+
+use deeper::microbench::{black_box, Bench};
+use deeper::sim::Sim;
+
+/// N flows on one shared link: stresses recompute_rates' tie-batching.
+fn shared_link(n: usize) {
+    let mut sim = Sim::new();
+    let link = sim.resource("l", 12.5e9);
+    let flows: Vec<_> = (0..n)
+        .map(|i| sim.flow(1e6 * (1 + i % 7) as f64, 1e-6 * (i % 3) as f64, &[link]))
+        .collect();
+    black_box(sim.wait_all(&flows));
+}
+
+/// N flows on N independent devices: the 672-node Fig. 6 local pattern —
+/// all bottlenecks tie at the same share and must batch-fix in one pass.
+fn independent_devices(n: usize) {
+    let mut sim = Sim::new();
+    let flows: Vec<_> = (0..n)
+        .map(|i| {
+            let dev = sim.resource(format!("d{i}"), 1.9e9);
+            sim.flow(1e9, 0.0, &[dev])
+        })
+        .collect();
+    black_box(sim.wait_all(&flows));
+}
+
+/// Incast: N senders through private NICs into one shared backend.
+fn incast(n: usize) {
+    let mut sim = Sim::new();
+    let backend = sim.resource("srv", 2.4e9);
+    let flows: Vec<_> = (0..n)
+        .map(|i| {
+            let nic = sim.resource(format!("nic{i}"), 12.5e9);
+            sim.flow(1e8, 1e-6, &[nic, backend])
+        })
+        .collect();
+    black_box(sim.wait_all(&flows));
+}
+
+/// Staggered arrivals force a rate recomputation per event.
+fn staggered_events(n: usize) {
+    let mut sim = Sim::new();
+    let link = sim.resource("l", 1e9);
+    let flows: Vec<_> = (0..n)
+        .map(|i| sim.flow(1e7, 1e-4 * i as f64, &[link]))
+        .collect();
+    black_box(sim.wait_all(&flows));
+}
+
+fn main() {
+    let b = Bench::new("sim_core");
+    b.run("shared_link_16", || shared_link(16));
+    b.run("shared_link_128", || shared_link(128));
+    b.run("independent_devices_128", || independent_devices(128));
+    b.run("independent_devices_672", || independent_devices(672));
+    b.run("incast_64", || incast(64));
+    let stats = b.run("staggered_events_512", || staggered_events(512));
+    // Events/s: each flow is >= 2 events (start, finish).
+    let eps = 1024.0 / stats.mean_s();
+    println!("sim_core/staggered events/s: {eps:.3e}");
+
+    let bq = Bench::quick("machine");
+    bq.run("build_deep_er", || {
+        black_box(deeper::system::Machine::build(deeper::system::presets::deep_er()));
+    });
+    bq.run("build_qpace3_672", || {
+        black_box(deeper::system::Machine::build(deeper::system::presets::qpace3()));
+    });
+}

@@ -1,0 +1,271 @@
+//! The iteration driver: compute + exchange + checkpoint + failure loop.
+//!
+//! This is the engine behind the Fig. 4 and Fig. 8 experiments: an
+//! application executes `iterations` bulk-synchronous steps on a node set;
+//! every `cp_interval` iterations SCR takes a checkpoint; a failure plan
+//! may kill a node at an iteration boundary, triggering PMD detection and
+//! an SCR restart that rolls the run back to the last checkpoint (or to
+//! iteration 0 if no usable checkpoint exists — the unprotected baseline).
+
+use super::AppProfile;
+use crate::psmpi::{Comm, Pmd};
+use crate::scr::Scr;
+use crate::sim::{FlowId, SimTime};
+use crate::system::failure::FailurePlan;
+use crate::system::Machine;
+
+/// Configuration of one driver run.
+#[derive(Debug, Clone)]
+pub struct IterationJob {
+    pub profile: AppProfile,
+    pub iterations: usize,
+    /// Checkpoint every `cp_interval` iterations; 0 disables checkpoints.
+    pub cp_interval: usize,
+    pub failures: FailurePlan,
+}
+
+/// Aggregated timing of a run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RunStats {
+    pub total_time: SimTime,
+    pub compute_time: SimTime,
+    pub exchange_time: SimTime,
+    pub ckpt_time: SimTime,
+    pub restart_time: SimTime,
+    /// Iterations executed, incl. re-executed ones after rollbacks.
+    pub iterations_run: usize,
+    pub checkpoints_taken: usize,
+    pub failures_hit: usize,
+}
+
+impl RunStats {
+    /// Fractional overhead of checkpointing vs compute+exchange.
+    pub fn ckpt_overhead(&self) -> f64 {
+        self.ckpt_time / (self.compute_time + self.exchange_time).max(1e-12)
+    }
+}
+
+/// Execute the iteration loop.  `scr` may be None (no checkpointing at
+/// all: the "w/o CP" bars of Fig. 8).
+pub fn run_iterations(
+    m: &mut Machine,
+    nodes: &[usize],
+    job: &IterationJob,
+    mut scr: Option<&mut Scr>,
+) -> RunStats {
+    assert!(!nodes.is_empty());
+    let mut stats = RunStats::default();
+    let t_start = m.sim.now();
+    let comm = Comm::of(nodes.to_vec());
+    let mut pmd = Pmd::new();
+
+    let mut iter = 0usize;
+    let mut last_cp_iter = 0usize;
+    let mut pending_failure: Option<usize> = None; // node to fail at iter k
+    let mut last_check_time = m.sim.now();
+
+    while iter < job.iterations {
+        // Failure injection at this iteration boundary?  Both plan kinds
+        // are honoured: iteration-keyed (the paper's targeted errors) and
+        // time-keyed (exponential-MTBF schedules) — time-keyed failures
+        // are observed at the boundary following their timestamp, which
+        // is when application-level checkpointing can react.
+        if let Some(f) = job.failures.failure_at_iteration(iter) {
+            if pending_failure.is_none() && stats.failures_hit < job.failures.at_iterations.len()
+            {
+                pending_failure = Some(nodes[f.node % nodes.len()]);
+            }
+        }
+        let now = m.sim.now();
+        if pending_failure.is_none() {
+            if let Some(f) = job.failures.failures_between(last_check_time, now).first() {
+                pending_failure = Some(nodes[f.node % nodes.len()]);
+            }
+        }
+        last_check_time = now;
+        if let Some(victim) = pending_failure.take() {
+            stats.failures_hit += 1;
+            m.kill_node(victim);
+            let t0 = m.sim.now();
+            pmd.detect_and_isolate(m, nodes);
+            m.revive_node(victim);
+            pmd.reinstate(victim);
+            match scr.as_deref_mut() {
+                Some(scr_ref) => {
+                    let failed = Some(victim);
+                    match scr_ref.restart(m, nodes, failed) {
+                        Ok(_) => {
+                            // Roll back to the last checkpointed iteration.
+                            iter = last_cp_iter;
+                        }
+                        Err(_) => {
+                            // No usable checkpoint: full restart.
+                            iter = 0;
+                            last_cp_iter = 0;
+                        }
+                    }
+                }
+                None => {
+                    // Unprotected: lose everything, start over.
+                    iter = 0;
+                    last_cp_iter = 0;
+                }
+            }
+            stats.restart_time += m.sim.now() - t0;
+            continue;
+        }
+
+        // Compute phase (all nodes in parallel).
+        let t0 = m.sim.now();
+        let flows: Vec<FlowId> = nodes
+            .iter()
+            .map(|&n| m.compute(n, job.profile.flops_per_iter_per_node, job.profile.cpu_efficiency))
+            .collect();
+        m.sim.wait_all(&flows);
+        stats.compute_time += m.sim.now() - t0;
+
+        // Halo/moment exchange.
+        if job.profile.halo_bytes > 0.0 && nodes.len() > 1 {
+            let t1 = m.sim.now();
+            comm.ring_exchange(m, job.profile.halo_bytes);
+            stats.exchange_time += m.sim.now() - t1;
+        }
+
+        iter += 1;
+        stats.iterations_run += 1;
+
+        // Checkpoint at interval boundaries.
+        if job.cp_interval > 0 && iter % job.cp_interval == 0 && iter < job.iterations {
+            if let Some(scr_ref) = scr.as_deref_mut() {
+                let t2 = m.sim.now();
+                scr_ref
+                    .checkpoint(m, nodes, job.profile.ckpt_bytes_per_node)
+                    .expect("checkpoint failed");
+                stats.ckpt_time += m.sim.now() - t2;
+                stats.checkpoints_taken += 1;
+                last_cp_iter = iter;
+            }
+        }
+    }
+
+    stats.total_time = m.sim.now() - t_start;
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::xpic;
+    use crate::scr::Strategy;
+    use crate::system::presets;
+
+    fn machine() -> Machine {
+        Machine::build(presets::deep_er())
+    }
+
+    fn fig8_job(cp: bool, fail: bool) -> IterationJob {
+        IterationJob {
+            profile: xpic::profile_deep_er(),
+            iterations: 100,
+            cp_interval: if cp { 10 } else { 0 },
+            failures: if fail {
+                FailurePlan::one_at_iteration(3, 60)
+            } else {
+                FailurePlan::none()
+            },
+        }
+    }
+
+    #[test]
+    fn clean_run_counts() {
+        let mut m = machine();
+        let nodes = m.nodes_of(crate::system::NodeKind::Cluster);
+        let mut scr = Scr::new(Strategy::Partner);
+        let stats = run_iterations(&mut m, &nodes, &fig8_job(true, false), Some(&mut scr));
+        assert_eq!(stats.iterations_run, 100);
+        assert_eq!(stats.checkpoints_taken, 9); // every 10, skipping the last
+        assert_eq!(stats.failures_hit, 0);
+    }
+
+    #[test]
+    fn fig8_overhead_band() {
+        // Paper: writing checkpoints costs ~8% on average.
+        let mut m1 = machine();
+        let nodes = m1.nodes_of(crate::system::NodeKind::Cluster);
+        let t_plain = run_iterations(&mut m1, &nodes, &fig8_job(false, false), None).total_time;
+        let mut m2 = machine();
+        let mut scr = Scr::new(Strategy::Partner);
+        let t_cp =
+            run_iterations(&mut m2, &nodes, &fig8_job(true, false), Some(&mut scr)).total_time;
+        let overhead = t_cp / t_plain - 1.0;
+        assert!((0.02..=0.20).contains(&overhead), "overhead={overhead:.3}");
+    }
+
+    #[test]
+    fn fig8_failure_savings_band() {
+        // Paper: with an error at iteration 60, SCR saves ~23% vs rerun.
+        let nodes: Vec<usize> = (0..16).collect();
+        let mut m1 = machine();
+        let t_unprot =
+            run_iterations(&mut m1, &nodes, &fig8_job(false, true), None).total_time;
+        let mut m2 = machine();
+        let mut scr = Scr::new(Strategy::Partner);
+        let t_prot =
+            run_iterations(&mut m2, &nodes, &fig8_job(true, true), Some(&mut scr)).total_time;
+        let saving = 1.0 - t_prot / t_unprot;
+        assert!((0.10..=0.40).contains(&saving), "saving={saving:.3}");
+    }
+
+    #[test]
+    fn unprotected_failure_reruns_everything() {
+        let mut m = machine();
+        let nodes: Vec<usize> = (0..4).collect();
+        let mut job = fig8_job(false, true);
+        job.iterations = 20;
+        job.failures = FailurePlan::one_at_iteration(0, 10);
+        let stats = run_iterations(&mut m, &nodes, &job, None);
+        assert_eq!(stats.failures_hit, 1);
+        assert_eq!(stats.iterations_run, 30); // 10 lost + 20 clean
+    }
+
+    #[test]
+    fn time_keyed_failures_from_mtbf_schedule() {
+        // An exponential-MTBF plan drives rollbacks through the driver.
+        let mut m = machine();
+        let nodes: Vec<usize> = (0..8).collect();
+        let mut job = fig8_job(true, false);
+        job.iterations = 30;
+        job.cp_interval = 5;
+        // MTBF chosen so a handful of failures land inside the run.
+        job.failures = crate::system::failure::FailurePlan::exponential(
+            nodes.len(),
+            20_000.0, // per-node MTBF (s) -> system rate ~1/2500 s
+            5_000.0,
+            42,
+        );
+        let n_failures = job.failures.at_times.len();
+        let mut scr = Scr::new(Strategy::Buddy);
+        let stats = run_iterations(&mut m, &nodes, &job, Some(&mut scr));
+        assert_eq!(stats.iterations_run >= 30, true);
+        assert!(stats.failures_hit <= n_failures);
+        if stats.failures_hit > 0 {
+            assert!(stats.restart_time > 0.0);
+        }
+    }
+
+    #[test]
+    fn protected_failure_rolls_back_to_last_cp() {
+        let mut m = machine();
+        let nodes: Vec<usize> = (0..4).collect();
+        let mut job = fig8_job(true, true);
+        job.iterations = 20;
+        job.cp_interval = 5;
+        job.failures = FailurePlan::one_at_iteration(1, 12);
+        let mut scr = Scr::new(Strategy::Buddy);
+        let stats = run_iterations(&mut m, &nodes, &job, Some(&mut scr));
+        assert_eq!(stats.failures_hit, 1);
+        // 12 before failure + (12-10)=2 re-run + 8 remaining = 22.
+        assert_eq!(stats.iterations_run, 22);
+        assert!(stats.restart_time > 0.0);
+    }
+}

@@ -1,0 +1,97 @@
+//! FWI: BSC's seismic Full Waveform Inversion code (Fig. 10 workload).
+//!
+//! Paper Section IV: seismic imaging by iterative inversion — several
+//! frequency cycles, each a set of forward/adjoint wave propagations per
+//! shot, until the velocity model converges.  In DEEP-ER, FWI is the
+//! OmpSs-offload showcase: the master offloads per-shot propagation tasks
+//! to workers; the Fig. 10 experiment injects an error *right before the
+//! end* of the run and compares no-resiliency (nearly doubles the
+//! runtime) against OmpSs resilient offload (~42% saving, <1% overhead).
+//!
+//! The real compute path is `fwi_step.hlo.txt` / `fwi_forward8.hlo.txt`:
+//! the Pallas acoustic wave stencil.
+
+use super::AppProfile;
+use crate::ompss::{Task, TaskGraph};
+
+/// Per-node data processed in the Fig. 10 runs (Table III).
+pub const DATA_PER_NODE: f64 = 1.0e9;
+
+/// Iteration-driver profile (used when FWI runs BSP-style, e.g. in the
+/// quickstart example).
+pub fn profile() -> AppProfile {
+    AppProfile {
+        name: "fwi",
+        flops_per_iter_per_node: 0.9e12,
+        cpu_efficiency: 0.18, // stencil with good cache blocking
+        ckpt_bytes_per_node: DATA_PER_NODE,
+        halo_bytes: 32e6,
+        io_tasks_per_node: 16,
+        io_records_per_task: 24,
+        artifact: "fwi_step",
+    }
+}
+
+/// Build the OmpSs task graph of one inversion: `cycles` frequency cycles
+/// in sequence; each cycle holds `shots` independent propagation tasks
+/// followed by one gradient-update task that depends on all of them.
+pub fn task_graph(cycles: usize, shots: usize, flops_per_shot: f64) -> TaskGraph {
+    let mut g = TaskGraph::new();
+    let mut prev_update: Option<usize> = None;
+    for c in 0..cycles {
+        let mut shot_ids = Vec::with_capacity(shots);
+        for s in 0..shots {
+            let deps = prev_update.map(|u| vec![u]).unwrap_or_default();
+            shot_ids.push(g.add(Task {
+                name: format!("c{c}-shot{s}"),
+                flops: flops_per_shot,
+                input_bytes: 200e6, // velocity model slice + shot data
+                output_bytes: 100e6, // partial gradient
+                deps,
+            }));
+        }
+        prev_update = Some(g.add(Task {
+            name: format!("c{c}-update"),
+            flops: flops_per_shot * 0.1,
+            input_bytes: 50e6,
+            output_bytes: 50e6,
+            deps: shot_ids,
+        }));
+    }
+    g
+}
+
+/// Task id of the last task (the Fig. 10 failure target: "an error
+/// occurring right before the end of the execution").
+pub fn last_task(g: &TaskGraph) -> usize {
+    g.tasks.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graph_shape() {
+        let g = task_graph(3, 4, 1e12);
+        assert_eq!(g.tasks.len(), 3 * (4 + 1));
+        let waves = g.waves();
+        assert_eq!(waves.len(), 6); // shots, update, shots, update, ...
+        assert_eq!(waves[0].len(), 4);
+        assert_eq!(waves[1].len(), 1);
+    }
+
+    #[test]
+    fn update_depends_on_all_shots() {
+        let g = task_graph(1, 5, 1e12);
+        let update = &g.tasks[5];
+        assert_eq!(update.deps.len(), 5);
+    }
+
+    #[test]
+    fn last_task_is_final_update() {
+        let g = task_graph(2, 3, 1e12);
+        assert_eq!(last_task(&g), 7);
+        assert!(g.tasks[last_task(&g)].name.ends_with("update"));
+    }
+}

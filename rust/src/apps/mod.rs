@@ -1,0 +1,61 @@
+//! The DEEP-ER co-design applications (paper Section IV).
+//!
+//! Each application contributes the workload shape its paper experiments
+//! need: per-iteration compute, checkpoint payload, I/O pattern, and (for
+//! FWI) an OmpSs task graph.  The *compute content* of each app exists
+//! twice: as a calibrated cost model driving the simulator (these
+//! modules), and as real JAX/Pallas kernels (python/compile/) whose AOT
+//! artifacts the e2e example executes through PJRT per iteration.
+
+pub mod driver;
+pub mod fwi;
+pub mod split;
+pub mod gershwin;
+pub mod nbody;
+pub mod portfolio;
+pub mod xpic;
+
+pub use driver::{run_iterations, IterationJob, RunStats};
+
+/// Cost/payload profile of an application run (one Table II/III column).
+#[derive(Debug, Clone)]
+pub struct AppProfile {
+    pub name: &'static str,
+    /// Compute per iteration per node, flops.
+    pub flops_per_iter_per_node: f64,
+    /// Achieved fraction of peak (PIC/stencil codes sit at 5-15%).
+    pub cpu_efficiency: f64,
+    /// Checkpoint payload per node, bytes ("Data per CP" in the paper).
+    pub ckpt_bytes_per_node: f64,
+    /// Halo/moment exchange per iteration per node, bytes.
+    pub halo_bytes: f64,
+    /// MPI processes per node doing task-local I/O.
+    pub io_tasks_per_node: usize,
+    /// Records per task in one I/O phase.
+    pub io_records_per_task: u64,
+    /// Name of the AOT artifact computing one step (e2e example).
+    pub artifact: &'static str,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_profiles_well_formed() {
+        for p in [
+            nbody::profile(),
+            xpic::profile_deep_er(),
+            xpic::profile_qpace3(),
+            xpic::profile_nam(),
+            gershwin::profile_p1(),
+            gershwin::profile_p3(),
+            fwi::profile(),
+        ] {
+            assert!(p.flops_per_iter_per_node > 0.0, "{}", p.name);
+            assert!(p.cpu_efficiency > 0.0 && p.cpu_efficiency <= 1.0);
+            assert!(p.ckpt_bytes_per_node >= 0.0);
+            assert!(!p.artifact.is_empty());
+        }
+    }
+}

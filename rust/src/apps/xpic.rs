@@ -1,0 +1,81 @@
+//! xPic: the KU Leuven space-weather particle-in-cell code.
+//!
+//! Paper Section IV: a Moment-Implicit PIC with a particle solver (motion
+//! of charged particles + moment gathering) and a field solver.  xPic is
+//! the workhorse of the evaluation — it appears in Figs. 6, 7, 8 and 9
+//! with three experiment setups (Tables II and III):
+//!
+//! * **DEEP-ER I/O** (Fig. 7): 8 GB per checkpoint, 11 checkpoints.
+//! * **QPACE3 I/O** (Fig. 6): 10 GB per node, 2 checkpoints, RAM-disk
+//!   node-local storage.
+//! * **SCR resiliency** (Fig. 8): 32 GB processed per node, 8 GB per CP,
+//!   100 iterations, checkpoint every 10.
+//! * **NAM resiliency** (Fig. 9): 20 GB per node processed, 2 GB per CP,
+//!   10 checkpoints (2 GB = the NAM HMC capacity, not a coincidence).
+//!
+//! The real compute path is `xpic_step.hlo.txt`: field gather + Boris
+//! push (Pallas) + moment deposit + damped field update.
+
+use super::AppProfile;
+
+/// Fig. 8 setup (Table III, "xPic SCR"): calibrated so that ~9 partner
+/// checkpoints of 8 GB cost ~8% of the 100-iteration runtime, matching
+/// the paper's measured average overhead.
+pub fn profile_deep_er() -> AppProfile {
+    AppProfile {
+        name: "xpic-deep-er",
+        flops_per_iter_per_node: 1.8e12,
+        cpu_efficiency: 0.08, // PIC gather/scatter limits achieved flops
+        ckpt_bytes_per_node: 8e9,
+        halo_bytes: 96e6, // moment + field boundary exchange
+        io_tasks_per_node: 24,
+        io_records_per_task: 32,
+        artifact: "xpic_step",
+    }
+}
+
+/// Fig. 6 setup (Table II, "xPic on QPACE3"): weak scaling, 10 GB/node.
+pub fn profile_qpace3() -> AppProfile {
+    AppProfile {
+        name: "xpic-qpace3",
+        flops_per_iter_per_node: 2.4e12,
+        cpu_efficiency: 0.06, // KNL without MCDRAM blocking tuned
+        ckpt_bytes_per_node: 10e9,
+        halo_bytes: 128e6,
+        io_tasks_per_node: 64,
+        io_records_per_task: 32,
+        artifact: "xpic_step",
+    }
+}
+
+/// Fig. 9 setup (Table III, "xPic NAM"): 2 GB checkpoints sized to the
+/// NAM HMC, 10 checkpoints over the run.
+pub fn profile_nam() -> AppProfile {
+    AppProfile {
+        name: "xpic-nam",
+        flops_per_iter_per_node: 1.8e12,
+        cpu_efficiency: 0.08,
+        ckpt_bytes_per_node: 2e9,
+        halo_bytes: 96e6,
+        io_tasks_per_node: 24,
+        io_records_per_task: 32,
+        artifact: "xpic_step",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_iii_payloads() {
+        assert_eq!(profile_deep_er().ckpt_bytes_per_node, 8e9);
+        assert_eq!(profile_nam().ckpt_bytes_per_node, 2e9);
+        assert_eq!(profile_qpace3().ckpt_bytes_per_node, 10e9);
+    }
+
+    #[test]
+    fn nam_payload_fits_hmc() {
+        assert!(profile_nam().ckpt_bytes_per_node <= crate::nam::HMC_CAPACITY);
+    }
+}

@@ -1,0 +1,208 @@
+//! BeeOND: the BeeGFS-on-demand cache domain over node-local devices.
+//!
+//! Paper Section III-C: *"The cache domain — based on BeeGFS on demand
+//! (BeeOND) — stores data in fast node-local NVM devices and can be used
+//! in a synchronous or asynchronous mode."*  Writing to the cache gives a
+//! constant per-node bandwidth (the device is not shared between nodes),
+//! and the async mode trickles data to the global file system in the
+//! background, overlapping with the application's next compute phase —
+//! the mechanism behind the near-perfect weak scaling of Fig. 6 and the
+//! Buddy checkpoint's deferred global copy.
+
+use super::BeeGfs;
+use crate::sim::{FlowId, SimTime};
+use crate::system::Machine;
+
+/// Which node-local device class backs the cache domain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheDevice {
+    /// Intel DC P3700 NVMe (the DEEP-ER configuration).
+    Nvme,
+    /// Conventional spinning disk (the Fig. 7 comparator).
+    Hdd,
+    /// RAM-disk (the QPACE3 emulation of Fig. 6).
+    RamDisk,
+}
+
+/// Synchronous (durable on global FS before return) vs asynchronous
+/// (durable on the cache; global copy trickles in the background).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheMode {
+    Sync,
+    Async,
+}
+
+/// A per-job BeeOND instance.
+#[derive(Debug)]
+pub struct BeeOnd {
+    pub device: CacheDevice,
+    pub mode: CacheMode,
+    /// Outstanding background flush flows (async mode).
+    flushes: Vec<FlowId>,
+    global: BeeGfs,
+}
+
+impl BeeOnd {
+    pub fn new(device: CacheDevice, mode: CacheMode) -> Self {
+        Self { device, mode, flushes: Vec::new(), global: BeeGfs::new() }
+    }
+
+    /// Write `bytes` from `node` into the cache domain as `ops` operations.
+    ///
+    /// Returns the completion time of the *visible* write (cache-durable;
+    /// plus global-durable in sync mode).  In async mode the global copy
+    /// is started but not awaited.
+    pub fn write(&mut self, m: &mut Machine, node: usize, bytes: f64, ops: u64) -> SimTime {
+        let local = self.local_write_flow(m, node, bytes, ops);
+        let t_local = m.sim.wait_all(&[local]);
+        match self.mode {
+            CacheMode::Sync => {
+                let flows = self.global.write_striped(m, node, bytes);
+                m.sim.wait_all(&flows).max(t_local)
+            }
+            CacheMode::Async => {
+                let flows = self.global.write_striped(m, node, bytes);
+                self.flushes.extend(flows);
+                t_local
+            }
+        }
+    }
+
+    /// Cache-local write flow without global copy (checkpoint strategies
+    /// that never leave the node, e.g. SCR Single, use this path).
+    pub fn local_write_flow(&self, m: &mut Machine, node: usize, bytes: f64, ops: u64) -> FlowId {
+        let dev = self.pick_device(m, node).clone();
+        dev.write(&mut m.sim, bytes, ops, &[])
+    }
+
+    /// Cache-local read flow (restart path / partner exchange source).
+    pub fn local_read_flow(&self, m: &mut Machine, node: usize, bytes: f64, ops: u64) -> FlowId {
+        let dev = self.pick_device(m, node).clone();
+        dev.read(&mut m.sim, bytes, ops, &[])
+    }
+
+    /// Block until all background flushes are durable on the global FS
+    /// (end-of-job barrier, or a checkpoint being promoted to level N).
+    pub fn drain(&mut self, m: &mut Machine) -> SimTime {
+        if self.flushes.is_empty() {
+            return m.sim.now();
+        }
+        let flows = std::mem::take(&mut self.flushes);
+        m.sim.wait_all(&flows)
+    }
+
+    /// Number of in-flight background flush flows.
+    pub fn pending_flushes(&self) -> usize {
+        self.flushes.len()
+    }
+
+    fn pick_device<'a>(&self, m: &'a Machine, node: usize) -> &'a crate::storage::Device {
+        let n = &m.nodes[node];
+        let dev = match self.device {
+            CacheDevice::Nvme => n.nvme.as_ref(),
+            CacheDevice::Hdd => n.hdd.as_ref(),
+            CacheDevice::RamDisk => n.ramdisk.as_ref(),
+        };
+        dev.unwrap_or_else(|| {
+            panic!(
+                "node {node} has no {:?} device (machine preset mismatch)",
+                self.device
+            )
+        })
+    }
+}
+
+/// Helper shared by benches: per-node cache bandwidth for a concurrent
+/// write of `bytes` from every node in `nodes`.
+pub fn concurrent_cache_write(
+    m: &mut Machine,
+    cache: &mut BeeOnd,
+    nodes: &[usize],
+    bytes: f64,
+    ops: u64,
+) -> SimTime {
+    let t0 = m.sim.now();
+    let flows: Vec<FlowId> = nodes
+        .iter()
+        .map(|&n| cache.local_write_flow(m, n, bytes, ops))
+        .collect();
+    m.sim.wait_all(&flows) - t0
+}
+
+/// Helper shared by benches: concurrent *global* write from every node.
+pub fn concurrent_global_write(
+    m: &mut Machine,
+    nodes: &[usize],
+    bytes: f64,
+) -> SimTime {
+    let t0 = m.sim.now();
+    let mut fs = BeeGfs::new();
+    let mut flows = Vec::new();
+    for &n in nodes {
+        flows.extend(fs.write_striped(m, n, bytes));
+    }
+    m.sim.wait_all(&flows) - t0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::presets;
+
+    #[test]
+    fn async_write_returns_at_cache_speed() {
+        let mut m = Machine::build(presets::deep_er());
+        let mut sync = BeeOnd::new(CacheDevice::Nvme, CacheMode::Sync);
+        let mut asyn = BeeOnd::new(CacheDevice::Nvme, CacheMode::Async);
+        let t0 = m.sim.now();
+        let t_sync = sync.write(&mut m, 0, 2e9, 4) - t0;
+        let t1 = m.sim.now();
+        let t_async = asyn.write(&mut m, 1, 2e9, 4) - t1;
+        assert!(t_async < 0.8 * t_sync, "sync={t_sync} async={t_async}");
+        assert!(asyn.pending_flushes() > 0);
+        asyn.drain(&mut m);
+        assert_eq!(asyn.pending_flushes(), 0);
+    }
+
+    #[test]
+    fn cache_write_scales_with_nodes_global_does_not() {
+        // The Fig. 6 mechanism in miniature: 16 nodes writing 1 GB each.
+        let mut m = Machine::build(presets::deep_er());
+        let mut cache = BeeOnd::new(CacheDevice::Nvme, CacheMode::Async);
+        let nodes: Vec<usize> = (0..16).collect();
+        let t_local = concurrent_cache_write(&mut m, &mut cache, &nodes, 1e9, 1);
+        let mut m2 = Machine::build(presets::deep_er());
+        let t_global = concurrent_global_write(&mut m2, &nodes, 1e9);
+        assert!(
+            t_global > 3.0 * t_local,
+            "local={t_local} global={t_global}"
+        );
+    }
+
+    #[test]
+    fn nvme_cache_beats_hdd_cache() {
+        let mut m = Machine::build(presets::deep_er());
+        let mut nvme = BeeOnd::new(CacheDevice::Nvme, CacheMode::Async);
+        let mut hdd = BeeOnd::new(CacheDevice::Hdd, CacheMode::Async);
+        let nodes: Vec<usize> = (0..8).collect();
+        let t_nvme = concurrent_cache_write(&mut m, &mut nvme, &nodes, 1e9, 8);
+        let t_hdd = concurrent_cache_write(&mut m, &mut hdd, &nodes, 1e9, 8);
+        assert!(t_hdd > 4.0 * t_nvme, "nvme={t_nvme} hdd={t_hdd}");
+    }
+
+    #[test]
+    #[should_panic(expected = "no RamDisk")]
+    fn missing_device_panics() {
+        let mut m = Machine::build(presets::deep_er());
+        let cache = BeeOnd::new(CacheDevice::RamDisk, CacheMode::Sync);
+        let _ = cache.local_write_flow(&mut m, 0, 1e6, 1);
+    }
+
+    #[test]
+    fn drain_on_empty_is_noop() {
+        let mut m = Machine::build(presets::deep_er());
+        let mut cache = BeeOnd::new(CacheDevice::Nvme, CacheMode::Async);
+        let t = cache.drain(&mut m);
+        assert_eq!(t, 0.0);
+    }
+}

@@ -1,0 +1,473 @@
+//! Figure/table harnesses: regenerate every row/series of the paper's
+//! evaluation (Section V) on the simulated testbeds.
+//!
+//! Each `figN()` builds the exact experiment of the corresponding paper
+//! figure (workload, node counts, parameters from Tables II/III), runs it
+//! through the full stack, and returns the series the paper plots.  The
+//! CLI (`repro bench figN|all`) prints them; the integration tests assert
+//! the *shape targets* from DESIGN.md section 4 (who wins, by what factor,
+//! where crossovers fall).
+
+use crate::apps::{self, run_iterations, IterationJob};
+use crate::beegfs::beeond::{concurrent_cache_write, concurrent_global_write, CacheDevice};
+use crate::beegfs::{BeeOnd, CacheMode};
+use crate::fabric::TOURMALET_BW;
+use crate::metrics::{fmt_bytes, fmt_bw, Figure, KvTable, Series};
+use crate::nam::NamDevice;
+use crate::ompss::{OmpssRuntime, Resilience};
+use crate::scr::{Scr, Strategy};
+use crate::sim::Sim;
+use crate::sionlib::{write_sionlib, write_task_local};
+use crate::system::failure::FailurePlan;
+use crate::system::{presets, Machine, NodeKind};
+
+/// Everything a harness can emit.
+#[derive(Debug)]
+pub enum Exhibit {
+    Fig(Figure),
+    Table(KvTable),
+}
+
+impl Exhibit {
+    pub fn render(&self) -> String {
+        match self {
+            Exhibit::Fig(f) => f.to_table(),
+            Exhibit::Table(t) => t.render(),
+        }
+    }
+
+    /// CSV form for figures (tables fall back to `k,v` lines).
+    pub fn render_csv(&self) -> String {
+        match self {
+            Exhibit::Fig(f) => format!("# {}\n{}", f.title, f.to_csv()),
+            Exhibit::Table(t) => {
+                let mut out = format!("# {}\n", t.title);
+                for (k, v) in &t.rows {
+                    out.push_str(&format!("{},{}\n", k.replace(',', ";"), v.replace(',', ";")));
+                }
+                out
+            }
+        }
+    }
+}
+
+/// Table I: hardware configuration of the DEEP-ER prototype.
+pub fn table1() -> Vec<Exhibit> {
+    let spec = presets::deep_er();
+    let b = spec.booster.as_ref().unwrap();
+    let mut t = KvTable::new("Table I: DEEP-ER prototype hardware configuration");
+    t.row("Cluster CPU", format!("{} ({} cores @ {} GHz) x16 nodes", spec.cluster.name, spec.cluster.cores, spec.cluster.freq_ghz));
+    t.row("Booster CPU", format!("{} ({} cores @ {} GHz) x8 nodes", b.name, b.cores, b.freq_ghz));
+    t.row("Cluster memory", fmt_bytes(spec.cluster.mem_bytes));
+    t.row("Booster memory", format!("{} MCDRAM + {} DDR4", fmt_bytes(b.fast_mem_bytes), fmt_bytes(b.mem_bytes)));
+    t.row("NVMe per node", fmt_bytes(spec.cluster.nvme.as_ref().unwrap().capacity));
+    t.row("Fabric", format!("EXTOLL Tourmalet A3, {}", fmt_bw(TOURMALET_BW)));
+    t.row("MPI latency Cluster", "1.0 us");
+    t.row("MPI latency Booster", "1.8 us");
+    t.row("Cluster peak", format!("{:.0} TFlop/s", spec.cluster.peak_flops * spec.n_cluster as f64 / 1e12));
+    t.row("Booster peak", format!("{:.0} TFlop/s", b.peak_flops * spec.n_booster as f64 / 1e12));
+    t.row("Storage", format!("{} servers + 1 MDS", spec.n_storage_servers));
+    t.row("NAM boards", format!("{} x {}", spec.n_nam, fmt_bytes(crate::nam::HMC_CAPACITY)));
+    vec![Exhibit::Table(t)]
+}
+
+/// Table II: I/O experiment setups.
+pub fn table2() -> Vec<Exhibit> {
+    let mut t = KvTable::new("Table II: I/O experiment setup");
+    t.row("GERShWIN data per CP", "3 GB (P1) / 6.6 GB (P3), 1 CP");
+    t.row("xPic on QPACE3", "10 GB per node, 2 CPs");
+    t.row("xPic on DEEP-ER", "8 GB, 11 CPs");
+    vec![Exhibit::Table(t)]
+}
+
+/// Table III: resiliency experiment setups.
+pub fn table3() -> Vec<Exhibit> {
+    let mut t = KvTable::new("Table III: resiliency experiment setup");
+    t.row("xPic SCR", "32 GB per node processed, 8 GB per CP, 4 CPs");
+    t.row("xPic NAM", "20 GB per node processed, 2 GB per CP, 10 CPs");
+    t.row("FWI", "1 GB per node processed");
+    vec![Exhibit::Table(t)]
+}
+
+/// Fig. 3: RMA bandwidth and latency on the NAM vs best-achievable EXTOLL.
+pub fn fig3() -> Vec<Exhibit> {
+    let sizes: Vec<f64> = (3..=22).map(|p| (1u64 << p) as f64).collect(); // 8 B .. 4 MB
+    let mut bw_fig = Figure::new(
+        "Fig. 3a: RMA bandwidth on the NAM (vs raw EXTOLL)",
+        "message B",
+        "GB/s",
+    );
+    let mut lat_fig = Figure::new(
+        "Fig. 3b: RMA latency on the NAM (vs raw EXTOLL)",
+        "message B",
+        "us",
+    );
+    let mut s_nam_put = Series::new("NAM put");
+    let mut s_nam_get = Series::new("NAM get");
+    let mut s_raw = Series::new("EXTOLL best");
+    let mut l_nam_put = Series::new("NAM put");
+    let mut l_nam_get = Series::new("NAM get");
+    let mut l_raw = Series::new("EXTOLL best");
+
+    for &size in &sizes {
+        // Fresh fabric per size keeps measurements independent.
+        let mut sim = Sim::new();
+        let mut fabric = crate::fabric::Fabric::new(&mut sim, 1e12);
+        let node = fabric.endpoint(&mut sim, "n0", TOURMALET_BW, crate::fabric::LAT_CLUSTER);
+        let peer = fabric.endpoint(&mut sim, "n1", TOURMALET_BW, crate::fabric::LAT_CLUSTER);
+        let nam = NamDevice::new(&mut sim, &mut fabric, 0);
+
+        let t0 = sim.now();
+        let f = nam.put(&mut sim, &fabric, node, size);
+        let t_put = sim.wait_all(&[f]) - t0;
+        let t1 = sim.now();
+        let f = nam.get(&mut sim, &fabric, node, size);
+        let t_get = sim.wait_all(&[f]) - t1;
+        let t2 = sim.now();
+        let f = fabric.put(&mut sim, node, peer, size);
+        let t_raw = sim.wait_all(&[f]) - t2;
+
+        s_nam_put.push(size, size / t_put / 1e9);
+        s_nam_get.push(size, size / t_get / 1e9);
+        s_raw.push(size, size / t_raw / 1e9);
+        l_nam_put.push(size, t_put * 1e6);
+        l_nam_get.push(size, t_get * 1e6);
+        l_raw.push(size, t_raw * 1e6);
+    }
+    bw_fig.add(s_raw);
+    bw_fig.add(s_nam_put);
+    bw_fig.add(s_nam_get);
+    lat_fig.add(l_raw);
+    lat_fig.add(l_nam_put);
+    lat_fig.add(l_nam_get);
+    vec![Exhibit::Fig(bw_fig), Exhibit::Fig(lat_fig)]
+}
+
+/// Fig. 4: N-body weak scaling under the five checkpoint strategies.
+pub fn fig4() -> Vec<Exhibit> {
+    let mut fig = Figure::new(
+        "Fig. 4: N-body checkpoint time by strategy (weak scaling, DEEP-ER Cluster)",
+        "nodes",
+        "s per checkpoint",
+    );
+    let profile = apps::nbody::profile();
+    for strat in Strategy::ALL {
+        let mut s = Series::new(strat.name());
+        for &n in &[2usize, 4, 8, 16] {
+            let mut m = Machine::build(presets::deep_er());
+            let nodes: Vec<usize> = m.nodes_of(NodeKind::Cluster).into_iter().take(n).collect();
+            let mut scr = Scr::new(strat);
+            let r = scr
+                .checkpoint(&mut m, &nodes, profile.ckpt_bytes_per_node)
+                .expect("checkpoint");
+            s.push(n as f64, r.blocked);
+        }
+        fig.add(s);
+    }
+    vec![Exhibit::Fig(fig)]
+}
+
+/// Fig. 5: GERShWIN write time with/without SIONlib, P1 and P3.
+pub fn fig5() -> Vec<Exhibit> {
+    let mut fig = Figure::new(
+        "Fig. 5: GERShWIN task-local I/O vs SIONlib",
+        "nodes",
+        "write s",
+    );
+    let mut out = Vec::new();
+    for (label, order3) in [("P1", false), ("P3", true)] {
+        let mut base = Series::new(format!("task-local {label}"));
+        let mut sion = Series::new(format!("SIONlib {label}"));
+        let mut speedups = Series::new(format!("speedup {label}"));
+        for &n in &[1usize, 2, 4, 8, 16] {
+            let w = apps::gershwin::io_workload(n, order3);
+            let mut m1 = Machine::build(presets::deep_er());
+            let b = write_task_local(&mut m1, &w);
+            let mut m2 = Machine::build(presets::deep_er());
+            let s = write_sionlib(&mut m2, &w);
+            base.push(n as f64, b.write_time);
+            sion.push(n as f64, s.write_time);
+            speedups.push(n as f64, b.write_time / s.write_time);
+        }
+        fig.add(base);
+        fig.add(sion);
+        out.push(speedups);
+    }
+    let mut sp_fig = Figure::new("Fig. 5 (derived): SIONlib speedup", "nodes", "x");
+    for s in out {
+        sp_fig.add(s);
+    }
+    vec![Exhibit::Fig(fig), Exhibit::Fig(sp_fig)]
+}
+
+/// Fig. 6: xPic weak scaling on QPACE3 — global BeeGFS vs BeeOND-on-RAM.
+pub fn fig6() -> Vec<Exhibit> {
+    let mut fig = Figure::new(
+        "Fig. 6: xPic on QPACE3 — global FS vs node-local BeeOND (10 GB/node)",
+        "nodes",
+        "write s",
+    );
+    let bytes = apps::xpic::profile_qpace3().ckpt_bytes_per_node;
+    let mut s_global = Series::new("global BeeGFS");
+    let mut s_local = Series::new("BeeOND local");
+    for &n in &[16usize, 32, 64, 128, 256, 512, 672] {
+        let mut m = Machine::build(presets::qpace3().with_cluster_nodes(n));
+        let nodes: Vec<usize> = (0..n).collect();
+        let t_global = concurrent_global_write(&mut m, &nodes, bytes);
+        s_global.push(n as f64, t_global);
+        let mut m2 = Machine::build(presets::qpace3().with_cluster_nodes(n));
+        let mut cache = BeeOnd::new(CacheDevice::RamDisk, CacheMode::Async);
+        let t_local = concurrent_cache_write(&mut m2, &mut cache, &nodes, bytes, 64);
+        s_local.push(n as f64, t_local);
+    }
+    fig.add(s_global);
+    fig.add(s_local);
+    vec![Exhibit::Fig(fig)]
+}
+
+/// Fig. 7: xPic on the DEEP-ER Cluster — node-local NVMe vs HDD.
+pub fn fig7() -> Vec<Exhibit> {
+    let mut fig = Figure::new(
+        "Fig. 7: xPic on DEEP-ER — node-local NVMe vs HDD (8 GB)",
+        "nodes",
+        "write s",
+    );
+    let bytes = apps::xpic::profile_deep_er().ckpt_bytes_per_node;
+    let mut s_nvme = Series::new("NVMe");
+    let mut s_hdd = Series::new("HDD");
+    for &n in &[1usize, 2, 4, 8, 16] {
+        let nodes: Vec<usize> = (0..n).collect();
+        let mut m1 = Machine::build(presets::deep_er());
+        let mut c1 = BeeOnd::new(CacheDevice::Nvme, CacheMode::Async);
+        s_nvme.push(n as f64, concurrent_cache_write(&mut m1, &mut c1, &nodes, bytes, 24));
+        let mut m2 = Machine::build(presets::deep_er());
+        let mut c2 = BeeOnd::new(CacheDevice::Hdd, CacheMode::Async);
+        s_hdd.push(n as f64, concurrent_cache_write(&mut m2, &mut c2, &nodes, bytes, 24));
+    }
+    fig.add(s_nvme);
+    fig.add(s_hdd);
+    vec![Exhibit::Fig(fig)]
+}
+
+/// Fig. 8: xPic with SCR_PARTNER — overhead and failure benefit.
+/// 100 iterations, CP every 10, optional error at iteration 60.
+pub fn fig8() -> Vec<Exhibit> {
+    let profile = apps::xpic::profile_deep_er();
+    let scenario = |with_cp: bool, with_err: bool| -> f64 {
+        let mut m = Machine::build(presets::deep_er());
+        let nodes = m.nodes_of(NodeKind::Cluster);
+        let job = IterationJob {
+            profile: profile.clone(),
+            iterations: 100,
+            cp_interval: if with_cp { 10 } else { 0 },
+            failures: if with_err {
+                FailurePlan::one_at_iteration(3, 60)
+            } else {
+                FailurePlan::none()
+            },
+        };
+        if with_cp {
+            let mut scr = Scr::new(Strategy::Partner);
+            run_iterations(&mut m, &nodes, &job, Some(&mut scr)).total_time
+        } else {
+            run_iterations(&mut m, &nodes, &job, None).total_time
+        }
+    };
+    let t_plain = scenario(false, false);
+    let t_cp = scenario(true, false);
+    let t_err_plain = scenario(false, true);
+    let t_err_cp = scenario(true, true);
+
+    let mut t = KvTable::new("Fig. 8: xPic + SCR_PARTNER (100 iters, CP every 10, error at 60)");
+    t.row("w/o CP, w/o error", format!("{t_plain:.1} s"));
+    t.row("with CP, w/o error", format!("{t_cp:.1} s"));
+    t.row("w/o CP, with error", format!("{t_err_plain:.1} s"));
+    t.row("with CP, with error", format!("{t_err_cp:.1} s"));
+    t.row("CP overhead", format!("{:.1} %", (t_cp / t_plain - 1.0) * 100.0));
+    t.row(
+        "saving on failure",
+        format!("{:.1} %", (1.0 - t_err_cp / t_err_plain) * 100.0),
+    );
+    vec![Exhibit::Table(t)]
+}
+
+/// Fig. 9: Distributed XOR vs NAM XOR — bandwidth and write time.
+pub fn fig9() -> Vec<Exhibit> {
+    let bytes = apps::xpic::profile_nam().ckpt_bytes_per_node; // 2 GB
+    let mut bw_fig = Figure::new(
+        "Fig. 9a: checkpoint bandwidth, Distributed XOR vs NAM XOR (2 GB/node)",
+        "nodes",
+        "GB/s",
+    );
+    let mut time_fig = Figure::new(
+        "Fig. 9b: checkpoint write time, Distributed XOR vs NAM XOR",
+        "nodes",
+        "s",
+    );
+    let mut bw_dist = Series::new("Distributed XOR");
+    let mut bw_nam = Series::new("NAM XOR");
+    let mut t_dist = Series::new("Distributed XOR");
+    let mut t_nam = Series::new("NAM XOR");
+    for &n in &[4usize, 8, 16] {
+        let mut m1 = Machine::build(presets::deep_er());
+        let nodes: Vec<usize> = m1.nodes_of(NodeKind::Cluster).into_iter().take(n).collect();
+        let mut d = Scr::new(Strategy::DistXor);
+        let rd = d.checkpoint(&mut m1, &nodes, bytes).unwrap();
+        let mut m2 = Machine::build(presets::deep_er());
+        let mut nx = Scr::new(Strategy::NamXor);
+        let rn = nx.checkpoint(&mut m2, &nodes, bytes).unwrap();
+        bw_dist.push(n as f64, rd.bandwidth / 1e9);
+        bw_nam.push(n as f64, rn.bandwidth / 1e9);
+        t_dist.push(n as f64, rd.blocked);
+        t_nam.push(n as f64, rn.blocked);
+    }
+    bw_fig.add(bw_dist);
+    bw_fig.add(bw_nam);
+    time_fig.add(t_dist);
+    time_fig.add(t_nam);
+    vec![Exhibit::Fig(bw_fig), Exhibit::Fig(time_fig)]
+}
+
+/// Fig. 10: FWI + OmpSs resilient offload on MareNostrum 3.
+pub fn fig10() -> Vec<Exhibit> {
+    let graph = apps::fwi::task_graph(5, 4, 3e11);
+    let fail_last = FailurePlan::one_at_iteration(0, apps::fwi::last_task(&graph));
+    let workers: Vec<usize> = (1..5).collect();
+
+    let run = |res: Resilience, failures: &FailurePlan| -> f64 {
+        let mut m = Machine::build(presets::marenostrum3());
+        OmpssRuntime::new(0, res).execute(&mut m, &graph, &workers, failures).time
+    };
+
+    let t_clean = run(Resilience::None, &FailurePlan::none());
+    let t_res_clean = run(Resilience::ResilientOffload, &FailurePlan::none());
+    let t_err_none = run(Resilience::None, &fail_last);
+    let t_err_res = run(Resilience::ResilientOffload, &fail_last);
+
+    let mut t = KvTable::new("Fig. 10: FWI + OmpSs task resiliency (MareNostrum 3)");
+    t.row("w/o CP, w/o error", format!("{t_clean:.1} s"));
+    t.row("with CP, w/o error", format!("{t_res_clean:.1} s"));
+    t.row("w/o CP, error at end", format!("{t_err_none:.1} s"));
+    t.row("with CP, error at end", format!("{t_err_res:.1} s"));
+    t.row(
+        "resiliency overhead",
+        format!("{:.2} %", (t_res_clean / t_clean - 1.0) * 100.0),
+    );
+    t.row(
+        "saving on failure",
+        format!("{:.1} %", (1.0 - t_err_res / t_err_none) * 100.0),
+    );
+    t.row(
+        "vs clean run",
+        format!("+{:.1} %", (t_err_res / t_clean - 1.0) * 100.0),
+    );
+    vec![Exhibit::Table(t)]
+}
+
+/// Extension exhibit (not a figure of THIS paper, but of its companion
+/// reference [4], Kreuzer et al. IPDPSW 2018): the Cluster-Booster
+/// division-of-labour benefit the Section II-A architecture exists for.
+pub fn cb_split() -> Vec<Exhibit> {
+    use crate::apps::split::{run_split, Placement, SplitJob};
+    let mut t = KvTable::new(
+        "Ref [4]: xPic-like split over Cluster+Booster (10 iterations, DEEP-ER prototype)",
+    );
+    let mut split_time = f64::INFINITY;
+    let mut best_homog = f64::INFINITY;
+    for placement in Placement::ALL {
+        let mut m = Machine::build(presets::deep_er());
+        let stats = run_split(&mut m, &SplitJob::xpic_like(10), placement);
+        t.row(
+            placement.name(),
+            format!(
+                "{:.1} s  (particle {:.1} s, field {:.1} s, coupling {:.2} s)",
+                stats.total_time, stats.particle_time, stats.field_time, stats.coupling_time
+            ),
+        );
+        if placement == Placement::Split {
+            split_time = stats.total_time;
+        } else {
+            best_homog = best_homog.min(stats.total_time);
+        }
+    }
+    t.row(
+        "split speedup vs best homogeneous",
+        format!("{:.2}x", best_homog / split_time),
+    );
+    vec![Exhibit::Table(t)]
+}
+
+/// All exhibits in paper order (plus the companion-paper extension).
+pub fn all() -> Vec<(&'static str, Vec<Exhibit>)> {
+    vec![
+        ("table1", table1()),
+        ("table2", table2()),
+        ("table3", table3()),
+        ("fig3", fig3()),
+        ("fig4", fig4()),
+        ("fig5", fig5()),
+        ("fig6", fig6()),
+        ("fig7", fig7()),
+        ("fig8", fig8()),
+        ("fig9", fig9()),
+        ("fig10", fig10()),
+        ("cb-split", cb_split()),
+    ]
+}
+
+/// Run one named exhibit (CLI entry point).
+pub fn by_name(name: &str) -> Option<Vec<Exhibit>> {
+    match name {
+        "table1" => Some(table1()),
+        "table2" => Some(table2()),
+        "table3" => Some(table3()),
+        "fig3" => Some(fig3()),
+        "fig4" => Some(fig4()),
+        "fig5" => Some(fig5()),
+        "fig6" => Some(fig6()),
+        "fig7" => Some(fig7()),
+        "fig8" => Some(fig8()),
+        "fig9" => Some(fig9()),
+        "fig10" => Some(fig10()),
+        "cb-split" | "cb" => Some(cb_split()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Shape assertions live in rust/tests/integration_apps.rs; here we only
+    // smoke the cheap harnesses to keep unit-test time low.
+
+    #[test]
+    fn tables_render() {
+        for ex in table1().iter().chain(table2().iter()).chain(table3().iter()) {
+            assert!(!ex.render().is_empty());
+        }
+    }
+
+    #[test]
+    fn fig3_series_shapes() {
+        let ex = fig3();
+        assert_eq!(ex.len(), 2);
+        if let Exhibit::Fig(bw) = &ex[0] {
+            let raw = bw.series_named("EXTOLL best").unwrap();
+            let nam = bw.series_named("NAM put").unwrap();
+            // Bandwidth grows with message size; NAM close to raw EXTOLL.
+            assert!(raw.points.first().unwrap().1 < raw.points.last().unwrap().1);
+            let (_, raw_peak) = raw.points.last().unwrap();
+            let (_, nam_peak) = nam.points.last().unwrap();
+            assert!(nam_peak / raw_peak > 0.9, "nam={nam_peak} raw={raw_peak}");
+        } else {
+            panic!("fig3[0] should be a figure");
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert!(by_name("fig9").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,199 @@
+//! EXTOLL Tourmalet fabric model: RDMA put/get, notifications, ring buffers.
+//!
+//! The DEEP-ER prototype runs one uniform EXTOLL fabric across Cluster,
+//! Booster, storage and the NAM boards (paper Section II-B, Table I):
+//! 100 Gbit/s (12.5 GB/s) per link, ~1.0 us MPI latency on the Cluster and
+//! ~1.8 us on the Booster (KNL's slower uncore).  The fabric's RDMA engine
+//! (libRMA) moves data without a remote CPU — the property the NAM builds
+//! on.
+//!
+//! Model: every endpoint owns a TX and an RX port resource at link speed;
+//! a switch backplane resource carries aggregate traffic (non-blocking for
+//! the 24-node prototype, capacity-limited for the 672-node QPACE3 torus).
+//! A transfer is a [`sim`] flow routed `src.tx -> backplane -> dst.rx`, so
+//! incast (many nodes writing to two storage servers, Fig. 6) and the
+//! NAM's two-link bound (Fig. 9) emerge from resource contention.
+
+pub mod ring;
+
+use crate::sim::{FlowId, ResId, Sim, SimTime};
+
+/// 100 Gbit/s Tourmalet link payload bandwidth, bytes/s.
+pub const TOURMALET_BW: f64 = 12.5e9;
+/// MPI half-round-trip latency on the Cluster side (Table I).
+pub const LAT_CLUSTER: SimTime = 1.0e-6;
+/// MPI half-round-trip latency on the Booster side (Table I).
+pub const LAT_BOOSTER: SimTime = 1.8e-6;
+/// Per-message software/NIC injection overhead (descriptor + doorbell).
+pub const MSG_OVERHEAD: SimTime = 0.15e-6;
+
+/// One fabric endpoint (a node NIC, a storage server NIC, a NAM link pair).
+#[derive(Debug, Clone, Copy)]
+pub struct Endpoint {
+    pub tx: ResId,
+    pub rx: ResId,
+    /// Endpoint-side injection latency.
+    pub latency: SimTime,
+}
+
+/// The fabric: endpoints plus a shared backplane.
+#[derive(Debug)]
+pub struct Fabric {
+    backplane: ResId,
+    endpoints: Vec<Endpoint>,
+}
+
+/// Handle to a registered endpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EpId(pub usize);
+
+impl Fabric {
+    /// `backplane_bw`: aggregate switching capacity.  The 24-node DEEP-ER
+    /// rack is non-blocking (set >= sum of links); QPACE3's torus bisection
+    /// is capacity-limited.
+    pub fn new(sim: &mut Sim, backplane_bw: f64) -> Self {
+        let backplane = sim.resource("fabric:backplane", backplane_bw);
+        Self { backplane, endpoints: Vec::new() }
+    }
+
+    /// Register an endpoint with `link_bw` per direction and endpoint latency.
+    pub fn endpoint(&mut self, sim: &mut Sim, label: &str, link_bw: f64, latency: SimTime) -> EpId {
+        let tx = sim.resource(format!("{label}:tx"), link_bw);
+        let rx = sim.resource(format!("{label}:rx"), link_bw);
+        self.endpoints.push(Endpoint { tx, rx, latency });
+        EpId(self.endpoints.len() - 1)
+    }
+
+    pub fn endpoint_info(&self, ep: EpId) -> Endpoint {
+        self.endpoints[ep.0]
+    }
+
+    /// RDMA put: `bytes` from `src` into `dst` memory.  Completion fires a
+    /// notification at the destination (the libRMA/libNAM mechanism used to
+    /// manage ring-buffer space) — here completion time *is* the notify.
+    pub fn put(&self, sim: &mut Sim, src: EpId, dst: EpId, bytes: f64) -> FlowId {
+        let s = self.endpoints[src.0];
+        let d = self.endpoints[dst.0];
+        let lat = s.latency + d.latency + MSG_OVERHEAD;
+        sim.flow(bytes, lat, &[s.tx, self.backplane, d.rx])
+    }
+
+    /// RDMA get: `bytes` pulled by `src` from `dst` memory.  One extra
+    /// request half-round-trip before data flows back.
+    pub fn get(&self, sim: &mut Sim, src: EpId, dst: EpId, bytes: f64) -> FlowId {
+        let s = self.endpoints[src.0];
+        let d = self.endpoints[dst.0];
+        let lat = 2.0 * d.latency + s.latency + MSG_OVERHEAD;
+        sim.flow(bytes, lat, &[d.tx, self.backplane, s.rx])
+    }
+
+    /// Zero-byte notification (doorbell) from `src` to `dst`.
+    pub fn notify(&self, sim: &mut Sim, src: EpId, dst: EpId) -> FlowId {
+        let s = self.endpoints[src.0];
+        let d = self.endpoints[dst.0];
+        sim.delay(s.latency + d.latency + MSG_OVERHEAD)
+    }
+
+    /// Analytic time for an uncontended transfer (used by collectives).
+    pub fn xfer_time(&self, src: EpId, dst: EpId, bytes: f64) -> SimTime {
+        let s = self.endpoints[src.0];
+        let d = self.endpoints[dst.0];
+        let bw = TOURMALET_BW;
+        s.latency + d.latency + MSG_OVERHEAD + bytes / bw
+    }
+
+    pub fn backplane(&self) -> ResId {
+        self.backplane
+    }
+
+    pub fn n_endpoints(&self) -> usize {
+        self.endpoints.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_node_fabric() -> (Sim, Fabric, EpId, EpId) {
+        let mut sim = Sim::new();
+        let mut fab = Fabric::new(&mut sim, 1e12);
+        let a = fab.endpoint(&mut sim, "a", TOURMALET_BW, LAT_CLUSTER);
+        let b = fab.endpoint(&mut sim, "b", TOURMALET_BW, LAT_CLUSTER);
+        (sim, fab, a, b)
+    }
+
+    #[test]
+    fn put_latency_floor_small_message() {
+        let (mut sim, fab, a, b) = two_node_fabric();
+        let f = fab.put(&mut sim, a, b, 8.0);
+        let t = sim.wait_all(&[f]);
+        // ~2x 1.0us endpoint latency + overhead, transfer time negligible.
+        assert!(t > 2.0e-6 && t < 3.0e-6, "t={t}");
+    }
+
+    #[test]
+    fn put_large_message_reaches_link_bw() {
+        let (mut sim, fab, a, b) = two_node_fabric();
+        let bytes = 1e9;
+        let f = fab.put(&mut sim, a, b, bytes);
+        let t = sim.wait_all(&[f]);
+        let bw = bytes / t;
+        assert!(bw > 0.99 * TOURMALET_BW * 0.999, "bw={bw:e}");
+    }
+
+    #[test]
+    fn get_slower_than_put_for_small_messages() {
+        let (mut sim, fab, a, b) = two_node_fabric();
+        let p = fab.put(&mut sim, a, b, 64.0);
+        let t_put = sim.wait_all(&[p]);
+        let g = fab.get(&mut sim, a, b, 64.0);
+        let t_get = sim.wait_all(&[g]) - t_put;
+        assert!(t_get > t_put, "put={t_put} get={t_get}");
+    }
+
+    #[test]
+    fn incast_shares_destination_port() {
+        // 4 senders into one receiver: each gets ~1/4 of the rx port.
+        let mut sim = Sim::new();
+        let mut fab = Fabric::new(&mut sim, 1e12);
+        let dst = fab.endpoint(&mut sim, "dst", TOURMALET_BW, LAT_CLUSTER);
+        let flows: Vec<_> = (0..4)
+            .map(|i| {
+                let src = fab.endpoint(&mut sim, &format!("s{i}"), TOURMALET_BW, LAT_CLUSTER);
+                fab.put(&mut sim, src, dst, 1e9)
+            })
+            .collect();
+        let t = sim.wait_all(&flows);
+        let expect = 4e9 / TOURMALET_BW;
+        assert!((t - expect).abs() / expect < 0.01, "t={t} expect={expect}");
+    }
+
+    #[test]
+    fn booster_latency_higher() {
+        let mut sim = Sim::new();
+        let mut fab = Fabric::new(&mut sim, 1e12);
+        let c = fab.endpoint(&mut sim, "c", TOURMALET_BW, LAT_CLUSTER);
+        let k = fab.endpoint(&mut sim, "k", TOURMALET_BW, LAT_BOOSTER);
+        let f1 = fab.put(&mut sim, c, c, 8.0);
+        let t1 = sim.wait_all(&[f1]);
+        let f2 = fab.put(&mut sim, c, k, 8.0);
+        let t2 = sim.wait_all(&[f2]) - t1;
+        assert!(t2 > t1, "cluster={t1} booster={t2}");
+    }
+
+    #[test]
+    fn constrained_backplane_limits_aggregate() {
+        let mut sim = Sim::new();
+        let mut fab = Fabric::new(&mut sim, 20e9); // less than 4 links
+        let eps: Vec<_> = (0..8)
+            .map(|i| fab.endpoint(&mut sim, &format!("n{i}"), TOURMALET_BW, LAT_CLUSTER))
+            .collect();
+        let flows: Vec<_> = (0..4)
+            .map(|i| fab.put(&mut sim, eps[i], eps[i + 4], 1e9))
+            .collect();
+        let t = sim.wait_all(&flows);
+        let agg_bw = 4e9 / t;
+        assert!(agg_bw < 20.5e9, "agg={agg_bw:e}");
+    }
+}

@@ -1,0 +1,54 @@
+//! # deeper — a reproduction of the DEEP-ER Cluster-Booster I/O + resiliency stack
+//!
+//! This crate rebuilds, as a calibrated discrete-event simulation plus a real
+//! AOT-compiled compute path, the system described in *"The DEEP-ER project:
+//! I/O and resiliency extensions for the Cluster-Booster architecture"*
+//! (Kreuzer, Eicker, Suarez et al., HPCC 2018).
+//!
+//! ## Layering (see DESIGN.md)
+//!
+//! * [`sim`] — fluid-flow discrete-event engine: virtual clock, max-min
+//!   fair bandwidth sharing over shared resources, deterministic RNG.
+//! * [`system`] — node/topology models of the DEEP-ER prototype (Table I),
+//!   QPACE3 and MareNostrum 3, plus failure injection.
+//! * [`fabric`] — the EXTOLL Tourmalet fabric: RDMA put/get/notification,
+//!   ring-buffer engines (libRMA semantics used by libNAM).
+//! * [`storage`] — node-local device models: NVMe (Intel DC P3700), HDD,
+//!   RAM-disk, and storage-server disks.
+//! * [`beegfs`] — the BeeGFS parallel file system and the BeeOND cache
+//!   layer on node-local devices (sync/async flush).
+//! * [`sionlib`] — task-local-I/O aggregation into few shared files.
+//! * [`nam`] — Network Attached Memory: HMC + FPGA parity engine on the
+//!   fabric, and the libNAM client API.
+//! * [`psmpi`] — ParaStation-style global MPI: communicators, collectives,
+//!   `spawn`-based Cluster<->Booster offload, process-management daemon.
+//! * [`scr`] — Scalable Checkpoint/Restart with the paper's four
+//!   strategies: Single, Partner, Buddy, Distributed XOR, NAM XOR.
+//! * [`ompss`] — OmpSs task runtime with the three DEEP-ER resiliency
+//!   features (lightweight CP, persistent CP, resilient offload).
+//! * [`apps`] — the co-design applications: N-body, xPic, GERShWIN, FWI.
+//! * [`runtime`] — PJRT executor for the AOT-lowered JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`); the only bridge to real compute.
+//! * [`bench`] — harnesses regenerating every paper figure/table.
+//! * [`metrics`] — series/table collection and fixed-width printers.
+
+pub mod apps;
+pub mod beegfs;
+pub mod bench;
+pub mod fabric;
+pub mod metrics;
+pub mod microbench;
+pub mod nam;
+pub mod ompss;
+pub mod psmpi;
+pub mod runtime;
+pub mod scr;
+pub mod sim;
+pub mod sionlib;
+pub mod storage;
+pub mod system;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,189 @@
+//! `repro` — the DEEP-ER reproduction coordinator CLI.
+//!
+//! ```text
+//! repro show-config
+//! repro bench <fig3..fig10|table1..table3|all>
+//! repro run [--app nbody|xpic|gershwin|fwi] [--strategy single|partner|buddy|dist-xor|nam-xor]
+//!           [--iterations N] [--cp-interval N] [--fail-at I] [--nodes N]
+//! repro e2e [--artifacts DIR]
+//! ```
+
+use deeper::apps::{self, run_iterations, IterationJob};
+use deeper::bench;
+use deeper::metrics::fmt_time;
+use deeper::runtime::{default_artifacts_dir, Runtime, Tensor};
+use deeper::scr::{Scr, Strategy};
+use deeper::system::failure::FailurePlan;
+use deeper::system::{presets, Machine, NodeKind};
+use deeper::util::cli::Args;
+
+const USAGE: &str = "\
+repro — DEEP-ER Cluster-Booster I/O + resiliency reproduction
+
+USAGE:
+  repro show-config
+  repro bench <fig3..fig10|table1..table3|cb-split|all> [--csv]
+  repro run [--app nbody|xpic|gershwin|fwi] [--strategy single|partner|buddy|dist-xor|nam-xor]
+            [--iterations N] [--cp-interval N] [--fail-at I] [--nodes N]
+  repro split [--iterations N]          (Cluster-Booster division of labour)
+  repro e2e [--artifacts DIR]
+";
+
+fn parse_strategy(s: &str) -> anyhow::Result<Strategy> {
+    Ok(match s {
+        "single" => Strategy::Single,
+        "partner" => Strategy::Partner,
+        "buddy" => Strategy::Buddy,
+        "dist-xor" | "distxor" => Strategy::DistXor,
+        "nam-xor" | "namxor" => Strategy::NamXor,
+        _ => anyhow::bail!("unknown strategy {s}"),
+    })
+}
+
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let name = args
+        .positionals
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let csv = args.has("csv");
+    let render = |e: &deeper::bench::Exhibit| if csv { e.render_csv() } else { e.render() };
+    if name == "all" {
+        for (n, exhibits) in bench::all() {
+            println!("--- {n} ---");
+            for e in exhibits {
+                println!("{}", render(&e));
+            }
+        }
+        return Ok(());
+    }
+    let ex = bench::by_name(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown exhibit {name}; try fig3..fig10, table1..table3, cb-split, all"
+        )
+    })?;
+    for e in ex {
+        println!("{}", render(&e));
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let profile = match args.get_str("app", "xpic") {
+        "nbody" => apps::nbody::profile(),
+        "xpic" => apps::xpic::profile_deep_er(),
+        "gershwin" => apps::gershwin::profile_p1(),
+        "fwi" => apps::fwi::profile(),
+        other => anyhow::bail!("unknown app {other}"),
+    };
+    let strat = parse_strategy(args.get_str("strategy", "buddy"))?;
+    let iterations = args.get_usize("iterations", 100);
+    let cp_interval = args.get_usize("cp-interval", 10);
+    let nodes = args.get_usize("nodes", 16);
+
+    let mut m = Machine::build(presets::deep_er());
+    let node_ids: Vec<usize> = m.nodes_of(NodeKind::Cluster).into_iter().take(nodes).collect();
+    let failures = args
+        .flag("fail-at")
+        .and_then(|v| v.parse::<usize>().ok())
+        .map(|i| FailurePlan::one_at_iteration(0, i))
+        .unwrap_or_else(FailurePlan::none);
+    let job = IterationJob { profile: profile.clone(), iterations, cp_interval, failures };
+    let mut scr = Scr::new(strat);
+    let stats = run_iterations(&mut m, &node_ids, &job, Some(&mut scr));
+
+    println!("app           : {}", profile.name);
+    println!("strategy      : {}", strat.name());
+    println!("nodes         : {}", node_ids.len());
+    println!("iterations    : {} (run {})", iterations, stats.iterations_run);
+    println!("total time    : {}", fmt_time(stats.total_time));
+    println!("compute time  : {}", fmt_time(stats.compute_time));
+    println!("exchange time : {}", fmt_time(stats.exchange_time));
+    println!(
+        "ckpt time     : {} ({} checkpoints, {:.1}% overhead)",
+        fmt_time(stats.ckpt_time),
+        stats.checkpoints_taken,
+        stats.ckpt_overhead() * 100.0
+    );
+    println!(
+        "restart time  : {} ({} failures)",
+        fmt_time(stats.restart_time),
+        stats.failures_hit
+    );
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
+    let dir = args
+        .flag("artifacts")
+        .map(Into::into)
+        .unwrap_or_else(default_artifacts_dir);
+    let mut rt = Runtime::open(&dir)?;
+    println!("artifacts: {:?}", rt.artifact_names());
+    for name in rt.artifact_names() {
+        let spec = rt.spec(&name).unwrap().clone();
+        let inputs: Vec<Tensor> = spec
+            .inputs
+            .iter()
+            .map(|s| match s.dtype.as_str() {
+                "i32" => Tensor::I32 { shape: s.shape.clone(), data: vec![1; s.elements()] },
+                _ => Tensor::F32 {
+                    shape: s.shape.clone(),
+                    data: (0..s.elements()).map(|i| (i % 97) as f32 * 1e-3).collect(),
+                },
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let out = rt.execute(&name, &inputs)?;
+        println!(
+            "  {name}: {} outputs in {:.1} ms (first output: {} elems)",
+            out.len(),
+            t0.elapsed().as_secs_f64() * 1e3,
+            out[0].len()
+        );
+    }
+    println!("e2e smoke OK — python never ran on this path");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    match args.subcommand.as_deref() {
+        Some("show-config") => {
+            for ex in bench::table1() {
+                println!("{}", ex.render());
+            }
+            println!("Other presets: QPACE3 (672x KNL, Fig. 6), MareNostrum 3 (Fig. 10)");
+            Ok(())
+        }
+        Some("bench") => cmd_bench(&args),
+        Some("split") => {
+            use deeper::apps::split::{run_split, Placement, SplitJob};
+            let iters = args.get_usize("iterations", 10);
+            for placement in Placement::ALL {
+                let mut m = Machine::build(presets::deep_er());
+                let stats = run_split(&mut m, &SplitJob::xpic_like(iters), placement);
+                println!(
+                    "{:<24} total {:>7.1} s  (particle {:>6.1}, field {:>6.1}, coupling {:>5.2}, spawn {:>4.2})",
+                    placement.name(),
+                    stats.total_time,
+                    stats.particle_time,
+                    stats.field_time,
+                    stats.coupling_time,
+                    stats.spawn_time
+                );
+            }
+            Ok(())
+        }
+        Some("run") => cmd_run(&args),
+        Some("e2e") => cmd_e2e(&args),
+        Some(other) => {
+            eprintln!("unknown subcommand {other}\n{USAGE}");
+            std::process::exit(2);
+        }
+        None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Series collection and fixed-width table printing for the figure
+//! harnesses (every `repro bench figN` prints the same rows/series the
+//! paper reports through these helpers).
+
+use std::fmt::Write as _;
+
+/// A named series of (x, y) points — one line in a paper figure.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    pub fn y_at(&self, x: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|(px, _)| (px - x).abs() < 1e-9)
+            .map(|&(_, y)| y)
+    }
+
+    pub fn last_y(&self) -> Option<f64> {
+        self.points.last().map(|&(_, y)| y)
+    }
+}
+
+/// A figure: several series over a shared x axis, with labels.
+#[derive(Debug, Clone)]
+pub struct Figure {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub series: Vec<Series>,
+}
+
+impl Figure {
+    pub fn new(
+        title: impl Into<String>,
+        x_label: impl Into<String>,
+        y_label: impl Into<String>,
+    ) -> Self {
+        Self {
+            title: title.into(),
+            x_label: x_label.into(),
+            y_label: y_label.into(),
+            series: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, s: Series) {
+        self.series.push(s);
+    }
+
+    pub fn series_named(&self, name: &str) -> Option<&Series> {
+        self.series.iter().find(|s| s.name == name)
+    }
+
+    /// Render as CSV: header `x,<series...>`, one row per x value.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = write!(out, "{}", self.x_label.replace(',', ";"));
+        for s in &self.series {
+            let _ = write!(out, ",{}", s.name.replace(',', ";"));
+        }
+        let _ = writeln!(out);
+        let mut xs: Vec<f64> = self
+            .series
+            .iter()
+            .flat_map(|s| s.points.iter().map(|&(x, _)| x))
+            .collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+        for x in xs {
+            let _ = write!(out, "{x}");
+            for s in &self.series {
+                match s.y_at(x) {
+                    Some(y) => {
+                        let _ = write!(out, ",{y}");
+                    }
+                    None => {
+                        let _ = write!(out, ",");
+                    }
+                }
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+
+    /// Render as a fixed-width table: one row per x, one column per series.
+    pub fn to_table(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let mut xs: Vec<f64> = self
+            .series
+            .iter()
+            .flat_map(|s| s.points.iter().map(|&(x, _)| x))
+            .collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+        let _ = write!(out, "{:>14}", self.x_label);
+        for s in &self.series {
+            let _ = write!(out, "{:>22}", s.name);
+        }
+        let _ = writeln!(out, "    [{}]", self.y_label);
+        for x in xs {
+            let _ = write!(out, "{x:>14.3}");
+            for s in &self.series {
+                match s.y_at(x) {
+                    Some(y) => {
+                        let _ = write!(out, "{y:>22.4}");
+                    }
+                    None => {
+                        let _ = write!(out, "{:>22}", "-");
+                    }
+                }
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+}
+
+/// A key/value summary table (Table I style).
+#[derive(Debug, Clone, Default)]
+pub struct KvTable {
+    pub title: String,
+    pub rows: Vec<(String, String)>,
+}
+
+impl KvTable {
+    pub fn new(title: impl Into<String>) -> Self {
+        Self { title: title.into(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, k: impl Into<String>, v: impl std::fmt::Display) {
+        self.rows.push((k.into(), v.to_string()));
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let w = self.rows.iter().map(|(k, _)| k.len()).max().unwrap_or(0);
+        for (k, v) in &self.rows {
+            let _ = writeln!(out, "  {k:<w$}  {v}");
+        }
+        out
+    }
+}
+
+/// Human-readable bytes.
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= 1e12 {
+        format!("{:.1} TB", b / 1e12)
+    } else if b >= 1e9 {
+        format!("{:.1} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.1} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.1} KB", b / 1e3)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Human-readable bandwidth.
+pub fn fmt_bw(bps: f64) -> String {
+    format!("{}/s", fmt_bytes(bps))
+}
+
+/// Human-readable seconds.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_lookup() {
+        let mut s = Series::new("a");
+        s.push(1.0, 10.0);
+        s.push(2.0, 20.0);
+        assert_eq!(s.y_at(2.0), Some(20.0));
+        assert_eq!(s.y_at(3.0), None);
+        assert_eq!(s.last_y(), Some(20.0));
+    }
+
+    #[test]
+    fn figure_table_renders_all_series() {
+        let mut f = Figure::new("Fig X", "nodes", "seconds");
+        let mut a = Series::new("local");
+        a.push(1.0, 0.5);
+        a.push(2.0, 0.5);
+        let mut b = Series::new("global");
+        b.push(1.0, 0.5);
+        b.push(2.0, 1.0);
+        f.add(a);
+        f.add(b);
+        let t = f.to_table();
+        assert!(t.contains("Fig X"));
+        assert!(t.contains("local"));
+        assert!(t.contains("global"));
+        assert!(t.lines().count() >= 4);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_bytes(2.5e9), "2.5 GB");
+        assert_eq!(fmt_bytes(100.0), "100 B");
+        assert!(fmt_bw(12.5e9).contains("GB/s"));
+        assert!(fmt_time(0.5e-3).contains("us") || fmt_time(0.5e-3).contains("ms"));
+    }
+
+    #[test]
+    fn kv_table() {
+        let mut t = KvTable::new("Table I");
+        t.row("Cluster nodes", 16);
+        t.row("Booster nodes", 8);
+        let r = t.render();
+        assert!(r.contains("Cluster nodes") && r.contains("16"));
+    }
+}

@@ -1,0 +1,159 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Deliberately criterion-shaped: warmup, calibrated iteration counts,
+//! mean / stddev / min over sample batches, and a `black_box` to defeat
+//! constant folding.  Used by the `cargo bench` targets in rust/benches/.
+
+use std::time::{Duration, Instant};
+
+/// Opaque value barrier (defeats constant folding), re-exported so bench
+/// targets don't need `std::hint` directly.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// One benchmark's statistics over sample batches.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl Stats {
+    pub fn mean_s(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Benchmark runner with fixed warmup/measure budgets.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub samples: usize,
+    group: String,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(1),
+            samples: 10,
+            group: String::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(group: impl Into<String>) -> Self {
+        Self { group: group.into(), ..Self::default() }
+    }
+
+    /// Quick preset for heavier end-to-end cases.
+    pub fn quick(group: impl Into<String>) -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            samples: 5,
+            group: group.into(),
+        }
+    }
+
+    /// Run `f` repeatedly, print a criterion-style line, return stats.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        // Warmup + calibration: how many iters fit in one sample?
+        let w0 = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while w0.elapsed() < self.warmup {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / warm_iters.max(1) as f64;
+        let sample_budget = self.measure.as_secs_f64() / self.samples as f64;
+        let iters = ((sample_budget / per_iter).ceil() as u64).max(1);
+
+        let mut times: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            times.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>()
+            / times.len() as f64;
+        let stats = Stats {
+            mean: Duration::from_secs_f64(mean),
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            min: Duration::from_secs_f64(times.iter().copied().fold(f64::INFINITY, f64::min)),
+            max: Duration::from_secs_f64(times.iter().copied().fold(0.0, f64::max)),
+            iters_per_sample: iters,
+            samples: self.samples,
+        };
+        println!(
+            "{:<40} time: [{} {} {}]  ({} iters x {} samples)",
+            format!("{}/{}", self.group, name),
+            fmt_dur(stats.min),
+            fmt_dur(stats.mean),
+            fmt_dur(stats.max),
+            iters,
+            self.samples,
+        );
+        stats
+    }
+
+    /// Run and also report a derived throughput (elements per second).
+    pub fn run_throughput<F: FnMut()>(&self, name: &str, elems: f64, f: F) -> Stats {
+        let stats = self.run(name, f);
+        let eps = elems / stats.mean_s();
+        println!("{:<40} thrpt: {:.3e} elem/s", format!("{}/{}", self.group, name), eps);
+        stats
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench { warmup: Duration::from_millis(5), measure: Duration::from_millis(20), samples: 3, group: "t".into() };
+        let stats = b.run("sum-1k", || {
+            // Heavy enough that one iteration is always measurable.
+            let s: u64 = black_box((0..1000u64).fold(0, |a, x| a ^ x.wrapping_mul(31)));
+            black_box(s);
+        });
+        assert!(stats.mean > Duration::ZERO);
+        assert!(stats.iters_per_sample >= 1);
+        assert!(stats.min <= stats.mean && stats.mean <= stats.max + Duration::from_nanos(1));
+    }
+
+    #[test]
+    fn throughput_runs() {
+        let b = Bench { warmup: Duration::from_millis(2), measure: Duration::from_millis(10), samples: 2, group: "t".into() };
+        let stats = b.run_throughput("sum", 1000.0, || {
+            let s: u64 = black_box((0..1000u64).sum());
+            black_box(s);
+        });
+        assert!(stats.samples == 2);
+    }
+}

@@ -1,0 +1,435 @@
+//! ParaStation-style global MPI: communicators, collectives, spawn-offload,
+//! and the process-management daemon (PMD).
+//!
+//! Paper Sections III-A and III-D2: ParaStation MPI runs a *global MPI*
+//! across Cluster and Booster; `MPI_Comm_spawn` realizes the offload
+//! mechanism that launches process groups on the other side of the
+//! machine.  For DEEP-ER the process-management daemon gained an interface
+//! to *"detect, isolate and clean up failures of MPI-offloaded tasks,
+//! which can then be independently restarted without requiring a full
+//! application recovery"* — the foundation of the OmpSs resilient offload
+//! evaluated in Fig. 10.
+
+use crate::fabric::EpId;
+use crate::sim::{FlowId, SimTime};
+use crate::system::Machine;
+
+/// Time to launch a spawned process group (fork/exec + wire-up), per node.
+pub const SPAWN_COST_PER_NODE: SimTime = 120e-3;
+/// Fixed collective software overhead per algorithm round.
+pub const COLL_ROUND_COST: SimTime = 2e-6;
+/// PMD heartbeat interval: failure detection latency upper bound.
+pub const PMD_HEARTBEAT: SimTime = 100e-3;
+/// Cleanup cost after an isolated offload-group failure (kill + reap).
+pub const PMD_CLEANUP: SimTime = 250e-3;
+
+/// A communicator: an ordered set of node indices (one rank per node; the
+/// within-node ranks share the NIC so node granularity is what matters for
+/// fabric behaviour).
+#[derive(Debug, Clone)]
+pub struct Comm {
+    pub nodes: Vec<usize>,
+}
+
+impl Comm {
+    pub fn world(m: &Machine) -> Self {
+        Self { nodes: (0..m.nodes.len()).collect() }
+    }
+
+    pub fn of(nodes: Vec<usize>) -> Self {
+        assert!(!nodes.is_empty(), "empty communicator");
+        Self { nodes }
+    }
+
+    pub fn size(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn node_of_rank(&self, rank: usize) -> usize {
+        self.nodes[rank]
+    }
+
+    fn ep(&self, m: &Machine, rank: usize) -> EpId {
+        m.nodes[self.nodes[rank]].ep
+    }
+
+    /// Point-to-point send: rank -> rank, `bytes`.
+    pub fn send(&self, m: &mut Machine, from: usize, to: usize, bytes: f64) -> FlowId {
+        let (src, dst) = (self.ep(m, from), self.ep(m, to));
+        m.fabric.put(&mut m.sim, src, dst, bytes)
+    }
+
+    /// Barrier: dissemination algorithm, ceil(log2(p)) rounds of zero-byte
+    /// messages.  Returns completion time.
+    pub fn barrier(&self, m: &mut Machine) -> SimTime {
+        let p = self.size();
+        if p <= 1 {
+            return m.sim.now();
+        }
+        let rounds = (p as f64).log2().ceil() as u32;
+        let mut t = m.sim.now();
+        for r in 0..rounds {
+            let stride = 1usize << r;
+            let flows: Vec<FlowId> = (0..p)
+                .map(|i| {
+                    let peer = (i + stride) % p;
+                    let (src, dst) = (self.ep(m, i), self.ep(m, peer));
+                    let f = m.fabric.put(&mut m.sim, src, dst, 8.0);
+                    m.sim.delay(COLL_ROUND_COST);
+                    f
+                })
+                .collect();
+            t = m.sim.wait_all(&flows);
+        }
+        t
+    }
+
+    /// Allreduce of `bytes` per rank: recursive doubling —
+    /// ceil(log2(p)) rounds, each rank exchanging `bytes` with a partner.
+    pub fn allreduce(&self, m: &mut Machine, bytes: f64) -> SimTime {
+        let p = self.size();
+        if p <= 1 {
+            return m.sim.now();
+        }
+        let rounds = (p as f64).log2().ceil() as u32;
+        let mut t = m.sim.now();
+        for r in 0..rounds {
+            let stride = 1usize << r;
+            let flows: Vec<FlowId> = (0..p)
+                .map(|i| {
+                    let peer = i ^ stride.min(p - 1).max(1);
+                    let peer = peer % p;
+                    let (src, dst) = (self.ep(m, i), self.ep(m, peer));
+                    m.fabric.put(&mut m.sim, src, dst, bytes)
+                })
+                .collect();
+            t = m.sim.wait_all(&flows) + COLL_ROUND_COST;
+        }
+        t
+    }
+
+    /// Ring exchange: every rank sends `bytes` to its right neighbour and
+    /// receives from the left (one round).  The communication pattern of
+    /// SCR's XOR reduce-scatter.
+    pub fn ring_exchange(&self, m: &mut Machine, bytes: f64) -> SimTime {
+        let p = self.size();
+        if p <= 1 {
+            return m.sim.now();
+        }
+        let flows: Vec<FlowId> = (0..p)
+            .map(|i| {
+                let peer = (i + 1) % p;
+                let (src, dst) = (self.ep(m, i), self.ep(m, peer));
+                m.fabric.put(&mut m.sim, src, dst, bytes)
+            })
+            .collect();
+        m.sim.wait_all(&flows)
+    }
+
+    /// Broadcast `bytes` from `root` to all ranks: binomial tree,
+    /// ceil(log2(p)) rounds with the informed set doubling each round.
+    pub fn bcast(&self, m: &mut Machine, root: usize, bytes: f64) -> SimTime {
+        let p = self.size();
+        if p <= 1 {
+            return m.sim.now();
+        }
+        // Rank labels rotated so `root` is tree-rank 0.
+        let rot = |tree_rank: usize| (tree_rank + root) % p;
+        let mut informed = 1usize;
+        let mut t = m.sim.now();
+        while informed < p {
+            let senders = informed.min(p - informed);
+            let flows: Vec<FlowId> = (0..senders)
+                .map(|i| {
+                    let src = self.ep(m, rot(i));
+                    let dst = self.ep(m, rot(informed + i));
+                    m.fabric.put(&mut m.sim, src, dst, bytes)
+                })
+                .collect();
+            t = m.sim.wait_all(&flows) + COLL_ROUND_COST;
+            informed *= 2;
+        }
+        t
+    }
+
+    /// Reduce `bytes` per rank to `root`: mirror of the broadcast tree
+    /// (combining cost charged on each receiving CPU).
+    pub fn reduce(&self, m: &mut Machine, root: usize, bytes: f64) -> SimTime {
+        let p = self.size();
+        if p <= 1 {
+            return m.sim.now();
+        }
+        let rot = |tree_rank: usize| (tree_rank + root) % p;
+        let mut active = p;
+        let mut t = m.sim.now();
+        while active > 1 {
+            let half = active / 2;
+            let flows: Vec<FlowId> = (0..half)
+                .map(|i| {
+                    let src = self.ep(m, rot(active - 1 - i));
+                    let dst = self.ep(m, rot(i));
+                    m.fabric.put(&mut m.sim, src, dst, bytes)
+                })
+                .collect();
+            m.sim.wait_all(&flows);
+            // Combine on the receivers (1 flop/byte class).
+            let combines: Vec<FlowId> = (0..half)
+                .map(|i| {
+                    let cpu = m.nodes[self.nodes[rot(i)]].cpu;
+                    m.sim.flow(bytes, 0.0, &[cpu])
+                })
+                .collect();
+            t = m.sim.wait_all(&combines) + COLL_ROUND_COST;
+            active -= half;
+        }
+        t
+    }
+
+    /// All-to-all personalized exchange of `bytes` per pair: p-1 pairwise
+    /// rounds (the xPic particle-migration pattern between domains).
+    pub fn alltoall(&self, m: &mut Machine, bytes_per_pair: f64) -> SimTime {
+        let p = self.size();
+        if p <= 1 {
+            return m.sim.now();
+        }
+        let mut t = m.sim.now();
+        for round in 1..p {
+            let flows: Vec<FlowId> = (0..p)
+                .map(|i| {
+                    let peer = i ^ round;
+                    let peer = if peer < p { peer } else { (i + round) % p };
+                    let (src, dst) = (self.ep(m, i), self.ep(m, peer));
+                    m.fabric.put(&mut m.sim, src, dst, bytes_per_pair)
+                })
+                .collect();
+            t = m.sim.wait_all(&flows) + COLL_ROUND_COST;
+        }
+        t
+    }
+
+    /// Gather `bytes` per rank to `root` (used by the field solver side of
+    /// xPic and by checkpoint metadata collection).
+    pub fn gather(&self, m: &mut Machine, root: usize, bytes: f64) -> SimTime {
+        let p = self.size();
+        let root_ep = self.ep(m, root);
+        let flows: Vec<FlowId> = (0..p)
+            .filter(|&i| i != root)
+            .map(|i| {
+                let src = self.ep(m, i);
+                m.fabric.put(&mut m.sim, src, root_ep, bytes)
+            })
+            .collect();
+        if flows.is_empty() {
+            m.sim.now()
+        } else {
+            m.sim.wait_all(&flows)
+        }
+    }
+}
+
+/// Result of spawning an offload group (MPI_Comm_spawn).
+#[derive(Debug)]
+pub struct SpawnedGroup {
+    pub comm: Comm,
+    /// Inter-communicator latency between parent and child sides.
+    pub ready_at: SimTime,
+}
+
+/// `MPI_Comm_spawn`: launch a process group on `target_nodes` (typically
+/// on the other side of the Cluster-Booster divide).
+pub fn comm_spawn(m: &mut Machine, target_nodes: Vec<usize>) -> SpawnedGroup {
+    for &n in &target_nodes {
+        assert!(m.nodes[n].alive, "spawning on dead node {n}");
+    }
+    // Group launch cost is paid once (parallel startup), plus a small
+    // per-node wire-up handled by the PMD tree.
+    let n = target_nodes.len() as f64;
+    let d = m.sim.delay(SPAWN_COST_PER_NODE * (1.0 + n.log2().max(0.0) * 0.25));
+    let ready_at = m.sim.wait_all(&[d]);
+    SpawnedGroup { comm: Comm::of(target_nodes), ready_at }
+}
+
+/// The process-management daemon: failure detection + isolation.
+#[derive(Debug, Default)]
+pub struct Pmd {
+    /// Nodes reported failed and already isolated.
+    isolated: Vec<usize>,
+}
+
+impl Pmd {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Poll for failures among `nodes`: any dead node is detected within a
+    /// heartbeat, isolated, and reported.  Advances virtual time by the
+    /// detection+cleanup cost when something failed.
+    pub fn detect_and_isolate(&mut self, m: &mut Machine, nodes: &[usize]) -> Vec<usize> {
+        let newly: Vec<usize> = nodes
+            .iter()
+            .copied()
+            .filter(|&n| !m.nodes[n].alive && !self.isolated.contains(&n))
+            .collect();
+        if !newly.is_empty() {
+            let d = m.sim.delay(PMD_HEARTBEAT / 2.0 + PMD_CLEANUP);
+            m.sim.wait_all(&[d]);
+            self.isolated.extend(newly.iter().copied());
+        }
+        newly
+    }
+
+    /// Clear isolation state for a node that has been replaced/revived.
+    pub fn reinstate(&mut self, node: usize) {
+        self.isolated.retain(|&n| n != node);
+    }
+
+    pub fn isolated(&self) -> &[usize] {
+        &self.isolated
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::presets;
+
+    fn machine() -> Machine {
+        Machine::build(presets::deep_er())
+    }
+
+    #[test]
+    fn barrier_scales_logarithmically() {
+        let mut m = machine();
+        let c4 = Comm::of((0..4).collect());
+        let t0 = m.sim.now();
+        let t4 = c4.barrier(&mut m) - t0;
+        let t1 = m.sim.now();
+        let c16 = Comm::of((0..16).collect());
+        let t16 = c16.barrier(&mut m) - t1;
+        assert!(t16 < 4.0 * t4, "t4={t4:e} t16={t16:e}"); // log, not linear
+        assert!(t16 > t4, "t4={t4:e} t16={t16:e}");
+    }
+
+    #[test]
+    fn allreduce_time_grows_with_bytes() {
+        let mut m = machine();
+        let c = Comm::of((0..8).collect());
+        let t0 = m.sim.now();
+        let t_small = c.allreduce(&mut m, 1e3) - t0;
+        let t1 = m.sim.now();
+        let t_big = c.allreduce(&mut m, 100e6) - t1;
+        assert!(t_big > 10.0 * t_small, "small={t_small:e} big={t_big:e}");
+    }
+
+    #[test]
+    fn ring_exchange_is_single_round() {
+        let mut m = machine();
+        let c = Comm::of((0..16).collect());
+        let bytes = 100e6;
+        let t0 = m.sim.now();
+        let t = c.ring_exchange(&mut m, bytes) - t0;
+        // All sends run concurrently on distinct links: ~bytes/link_bw.
+        let expect = bytes / crate::fabric::TOURMALET_BW;
+        assert!(t < 2.0 * expect, "t={t} expect~{expect}");
+    }
+
+    #[test]
+    fn spawn_pays_startup_cost() {
+        let mut m = machine();
+        let boosters = m.nodes_of(crate::system::NodeKind::Booster);
+        let g = comm_spawn(&mut m, boosters.clone());
+        assert_eq!(g.comm.size(), 8);
+        assert!(g.ready_at >= SPAWN_COST_PER_NODE);
+    }
+
+    #[test]
+    #[should_panic(expected = "dead node")]
+    fn spawn_on_dead_node_panics() {
+        let mut m = machine();
+        m.kill_node(20);
+        let _ = comm_spawn(&mut m, vec![20]);
+    }
+
+    #[test]
+    fn pmd_detects_failure_once() {
+        let mut m = machine();
+        let mut pmd = Pmd::new();
+        let nodes: Vec<usize> = (0..8).collect();
+        assert!(pmd.detect_and_isolate(&mut m, &nodes).is_empty());
+        m.kill_node(5);
+        let t0 = m.sim.now();
+        let got = pmd.detect_and_isolate(&mut m, &nodes);
+        assert_eq!(got, vec![5]);
+        assert!(m.sim.now() > t0, "detection must cost time");
+        // Second poll: already isolated, no re-report.
+        assert!(pmd.detect_and_isolate(&mut m, &nodes).is_empty());
+        pmd.reinstate(5);
+        m.revive_node(5);
+        assert!(pmd.detect_and_isolate(&mut m, &nodes).is_empty());
+    }
+
+    #[test]
+    fn bcast_scales_logarithmically() {
+        let mut m = machine();
+        let bytes = 10e6;
+        let c4 = Comm::of((0..4).collect());
+        let t0 = m.sim.now();
+        let t4 = c4.bcast(&mut m, 0, bytes) - t0;
+        let t1 = m.sim.now();
+        let c16 = Comm::of((0..16).collect());
+        let t16 = c16.bcast(&mut m, 0, bytes) - t1;
+        // 16 ranks = 4 rounds vs 2 rounds: factor ~2, not ~4.
+        assert!(t16 < 3.0 * t4, "t4={t4} t16={t16}");
+        assert!(t16 > t4);
+    }
+
+    #[test]
+    fn bcast_rotates_around_root() {
+        let mut m = machine();
+        let c = Comm::of((0..8).collect());
+        let t0 = m.sim.now();
+        let ta = c.bcast(&mut m, 0, 1e6) - t0;
+        let t1 = m.sim.now();
+        let tb = c.bcast(&mut m, 5, 1e6) - t1;
+        assert!((ta - tb).abs() / ta < 0.05, "root-0 {ta} vs root-5 {tb}");
+    }
+
+    #[test]
+    fn reduce_costs_at_least_bcast() {
+        // Reduce pays the same tree plus combine flops.
+        let mut m = machine();
+        let c = Comm::of((0..8).collect());
+        let bytes = 50e6;
+        let t0 = m.sim.now();
+        let tb = c.bcast(&mut m, 0, bytes) - t0;
+        let t1 = m.sim.now();
+        let tr = c.reduce(&mut m, 0, bytes) - t1;
+        assert!(tr >= tb, "reduce {tr} < bcast {tb}");
+    }
+
+    #[test]
+    fn alltoall_rounds_scale_linearly() {
+        let mut m = machine();
+        let bytes = 5e6;
+        let c4 = Comm::of((0..4).collect());
+        let t0 = m.sim.now();
+        let t4 = c4.alltoall(&mut m, bytes) - t0;
+        let t1 = m.sim.now();
+        let c8 = Comm::of((0..8).collect());
+        let t8 = c8.alltoall(&mut m, bytes) - t1;
+        // 7 rounds vs 3 rounds: between 1.5x and 4x.
+        assert!(t8 > 1.5 * t4 && t8 < 4.0 * t4, "t4={t4} t8={t8}");
+    }
+
+    #[test]
+    fn gather_incasts_to_root() {
+        let mut m = machine();
+        let c = Comm::of((0..8).collect());
+        let bytes = 50e6;
+        let t0 = m.sim.now();
+        let t = c.gather(&mut m, 0, bytes) - t0;
+        // 7 senders share the root rx port: ~7*bytes/link_bw.
+        let expect = 7.0 * bytes / crate::fabric::TOURMALET_BW;
+        assert!((t - expect).abs() / expect < 0.2, "t={t} expect={expect}");
+    }
+}

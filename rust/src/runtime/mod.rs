@@ -1,0 +1,342 @@
+//! PJRT runtime: load and execute the AOT-lowered JAX/Pallas artifacts.
+//!
+//! This is the only bridge between the rust coordinator and real compute.
+//! `python/compile/aot.py` lowers every L2 entry point ONCE to HLO *text*
+//! (text, not serialized `HloModuleProto`: jax >= 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids) plus a `manifest.json` describing input/output tensor
+//! shapes.  At run time this module compiles each module on the PJRT CPU
+//! client exactly once and executes it from the L3 hot path — Python is
+//! never on the request path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+use crate::Result;
+
+/// Tensor metadata from the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest entry missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("manifest entry missing dtype"))?
+            .to_string();
+        Ok(Self { shape, dtype })
+    }
+}
+
+/// One artifact entry from the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        let field = |k: &str| -> Result<&Json> {
+            v.get(k).ok_or_else(|| anyhow::anyhow!("artifact missing {k}"))
+        };
+        let specs = |k: &str| -> Result<Vec<TensorSpec>> {
+            field(k)?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("{k} not an array"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(Self {
+            name: field("name")?.as_str().unwrap_or_default().to_string(),
+            file: field("file")?.as_str().unwrap_or_default().to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+        })
+    }
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: String,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let format = v
+            .get("format")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string();
+        let artifacts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts"))?
+            .iter()
+            .map(ArtifactSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { format, artifacts })
+    }
+}
+
+/// A host tensor moving in/out of PJRT.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Tensor::F32 { shape, data } => xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                shape,
+                cast_bytes(data),
+            )?,
+            Tensor::I32 { shape, data } => xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S32,
+                shape,
+                cast_bytes(data),
+            )?,
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+        match spec.dtype.as_str() {
+            "f32" => Ok(Tensor::F32 { shape: spec.shape.clone(), data: lit.to_vec::<f32>()? }),
+            "i32" => Ok(Tensor::I32 { shape: spec.shape.clone(), data: lit.to_vec::<i32>()? }),
+            other => anyhow::bail!("unsupported dtype {other} in manifest"),
+        }
+    }
+}
+
+fn cast_bytes<T>(data: &[T]) -> &[u8] {
+    // f32/i32 are plain-old-data; reinterpreting as bytes is sound.
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    }
+}
+
+/// The PJRT executor: one compiled executable per artifact, compiled
+/// lazily on first use and cached for the rest of the process lifetime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("dir", &self.dir)
+            .field("artifacts", &self.manifest.artifacts.len())
+            .field("compiled", &self.executables.len())
+            .finish()
+    }
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.json`; compiles lazily).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Manifest::parse(&text)?;
+        if manifest.format != "hlo-text" {
+            anyhow::bail!("unsupported artifact format {:?}", manifest.format);
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, dir, manifest, executables: HashMap::new() })
+    }
+
+    /// Artifact metadata by name.
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.manifest.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.artifacts.iter().map(|a| a.name.clone()).collect()
+    }
+
+    /// Compile `name` now (otherwise it compiles on first execute).
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .spec(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name}"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow::anyhow!("non-UTF8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` with `inputs`; returns the output tensors.
+    ///
+    /// Inputs are validated against the manifest (shape + dtype) — a
+    /// mismatch is a caller bug and errors out before touching PJRT.
+    pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.compile(name)?;
+        let spec = self.spec(name).unwrap().clone();
+        if inputs.len() != spec.inputs.len() {
+            anyhow::bail!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if t.shape() != s.shape.as_slice() {
+                anyhow::bail!(
+                    "{name}: input {i} shape {:?} != manifest {:?}",
+                    t.shape(),
+                    s.shape
+                );
+            }
+            let dtype_ok = matches!(
+                (t, s.dtype.as_str()),
+                (Tensor::F32 { .. }, "f32") | (Tensor::I32 { .. }, "i32")
+            );
+            if !dtype_ok {
+                anyhow::bail!("{name}: input {i} dtype mismatch (manifest {})", s.dtype);
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let exe = self.executables.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the output is always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            anyhow::bail!(
+                "{name}: expected {} outputs, got {}",
+                spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(lit, s)| Tensor::from_literal(lit, s))
+            .collect()
+    }
+
+    /// Number of artifacts compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.executables.len()
+    }
+}
+
+/// Conventional artifacts directory: `$REPRO_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("REPRO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_accessors() {
+        let t = Tensor::F32 { shape: vec![2, 3], data: vec![0.0; 6] };
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert!(t.as_f32().is_some());
+        assert!(t.as_i32().is_none());
+        let s = TensorSpec { shape: vec![2, 3], dtype: "f32".into() };
+        assert_eq!(s.elements(), 6);
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let j = r#"{"format":"hlo-text","artifacts":[
+            {"name":"a","file":"a.hlo.txt",
+             "inputs":[{"shape":[4],"dtype":"f32"}],
+             "outputs":[{"shape":[2,2],"dtype":"i32"}]}]}"#;
+        let m = Manifest::parse(j).unwrap();
+        assert_eq!(m.format, "hlo-text");
+        assert_eq!(m.artifacts.len(), 1);
+        assert_eq!(m.artifacts[0].inputs[0].shape, vec![4]);
+        assert_eq!(m.artifacts[0].outputs[0].dtype, "i32");
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("{\"artifacts\": 3}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    // PJRT-touching tests live in rust/tests/integration_runtime.rs (they
+    // need `make artifacts` to have run).
+}

@@ -1,0 +1,636 @@
+//! SCR: Scalable Checkpoint/Restart with the DEEP-ER strategy set.
+//!
+//! Paper Section III-D1 defines four application-level checkpoint/restart
+//! strategies built from SCR + ParaStation MPI + SIONlib + BeeGFS/BeeOND
+//! + the NAM, ordered from most basic to most advanced:
+//!
+//! * **Single** (`SCR_SINGLE`): checkpoint to the node-local NVMe only —
+//!   survives transient (process) errors, not node loss.
+//! * **Partner** (`SCR_PARTNER`): write locally, *re-read from local
+//!   storage*, send to a partner node, partner writes it — survives node
+//!   failures, but stores every checkpoint twice and pays the re-read.
+//! * **Buddy** (DEEP-ER): SIONlib streams the checkpoint straight from
+//!   memory into a single per-node file on the buddy's BeeOND cache,
+//!   skipping the intermediate re-read of Partner — same resiliency,
+//!   less overhead (Fig. 4).
+//! * **Distributed XOR** (`SCR` XOR): store the full checkpoint locally
+//!   and only distribute *parity* (RAID-5 style) over the group —
+//!   halves the storage and most of the network volume.
+//! * **NAM XOR** (DEEP-ER): offload the parity computation and storage to
+//!   the Network Attached Memory; the FPGA pulls the data via RDMA, so
+//!   node CPUs and NVMe see (almost) only the local write — up to 3x the
+//!   checkpoint bandwidth of Distributed XOR (Fig. 9).
+//!
+//! Every strategy implements both the **checkpoint** path and the
+//! **restart/rebuild** path; validity rules (which failures a checkpoint
+//! survives) are encoded in [`Strategy::survives_node_loss`] and checked
+//! by the integration tests.
+
+pub mod multilevel;
+
+use crate::psmpi::Comm;
+use crate::sim::{FlowId, SimTime};
+use crate::sionlib;
+use crate::system::Machine;
+
+/// XOR group size used by SCR's distributed parity sets.
+pub const DEFAULT_XOR_GROUP: usize = 4;
+/// CPU cost of XOR-folding one byte on a compute node.  XOR is memory-
+/// bandwidth-bound, not flop-bound: 100 flop-equivalents/byte models an
+/// effective ~10 GB/s fold rate on the 1 TFlop/s Haswell node (the cost
+/// the NAM strategy offloads to the FPGA).
+pub const NODE_XOR_FLOP_PER_BYTE: f64 = 100.0;
+
+/// The five checkpoint strategies of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    Single,
+    Partner,
+    Buddy,
+    DistXor,
+    NamXor,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 5] = [
+        Strategy::Single,
+        Strategy::Partner,
+        Strategy::Buddy,
+        Strategy::DistXor,
+        Strategy::NamXor,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Single => "Single",
+            Strategy::Partner => "SCR_PARTNER",
+            Strategy::Buddy => "Buddy",
+            Strategy::DistXor => "Distributed XOR",
+            Strategy::NamXor => "NAM XOR",
+        }
+    }
+
+    /// Can a checkpoint taken with this strategy recover the state of a
+    /// *lost* node (vs only a transient process error)?
+    pub fn survives_node_loss(&self) -> bool {
+        !matches!(self, Strategy::Single)
+    }
+
+    /// Storage written per node per checkpoint, as a multiple of the
+    /// checkpoint size (the Partner/Buddy "stores everything twice" cost
+    /// the paper calls out).
+    pub fn storage_factor(&self, group: usize) -> f64 {
+        match self {
+            Strategy::Single => 1.0,
+            Strategy::Partner | Strategy::Buddy => 2.0,
+            Strategy::DistXor => 1.0 + 1.0 / (group.max(2) as f64 - 1.0),
+            Strategy::NamXor => 1.0, // parity lives on the NAM
+        }
+    }
+}
+
+/// One checkpoint's bookkeeping entry (the "database of checkpoints and
+/// their locations" the paper describes).
+#[derive(Debug, Clone)]
+pub struct CkptRecord {
+    pub id: u64,
+    pub strategy: Strategy,
+    pub bytes_per_node: f64,
+    pub nodes: Vec<usize>,
+    pub taken_at: SimTime,
+    /// Which NAM board holds the parity (NamXor only).
+    pub nam_index: Option<usize>,
+}
+
+/// Outcome of one checkpoint operation.
+#[derive(Debug, Clone, Copy)]
+pub struct CkptReport {
+    /// Wall time the application was blocked (checkpoint overhead).
+    pub blocked: SimTime,
+    /// Aggregate checkpoint bandwidth: payload / blocked time.
+    pub bandwidth: f64,
+    /// Bytes moved over the fabric (diagnostics / ablations).
+    pub network_bytes: f64,
+}
+
+/// Outcome of a restart operation.
+#[derive(Debug, Clone, Copy)]
+pub struct RestartReport {
+    pub time: SimTime,
+    /// True when data for the failed node had to be reconstructed.
+    pub rebuilt: bool,
+}
+
+/// The SCR instance of a job.
+#[derive(Debug)]
+pub struct Scr {
+    pub strategy: Strategy,
+    pub group: usize,
+    next_id: u64,
+    db: Vec<CkptRecord>,
+    /// Live parity bytes held per NAM board (rolling window of one).
+    nam_alloc: Vec<f64>,
+}
+
+impl Scr {
+    pub fn new(strategy: Strategy) -> Self {
+        Self { strategy, group: DEFAULT_XOR_GROUP, next_id: 0, db: Vec::new(), nam_alloc: Vec::new() }
+    }
+
+    pub fn with_group(mut self, group: usize) -> Self {
+        assert!(group >= 2, "XOR group needs >= 2 members");
+        self.group = group;
+        self
+    }
+
+    /// Partner of `i` within `n` nodes: cyclic shift (a derangement — no
+    /// node partners itself; property-tested).
+    pub fn partner_of(i: usize, n: usize) -> usize {
+        assert!(n >= 2, "partner checkpointing needs >= 2 nodes");
+        (i + 1) % n
+    }
+
+    /// Database of checkpoints taken so far.
+    pub fn database(&self) -> &[CkptRecord] {
+        &self.db
+    }
+
+    /// Latest checkpoint usable after losing `failed` (None = none usable).
+    pub fn latest_usable(&self, failed: Option<usize>) -> Option<&CkptRecord> {
+        self.db.iter().rev().find(|r| match failed {
+            None => true,
+            Some(_) => r.strategy.survives_node_loss(),
+        })
+    }
+
+    /// Take a checkpoint of `bytes_per_node` on `nodes`.
+    ///
+    /// Blocks the application for the returned `blocked` time (the paper's
+    /// checkpoint overhead); background activity (async flush, NAM pull
+    /// tail) may continue beyond it inside the simulator.
+    pub fn checkpoint(
+        &mut self,
+        m: &mut Machine,
+        nodes: &[usize],
+        bytes_per_node: f64,
+    ) -> crate::Result<CkptReport> {
+        assert!(!nodes.is_empty());
+        let t0 = m.sim.now();
+        let (blocked_until, network_bytes, nam_index) = match self.strategy {
+            Strategy::Single => (self.write_local_all(m, nodes, bytes_per_node), 0.0, None),
+            Strategy::Partner => {
+                let t = self.partner_ckpt(m, nodes, bytes_per_node);
+                (t, nodes.len() as f64 * bytes_per_node, None)
+            }
+            Strategy::Buddy => {
+                let t = self.buddy_ckpt(m, nodes, bytes_per_node);
+                (t, nodes.len() as f64 * bytes_per_node, None)
+            }
+            Strategy::DistXor => {
+                let t = self.dist_xor_ckpt(m, nodes, bytes_per_node);
+                (t, nodes.len() as f64 * bytes_per_node, None)
+            }
+            Strategy::NamXor => {
+                let (t, idx) = self.nam_xor_ckpt(m, nodes, bytes_per_node)?;
+                (t, nodes.len() as f64 * bytes_per_node, Some(idx))
+            }
+        };
+        let blocked = blocked_until - t0;
+        let record = CkptRecord {
+            id: self.next_id,
+            strategy: self.strategy,
+            bytes_per_node,
+            nodes: nodes.to_vec(),
+            taken_at: blocked_until,
+            nam_index,
+        };
+        self.next_id += 1;
+        self.db.push(record);
+        Ok(CkptReport {
+            blocked,
+            bandwidth: nodes.len() as f64 * bytes_per_node / blocked.max(1e-12),
+            network_bytes,
+        })
+    }
+
+    /// Restart after `failed_node` died (replacement node = same index,
+    /// revived by the caller).  Reads back the newest usable checkpoint.
+    pub fn restart(
+        &mut self,
+        m: &mut Machine,
+        nodes: &[usize],
+        failed_node: Option<usize>,
+    ) -> crate::Result<RestartReport> {
+        let rec = self
+            .latest_usable(failed_node)
+            .ok_or_else(|| anyhow::anyhow!("no usable checkpoint in database"))?
+            .clone();
+        let t0 = m.sim.now();
+        let end = match (rec.strategy, failed_node) {
+            // Everyone re-reads its local checkpoint.
+            (_, None) => self.read_local_all(m, nodes, rec.bytes_per_node),
+            (Strategy::Single, Some(_)) => unreachable!("latest_usable filtered"),
+            (Strategy::Partner | Strategy::Buddy, Some(f)) => {
+                // Survivors read locally; the replacement pulls its copy
+                // from the partner's storage over the fabric.
+                let survivors: Vec<usize> =
+                    nodes.iter().copied().filter(|&n| n != f).collect();
+                let mut flows = self.read_local_flows(m, &survivors, rec.bytes_per_node);
+                let pos = nodes.iter().position(|&n| n == f).unwrap();
+                let partner = nodes[Self::partner_of(pos, nodes.len())];
+                let rf = m.nodes[partner].nvme.as_ref().unwrap().read(
+                    &mut m.sim,
+                    rec.bytes_per_node,
+                    4,
+                    &[],
+                );
+                m.sim.wait_all(&[rf]);
+                flows.push(sionlib::buddy_stream(m, partner, f, rec.bytes_per_node));
+                m.sim.wait_all(&flows)
+            }
+            (Strategy::DistXor, Some(f)) => {
+                self.xor_rebuild(m, nodes, f, rec.bytes_per_node, None)
+            }
+            (Strategy::NamXor, Some(f)) => {
+                self.xor_rebuild(m, nodes, f, rec.bytes_per_node, rec.nam_index)
+            }
+        };
+        Ok(RestartReport { time: end - t0, rebuilt: failed_node.is_some() })
+    }
+
+    // ------------------------------------------------------------------
+    // strategy write paths
+    // ------------------------------------------------------------------
+
+    fn local_write_flows(
+        &self,
+        m: &mut Machine,
+        nodes: &[usize],
+        bytes: f64,
+    ) -> Vec<FlowId> {
+        nodes
+            .iter()
+            .map(|&n| {
+                let dev = m.nodes[n]
+                    .nvme
+                    .as_ref()
+                    .unwrap_or_else(|| panic!("node {n} has no NVMe for checkpoints"));
+                dev.write(&mut m.sim, bytes, 4, &[])
+            })
+            .collect()
+    }
+
+    fn read_local_flows(&self, m: &mut Machine, nodes: &[usize], bytes: f64) -> Vec<FlowId> {
+        nodes
+            .iter()
+            .map(|&n| {
+                let dev = m.nodes[n].nvme.as_ref().unwrap();
+                dev.read(&mut m.sim, bytes, 4, &[])
+            })
+            .collect()
+    }
+
+    fn write_local_all(&self, m: &mut Machine, nodes: &[usize], bytes: f64) -> SimTime {
+        let flows = self.local_write_flows(m, nodes, bytes);
+        m.sim.wait_all(&flows)
+    }
+
+    fn read_local_all(&self, m: &mut Machine, nodes: &[usize], bytes: f64) -> SimTime {
+        let flows = self.read_local_flows(m, nodes, bytes);
+        m.sim.wait_all(&flows)
+    }
+
+    /// SCR_PARTNER: local write -> local re-read -> send -> partner write.
+    fn partner_ckpt(&self, m: &mut Machine, nodes: &[usize], bytes: f64) -> SimTime {
+        // Phase 1: everyone writes locally.
+        self.write_local_all(m, nodes, bytes);
+        // Phase 2: everyone re-reads its own checkpoint (the step Buddy
+        // removes).
+        self.read_local_all(m, nodes, bytes);
+        // Phase 3: stream to partner; partner writes to its NVMe.
+        let flows: Vec<FlowId> = (0..nodes.len())
+            .map(|i| {
+                let buddy = nodes[Self::partner_of(i, nodes.len())];
+                sionlib::buddy_stream(m, nodes[i], buddy, bytes)
+            })
+            .collect();
+        m.sim.wait_all(&flows)
+    }
+
+    /// DEEP-ER Buddy: local write || direct memory->buddy SIONlib stream.
+    fn buddy_ckpt(&self, m: &mut Machine, nodes: &[usize], bytes: f64) -> SimTime {
+        let mut flows = self.local_write_flows(m, nodes, bytes);
+        for i in 0..nodes.len() {
+            let buddy = nodes[Self::partner_of(i, nodes.len())];
+            flows.push(sionlib::buddy_stream(m, nodes[i], buddy, bytes));
+        }
+        m.sim.wait_all(&flows)
+    }
+
+    /// SCR Distributed XOR: local write -> re-read -> reduce-scatter XOR
+    /// on the node CPUs -> parity write to local NVMe.
+    fn dist_xor_ckpt(&self, m: &mut Machine, nodes: &[usize], bytes: f64) -> SimTime {
+        let k = self.group.min(nodes.len()).max(2);
+        // Phase 1+2: local write and re-read (parity needs the data back).
+        self.write_local_all(m, nodes, bytes);
+        self.read_local_all(m, nodes, bytes);
+        // Phase 3: pipelined reduce-scatter within each XOR group — each
+        // node sends ~bytes over the ring and XOR-folds on the CPU.
+        for group in nodes.chunks(k) {
+            if group.len() < 2 {
+                continue;
+            }
+            let comm = Comm::of(group.to_vec());
+            comm.ring_exchange(m, bytes * (group.len() as f64 - 1.0) / group.len() as f64);
+            // CPU XOR fold, overlapped across nodes (concurrent flows).
+            let flows: Vec<FlowId> = group
+                .iter()
+                .map(|&n| {
+                    let cpu = m.nodes[n].cpu;
+                    m.sim.flow(bytes * NODE_XOR_FLOP_PER_BYTE, 0.0, &[cpu])
+                })
+                .collect();
+            m.sim.wait_all(&flows);
+        }
+        // Phase 4: parity segment (bytes/(k-1)) written locally.
+        let parity = bytes / (k as f64 - 1.0);
+        self.write_local_all(m, nodes, parity)
+    }
+
+    /// DEEP-ER NAM XOR: local write || FPGA pulls data + folds parity on
+    /// the NAM.  Node CPUs and NVMe see only the local write.
+    ///
+    /// Parity is **striped across all NAM boards** (libNAM addresses the
+    /// whole NAM pool, Section II-B2): each board pulls `bytes / n_boards`
+    /// from every node, which both aggregates the pull bandwidth of the
+    /// two-board prototype and lets checkpoints larger than one 2 GB HMC
+    /// fit the pool.
+    fn nam_xor_ckpt(
+        &mut self,
+        m: &mut Machine,
+        nodes: &[usize],
+        bytes: f64,
+    ) -> crate::Result<(SimTime, usize)> {
+        if m.nams.is_empty() {
+            anyhow::bail!("machine has no NAM board; NamXor unavailable");
+        }
+        let n_boards = m.nams.len();
+        let shard = bytes / n_boards as f64;
+        // Recycle parity space from the previous NamXor checkpoint (SCR
+        // keeps a rolling window of one on the small HMCs).
+        if self.nam_alloc.len() != n_boards {
+            self.nam_alloc = vec![0.0; n_boards];
+        }
+        for (i, alloc) in self.nam_alloc.iter_mut().enumerate() {
+            if *alloc > 0.0 {
+                m.nams[i].release_parity(*alloc);
+                *alloc = 0.0;
+            }
+        }
+        let mut flows = self.local_write_flows(m, nodes, bytes);
+        let eps: Vec<_> = nodes.iter().map(|&n| m.nodes[n].ep).collect();
+        // Split the NAM borrow from the machine borrow.
+        let (sim, fabric, nams) = (&mut m.sim, &m.fabric, &mut m.nams);
+        for (i, nam) in nams.iter_mut().enumerate() {
+            let pulls = nam.pull_and_xor(sim, fabric, &eps, shard)?;
+            self.nam_alloc[i] = shard;
+            flows.extend(pulls);
+        }
+        Ok((m.sim.wait_all(&flows), 0))
+    }
+
+    /// Rebuild a lost node's checkpoint from parity + survivors.
+    /// `nam_index`: Some => parity streams from the NAM (no survivor NVMe
+    /// re-read: the FPGA still holds parity); None => Distributed XOR
+    /// (survivors re-read their local blocks first).
+    fn xor_rebuild(
+        &self,
+        m: &mut Machine,
+        nodes: &[usize],
+        failed: usize,
+        bytes: f64,
+        nam_index: Option<usize>,
+    ) -> SimTime {
+        let k = self.group.min(nodes.len()).max(2);
+        let group: Vec<usize> = nodes
+            .chunks(k)
+            .find(|g| g.contains(&failed))
+            .map(|g| g.to_vec())
+            .unwrap_or_else(|| nodes.to_vec());
+        let survivors: Vec<usize> = group.iter().copied().filter(|&n| n != failed).collect();
+        // Survivors of other groups read their local checkpoints in
+        // parallel with the rebuild.
+        let others: Vec<usize> = nodes
+            .iter()
+            .copied()
+            .filter(|n| !group.contains(n))
+            .collect();
+        let mut flows = self.read_local_flows(m, &others, bytes);
+        match nam_index {
+            Some(_) => {
+                // NAM boards stream their parity shards; survivors stream
+                // blocks from memory (they still hold the state) — the
+                // replacement XOR-folds on the fly.
+                let dst = m.nodes[failed].ep;
+                let n_boards = m.nams.len().max(1);
+                let shard = bytes / n_boards as f64;
+                let (sim, fabric, nams) = (&mut m.sim, &m.fabric, &mut m.nams);
+                for nam in nams.iter() {
+                    flows.push(nam.push_parity(sim, fabric, dst, shard));
+                }
+                for &s in &survivors {
+                    let sep = m.nodes[s].ep;
+                    flows.push(m.fabric.put(&mut m.sim, sep, dst, bytes));
+                }
+            }
+            None => {
+                // Survivors re-read local blocks, then incast to the
+                // replacement which XOR-folds.
+                let rf = self.read_local_flows(m, &survivors, bytes);
+                m.sim.wait_all(&rf);
+                let dst = m.nodes[failed].ep;
+                for &s in &survivors {
+                    let sep = m.nodes[s].ep;
+                    flows.push(m.fabric.put(&mut m.sim, sep, dst, bytes));
+                }
+                let cpu = m.nodes[failed].cpu;
+                let xor = m
+                    .sim
+                    .flow(bytes * survivors.len() as f64 * NODE_XOR_FLOP_PER_BYTE, 0.0, &[cpu]);
+                flows.push(xor);
+            }
+        }
+        // Survivors in the failed group also re-read their own state for
+        // the rollback itself.
+        flows.extend(self.read_local_flows(m, &survivors, bytes));
+        m.sim.wait_all(&flows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::presets;
+
+    fn machine() -> Machine {
+        Machine::build(presets::deep_er())
+    }
+
+    fn cluster_nodes(m: &Machine) -> Vec<usize> {
+        m.nodes_of(crate::system::NodeKind::Cluster)
+    }
+
+    fn ckpt_time(strategy: Strategy, bytes: f64) -> f64 {
+        let mut m = machine();
+        let nodes = cluster_nodes(&m);
+        let mut scr = Scr::new(strategy);
+        scr.checkpoint(&mut m, &nodes, bytes).unwrap().blocked
+    }
+
+    #[test]
+    fn paper_ordering_single_fastest() {
+        let bytes = 2e9;
+        let single = ckpt_time(Strategy::Single, bytes);
+        for s in [Strategy::Partner, Strategy::Buddy, Strategy::DistXor] {
+            assert!(ckpt_time(s, bytes) > single, "{s:?} faster than Single");
+        }
+    }
+
+    #[test]
+    fn fig4_buddy_faster_than_partner() {
+        let bytes = 2e9;
+        let partner = ckpt_time(Strategy::Partner, bytes);
+        let buddy = ckpt_time(Strategy::Buddy, bytes);
+        assert!(buddy < partner, "buddy={buddy} partner={partner}");
+    }
+
+    #[test]
+    fn fig4_nam_xor_faster_than_dist_xor() {
+        let bytes = 2e9;
+        let dist = ckpt_time(Strategy::DistXor, bytes);
+        let nam = ckpt_time(Strategy::NamXor, bytes);
+        assert!(nam < dist, "nam={nam} dist={dist}");
+    }
+
+    #[test]
+    fn fig9_nam_xor_bandwidth_2_to_3x() {
+        let bytes = 2e9; // Table III: xPic NAM experiment, 2 GB per CP
+        let mut m1 = machine();
+        let nodes = cluster_nodes(&m1);
+        let mut dist = Scr::new(Strategy::DistXor);
+        let r_dist = dist.checkpoint(&mut m1, &nodes, bytes).unwrap();
+        let mut m2 = machine();
+        let mut nam = Scr::new(Strategy::NamXor);
+        let r_nam = nam.checkpoint(&mut m2, &nodes, bytes).unwrap();
+        let ratio = r_nam.bandwidth / r_dist.bandwidth;
+        assert!(
+            (1.8..=4.0).contains(&ratio),
+            "bandwidth ratio {ratio:.2} outside Fig. 9 band"
+        );
+        // Time saving 50-65% per the paper.
+        let saving = 1.0 - r_nam.blocked / r_dist.blocked;
+        assert!(
+            (0.40..=0.75).contains(&saving),
+            "time saving {saving:.2} outside Fig. 9 band"
+        );
+    }
+
+    #[test]
+    fn storage_factors() {
+        assert_eq!(Strategy::Single.storage_factor(8), 1.0);
+        assert_eq!(Strategy::Partner.storage_factor(8), 2.0);
+        assert!((Strategy::DistXor.storage_factor(8) - (1.0 + 1.0 / 7.0)).abs() < 1e-12);
+        assert_eq!(Strategy::NamXor.storage_factor(8), 1.0);
+    }
+
+    #[test]
+    fn partner_map_is_derangement() {
+        for n in 2..64 {
+            for i in 0..n {
+                let p = Scr::partner_of(i, n);
+                assert_ne!(p, i);
+                assert!(p < n);
+            }
+        }
+    }
+
+    #[test]
+    fn restart_after_node_loss_partner() {
+        let mut m = machine();
+        let nodes = cluster_nodes(&m);
+        let mut scr = Scr::new(Strategy::Partner);
+        scr.checkpoint(&mut m, &nodes, 1e9).unwrap();
+        m.kill_node(nodes[3]);
+        m.revive_node(nodes[3]); // replacement in place
+        let r = scr.restart(&mut m, &nodes, Some(nodes[3])).unwrap();
+        assert!(r.rebuilt);
+        assert!(r.time > 0.0);
+    }
+
+    #[test]
+    fn single_cannot_restart_after_node_loss() {
+        let mut m = machine();
+        let nodes = cluster_nodes(&m);
+        let mut scr = Scr::new(Strategy::Single);
+        scr.checkpoint(&mut m, &nodes, 1e9).unwrap();
+        assert!(scr.restart(&mut m, &nodes, Some(nodes[0])).is_err());
+        // ...but transient-error restart works.
+        assert!(scr.restart(&mut m, &nodes, None).is_ok());
+    }
+
+    #[test]
+    fn nam_xor_recycles_hmc_space() {
+        let mut m = machine();
+        let nodes = cluster_nodes(&m);
+        let mut scr = Scr::new(Strategy::NamXor);
+        // 11 checkpoints of 1.9 GB: without recycling the 2 GB HMC would
+        // overflow immediately on the second one (same board reused after
+        // round-robin over 2 boards).
+        for _ in 0..11 {
+            scr.checkpoint(&mut m, &nodes, 1.9e9).unwrap();
+        }
+        assert_eq!(scr.database().len(), 11);
+    }
+
+    #[test]
+    fn nam_xor_errors_without_nam() {
+        let m = Machine::build(presets::qpace3().with_cluster_nodes(8));
+        let nodes: Vec<usize> = (0..8).collect();
+        let scr = Scr::new(Strategy::NamXor);
+        // QPACE3 has no NVMe either, so use a DEEP-ER machine without NAM:
+        let _ = scr; // the qpace3 preset lacks NVMe; rebuild with deep_er
+        let mut spec = presets::deep_er();
+        spec.n_nam = 0;
+        let mut m2 = Machine::build(spec);
+        let nodes2: Vec<usize> = m2.nodes_of(crate::system::NodeKind::Cluster);
+        let mut scr2 = Scr::new(Strategy::NamXor);
+        assert!(scr2.checkpoint(&mut m2, &nodes2, 1e9).is_err());
+        drop(m);
+        drop(nodes);
+    }
+
+    #[test]
+    fn xor_rebuild_restores_after_loss() {
+        for strat in [Strategy::DistXor, Strategy::NamXor] {
+            let mut m = machine();
+            let nodes = cluster_nodes(&m);
+            let mut scr = Scr::new(strat);
+            scr.checkpoint(&mut m, &nodes, 1e9).unwrap();
+            m.kill_node(nodes[5]);
+            m.revive_node(nodes[5]);
+            let r = scr.restart(&mut m, &nodes, Some(nodes[5])).unwrap();
+            assert!(r.rebuilt, "{strat:?}");
+            assert!(r.time > 0.0, "{strat:?}");
+        }
+    }
+
+    #[test]
+    fn latest_usable_respects_failure_kind() {
+        let mut m = machine();
+        let nodes = cluster_nodes(&m);
+        let mut scr = Scr::new(Strategy::Single);
+        scr.checkpoint(&mut m, &nodes, 1e8).unwrap();
+        assert!(scr.latest_usable(None).is_some());
+        assert!(scr.latest_usable(Some(0)).is_none());
+    }
+}

@@ -1,0 +1,344 @@
+//! Multi-level checkpointing — the full SCR discipline the paper builds on.
+//!
+//! Moody et al.'s SCR (the paper's [14]) is a *multi-level* checkpoint
+//! system: cheap, frequent checkpoints at low levels (node-local) and
+//! expensive, rare ones at high levels (partner/XOR, then the parallel
+//! file system).  DEEP-ER's contribution slots new mechanisms into those
+//! levels — BeeOND caching at L1, Buddy/NAM-XOR at L2, asynchronous
+//! global flush at L3 — which is exactly how this module composes them:
+//!
+//! * **L1** `Single`: node-local NVMe, survives process restarts.
+//! * **L2** any of `Buddy` / `Partner` / `DistXor` / `NamXor`: survives
+//!   single-node loss.
+//! * **L3** global: BeeOND-async flush of the L2 checkpoint to BeeGFS,
+//!   survives rack-level faults (and job retirement).
+//!
+//! Level frequencies come from the generalized Young/Daly optimum
+//! ([`optimal_interval`]): interval_k = sqrt(2 * cost_k * MTBF_k).
+
+use super::{Scr, Strategy};
+use crate::beegfs::BeeGfs;
+use crate::sim::SimTime;
+use crate::system::Machine;
+
+/// Young's approximation of the optimal checkpoint interval:
+/// `sqrt(2 * C * M)` for checkpoint cost `C` and failure MTBF `M`
+/// (both in seconds).  Within a few percent of Daly's higher-order
+/// formula whenever C << M, which holds for every DEEP-ER level.
+pub fn optimal_interval(ckpt_cost: SimTime, mtbf: SimTime) -> SimTime {
+    assert!(ckpt_cost > 0.0 && mtbf > 0.0);
+    (2.0 * ckpt_cost * mtbf).sqrt()
+}
+
+/// Expected wasted time per failure with interval `tau` (half the
+/// interval re-computed + restart cost) — the quantity `optimal_interval`
+/// balances against checkpoint overhead.
+pub fn expected_waste(tau: SimTime, ckpt_cost: SimTime, restart_cost: SimTime, mtbf: SimTime) -> f64 {
+    // Overhead fraction: C/tau of useful time + per-failure loss.
+    ckpt_cost / tau + (tau / 2.0 + restart_cost) / mtbf
+}
+
+/// Configuration of the three levels.
+#[derive(Debug, Clone)]
+pub struct MultiLevelConfig {
+    /// Take an L1 (local) checkpoint every `l1_every` iterations.
+    pub l1_every: usize,
+    /// Promote to L2 (partner/XOR) every `l2_every` L1 checkpoints.
+    pub l2_every: usize,
+    /// Flush to the global FS every `l3_every` L2 checkpoints.
+    pub l3_every: usize,
+    /// Which strategy implements L2.
+    pub l2_strategy: Strategy,
+}
+
+impl Default for MultiLevelConfig {
+    fn default() -> Self {
+        Self { l1_every: 1, l2_every: 5, l3_every: 4, l2_strategy: Strategy::Buddy }
+    }
+}
+
+impl MultiLevelConfig {
+    /// Derive level frequencies from failure statistics, Young-style:
+    /// each level's interval covers the failure class it protects
+    /// against.  `iter_time` converts seconds to iteration counts.
+    pub fn from_failure_model(
+        iter_time: SimTime,
+        l1_cost: SimTime,
+        l2_cost: SimTime,
+        l3_cost: SimTime,
+        mtbf_process: SimTime,
+        mtbf_node: SimTime,
+        mtbf_system: SimTime,
+    ) -> Self {
+        let to_iters = |tau: SimTime| ((tau / iter_time).round() as usize).max(1);
+        let l1 = to_iters(optimal_interval(l1_cost, mtbf_process));
+        let l2 = to_iters(optimal_interval(l2_cost, mtbf_node)).max(l1);
+        let l3 = to_iters(optimal_interval(l3_cost, mtbf_system)).max(l2);
+        Self {
+            l1_every: l1,
+            l2_every: (l2 / l1).max(1),
+            l3_every: (l3 / (l2.max(1))).max(1),
+            l2_strategy: Strategy::Buddy,
+        }
+    }
+}
+
+/// Report of one multi-level run segment.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LevelStats {
+    pub l1_count: usize,
+    pub l2_count: usize,
+    pub l3_count: usize,
+    pub l1_time: SimTime,
+    pub l2_time: SimTime,
+    /// L3 is asynchronous; this is the *blocked* portion only.
+    pub l3_blocked: SimTime,
+}
+
+/// The multi-level checkpointer: owns one SCR instance per level.
+#[derive(Debug)]
+pub struct MultiLevelScr {
+    pub config: MultiLevelConfig,
+    l1: Scr,
+    l2: Scr,
+    global: BeeGfs,
+    /// Background L3 flush flows (drained at job end or on L3 restart).
+    l3_flows: Vec<crate::sim::FlowId>,
+    pub stats: LevelStats,
+    l1_since_l2: usize,
+    l2_since_l3: usize,
+}
+
+impl MultiLevelScr {
+    pub fn new(config: MultiLevelConfig) -> Self {
+        Self {
+            l1: Scr::new(Strategy::Single),
+            l2: Scr::new(config.l2_strategy),
+            global: BeeGfs::new(),
+            l3_flows: Vec::new(),
+            stats: LevelStats::default(),
+            l1_since_l2: 0,
+            l2_since_l3: 0,
+            config,
+        }
+    }
+
+    /// Checkpoint at iteration `iter`; picks the level(s) due.
+    /// Returns the time the application was blocked.
+    pub fn checkpoint_at(
+        &mut self,
+        m: &mut Machine,
+        nodes: &[usize],
+        bytes_per_node: f64,
+        iter: usize,
+    ) -> crate::Result<SimTime> {
+        if self.config.l1_every == 0 || iter % self.config.l1_every != 0 {
+            return Ok(0.0);
+        }
+        let t0 = m.sim.now();
+        // L1: always taken when due (cheap, local).
+        let r1 = self.l1.checkpoint(m, nodes, bytes_per_node)?;
+        self.stats.l1_count += 1;
+        self.stats.l1_time += r1.blocked;
+        self.l1_since_l2 += 1;
+
+        // L2: every l2_every L1s.
+        if self.l1_since_l2 >= self.config.l2_every {
+            self.l1_since_l2 = 0;
+            let r2 = self.l2.checkpoint(m, nodes, bytes_per_node)?;
+            self.stats.l2_count += 1;
+            self.stats.l2_time += r2.blocked;
+            self.l2_since_l3 += 1;
+
+            // L3: asynchronous flush of the freshly-taken L2 to BeeGFS.
+            if self.l2_since_l3 >= self.config.l3_every {
+                self.l2_since_l3 = 0;
+                let t3 = m.sim.now();
+                for &n in nodes {
+                    let flows = self.global.write_striped(m, n, bytes_per_node);
+                    self.l3_flows.extend(flows);
+                }
+                self.stats.l3_count += 1;
+                // Only the issue cost blocks; the transfer is background.
+                self.stats.l3_blocked += m.sim.now() - t3;
+            }
+        }
+        Ok(m.sim.now() - t0)
+    }
+
+    /// Restart after a failure: cheapest level that covers it.
+    /// `node_lost=false` -> L1; `node_lost=true` -> L2; if L2 has no
+    /// record (node lost before any L2), fall back to L3 (global read).
+    pub fn restart(
+        &mut self,
+        m: &mut Machine,
+        nodes: &[usize],
+        failed: Option<usize>,
+    ) -> crate::Result<SimTime> {
+        match failed {
+            None => Ok(self.l1.restart(m, nodes, None)?.time),
+            Some(f) => {
+                if self.l2.latest_usable(Some(f)).is_some() {
+                    Ok(self.l2.restart(m, nodes, Some(f))?.time)
+                } else if self.stats.l3_count > 0 {
+                    // Global read-back for every node.
+                    let t0 = m.sim.now();
+                    // Drain pending flushes first (consistency point).
+                    let pending = std::mem::take(&mut self.l3_flows);
+                    if !pending.is_empty() {
+                        m.sim.wait_all(&pending);
+                    }
+                    let mut flows = Vec::new();
+                    let bytes = self
+                        .l1
+                        .database()
+                        .last()
+                        .map(|r| r.bytes_per_node)
+                        .unwrap_or(0.0);
+                    for &n in nodes {
+                        flows.extend(self.global.read_striped(m, n, bytes));
+                    }
+                    let t = m.sim.wait_all(&flows);
+                    Ok(t - t0)
+                } else {
+                    anyhow::bail!("no checkpoint level covers a lost node yet")
+                }
+            }
+        }
+    }
+
+    /// Job-end barrier: all L3 flushes durable.
+    pub fn drain(&mut self, m: &mut Machine) -> SimTime {
+        let pending = std::mem::take(&mut self.l3_flows);
+        if pending.is_empty() {
+            m.sim.now()
+        } else {
+            m.sim.wait_all(&pending)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::{presets, NodeKind};
+
+    fn machine() -> Machine {
+        Machine::build(presets::deep_er())
+    }
+
+    #[test]
+    fn young_formula_basics() {
+        // C=10s, M=10000s -> tau = sqrt(2*10*10000) ~ 447 s.
+        let tau = optimal_interval(10.0, 10_000.0);
+        assert!((tau - 447.2).abs() < 1.0, "tau={tau}");
+        // The optimum beats half and double intervals on expected waste.
+        let w_opt = expected_waste(tau, 10.0, 20.0, 10_000.0);
+        assert!(w_opt < expected_waste(tau / 2.0, 10.0, 20.0, 10_000.0));
+        assert!(w_opt < expected_waste(tau * 2.0, 10.0, 20.0, 10_000.0));
+    }
+
+    #[test]
+    fn config_from_failure_model_is_ordered() {
+        let c = MultiLevelConfig::from_failure_model(
+            10.0,   // iteration time
+            2.0,    // L1 cost
+            6.0,    // L2 cost
+            60.0,   // L3 cost
+            2_000.0, // process MTBF
+            50_000.0, // node MTBF
+            500_000.0, // system MTBF
+        );
+        assert!(c.l1_every >= 1);
+        assert!(c.l2_every >= 1);
+        assert!(c.l3_every >= 1);
+        // L2 period (in iterations) must be >= L1 period.
+        assert!(c.l1_every * c.l2_every >= c.l1_every);
+    }
+
+    #[test]
+    fn levels_fire_at_configured_cadence() {
+        let mut m = machine();
+        let nodes = m.nodes_of(NodeKind::Cluster);
+        let cfg = MultiLevelConfig { l1_every: 1, l2_every: 3, l3_every: 2, l2_strategy: Strategy::Buddy };
+        let mut ml = MultiLevelScr::new(cfg);
+        for iter in 1..=12 {
+            ml.checkpoint_at(&mut m, &nodes, 1e9, iter).unwrap();
+        }
+        assert_eq!(ml.stats.l1_count, 12);
+        assert_eq!(ml.stats.l2_count, 4); // every 3rd L1
+        assert_eq!(ml.stats.l3_count, 2); // every 2nd L2
+        ml.drain(&mut m);
+    }
+
+    #[test]
+    fn l1_much_cheaper_than_l2() {
+        let mut m = machine();
+        let nodes = m.nodes_of(NodeKind::Cluster);
+        let mut ml = MultiLevelScr::new(MultiLevelConfig {
+            l1_every: 1,
+            l2_every: 2,
+            l3_every: 100,
+            l2_strategy: Strategy::Partner,
+        });
+        for iter in 1..=4 {
+            ml.checkpoint_at(&mut m, &nodes, 2e9, iter).unwrap();
+        }
+        let l1_avg = ml.stats.l1_time / ml.stats.l1_count as f64;
+        let l2_avg = ml.stats.l2_time / ml.stats.l2_count as f64;
+        assert!(l2_avg > 1.5 * l1_avg, "l1={l1_avg} l2={l2_avg}");
+    }
+
+    #[test]
+    fn restart_picks_cheapest_covering_level() {
+        let mut m = machine();
+        let nodes = m.nodes_of(NodeKind::Cluster);
+        let mut ml = MultiLevelScr::new(MultiLevelConfig::default());
+        for iter in 1..=10 {
+            ml.checkpoint_at(&mut m, &nodes, 1e9, iter).unwrap();
+        }
+        // Transient: L1 restart works.
+        let t1 = ml.restart(&mut m, &nodes, None).unwrap();
+        assert!(t1 > 0.0);
+        // Node loss: L2 restart works and costs more than L1.
+        m.kill_node(nodes[1]);
+        m.revive_node(nodes[1]);
+        let t2 = ml.restart(&mut m, &nodes, Some(nodes[1])).unwrap();
+        assert!(t2 > t1, "l1={t1} l2={t2}");
+    }
+
+    #[test]
+    fn node_loss_before_any_l2_falls_back_or_errors() {
+        let mut m = machine();
+        let nodes = m.nodes_of(NodeKind::Cluster);
+        let mut ml = MultiLevelScr::new(MultiLevelConfig {
+            l1_every: 1,
+            l2_every: 100, // never during this test
+            l3_every: 100,
+            l2_strategy: Strategy::Buddy,
+        });
+        ml.checkpoint_at(&mut m, &nodes, 1e9, 1).unwrap();
+        m.kill_node(nodes[0]);
+        m.revive_node(nodes[0]);
+        assert!(ml.restart(&mut m, &nodes, Some(nodes[0])).is_err());
+    }
+
+    #[test]
+    fn async_l3_blocks_less_than_sync_read_back() {
+        let mut m = machine();
+        let nodes = m.nodes_of(NodeKind::Cluster);
+        let mut ml = MultiLevelScr::new(MultiLevelConfig {
+            l1_every: 1,
+            l2_every: 1,
+            l3_every: 1,
+            l2_strategy: Strategy::Buddy,
+        });
+        ml.checkpoint_at(&mut m, &nodes, 1e9, 1).unwrap();
+        // The L3 issue cost is (near) zero blocked time...
+        assert!(ml.stats.l3_blocked < 0.01, "blocked={}", ml.stats.l3_blocked);
+        // ...while the actual flush takes real time to drain.
+        let t0 = m.sim.now();
+        let t = ml.drain(&mut m) - t0;
+        assert!(t > 0.5, "flush drained too fast: {t}");
+    }
+}

@@ -1,0 +1,138 @@
+//! Failure injection: scheduled and stochastic node failures.
+//!
+//! The paper's resiliency experiments use *targeted* failures (Fig. 8: an
+//! error after 60 of 100 iterations; Fig. 10: an error right before the
+//! end of the run) — modelled by [`FailurePlan::at_iterations`].  For the
+//! wider test/bench sweeps an exponential-MTBF injector generates failure
+//! times the way Exascale reliability studies do.
+
+use crate::sim::rng::SplitMix64;
+use crate::sim::SimTime;
+
+/// A single injected failure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Failure {
+    /// Node index within the job's node list.
+    pub node: usize,
+    /// Either a virtual time or an iteration index, per plan kind.
+    pub at: f64,
+}
+
+/// When failures strike during a run.
+#[derive(Debug, Clone, Default)]
+pub struct FailurePlan {
+    /// Failures keyed by *iteration* (checked at iteration boundaries, the
+    /// way application-level checkpointing observes them).
+    pub at_iterations: Vec<Failure>,
+    /// Failures keyed by virtual time.
+    pub at_times: Vec<Failure>,
+}
+
+impl FailurePlan {
+    /// No failures.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// One failure of `node` at iteration `iter` (paper Figs. 8/10 style).
+    pub fn one_at_iteration(node: usize, iter: usize) -> Self {
+        Self {
+            at_iterations: vec![Failure { node, at: iter as f64 }],
+            at_times: Vec::new(),
+        }
+    }
+
+    /// Sample an exponential-MTBF failure schedule over `horizon` seconds
+    /// for `nodes` nodes.  `mtbf_node` is the per-node mean time between
+    /// failures; the system-level rate is `nodes / mtbf_node`.
+    pub fn exponential(nodes: usize, mtbf_node: SimTime, horizon: SimTime, seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let mut at_times = Vec::new();
+        if nodes == 0 {
+            return Self { at_iterations: Vec::new(), at_times };
+        }
+        let system_mtbf = mtbf_node / nodes as f64;
+        let mut t = 0.0;
+        loop {
+            t += rng.next_exp(system_mtbf);
+            if t >= horizon {
+                break;
+            }
+            let node = rng.next_below(nodes as u64) as usize;
+            at_times.push(Failure { node, at: t });
+        }
+        Self { at_iterations: Vec::new(), at_times }
+    }
+
+    /// Failure (if any) scheduled for iteration `iter`.
+    pub fn failure_at_iteration(&self, iter: usize) -> Option<Failure> {
+        self.at_iterations
+            .iter()
+            .find(|f| f.at as usize == iter)
+            .copied()
+    }
+
+    /// Failures with time in `(t0, t1]`.
+    pub fn failures_between(&self, t0: SimTime, t1: SimTime) -> Vec<Failure> {
+        self.at_times
+            .iter()
+            .filter(|f| f.at > t0 && f.at <= t1)
+            .copied()
+            .collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.at_iterations.is_empty() && self.at_times.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn targeted_failure_found_at_its_iteration() {
+        let plan = FailurePlan::one_at_iteration(3, 60);
+        assert!(plan.failure_at_iteration(59).is_none());
+        let f = plan.failure_at_iteration(60).unwrap();
+        assert_eq!(f.node, 3);
+        assert!(plan.failure_at_iteration(61).is_none());
+    }
+
+    #[test]
+    fn exponential_rate_scales_with_nodes() {
+        let horizon = 1e6;
+        let few = FailurePlan::exponential(10, 1e5, horizon, 1).at_times.len();
+        let many = FailurePlan::exponential(100, 1e5, horizon, 1).at_times.len();
+        assert!(many > 5 * few, "few={few} many={many}");
+    }
+
+    #[test]
+    fn exponential_deterministic_per_seed() {
+        let a = FailurePlan::exponential(32, 1e5, 1e6, 7).at_times;
+        let b = FailurePlan::exponential(32, 1e5, 1e6, 7).at_times;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn failures_between_is_half_open() {
+        let plan = FailurePlan {
+            at_iterations: Vec::new(),
+            at_times: vec![
+                Failure { node: 0, at: 1.0 },
+                Failure { node: 1, at: 2.0 },
+                Failure { node: 2, at: 3.0 },
+            ],
+        };
+        let mid = plan.failures_between(1.0, 3.0);
+        assert_eq!(mid.len(), 2);
+        assert_eq!(mid[0].node, 1);
+        assert_eq!(mid[1].node, 2);
+    }
+
+    #[test]
+    fn zero_nodes_no_failures() {
+        let plan = FailurePlan::exponential(0, 1e5, 1e6, 3);
+        assert!(plan.is_empty());
+    }
+}

@@ -1,0 +1,285 @@
+//! Machine models: nodes, topology, presets, failure injection.
+//!
+//! [`Machine`] is the assembly point of the reproduction: it instantiates
+//! the [`crate::sim::Sim`] resources for every node (CPU, NIC ports,
+//! node-local devices), the EXTOLL fabric, the BeeGFS storage servers and
+//! the NAM boards, according to a [`MachineSpec`] preset.
+//!
+//! Presets carry the published configurations:
+//! * [`presets::deep_er`] — Table I: 16 Haswell Cluster nodes + 8 KNL
+//!   Booster nodes, NVMe everywhere, 2 NAM boards, 1 MDS + 2 storage
+//!   servers, uniform Tourmalet fabric.
+//! * [`presets::qpace3`] — the 672-node KNL system used for Fig. 6
+//!   (no NVMe: RAM-disk emulation, like the paper did).
+//! * [`presets::marenostrum3`] — the Sandy Bridge cluster used for the
+//!   FWI/OmpSs experiments (Fig. 10).
+
+pub mod failure;
+pub mod presets;
+
+use crate::fabric::{EpId, Fabric};
+use crate::nam::NamDevice;
+use crate::sim::{FlowId, ResId, Sim, SimTime};
+use crate::storage::{Device, DeviceParams};
+
+/// Which side of the Cluster-Booster system a node belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    Cluster,
+    Booster,
+}
+
+/// Static per-node hardware description (one Table I column).
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub name: &'static str,
+    pub kind: NodeKind,
+    pub cores: u32,
+    pub freq_ghz: f64,
+    /// Peak double-precision compute, flop/s.
+    pub peak_flops: f64,
+    /// Main memory per node, bytes.
+    pub mem_bytes: f64,
+    /// Fast-tier memory (MCDRAM on KNL), bytes; 0 when absent.
+    pub fast_mem_bytes: f64,
+    pub nic_bw: f64,
+    pub nic_latency: SimTime,
+    pub nvme: Option<DeviceParams>,
+    pub hdd: Option<DeviceParams>,
+    pub ramdisk: Option<DeviceParams>,
+}
+
+/// Full machine description (a paper testbed).
+#[derive(Debug, Clone)]
+pub struct MachineSpec {
+    pub name: &'static str,
+    pub cluster: NodeSpec,
+    pub n_cluster: usize,
+    pub booster: Option<NodeSpec>,
+    pub n_booster: usize,
+    /// Global-storage servers (BeeGFS object storage targets).
+    pub n_storage_servers: usize,
+    pub server_device: DeviceParams,
+    pub server_nic_bw: f64,
+    /// Metadata operation service time at the MDS (create/open/stat).
+    pub mds_op_cost: SimTime,
+    pub n_nam: usize,
+    pub backplane_bw: f64,
+}
+
+impl MachineSpec {
+    pub fn total_nodes(&self) -> usize {
+        self.n_cluster + self.n_booster
+    }
+
+    /// Scale the compute partition (weak-scaling sweeps re-use presets).
+    pub fn with_cluster_nodes(mut self, n: usize) -> Self {
+        self.n_cluster = n;
+        self
+    }
+
+    pub fn with_booster_nodes(mut self, n: usize) -> Self {
+        self.n_booster = n;
+        self
+    }
+}
+
+/// A live node: resources registered in the simulator.
+#[derive(Debug)]
+pub struct Node {
+    pub kind: NodeKind,
+    pub spec: NodeSpec,
+    pub ep: EpId,
+    pub cpu: ResId,
+    pub nvme: Option<Device>,
+    pub hdd: Option<Device>,
+    pub ramdisk: Option<Device>,
+    pub alive: bool,
+}
+
+/// A BeeGFS storage server node (object storage target host).
+#[derive(Debug)]
+pub struct ServerNode {
+    pub ep: EpId,
+    pub device: Device,
+}
+
+/// The assembled machine.
+#[derive(Debug)]
+pub struct Machine {
+    pub sim: Sim,
+    pub fabric: Fabric,
+    pub spec: MachineSpec,
+    pub nodes: Vec<Node>,
+    pub servers: Vec<ServerNode>,
+    /// Metadata server endpoint + service resource.
+    pub mds_ep: EpId,
+    pub mds_res: ResId,
+    pub nams: Vec<NamDevice>,
+}
+
+impl Machine {
+    /// Instantiate every resource for `spec`.
+    pub fn build(spec: MachineSpec) -> Self {
+        let mut sim = Sim::new();
+        let mut fabric = Fabric::new(&mut sim, spec.backplane_bw);
+        let mut nodes = Vec::with_capacity(spec.total_nodes());
+
+        let add_node = |sim: &mut Sim, fabric: &mut Fabric, ns: &NodeSpec, idx: usize| {
+            let label = format!("{}{}", if ns.kind == NodeKind::Cluster { "cn" } else { "bn" }, idx);
+            let ep = fabric.endpoint(sim, &label, ns.nic_bw, ns.nic_latency);
+            let cpu = sim.resource(format!("{label}:cpu"), ns.peak_flops);
+            let nvme = ns.nvme.clone().map(|p| Device::new(sim, p, &label));
+            let hdd = ns.hdd.clone().map(|p| Device::new(sim, p, &label));
+            let ramdisk = ns.ramdisk.clone().map(|p| Device::new(sim, p, &label));
+            Node { kind: ns.kind, spec: ns.clone(), ep, cpu, nvme, hdd, ramdisk, alive: true }
+        };
+
+        for i in 0..spec.n_cluster {
+            let n = add_node(&mut sim, &mut fabric, &spec.cluster, i);
+            nodes.push(n);
+        }
+        if let Some(booster) = &spec.booster {
+            for i in 0..spec.n_booster {
+                let n = add_node(&mut sim, &mut fabric, booster, i);
+                nodes.push(n);
+            }
+        }
+
+        let mut servers = Vec::with_capacity(spec.n_storage_servers);
+        for i in 0..spec.n_storage_servers {
+            let label = format!("oss{i}");
+            let ep = fabric.endpoint(&mut sim, &label, spec.server_nic_bw, crate::fabric::LAT_CLUSTER);
+            let device = Device::new(&mut sim, spec.server_device.clone(), &label);
+            servers.push(ServerNode { ep, device });
+        }
+
+        let mds_ep = fabric.endpoint(&mut sim, "mds", spec.server_nic_bw, crate::fabric::LAT_CLUSTER);
+        // MDS service modelled as a resource of `1/op_cost` ops per second;
+        // flows carry "operations" instead of bytes.
+        let mds_res = sim.resource("mds:svc", 1.0 / spec.mds_op_cost.max(1e-9));
+
+        let mut nams = Vec::with_capacity(spec.n_nam);
+        for i in 0..spec.n_nam {
+            nams.push(NamDevice::new(&mut sim, &mut fabric, i));
+        }
+
+        Self { sim, fabric, spec, nodes, servers, mds_ep, mds_res, nams }
+    }
+
+    /// Indices of compute nodes of a given kind.
+    pub fn nodes_of(&self, kind: NodeKind) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.kind == kind)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Start a compute phase of `flops` on node `i` (a flow on its CPU).
+    /// `efficiency` scales achievable flops (apps never hit peak).
+    pub fn compute(&mut self, i: usize, flops: f64, efficiency: f64) -> FlowId {
+        assert!(self.nodes[i].alive, "compute on dead node {i}");
+        let cpu = self.nodes[i].cpu;
+        self.sim.flow(flops / efficiency.clamp(1e-3, 1.0), 0.0, &[cpu])
+    }
+
+    /// Mark a node failed (its running work is lost; callers decide how to
+    /// recover — that is exactly what the SCR strategies differ in).
+    pub fn kill_node(&mut self, i: usize) {
+        self.nodes[i].alive = false;
+    }
+
+    /// Bring a (repaired or spare) node back.
+    pub fn revive_node(&mut self, i: usize) {
+        self.nodes[i].alive = true;
+    }
+
+    pub fn alive_nodes(&self) -> usize {
+        self.nodes.iter().filter(|n| n.alive).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::presets;
+    use super::*;
+
+    #[test]
+    fn deep_er_matches_table_i() {
+        let spec = presets::deep_er();
+        assert_eq!(spec.n_cluster, 16);
+        assert_eq!(spec.n_booster, 8);
+        let b = spec.booster.as_ref().unwrap();
+        assert_eq!(b.cores, 64);
+        assert!((b.freq_ghz - 1.3).abs() < 1e-9);
+        assert!((spec.cluster.freq_ghz - 2.5).abs() < 1e-9);
+        // Table I: 16 TFlop/s Cluster, 20 TFlop/s Booster aggregate.
+        let cl_agg = spec.cluster.peak_flops * spec.n_cluster as f64;
+        let bo_agg = b.peak_flops * spec.n_booster as f64;
+        assert!((cl_agg - 16e12).abs() / 16e12 < 0.05, "cluster agg {cl_agg:e}");
+        assert!((bo_agg - 20e12).abs() / 20e12 < 0.05, "booster agg {bo_agg:e}");
+        assert_eq!(spec.n_nam, 2);
+        assert_eq!(spec.n_storage_servers, 2);
+    }
+
+    #[test]
+    fn build_creates_all_nodes() {
+        let m = Machine::build(presets::deep_er());
+        assert_eq!(m.nodes.len(), 24);
+        assert_eq!(m.nodes_of(NodeKind::Cluster).len(), 16);
+        assert_eq!(m.nodes_of(NodeKind::Booster).len(), 8);
+        assert_eq!(m.servers.len(), 2);
+        assert_eq!(m.nams.len(), 2);
+        assert!(m.nodes.iter().all(|n| n.nvme.is_some()));
+    }
+
+    #[test]
+    fn cluster_has_hdd_booster_not() {
+        let m = Machine::build(presets::deep_er());
+        for i in m.nodes_of(NodeKind::Cluster) {
+            assert!(m.nodes[i].hdd.is_some());
+        }
+        for i in m.nodes_of(NodeKind::Booster) {
+            assert!(m.nodes[i].hdd.is_none());
+        }
+    }
+
+    #[test]
+    fn qpace3_is_booster_like_with_ramdisk() {
+        let spec = presets::qpace3();
+        assert_eq!(spec.n_cluster, 672);
+        assert!(spec.cluster.nvme.is_none());
+        assert!(spec.cluster.ramdisk.is_some());
+        assert_eq!(spec.n_nam, 0);
+    }
+
+    #[test]
+    fn compute_scales_with_flops() {
+        let mut m = Machine::build(presets::deep_er());
+        let f1 = m.compute(0, 1e12, 0.5);
+        let t1 = m.sim.wait_all(&[f1]);
+        let f2 = m.compute(0, 2e12, 0.5);
+        let t2 = m.sim.wait_all(&[f2]) - t1;
+        assert!((t2 / t1 - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn kill_and_revive() {
+        let mut m = Machine::build(presets::deep_er());
+        assert_eq!(m.alive_nodes(), 24);
+        m.kill_node(3);
+        assert_eq!(m.alive_nodes(), 23);
+        m.revive_node(3);
+        assert_eq!(m.alive_nodes(), 24);
+    }
+
+    #[test]
+    #[should_panic(expected = "dead node")]
+    fn compute_on_dead_node_panics() {
+        let mut m = Machine::build(presets::deep_er());
+        m.kill_node(0);
+        let _ = m.compute(0, 1e9, 0.5);
+    }
+}

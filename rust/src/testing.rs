@@ -1,0 +1,153 @@
+//! Property-testing runner (proptest is unavailable offline).
+//!
+//! Proptest-shaped essentials: seeded case generation from a [`Gen`]
+//! source, many cases per property, and on failure a greedy *shrink* pass
+//! that retries the property with smaller inputs before reporting the
+//! minimal failing case.  Used by rust/tests/prop_invariants.rs.
+
+use crate::sim::rng::SplitMix64;
+
+/// Random value source handed to properties.
+#[derive(Debug)]
+pub struct Gen {
+    rng: SplitMix64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: SplitMix64::new(seed) }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Uniform usize in [lo, hi] (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vec of `len` values drawn by `f`.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    pub fn i32(&mut self) -> i32 {
+        self.rng.next_u64() as i32
+    }
+}
+
+/// Configuration for [`check`].
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 256, seed: 0xDEE9E5 }
+    }
+}
+
+/// Run `prop` on `cases` generated inputs.  `gen_input` draws an input
+/// from randomness; `shrink` proposes smaller candidates (may be empty).
+/// Panics with the minimal failing input's debug representation.
+pub fn check_with<T: Clone + std::fmt::Debug>(
+    cfg: Config,
+    mut gen_input: impl FnMut(&mut Gen) -> T,
+    mut shrink: impl FnMut(&T) -> Vec<T>,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cfg.cases {
+        let mut g = Gen::new(cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let input = gen_input(&mut g);
+        if prop(&input) {
+            continue;
+        }
+        // Greedy shrink: repeatedly take the first smaller failing candidate.
+        let mut minimal = input.clone();
+        'outer: loop {
+            for cand in shrink(&minimal) {
+                if !prop(&cand) {
+                    minimal = cand;
+                    continue 'outer;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property failed (case {case}, seed {}):\n  minimal input: {minimal:?}",
+            cfg.seed
+        );
+    }
+}
+
+/// [`check_with`] without shrinking.
+pub fn check<T: Clone + std::fmt::Debug>(
+    cfg: Config,
+    gen_input: impl FnMut(&mut Gen) -> T,
+    prop: impl FnMut(&T) -> bool,
+) {
+    check_with(cfg, gen_input, |_| Vec::new(), prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(
+            Config { cases: 50, seed: 1 },
+            |g| g.usize_in(0, 100),
+            |&x| {
+                n += 1;
+                x <= 100
+            },
+        );
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(Config { cases: 64, seed: 2 }, |g| g.usize_in(0, 100), |&x| x < 90);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal input: 10")]
+    fn shrinking_finds_minimal() {
+        // Property fails for x >= 10; shrinking by -1 should land on 10.
+        check_with(
+            Config { cases: 64, seed: 3 },
+            |g| g.usize_in(0, 1000),
+            |&x| if x > 0 { vec![x - 1, x / 2] } else { vec![] },
+            |&x| x < 10,
+        );
+    }
+
+    #[test]
+    fn gen_ranges_hold() {
+        let mut g = Gen::new(9);
+        for _ in 0..1000 {
+            let u = g.usize_in(3, 7);
+            assert!((3..=7).contains(&u));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+        let v = g.vec(5, |g| g.bool());
+        assert_eq!(v.len(), 5);
+    }
+}

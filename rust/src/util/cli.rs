@@ -1,0 +1,112 @@
+//! Tiny CLI argument helper (clap is unavailable offline): positional
+//! subcommand + `--flag value` / `--flag` options with typed getters.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: one optional subcommand, then flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator (usually `std::env::args().skip(1)`).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // --k=v or --k v or boolean --k
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.flag(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.flag(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["run", "--app", "xpic", "--nodes", "8", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get_str("app", "?"), "xpic");
+        assert_eq!(a.get_usize("nodes", 0), 8);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["bench", "--name=fig9"]);
+        assert_eq!(a.get_str("name", "?"), "fig9");
+    }
+
+    #[test]
+    fn positionals_after_subcommand() {
+        let a = parse(&["bench", "fig3", "fig4"]);
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.positionals, vec!["fig3", "fig4"]);
+    }
+
+    #[test]
+    fn defaults_on_missing_or_bad() {
+        let a = parse(&["run", "--nodes", "xyz"]);
+        assert_eq!(a.get_usize("nodes", 7), 7);
+        assert_eq!(a.get_f64("frac", 0.5), 0.5);
+    }
+
+    #[test]
+    fn empty() {
+        let a = parse(&[]);
+        assert!(a.subcommand.is_none());
+        assert!(a.positionals.is_empty());
+    }
+}

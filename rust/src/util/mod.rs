@@ -1,0 +1,6 @@
+//! Small in-tree utilities replacing unavailable external crates (this
+//! build environment is offline; see Cargo.toml).  Currently: a minimal
+//! JSON parser for the artifact manifest and a tiny CLI argument helper.
+
+pub mod cli;
+pub mod json;

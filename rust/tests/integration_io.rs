@@ -1,0 +1,131 @@
+//! Integration: the I/O path through SIONlib -> BeeOND -> BeeGFS, and the
+//! fabric/NAM transfer stack.
+
+use deeper::beegfs::beeond::{concurrent_cache_write, concurrent_global_write, CacheDevice};
+use deeper::beegfs::{BeeGfs, BeeOnd, CacheMode};
+use deeper::fabric::TOURMALET_BW;
+use deeper::nam::LibNam;
+use deeper::sionlib::{self, TaskLocalWorkload};
+use deeper::system::{presets, Machine, NodeKind};
+
+#[test]
+fn sionlib_over_beegfs_full_path() {
+    // GERShWIN-like workload through both code paths on one machine; the
+    // metadata + payload accounting must match the workload description.
+    let w = TaskLocalWorkload {
+        nodes: 4,
+        tasks_per_node: 48,
+        bytes_per_task: 8e6,
+        records_per_task: 96,
+    };
+    let mut m = Machine::build(presets::deep_er());
+    let base = sionlib::write_task_local(&mut m, &w);
+    assert_eq!(base.files_created, 4 * 48);
+    assert_eq!(base.meta_ops, 2 * 4 * 48);
+    let sion = sionlib::write_sionlib(&mut m, &w);
+    assert_eq!(sion.files_created, 1);
+    assert_eq!(sion.meta_ops, 1 + 4);
+    assert!(sion.write_time < base.write_time);
+}
+
+#[test]
+fn beeond_async_overlaps_with_next_phase() {
+    // The async flush must keep running while compute proceeds, and
+    // drain() must account the remaining time.
+    let mut m = Machine::build(presets::deep_er());
+    let mut cache = BeeOnd::new(CacheDevice::Nvme, CacheMode::Async);
+    let t_vis = cache.write(&mut m, 0, 4e9, 4);
+    assert!(cache.pending_flushes() > 0);
+    // Simulate a compute phase; the flush progresses during it.
+    let f = m.compute(0, 2e12, 0.5);
+    m.sim.wait_all(&[f]);
+    let t_drain = cache.drain(&mut m);
+    assert!(t_drain >= t_vis);
+    // A sync write of the same size takes longer than the visible async
+    // write did.
+    let mut sync = BeeOnd::new(CacheDevice::Nvme, CacheMode::Sync);
+    let t0 = m.sim.now();
+    let t_sync = sync.write(&mut m, 1, 4e9, 4) - t0;
+    assert!(t_sync > t_vis * 1.2);
+}
+
+#[test]
+fn qpace3_weak_scaling_crossover() {
+    // Below the backend saturation point global and local are comparable
+    // in *aggregate* terms; past it, global degrades linearly.
+    let bytes = 10e9;
+    let mut times = Vec::new();
+    for &n in &[8usize, 64, 512] {
+        let nodes: Vec<usize> = (0..n).collect();
+        let mut m = Machine::build(presets::qpace3().with_cluster_nodes(n));
+        times.push(concurrent_global_write(&mut m, &nodes, bytes));
+    }
+    // 8 nodes: unsaturated; 64 -> 512 is 8x nodes -> ~8x time.
+    let growth = times[2] / times[1];
+    assert!((6.0..=10.0).contains(&growth), "growth {growth}");
+
+    let nodes: Vec<usize> = (0..512).collect();
+    let mut m = Machine::build(presets::qpace3().with_cluster_nodes(512));
+    let mut cache = BeeOnd::new(CacheDevice::RamDisk, CacheMode::Async);
+    let t_local = concurrent_cache_write(&mut m, &mut cache, &nodes, bytes, 64);
+    assert!(times[2] / t_local > 100.0, "local {t_local} vs global {}", times[2]);
+}
+
+#[test]
+fn beegfs_metadata_storms_serialize() {
+    let mut m = Machine::build(presets::deep_er());
+    let fs = BeeGfs::new();
+    // 768 file creates (16 nodes x 48 tasks) at ~0.8 ms each ~ 0.6 s.
+    let mut flows = Vec::new();
+    for node in 0..16 {
+        flows.extend(fs.meta_ops(&mut m, node, 48));
+    }
+    let t = m.sim.wait_all(&flows);
+    assert!(t > 0.4 && t < 1.5, "t={t}");
+}
+
+#[test]
+fn libnam_ring_credits_are_finite() {
+    let mut sim = deeper::sim::Sim::new();
+    let mut fabric = deeper::fabric::Fabric::new(&mut sim, 1e12);
+    let node = fabric.endpoint(&mut sim, "n", TOURMALET_BW, deeper::fabric::LAT_CLUSTER);
+    let nam = deeper::nam::NamDevice::new(&mut sim, &mut fabric, 0);
+    let mut lib = LibNam::new();
+    // Pump 256 slot-sized messages through a 16-slot ring: back-pressure
+    // must bound in-flight transfers to the ring depth.
+    for _ in 0..256 {
+        lib.put(&mut sim, &fabric, &nam, node, 512.0 * 1024.0);
+        assert!(lib.send_ring.in_flight() <= 16);
+    }
+    lib.fence(&mut sim);
+    assert_eq!(lib.send_ring.in_flight(), 0);
+}
+
+#[test]
+fn buddy_stream_lands_on_buddy_nvme() {
+    let mut m = Machine::build(presets::deep_er());
+    let bytes = 1e9;
+    // Stream node0 -> node1 while node1 also writes locally: both share
+    // node1's NVMe write channel, so each takes ~2x the solo time.
+    let solo = {
+        let mut m2 = Machine::build(presets::deep_er());
+        let f = sionlib::buddy_stream(&mut m2, 0, 1, bytes);
+        m2.sim.wait_all(&[f])
+    };
+    let f1 = sionlib::buddy_stream(&mut m, 0, 1, bytes);
+    let dev = m.nodes[1].nvme.as_ref().unwrap().clone();
+    let f2 = dev.write(&mut m.sim, bytes, 1, &[]);
+    let t = m.sim.wait_all(&[f1, f2]);
+    assert!(t > 1.6 * solo, "t={t} solo={solo}");
+}
+
+#[test]
+fn booster_nodes_do_io_too() {
+    // The Booster's KNL nodes have the same NVMe (Table I); checkpoints
+    // from the Booster side must work identically.
+    let mut m = Machine::build(presets::deep_er());
+    let boosters = m.nodes_of(NodeKind::Booster);
+    let mut cache = BeeOnd::new(CacheDevice::Nvme, CacheMode::Async);
+    let t = concurrent_cache_write(&mut m, &mut cache, &boosters, 2e9, 4);
+    assert!(t > 0.0 && t.is_finite());
+}

@@ -1,0 +1,145 @@
+//! Integration: OmpSs task runtime + ParaStation offload under failures.
+
+use deeper::apps::fwi;
+use deeper::ompss::{OmpssRuntime, Resilience, Task, TaskGraph};
+use deeper::psmpi::{comm_spawn, Comm};
+use deeper::system::failure::FailurePlan;
+use deeper::system::{presets, Machine, NodeKind};
+
+fn mn3() -> Machine {
+    Machine::build(presets::marenostrum3())
+}
+
+#[test]
+fn offload_cluster_to_booster_runs() {
+    // The DEEP-ER headline pattern: master on the Cluster spawns the
+    // task group on the Booster (MPI_Comm_spawn across the divide).
+    let mut m = Machine::build(presets::deep_er());
+    let boosters = m.nodes_of(NodeKind::Booster);
+    let g = comm_spawn(&mut m, boosters.clone());
+    assert_eq!(g.comm.size(), 8);
+    let rt = OmpssRuntime::new(0, Resilience::ResilientOffload);
+    let graph = fwi::task_graph(2, 4, 1e11);
+    let out = rt.execute(&mut m, &graph, &boosters, &FailurePlan::none());
+    assert_eq!(out.tasks_run, graph.tasks.len());
+    assert_eq!(out.app_restarts, 0);
+}
+
+#[test]
+fn all_resilience_modes_complete_under_failure() {
+    let graph = fwi::task_graph(3, 3, 1e11);
+    let fail = FailurePlan::one_at_iteration(0, fwi::last_task(&graph));
+    for res in [
+        Resilience::None,
+        Resilience::Lightweight,
+        Resilience::Persistent,
+        Resilience::ResilientOffload,
+    ] {
+        let mut m = mn3();
+        let out = OmpssRuntime::new(0, res).execute(&mut m, &graph, &[1, 2, 3], &fail);
+        assert!(out.time > 0.0, "{res:?}");
+        if res == Resilience::None {
+            assert_eq!(out.app_restarts, 1, "{res:?}");
+            assert!(out.tasks_run > graph.tasks.len(), "{res:?}");
+        } else {
+            assert_eq!(out.app_restarts, 0, "{res:?}");
+            assert_eq!(out.tasks_run, graph.tasks.len() + 1, "{res:?}");
+        }
+    }
+}
+
+#[test]
+fn resilience_cost_ordering() {
+    // Persistent writes inputs to storage -> more protection overhead than
+    // the in-memory lightweight mode on a clean run.
+    let graph = fwi::task_graph(3, 4, 1e11);
+    let run = |res: Resilience| {
+        let mut m = mn3();
+        OmpssRuntime::new(0, res)
+            .execute(&mut m, &graph, &[1, 2], &FailurePlan::none())
+            .protection_overhead
+    };
+    let none = run(Resilience::None);
+    let light = run(Resilience::Lightweight);
+    let persist = run(Resilience::Persistent);
+    assert_eq!(none, 0.0);
+    assert!(light > 0.0);
+    assert!(persist > light, "persist {persist} !> light {light}");
+}
+
+#[test]
+fn early_failure_cheaper_to_recover_than_late_without_resiliency() {
+    let graph = fwi::task_graph(5, 2, 1e11);
+    let run = |at: usize| {
+        let mut m = mn3();
+        OmpssRuntime::new(0, Resilience::None)
+            .execute(&mut m, &graph, &[1, 2], &FailurePlan::one_at_iteration(0, at))
+            .time
+    };
+    let early = run(0);
+    let late = run(fwi::last_task(&graph));
+    assert!(late > early, "late {late} !> early {early}");
+}
+
+#[test]
+fn wave_scheduling_parallelizes_independent_tasks() {
+    // 8 equal independent tasks on 4 workers should take ~2 task times,
+    // not 8.
+    let mk_graph = |n: usize| {
+        let mut g = TaskGraph::new();
+        for i in 0..n {
+            g.add(Task {
+                name: format!("t{i}"),
+                flops: 5e11,
+                input_bytes: 1e6,
+                output_bytes: 1e6,
+                deps: vec![],
+            });
+        }
+        g
+    };
+    let mut m1 = mn3();
+    let rt = OmpssRuntime::new(0, Resilience::None);
+    let t1 = rt.execute(&mut m1, &mk_graph(1), &[1, 2, 3, 4], &FailurePlan::none()).time;
+    let mut m8 = mn3();
+    let t8 = rt.execute(&mut m8, &mk_graph(8), &[1, 2, 3, 4], &FailurePlan::none()).time;
+    assert!(t8 < 3.0 * t1, "t1={t1} t8={t8}");
+    assert!(t8 > 1.5 * t1, "t1={t1} t8={t8}");
+}
+
+#[test]
+fn dependency_chain_serializes() {
+    let mut g = TaskGraph::new();
+    let a = g.add(Task { name: "a".into(), flops: 2e11, input_bytes: 1e6, output_bytes: 1e6, deps: vec![] });
+    let b = g.add(Task { name: "b".into(), flops: 2e11, input_bytes: 1e6, output_bytes: 1e6, deps: vec![a] });
+    let _c = g.add(Task { name: "c".into(), flops: 2e11, input_bytes: 1e6, output_bytes: 1e6, deps: vec![b] });
+    assert_eq!(g.waves().len(), 3);
+    let mut m = mn3();
+    let rt = OmpssRuntime::new(0, Resilience::None);
+    let out = rt.execute(&mut m, &g, &[1, 2, 3], &FailurePlan::none());
+    assert_eq!(out.tasks_run, 3);
+}
+
+#[test]
+fn pmd_heartbeat_cost_visible_in_recovery() {
+    let graph = fwi::task_graph(1, 2, 1e11);
+    let fail = FailurePlan::one_at_iteration(0, 0);
+    let mut m1 = mn3();
+    let rt = OmpssRuntime::new(0, Resilience::ResilientOffload);
+    let t_fail = rt.execute(&mut m1, &graph, &[1, 2], &fail).time;
+    let mut m2 = mn3();
+    let t_clean = rt.execute(&mut m2, &graph, &[1, 2], &FailurePlan::none()).time;
+    // Recovery includes detection (heartbeat/2 + cleanup) + respawn + rerun.
+    assert!(t_fail > t_clean + deeper::psmpi::PMD_CLEANUP);
+}
+
+#[test]
+fn collectives_compose_with_offload() {
+    // Smoke: a gather over the spawned group after execution.
+    let mut m = Machine::build(presets::deep_er());
+    let boosters = m.nodes_of(NodeKind::Booster);
+    let g = comm_spawn(&mut m, boosters);
+    let t0 = m.sim.now();
+    let t = Comm::of(g.comm.nodes.clone()).gather(&mut m, 0, 10e6) - t0;
+    assert!(t > 0.0 && t < 1.0);
+}

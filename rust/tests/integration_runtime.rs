@@ -1,0 +1,179 @@
+//! Integration: the PJRT runtime executes the real AOT artifacts and the
+//! numerics agree with physics-level invariants (the Python-side pytest
+//! suite pins kernels against their jnp oracles; these tests pin the
+//! rust-side marshalling + execution path).
+//!
+//! Requires `make artifacts` to have run (skips otherwise).
+
+use deeper::runtime::{Runtime, Tensor};
+
+fn open_runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Runtime::open(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping PJRT tests: {e}");
+            None
+        }
+    }
+}
+
+fn lcg(seed: &mut u64) -> f32 {
+    *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    ((*seed >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+}
+
+#[test]
+fn manifest_covers_all_expected_artifacts() {
+    let Some(rt) = open_runtime() else { return };
+    let names = rt.artifact_names();
+    for expected in [
+        "nbody_step",
+        "nbody_energy",
+        "xpic_step",
+        "fwi_step",
+        "fwi_forward8",
+        "gershwin_step",
+        "nam_parity",
+    ] {
+        assert!(names.iter().any(|n| n == expected), "missing {expected}");
+    }
+}
+
+#[test]
+fn nam_parity_matches_host_xor() {
+    let Some(mut rt) = open_runtime() else { return };
+    let spec = rt.spec("nam_parity").unwrap().clone();
+    let (n, m) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let mut seed = 7u64;
+    let data: Vec<i32> = (0..n * m).map(|_| (lcg(&mut seed) * 1e6) as i32).collect();
+    let out = rt
+        .execute("nam_parity", &[Tensor::I32 { shape: vec![n, m], data: data.clone() }])
+        .unwrap();
+    let got = out[0].as_i32().unwrap();
+    // Host-side XOR fold is the oracle.
+    for j in 0..m {
+        let mut want = 0i32;
+        for i in 0..n {
+            want ^= data[i * m + j];
+        }
+        assert_eq!(got[j], want, "parity word {j}");
+    }
+}
+
+#[test]
+fn xpic_step_conserves_charge_and_stays_in_box() {
+    let Some(mut rt) = open_runtime() else { return };
+    let spec = rt.spec("xpic_step").unwrap().clone();
+    let p = spec.inputs[0].shape[0];
+    let g3 = spec.inputs[2].shape[0];
+    let mut seed = 3u64;
+    let x: Vec<f32> = (0..p * 3).map(|_| lcg(&mut seed) * 0.5 + 0.5).collect();
+    let v: Vec<f32> = (0..p * 3).map(|_| lcg(&mut seed) * 0.02).collect();
+    let e: Vec<f32> = (0..g3 * 3).map(|_| lcg(&mut seed) * 0.1).collect();
+    let b: Vec<f32> = vec![0.0; g3 * 3];
+    let out = rt
+        .execute(
+            "xpic_step",
+            &[
+                Tensor::F32 { shape: vec![p, 3], data: x },
+                Tensor::F32 { shape: vec![p, 3], data: v },
+                Tensor::F32 { shape: vec![g3, 3], data: e },
+                Tensor::F32 { shape: vec![g3, 3], data: b },
+            ],
+        )
+        .unwrap();
+    let x_new = out[0].as_f32().unwrap();
+    assert!(x_new.iter().all(|&a| (0.0..1.0).contains(&a)), "periodic box violated");
+    let rho = out[3].as_f32().unwrap();
+    let total: f32 = rho.iter().sum();
+    assert!((total - p as f32).abs() < 1.0, "charge {total} != {p}");
+}
+
+#[test]
+fn fwi_forward8_equals_eight_single_steps() {
+    let Some(mut rt) = open_runtime() else { return };
+    let spec = rt.spec("fwi_step").unwrap().clone();
+    let (h, w) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let mut seed = 11u64;
+    let mut p: Vec<f32> = (0..h * w).map(|_| lcg(&mut seed) * 0.1).collect();
+    // Zero the Dirichlet ring.
+    for i in 0..h {
+        p[i * w] = 0.0;
+        p[i * w + w - 1] = 0.0;
+    }
+    for j in 0..w {
+        p[j] = 0.0;
+        p[(h - 1) * w + j] = 0.0;
+    }
+    let p_prev = p.clone();
+    let c2 = vec![1.0f32; h * w];
+    let mk = |d: &Vec<f32>| Tensor::F32 { shape: vec![h, w], data: d.clone() };
+
+    // Path A: fwi_forward8 once.
+    let fwd = rt
+        .execute("fwi_forward8", &[mk(&p), mk(&p_prev), mk(&c2)])
+        .unwrap();
+    // Path B: fwi_step eight times.
+    let (mut a, mut b) = (p.clone(), p_prev.clone());
+    for _ in 0..8 {
+        let out = rt.execute("fwi_step", &[mk(&a), mk(&b), mk(&c2)]).unwrap();
+        b = out[1].as_f32().unwrap().to_vec();
+        a = out[0].as_f32().unwrap().to_vec();
+    }
+    let fa = fwd[0].as_f32().unwrap();
+    for (i, (x, y)) in fa.iter().zip(&a).enumerate() {
+        assert!((x - y).abs() < 1e-4, "mismatch at {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn nbody_energy_is_finite_and_negative_for_bound_cloud() {
+    let Some(mut rt) = open_runtime() else { return };
+    let spec = rt.spec("nbody_energy").unwrap().clone();
+    let n = spec.inputs[0].shape[0];
+    let mut seed = 5u64;
+    let pos: Vec<f32> = (0..n * 3).map(|_| lcg(&mut seed) * 0.1).collect(); // tight cloud
+    let vel: Vec<f32> = vec![0.0; n * 3];
+    let mass: Vec<f32> = vec![1.0 / n as f32; n];
+    let out = rt
+        .execute(
+            "nbody_energy",
+            &[
+                Tensor::F32 { shape: vec![n, 3], data: pos },
+                Tensor::F32 { shape: vec![n, 3], data: vel },
+                Tensor::F32 { shape: vec![n], data: mass },
+            ],
+        )
+        .unwrap();
+    let e = out[0].as_f32().unwrap()[0];
+    assert!(e.is_finite());
+    assert!(e < 0.0, "cold tight cloud must be bound, got {e}");
+}
+
+#[test]
+fn execute_rejects_shape_and_dtype_mismatches() {
+    let Some(mut rt) = open_runtime() else { return };
+    let spec = rt.spec("nam_parity").unwrap().clone();
+    let (n, m) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    // Wrong shape.
+    let bad = Tensor::I32 { shape: vec![n, m / 2], data: vec![0; n * m / 2] };
+    assert!(rt.execute("nam_parity", &[bad]).is_err());
+    // Wrong dtype.
+    let bad = Tensor::F32 { shape: vec![n, m], data: vec![0.0; n * m] };
+    assert!(rt.execute("nam_parity", &[bad]).is_err());
+    // Wrong arity.
+    assert!(rt.execute("nam_parity", &[]).is_err());
+    // Unknown artifact.
+    assert!(rt.execute("not_a_kernel", &[]).is_err());
+}
+
+#[test]
+fn compilation_is_cached() {
+    let Some(mut rt) = open_runtime() else { return };
+    assert_eq!(rt.compiled_count(), 0);
+    rt.compile("fwi_step").unwrap();
+    assert_eq!(rt.compiled_count(), 1);
+    rt.compile("fwi_step").unwrap();
+    assert_eq!(rt.compiled_count(), 1);
+}

@@ -1,0 +1,219 @@
+//! Integration: full checkpoint/restart cycles under failure injection,
+//! across every strategy and failure kind.
+
+use deeper::apps::{run_iterations, xpic, IterationJob};
+use deeper::scr::{Scr, Strategy};
+use deeper::system::failure::FailurePlan;
+use deeper::system::{presets, Machine, NodeKind};
+
+fn machine() -> Machine {
+    Machine::build(presets::deep_er())
+}
+
+#[test]
+fn every_strategy_full_cycle_with_node_loss() {
+    for strat in Strategy::ALL {
+        let mut m = machine();
+        let nodes = m.nodes_of(NodeKind::Cluster);
+        let mut scr = Scr::new(strat);
+        scr.checkpoint(&mut m, &nodes, 1e9).unwrap();
+        m.kill_node(nodes[2]);
+        m.revive_node(nodes[2]);
+        let r = scr.restart(&mut m, &nodes, Some(nodes[2]));
+        if strat.survives_node_loss() {
+            let r = r.unwrap_or_else(|e| panic!("{strat:?} restart failed: {e}"));
+            assert!(r.rebuilt && r.time > 0.0, "{strat:?}");
+        } else {
+            assert!(r.is_err(), "{strat:?} must not survive node loss");
+        }
+    }
+}
+
+#[test]
+fn every_strategy_transient_restart() {
+    for strat in Strategy::ALL {
+        let mut m = machine();
+        let nodes = m.nodes_of(NodeKind::Cluster);
+        let mut scr = Scr::new(strat);
+        scr.checkpoint(&mut m, &nodes, 1e9).unwrap();
+        let r = scr.restart(&mut m, &nodes, None).unwrap();
+        assert!(!r.rebuilt && r.time > 0.0, "{strat:?}");
+    }
+}
+
+#[test]
+fn checkpoint_bandwidth_ordering_matches_fig4() {
+    let bytes = 2e9;
+    let mut results = Vec::new();
+    for strat in Strategy::ALL {
+        let mut m = machine();
+        let nodes = m.nodes_of(NodeKind::Cluster);
+        let mut scr = Scr::new(strat);
+        let r = scr.checkpoint(&mut m, &nodes, bytes).unwrap();
+        results.push((strat, r.blocked));
+    }
+    let t = |s: Strategy| results.iter().find(|(x, _)| *x == s).unwrap().1;
+    assert!(t(Strategy::Buddy) < t(Strategy::Partner));
+    assert!(t(Strategy::NamXor) < t(Strategy::DistXor));
+    assert!(t(Strategy::Single) <= t(Strategy::NamXor) + 1e-9);
+}
+
+#[test]
+fn repeated_checkpoints_grow_database_and_recycle_nam() {
+    let mut m = machine();
+    let nodes = m.nodes_of(NodeKind::Cluster);
+    let mut scr = Scr::new(Strategy::NamXor);
+    // Table II: xPic on DEEP-ER wrote 11 checkpoints.
+    for i in 0..11 {
+        scr.checkpoint(&mut m, &nodes, 2e9).unwrap();
+        assert_eq!(scr.database().len(), i + 1);
+    }
+    // HMC still within capacity: only one parity window alive per board.
+    for nam in &m.nams {
+        assert!(nam.hmc.used() <= nam.hmc.params.capacity + 1.0);
+    }
+}
+
+#[test]
+fn multiple_failures_multiple_rollbacks() {
+    let mut m = machine();
+    let nodes: Vec<usize> = (0..8).collect();
+    let mut job = IterationJob {
+        profile: xpic::profile_nam(),
+        iterations: 40,
+        cp_interval: 5,
+        failures: FailurePlan {
+            at_iterations: vec![
+                deeper::system::failure::Failure { node: 1, at: 12.0 },
+                deeper::system::failure::Failure { node: 5, at: 27.0 },
+            ],
+            at_times: Vec::new(),
+        },
+    };
+    job.profile.ckpt_bytes_per_node = 1e9;
+    let mut scr = Scr::new(Strategy::Buddy);
+    let stats = run_iterations(&mut m, &nodes, &job, Some(&mut scr));
+    assert_eq!(stats.failures_hit, 2);
+    // 12 + (12-10 rollback) + 15 + (27-25 rollback) + 13 = 44.
+    assert_eq!(stats.iterations_run, 44);
+    assert!(stats.restart_time > 0.0);
+}
+
+#[test]
+fn failure_before_first_checkpoint_restarts_from_zero() {
+    let mut m = machine();
+    let nodes: Vec<usize> = (0..4).collect();
+    let job = IterationJob {
+        profile: xpic::profile_nam(),
+        iterations: 12,
+        cp_interval: 10,
+        failures: FailurePlan::one_at_iteration(0, 5),
+    };
+    let mut scr = Scr::new(Strategy::Buddy);
+    let stats = run_iterations(&mut m, &nodes, &job, Some(&mut scr));
+    // No checkpoint yet at iteration 5 -> full restart: 5 lost + 12 = 17.
+    assert_eq!(stats.iterations_run, 17);
+}
+
+#[test]
+fn storage_accounting_respects_strategy_factor() {
+    // Partner stores 2x, DistXor 1 + 1/(k-1), NamXor 1x on nodes.
+    for (strat, factor) in [
+        (Strategy::Single, 1.0),
+        (Strategy::Partner, 2.0),
+        (Strategy::Buddy, 2.0),
+        (Strategy::NamXor, 1.0),
+    ] {
+        assert_eq!(strat.storage_factor(4), factor, "{strat:?}");
+    }
+    assert!((Strategy::DistXor.storage_factor(4) - (1.0 + 1.0 / 3.0)).abs() < 1e-12);
+}
+
+#[test]
+fn xor_group_boundaries_rebuild_correct_group() {
+    // 16 nodes, group 4: failure in the last group must not touch the
+    // first group's read pattern (smoke: rebuild still succeeds).
+    let mut m = machine();
+    let nodes = m.nodes_of(NodeKind::Cluster);
+    let mut scr = Scr::new(Strategy::DistXor).with_group(4);
+    scr.checkpoint(&mut m, &nodes, 1e9).unwrap();
+    let victim = nodes[14]; // in the 4th group
+    m.kill_node(victim);
+    m.revive_node(victim);
+    let r = scr.restart(&mut m, &nodes, Some(victim)).unwrap();
+    assert!(r.rebuilt);
+}
+
+#[test]
+fn measured_optimal_interval_matches_young_prediction() {
+    // Capstone consistency check: sweep the checkpoint interval under an
+    // exponential-MTBF failure schedule and verify the waste-minimizing
+    // interval sits near the Young optimum sqrt(2 C M) — i.e. the DES,
+    // the SCR cost model and the analytic formula agree with each other.
+    use deeper::scr::multilevel::optimal_interval;
+
+    let profile = xpic::profile_nam(); // 2 GB CP, ~22.5 s iterations
+    let nodes: Vec<usize> = (0..16).collect();
+    let iter_time = profile.flops_per_iter_per_node / (1e12 * profile.cpu_efficiency);
+
+    // Measure the checkpoint cost once.
+    let ckpt_cost = {
+        let mut m = Machine::build(presets::deep_er());
+        let mut scr = Scr::new(Strategy::Buddy);
+        scr.checkpoint(&mut m, &nodes, profile.ckpt_bytes_per_node)
+            .unwrap()
+            .blocked
+    };
+    let mtbf_system = 2500.0; // seconds
+    let tau = optimal_interval(ckpt_cost, mtbf_system);
+    let predicted_iters = (tau / iter_time).round() as usize;
+
+    let run = |cp_interval: usize| -> f64 {
+        let mut m = Machine::build(presets::deep_er());
+        let job = IterationJob {
+            profile: profile.clone(),
+            iterations: 150,
+            cp_interval,
+            failures: FailurePlan::exponential(nodes.len(), mtbf_system * 16.0, 1e6, 99),
+        };
+        let mut scr = Scr::new(Strategy::Buddy);
+        run_iterations(&mut m, &nodes, &job, Some(&mut scr)).total_time
+    };
+
+    let candidates = [1usize, 2, 5, 10, 25, 60];
+    let times: Vec<f64> = candidates.iter().map(|&c| run(c)).collect();
+    let best = candidates[times
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0];
+    // The empirical optimum must be within a factor ~3 of Young's, and
+    // both extremes must be worse than the optimum region.
+    assert!(
+        best as f64 >= predicted_iters as f64 / 3.0
+            && best as f64 <= predicted_iters as f64 * 3.0,
+        "best={best} predicted={predicted_iters} (tau={tau:.0}s, C={ckpt_cost:.1}s)"
+    );
+    let t_best = times.iter().copied().fold(f64::INFINITY, f64::min);
+    assert!(times[0] > t_best, "interval=1 should overpay in CP time");
+    assert!(times[candidates.len() - 1] > t_best, "interval=60 should overpay in rework");
+}
+
+#[test]
+fn namxor_restart_faster_than_distxor_restart() {
+    let bytes = 2e9;
+    let run = |strat: Strategy| {
+        let mut m = machine();
+        let nodes = m.nodes_of(NodeKind::Cluster);
+        let mut scr = Scr::new(strat);
+        scr.checkpoint(&mut m, &nodes, bytes).unwrap();
+        m.kill_node(nodes[1]);
+        m.revive_node(nodes[1]);
+        scr.restart(&mut m, &nodes, Some(nodes[1])).unwrap().time
+    };
+    let dist = run(Strategy::DistXor);
+    let nam = run(Strategy::NamXor);
+    // NAM rebuild skips the survivors' NVMe re-read.
+    assert!(nam < dist, "nam {nam} !< dist {dist}");
+}

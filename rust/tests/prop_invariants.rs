@@ -1,0 +1,326 @@
+//! Property-based invariants over the coordinator (via the in-tree
+//! `testing` runner; see Cargo.toml for why proptest itself is absent).
+//!
+//! Invariants from DESIGN.md section 7: XOR reconstruction, buddy mapping
+//! derangement, SIONlib chunk layout disjointness, DES determinism and
+//! monotonicity, ring-buffer conservation, conservation of bytes in the
+//! fluid model, and JSON parser robustness.
+
+use deeper::fabric::ring::RingBuffer;
+use deeper::scr::Scr;
+use deeper::sim::Sim;
+use deeper::sionlib;
+use deeper::testing::{check, check_with, Config};
+use deeper::util::json;
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, seed: 0xDEE9E5 }
+}
+
+#[test]
+fn prop_xor_reconstruction_any_single_loss() {
+    // RAID-5 property of the parity fold, on host-side data (the PJRT
+    // path is pinned in integration_runtime.rs).
+    check(
+        cfg(200),
+        |g| {
+            let n = g.usize_in(2, 12);
+            let m = g.usize_in(1, 64);
+            let blocks: Vec<Vec<i32>> = (0..n).map(|_| g.vec(m, |g| g.i32())).collect();
+            let lost = g.usize_in(0, n - 1);
+            (blocks, lost)
+        },
+        |(blocks, lost)| {
+            let m = blocks[0].len();
+            let mut parity = vec![0i32; m];
+            for b in blocks {
+                for (p, x) in parity.iter_mut().zip(b) {
+                    *p ^= *x;
+                }
+            }
+            let mut rebuilt = parity;
+            for (i, b) in blocks.iter().enumerate() {
+                if i != *lost {
+                    for (r, x) in rebuilt.iter_mut().zip(b) {
+                        *r ^= *x;
+                    }
+                }
+            }
+            rebuilt == blocks[*lost]
+        },
+    );
+}
+
+#[test]
+fn prop_partner_map_is_derangement_and_bijection() {
+    check(
+        cfg(200),
+        |g| g.usize_in(2, 512),
+        |&n| {
+            let mut seen = vec![false; n];
+            for i in 0..n {
+                let p = Scr::partner_of(i, n);
+                if p == i || p >= n || seen[p] {
+                    return false;
+                }
+                seen[p] = true;
+            }
+            seen.iter().all(|&s| s)
+        },
+    );
+}
+
+#[test]
+fn prop_sionlib_layout_aligned_disjoint_complete() {
+    check(
+        cfg(200),
+        |g| {
+            let n = g.usize_in(1, 64);
+            g.vec(n, |g| g.f64_in(1.0, 8e6))
+        },
+        |reqs| {
+            let l = sionlib::layout(reqs);
+            if l.chunks.len() != reqs.len() {
+                return false;
+            }
+            let mut end = 0.0;
+            for (i, &(task, off, size)) in l.chunks.iter().enumerate() {
+                let aligned = off % sionlib::CHUNK_ALIGN == 0.0
+                    && size % sionlib::CHUNK_ALIGN == 0.0;
+                let covers = size >= reqs[i];
+                let disjoint = off >= end - 1e-9;
+                if task != i || !aligned || !covers || !disjoint {
+                    return false;
+                }
+                end = off + size;
+            }
+            (l.container_bytes - end).abs() < 1e-9
+        },
+    );
+}
+
+#[test]
+fn prop_des_completion_conserves_bytes_and_order() {
+    // For any batch of flows on one shared link: every flow's measured
+    // duration >= bytes/capacity (no flow beats the link), completions
+    // are deterministic, and total time >= total bytes / capacity.
+    check(
+        cfg(150),
+        |g| {
+            let cap = g.f64_in(1e8, 1e10);
+            let n = g.usize_in(1, 24);
+            let flows: Vec<(f64, f64)> =
+                g.vec(n, |g| (g.f64_in(1.0, 1e9), g.f64_in(0.0, 0.01)));
+            (cap, flows)
+        },
+        |(cap, flows)| {
+            let run = || {
+                let mut sim = Sim::new();
+                let link = sim.resource("l", *cap);
+                let ids: Vec<_> = flows
+                    .iter()
+                    .map(|&(bytes, delay)| sim.flow(bytes, delay, &[link]))
+                    .collect();
+                sim.wait_each(&ids)
+            };
+            let t1 = run();
+            let t2 = run();
+            if t1 != t2 {
+                return false; // determinism
+            }
+            let total_bytes: f64 = flows.iter().map(|f| f.0).sum();
+            let t_end = t1.iter().copied().fold(0.0, f64::max);
+            let min_delay = flows.iter().map(|f| f.1).fold(f64::INFINITY, f64::min);
+            if t_end + 1e-9 < total_bytes / cap + min_delay {
+                return false; // conservation: can't move bytes faster than capacity
+            }
+            for (i, &(bytes, delay)) in flows.iter().enumerate() {
+                if t1[i] + 1e-9 < bytes / cap + delay {
+                    return false; // no flow beats the link alone
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_des_work_conserving_single_resource() {
+    // With all flows present from t=0 on one link, the last completion is
+    // EXACTLY total/capacity (the fluid model wastes nothing).
+    check(
+        cfg(150),
+        |g| {
+            let n = g.usize_in(1, 16);
+            g.vec(n, |g| g.f64_in(1e3, 1e9))
+        },
+        |sizes| {
+            let mut sim = Sim::new();
+            let link = sim.resource("l", 1e9);
+            let ids: Vec<_> = sizes.iter().map(|&b| sim.flow(b, 0.0, &[link])).collect();
+            let t = sim.wait_all(&ids);
+            let expect = sizes.iter().sum::<f64>() / 1e9;
+            (t - expect).abs() / expect < 1e-6
+        },
+    );
+}
+
+#[test]
+fn prop_ring_buffer_never_loses_or_duplicates() {
+    check(
+        cfg(200),
+        |g| {
+            let slots = g.usize_in(1, 32);
+            let slot_bytes = g.usize_in(64, 8192);
+            let n_msgs = g.usize_in(1, 100);
+            let msgs = g.vec(n_msgs, |g| g.usize_in(0, 4 * slot_bytes));
+            (slots, slot_bytes, msgs)
+        },
+        |(slots, slot_bytes, msgs)| {
+            let mut ring = RingBuffer::new(*slots, *slot_bytes);
+            let mut claimed: Vec<(u64, usize)> = Vec::new();
+            let mut retired: Vec<(u64, usize)> = Vec::new();
+            for &len in msgs {
+                loop {
+                    match ring.claim(len) {
+                        Ok(seq) => {
+                            claimed.push((seq, len));
+                            break;
+                        }
+                        Err(_) => {
+                            if ring.slots_needed(len) > *slots {
+                                // Never fits; skip this message.
+                                break;
+                            }
+                            match ring.retire_oldest() {
+                                Some(r) => retired.push(r),
+                                None => return false, // full yet empty: bug
+                            }
+                        }
+                    }
+                }
+            }
+            while let Some(r) = ring.retire_oldest() {
+                retired.push(r);
+            }
+            // Conservation: everything claimed was retired exactly once,
+            // in order.
+            retired == claimed
+        },
+    );
+}
+
+#[test]
+fn prop_failure_plan_exponential_sorted_and_in_horizon() {
+    check(
+        cfg(100),
+        |g| {
+            let nodes = g.usize_in(1, 128);
+            let mtbf = g.f64_in(1e3, 1e6);
+            let horizon = g.f64_in(1.0, 1e5);
+            let seed = g.u64();
+            (nodes, mtbf, horizon, seed)
+        },
+        |&(nodes, mtbf, horizon, seed)| {
+            let plan =
+                deeper::system::failure::FailurePlan::exponential(nodes, mtbf, horizon, seed);
+            let mut last = 0.0;
+            for f in &plan.at_times {
+                if f.at <= last || f.at >= horizon || f.node >= nodes {
+                    return false;
+                }
+                last = f.at;
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_numbers_and_strings() {
+    check_with(
+        cfg(300),
+        |g| {
+            // Build a small random JSON doc and its expected value.
+            let n = g.usize_in(0, 8);
+            let items: Vec<(String, f64)> = (0..n)
+                .map(|i| (format!("k{i}"), (g.i32() as f64) / 16.0))
+                .collect();
+            items
+        },
+        |items| {
+            if items.is_empty() {
+                return vec![];
+            }
+            vec![items[..items.len() - 1].to_vec()]
+        },
+        |items| {
+            let body: Vec<String> =
+                items.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+            let doc = format!("{{{}}}", body.join(", "));
+            let parsed = match json::parse(&doc) {
+                Ok(p) => p,
+                Err(_) => return false,
+            };
+            items.iter().all(|(k, v)| {
+                parsed.get(k).and_then(json::Json::as_f64).map(|x| (x - v).abs() < 1e-9)
+                    == Some(true)
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_ompss_waves_topologically_consistent() {
+    use deeper::ompss::{Task, TaskGraph};
+    check(
+        cfg(150),
+        |g| {
+            let n = g.usize_in(1, 40);
+            // Random DAG: each task depends on a random subset of earlier ones.
+            let mut deps: Vec<Vec<usize>> = Vec::with_capacity(n);
+            for i in 0..n {
+                let k = g.usize_in(0, i.min(3));
+                let mut d = Vec::new();
+                for _ in 0..k {
+                    d.push(g.usize_in(0, i.max(1) - 1));
+                }
+                d.sort_unstable();
+                d.dedup();
+                deps.push(d);
+            }
+            deps
+        },
+        |deps| {
+            let mut graph = TaskGraph::new();
+            for d in deps {
+                graph.add(Task {
+                    name: String::new(),
+                    flops: 1.0,
+                    input_bytes: 0.0,
+                    output_bytes: 0.0,
+                    deps: d.clone(),
+                });
+            }
+            let waves = graph.waves();
+            // Each task appears exactly once, and strictly after its deps.
+            let mut wave_of = vec![usize::MAX; deps.len()];
+            let mut count = 0;
+            for (wi, wave) in waves.iter().enumerate() {
+                for &t in wave {
+                    if wave_of[t] != usize::MAX {
+                        return false;
+                    }
+                    wave_of[t] = wi;
+                    count += 1;
+                }
+            }
+            if count != deps.len() {
+                return false;
+            }
+            deps.iter().enumerate().all(|(i, d)| {
+                d.iter().all(|&dep| wave_of[dep] < wave_of[i])
+            })
+        },
+    );
+}
