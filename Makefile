@@ -1,0 +1,50 @@
+# DEEP-ER reproduction — build/verify entry points.
+#
+#   make verify     tier-1 gate: release build + full test suite
+#   make build      release build only
+#   make test       test suite only
+#   make lint       rustfmt + clippy (advisory; requires the components)
+#   make doc        rustdoc with broken-intra-doc-links denied via lib.rs
+#   make figures    regenerate every paper exhibit (tables + figures)
+#   make bench      run the micro/figure bench harnesses
+#   make artifacts  AOT-lower the JAX/Pallas kernels to artifacts/*.hlo.txt
+#                   (needs python + jax; optional — the rust stack degrades
+#                   gracefully without it, see DESIGN.md)
+
+CARGO ?= cargo
+
+.PHONY: verify build test lint fmt clippy doc figures bench artifacts clean
+
+verify: build test
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q --workspace
+
+lint: fmt clippy
+
+fmt:
+	$(CARGO) fmt --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+doc:
+	$(CARGO) doc --no-deps
+
+figures: build
+	$(CARGO) run --release --bin repro -- bench all
+
+bench:
+	$(CARGO) bench --bench bench_sim_core
+	$(CARGO) bench --bench bench_scr
+	$(CARGO) bench --bench bench_io
+	$(CARGO) bench --bench bench_figures
+
+artifacts:
+	python3 python/compile/aot.py --out-dir artifacts
+
+clean:
+	$(CARGO) clean

@@ -246,7 +246,7 @@ mod tests {
         let n_failures = job.failures.at_times.len();
         let mut scr = Scr::new(Strategy::Buddy);
         let stats = run_iterations(&mut m, &nodes, &job, Some(&mut scr));
-        assert_eq!(stats.iterations_run >= 30, true);
+        assert!(stats.iterations_run >= 30);
         assert!(stats.failures_hit <= n_failures);
         if stats.failures_hit > 0 {
             assert!(stats.restart_time > 0.0);

@@ -10,7 +10,7 @@
 //! Model: every endpoint owns a TX and an RX port resource at link speed;
 //! a switch backplane resource carries aggregate traffic (non-blocking for
 //! the 24-node prototype, capacity-limited for the 672-node QPACE3 torus).
-//! A transfer is a [`sim`] flow routed `src.tx -> backplane -> dst.rx`, so
+//! A transfer is a [`crate::sim`] flow routed `src.tx -> backplane -> dst.rx`, so
 //! incast (many nodes writing to two storage servers, Fig. 6) and the
 //! NAM's two-link bound (Fig. 9) emerge from resource contention.
 

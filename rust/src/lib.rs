@@ -32,6 +32,8 @@
 //! * [`bench`] — harnesses regenerating every paper figure/table.
 //! * [`metrics`] — series/table collection and fixed-width printers.
 
+#![deny(rustdoc::broken_intra_doc_links)]
+
 pub mod apps;
 pub mod beegfs;
 pub mod bench;

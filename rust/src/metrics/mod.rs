@@ -7,19 +7,25 @@ use std::fmt::Write as _;
 /// A named series of (x, y) points — one line in a paper figure.
 #[derive(Debug, Clone)]
 pub struct Series {
+    /// Legend label of the series (e.g. `"NAM XOR"`).
     pub name: String,
+    /// Data points in insertion order; x values need not be unique across
+    /// series, which is how figures with different sweeps compose.
     pub points: Vec<(f64, f64)>,
 }
 
 impl Series {
+    /// Create an empty series with the given legend label.
     pub fn new(name: impl Into<String>) -> Self {
         Self { name: name.into(), points: Vec::new() }
     }
 
+    /// Append one (x, y) point.
     pub fn push(&mut self, x: f64, y: f64) {
         self.points.push((x, y));
     }
 
+    /// The y value at `x` (exact match within 1e-9), if present.
     pub fn y_at(&self, x: f64) -> Option<f64> {
         self.points
             .iter()
@@ -27,6 +33,7 @@ impl Series {
             .map(|&(_, y)| y)
     }
 
+    /// The y value of the last point pushed, if any.
     pub fn last_y(&self) -> Option<f64> {
         self.points.last().map(|&(_, y)| y)
     }
@@ -35,13 +42,18 @@ impl Series {
 /// A figure: several series over a shared x axis, with labels.
 #[derive(Debug, Clone)]
 pub struct Figure {
+    /// Figure caption, printed as the table header.
     pub title: String,
+    /// Label of the shared x axis (e.g. `"nodes"`).
     pub x_label: String,
+    /// Label of the y axis (e.g. `"GB/s"`).
     pub y_label: String,
+    /// The plotted series, in legend order.
     pub series: Vec<Series>,
 }
 
 impl Figure {
+    /// Create an empty figure with the given caption and axis labels.
     pub fn new(
         title: impl Into<String>,
         x_label: impl Into<String>,
@@ -55,10 +67,12 @@ impl Figure {
         }
     }
 
+    /// Append a series to the figure.
     pub fn add(&mut self, s: Series) {
         self.series.push(s);
     }
 
+    /// Find a series by its legend label.
     pub fn series_named(&self, name: &str) -> Option<&Series> {
         self.series.iter().find(|s| s.name == name)
     }
@@ -132,19 +146,24 @@ impl Figure {
 /// A key/value summary table (Table I style).
 #[derive(Debug, Clone, Default)]
 pub struct KvTable {
+    /// Table caption, printed as the header.
     pub title: String,
+    /// (key, rendered value) rows in insertion order.
     pub rows: Vec<(String, String)>,
 }
 
 impl KvTable {
+    /// Create an empty table with the given caption.
     pub fn new(title: impl Into<String>) -> Self {
         Self { title: title.into(), rows: Vec::new() }
     }
 
+    /// Append one key/value row (the value is rendered via `Display`).
     pub fn row(&mut self, k: impl Into<String>, v: impl std::fmt::Display) {
         self.rows.push((k.into(), v.to_string()));
     }
 
+    /// Render as an aligned two-column text table.
     pub fn render(&self) -> String {
         let mut out = String::new();
         let _ = writeln!(out, "== {} ==", self.title);

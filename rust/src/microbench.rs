@@ -15,15 +15,22 @@ pub fn black_box<T>(x: T) -> T {
 /// One benchmark's statistics over sample batches.
 #[derive(Debug, Clone, Copy)]
 pub struct Stats {
+    /// Mean time per iteration across samples.
     pub mean: Duration,
+    /// Population standard deviation of per-iteration time.
     pub stddev: Duration,
+    /// Fastest sample's per-iteration time.
     pub min: Duration,
+    /// Slowest sample's per-iteration time.
     pub max: Duration,
+    /// Iterations executed per timed sample (set by calibration).
     pub iters_per_sample: u64,
+    /// Number of timed samples taken.
     pub samples: usize,
 }
 
 impl Stats {
+    /// Mean time per iteration in seconds.
     pub fn mean_s(&self) -> f64 {
         self.mean.as_secs_f64()
     }
@@ -32,8 +39,11 @@ impl Stats {
 /// Benchmark runner with fixed warmup/measure budgets.
 #[derive(Debug, Clone)]
 pub struct Bench {
+    /// Warmup + calibration budget before any timing.
     pub warmup: Duration,
+    /// Total measurement budget, split across `samples`.
     pub measure: Duration,
+    /// Number of timed samples to take.
     pub samples: usize,
     group: String,
 }

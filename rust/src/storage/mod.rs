@@ -7,7 +7,7 @@
 //! storage is emulated with RAM-disks — the paper notes KNL RAM is ~75x
 //! faster than the NVMe.
 //!
-//! A device is a pair of [`sim`] resources (read / write channel) plus a
+//! A device is a pair of [`crate::sim`] resources (read / write channel) plus a
 //! service model: fixed per-operation latency (controller round-trip or
 //! seek) and a queue-depth-dependent efficiency curve — the P3700's
 //! headline property is that throughput *holds up* under many parallel

@@ -14,10 +14,12 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// Create a generator from a seed (each property case gets its own).
     pub fn new(seed: u64) -> Self {
         Self { rng: SplitMix64::new(seed) }
     }
 
+    /// A uniformly random 64-bit value.
     pub fn u64(&mut self) -> u64 {
         self.rng.next_u64()
     }
@@ -33,6 +35,7 @@ impl Gen {
         lo + self.rng.next_f64() * (hi - lo)
     }
 
+    /// A fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }
@@ -42,6 +45,7 @@ impl Gen {
         (0..len).map(|_| f(self)).collect()
     }
 
+    /// A uniformly random 32-bit signed value.
     pub fn i32(&mut self) -> i32 {
         self.rng.next_u64() as i32
     }
@@ -50,7 +54,9 @@ impl Gen {
 /// Configuration for [`check`].
 #[derive(Debug, Clone, Copy)]
 pub struct Config {
+    /// Number of generated inputs to test the property on.
     pub cases: usize,
+    /// Base seed; case `i` derives its own stream from `seed + i`.
     pub seed: u64,
 }
 

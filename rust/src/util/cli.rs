@@ -6,7 +6,9 @@ use std::collections::BTreeMap;
 /// Parsed arguments: one optional subcommand, then flags.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First non-flag word (e.g. `bench` in `repro bench fig9`).
     pub subcommand: Option<String>,
+    /// Non-flag words after the subcommand, in order.
     pub positionals: Vec<String>,
     flags: BTreeMap<String, String>,
 }
@@ -40,26 +42,31 @@ impl Args {
         out
     }
 
+    /// Raw value of `--name`, if the flag was given.
     pub fn flag(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// Whether `--name` was given (boolean flags store `"true"`).
     pub fn has(&self, name: &str) -> bool {
         self.flags.contains_key(name)
     }
 
+    /// `--name` parsed as `usize`, or `default` when absent/unparseable.
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
         self.flag(name)
             .and_then(|v| v.parse().ok())
             .unwrap_or(default)
     }
 
+    /// `--name` parsed as `f64`, or `default` when absent/unparseable.
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
         self.flag(name)
             .and_then(|v| v.parse().ok())
             .unwrap_or(default)
     }
 
+    /// `--name` as a string, or `default` when absent.
     pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.flag(name).unwrap_or(default)
     }

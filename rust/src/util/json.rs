@@ -10,15 +10,22 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// The `null` literal.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always held as `f64`).
     Num(f64),
+    /// A string, with escapes decoded.
     Str(String),
+    /// An array of values.
     Arr(Vec<Json>),
+    /// An object; keys are sorted (`BTreeMap`) for deterministic iteration.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Object field lookup; `None` for non-objects or missing keys.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -26,6 +33,7 @@ impl Json {
         }
     }
 
+    /// The string payload, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -33,6 +41,7 @@ impl Json {
         }
     }
 
+    /// The numeric payload, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -40,10 +49,12 @@ impl Json {
         }
     }
 
+    /// The numeric payload truncated to `usize` (manifest dims/shapes).
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// The element slice, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -55,7 +66,9 @@ impl Json {
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
+    /// Byte offset into the input where parsing failed.
     pub at: usize,
+    /// Human-readable description of what was expected.
     pub msg: String,
 }
 

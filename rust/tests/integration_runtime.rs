@@ -3,7 +3,17 @@
 //! suite pins kernels against their jnp oracles; these tests pin the
 //! rust-side marshalling + execution path).
 //!
-//! Requires `make artifacts` to have run (skips otherwise).
+//! SKIP CONDITIONS (every test below self-skips, equivalent to
+//! `#[ignore]`, rather than being deleted):
+//!  * the AOT inputs `artifacts/manifest.json` + `artifacts/*.hlo.txt`
+//!    (`nbody_step`, `nbody_energy`, `xpic_step`, `fwi_step`,
+//!    `fwi_forward8`, `gershwin_step`, `nam_parity`) are produced by
+//!    `make artifacts` (python/compile/aot.py) and are not checked in;
+//!  * this offline workspace links the vendored `vendor/xla` stub, whose
+//!    `PjRtClient::cpu()` reports "unavailable", so `Runtime::open` fails
+//!    even when the artifacts exist.
+//! With a real xla-rs dependency and `make artifacts` run, all tests
+//! execute in full.
 
 use deeper::runtime::{Runtime, Tensor};
 
@@ -12,7 +22,7 @@ fn open_runtime() -> Option<Runtime> {
     match Runtime::open(&dir) {
         Ok(rt) => Some(rt),
         Err(e) => {
-            eprintln!("skipping PJRT tests: {e}");
+            eprintln!("skipping PJRT tests (missing artifacts/ or stub xla backend): {e}");
             None
         }
     }

@@ -1,0 +1,88 @@
+//! Smoke tests pinned by ISSUE 1: RNG determinism across runs, and a
+//! checkpoint/restart round-trip through every SCR strategy (both flat and
+//! via the multi-level composition) without losing the ability to recover.
+
+use deeper::scr::multilevel::{MultiLevelConfig, MultiLevelScr};
+use deeper::scr::{Scr, Strategy};
+use deeper::sim::rng::SplitMix64;
+use deeper::system::{presets, Machine, NodeKind};
+
+/// Two generators with the same seed must produce bit-identical streams of
+/// every draw kind the simulation uses (u64, f64, bounded int, exp).
+#[test]
+fn smoke_rng_deterministic_across_two_runs() {
+    let run = |seed: u64| -> Vec<u64> {
+        let mut rng = SplitMix64::new(seed);
+        let mut child = rng.split(3);
+        let mut out = Vec::with_capacity(4 * 64);
+        for _ in 0..64 {
+            out.push(rng.next_u64());
+            out.push(rng.next_f64().to_bits());
+            out.push(rng.next_below(1 << 20));
+            out.push(child.next_exp(5.0).to_bits());
+        }
+        out
+    };
+    assert_eq!(run(0xDEE9E5), run(0xDEE9E5));
+    assert_ne!(run(1), run(2), "different seeds must differ");
+}
+
+/// Every strategy must round-trip: checkpoint, then restart from it.
+/// Transient errors are recoverable by all five; node loss by all except
+/// Single (which only keeps node-local data — the paper's own caveat).
+#[test]
+fn smoke_every_strategy_checkpoint_restart_roundtrip() {
+    for strat in Strategy::ALL {
+        let mut m = Machine::build(presets::deep_er());
+        let nodes = m.nodes_of(NodeKind::Cluster);
+        let mut scr = Scr::new(strat);
+        let rep = scr.checkpoint(&mut m, &nodes, 5e8).unwrap();
+        assert!(rep.blocked > 0.0, "{strat:?}: checkpoint must cost time");
+        assert_eq!(scr.database().len(), 1, "{strat:?}");
+
+        // Transient (process) error: read the checkpoint back.
+        let r = scr.restart(&mut m, &nodes, None).unwrap();
+        assert!(!r.rebuilt && r.time > 0.0, "{strat:?}");
+
+        // Node loss: recover if and only if the strategy claims to.
+        m.kill_node(nodes[1]);
+        m.revive_node(nodes[1]);
+        let r = scr.restart(&mut m, &nodes, Some(nodes[1]));
+        if strat.survives_node_loss() {
+            let r = r.unwrap_or_else(|e| panic!("{strat:?} lost data: {e}"));
+            assert!(r.rebuilt && r.time > 0.0, "{strat:?}");
+        } else {
+            assert!(r.is_err(), "{strat:?} must refuse node-loss restart");
+        }
+    }
+}
+
+/// The multi-level composition must round-trip through each L2 strategy
+/// that survives node loss (Partner, Buddy, DistXor, NamXor): after a mix
+/// of L1/L2 checkpoints, both a transient restart (L1) and a node-loss
+/// restart (L2) must succeed.
+#[test]
+fn smoke_multilevel_roundtrip_each_l2_strategy() {
+    for l2 in [Strategy::Partner, Strategy::Buddy, Strategy::DistXor, Strategy::NamXor] {
+        let mut m = Machine::build(presets::deep_er());
+        let nodes = m.nodes_of(NodeKind::Cluster);
+        let cfg = MultiLevelConfig { l1_every: 1, l2_every: 2, l3_every: 2, l2_strategy: l2 };
+        let mut ml = MultiLevelScr::new(cfg);
+        for iter in 1..=4 {
+            ml.checkpoint_at(&mut m, &nodes, 5e8, iter).unwrap();
+        }
+        assert_eq!(ml.stats.l1_count, 4, "{l2:?}");
+        assert_eq!(ml.stats.l2_count, 2, "{l2:?}");
+
+        let t1 = ml.restart(&mut m, &nodes, None).unwrap();
+        assert!(t1 > 0.0, "{l2:?}: transient restart");
+
+        m.kill_node(nodes[2]);
+        m.revive_node(nodes[2]);
+        let t2 = ml
+            .restart(&mut m, &nodes, Some(nodes[2]))
+            .unwrap_or_else(|e| panic!("{l2:?} node-loss restart failed: {e}"));
+        assert!(t2 > 0.0, "{l2:?}: node-loss restart");
+        ml.drain(&mut m);
+    }
+}

@@ -1,0 +1,202 @@
+//! Offline stand-in for the [`anyhow`](https://docs.rs/anyhow) crate.
+//!
+//! The DEEP-ER reproduction builds in an environment without crates.io
+//! access, so this vendored crate provides the (small) subset of the real
+//! `anyhow` API the tree actually uses: [`Error`], [`Result`], and the
+//! [`anyhow!`], [`bail!`] and [`ensure!`] macros, plus the blanket
+//! `From<E: std::error::Error>` conversion that makes `?` work.  The
+//! semantics match the real crate closely enough that swapping in the
+//! genuine dependency is a one-line change in the workspace manifest.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A type-erased error with an optional source chain, mirroring
+/// `anyhow::Error`.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message (what [`anyhow!`] calls).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap a concrete `std::error::Error` value.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Self { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// The wrapped error's source, matching real `anyhow` (where `Error`
+    /// derefs to the wrapped `dyn Error`, so `.source()` is the *next*
+    /// level down, not the wrapped error itself).
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source
+            .as_deref()
+            .and_then(|e| (e as &(dyn StdError + 'static)).source())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        // The wrapped error's Display is already `self.msg`, so the
+        // "Caused by" chain starts one level below it (as real anyhow does).
+        let mut cause = self.source();
+        if cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cause {
+            write!(f, "\n    {e}")?;
+            cause = e.source();
+        }
+        Ok(())
+    }
+}
+
+// The blanket conversion that powers `?`.  `Error` itself deliberately does
+// NOT implement `std::error::Error` (same as the real anyhow), otherwise
+// this impl would overlap the reflexive `From<T> for T`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// `Result<T, anyhow::Error>`, with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is not satisfied.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!(
+                ::std::concat!("condition failed: ", ::std::stringify!($cond))
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    /// A two-level error chain for exercising `source()`/`Debug`.
+    #[derive(Debug)]
+    struct Leaf;
+    impl fmt::Display for Leaf {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str("leaf cause")
+        }
+    }
+    impl StdError for Leaf {}
+
+    #[derive(Debug)]
+    struct Mid(Leaf);
+    impl fmt::Display for Mid {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str("mid failure")
+        }
+    }
+    impl StdError for Mid {
+        fn source(&self) -> Option<&(dyn StdError + 'static)> {
+            Some(&self.0)
+        }
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn source_is_the_next_level_down_like_real_anyhow() {
+        let e = Error::new(Mid(Leaf));
+        assert_eq!(e.to_string(), "mid failure");
+        // source() skips the wrapped error itself (whose Display IS the
+        // message) and returns its cause — real anyhow's deref behavior.
+        assert_eq!(e.source().unwrap().to_string(), "leaf cause");
+        // A message-only error has no source at all.
+        assert!(Error::msg("plain").source().is_none());
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let e = anyhow!("bad dim {} of {}", 3, 4);
+        assert_eq!(e.to_string(), "bad dim 3 of 4");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn inner(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flagged {flag}");
+            }
+            Ok(7)
+        }
+        assert_eq!(inner(false).unwrap(), 7);
+        assert_eq!(inner(true).unwrap_err().to_string(), "flagged true");
+    }
+
+    #[test]
+    fn ensure_checks_condition() {
+        fn inner(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            ensure!(x != 5);
+            Ok(x)
+        }
+        assert_eq!(inner(3).unwrap(), 3);
+        assert_eq!(inner(12).unwrap_err().to_string(), "x too big: 12");
+        assert!(inner(5).unwrap_err().to_string().contains("x != 5"));
+    }
+
+    #[test]
+    fn debug_prints_message_once_then_causes() {
+        let e = Error::new(Mid(Leaf));
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("mid failure"), "{dbg}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("leaf cause"), "{dbg}");
+        // The top-level message must not be duplicated into the chain.
+        assert_eq!(dbg.matches("mid failure").count(), 1, "{dbg}");
+    }
+}

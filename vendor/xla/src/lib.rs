@@ -1,0 +1,161 @@
+//! Offline **stub** of the xla-rs PJRT bindings.
+//!
+//! The real compute path of the reproduction (`deeper::runtime`) executes
+//! AOT-lowered HLO artifacts through PJRT.  The PJRT C++ runtime is not
+//! available in this offline build environment, so this crate provides the
+//! exact API surface `deeper::runtime` consumes — every entry point
+//! compiles, and the first one that would touch real hardware
+//! ([`PjRtClient::cpu`]) returns [`Error::Unavailable`] instead.  Callers
+//! therefore degrade gracefully: `Runtime::open` fails with a clear
+//! message, and the PJRT integration tests skip themselves.
+//!
+//! To run the real path, replace this path dependency in the workspace
+//! `Cargo.toml` with the actual `xla` bindings and re-run `make artifacts`
+//! to produce `artifacts/*.hlo.txt` + `manifest.json`.
+
+use std::fmt;
+
+/// Stub error: PJRT is not available in this build.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The stub was asked to perform real PJRT work.
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "xla stub: {what} unavailable (offline build; vendor/xla is a stub — \
+                 see DESIGN.md, section 'Simulation vs real compute')"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias matching the real bindings.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(Error::Unavailable(what))
+}
+
+/// Element types the reproduction's manifests use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    /// 32-bit IEEE-754 float.
+    F32,
+    /// 32-bit signed integer.
+    S32,
+}
+
+/// A host-side literal (stub: carries no data).
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    /// Build a literal from raw bytes (stub: always errors).
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        unavailable("Literal::create_from_shape_and_untyped_data")
+    }
+
+    /// Copy the literal out as a typed vector (stub: always errors).
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    /// Destructure a tuple-shaped literal (stub: always errors).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// An HLO module parsed from text (stub: always errors on load).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse an `*.hlo.txt` artifact (stub: always errors).
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// A computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// A compiled, device-loaded executable (stub: never obtainable).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments (stub: always errors).
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// A device buffer holding one execution output.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Transfer the buffer to a host literal (stub: always errors).
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// The PJRT client. [`PjRtClient::cpu`] is the stub's choke point: it
+/// errors before any caller can reach the other entry points with real
+/// work.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Create a CPU client (stub: always errors — this is the documented
+    /// "PJRT unavailable offline" failure).
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Compile a computation (stub: always errors).
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        let text = err.to_string();
+        assert!(text.contains("stub"), "{text}");
+        assert!(text.contains("PjRtClient::cpu"), "{text}");
+    }
+
+    #[test]
+    fn literal_paths_report_unavailable() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0; 8])
+            .is_err());
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+    }
+}
