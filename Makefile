@@ -13,7 +13,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test lint fmt clippy doc figures bench artifacts clean
+.PHONY: verify build test lint fmt clippy doc figures bench bench-smoke artifacts clean
 
 verify: build test
 
@@ -42,6 +42,12 @@ bench:
 	$(CARGO) bench --bench bench_scr
 	$(CARGO) bench --bench bench_io
 	$(CARGO) bench --bench bench_figures
+
+# What the CI bench-smoke job runs: every exhibit as CSV off the release
+# binary, seed pinned so runs stay comparable across PRs.
+bench-smoke: build
+	$(CARGO) run --release --bin repro -- bench all --csv --seed 1 > bench-all.csv
+	@echo "wrote bench-all.csv"
 
 artifacts:
 	python3 python/compile/aot.py --out-dir artifacts

@@ -47,7 +47,7 @@ fn main() {
     // Whole-suite timing (the `make figures` budget: target < 2 min).
     let b2 = Bench::quick("suite");
     let stats = b2.run("all_exhibits", || {
-        black_box(figs::all());
+        black_box(figs::all(figs::DEFAULT_SEED));
     });
     println!(
         "suite/all_exhibits single pass: {:.2} s host time",

@@ -6,11 +6,18 @@
 //! may kill a node at an iteration boundary, triggering PMD detection and
 //! an SCR restart that rolls the run back to the last checkpoint (or to
 //! iteration 0 if no usable checkpoint exists — the unprotected baseline).
+//!
+//! [`run_iterations_multilevel`] is the overlapped variant: checkpoints go
+//! through [`MultiLevelScr`], whose L1→L2 promotion can run as a
+//! background flush *during* the following compute iterations
+//! (`async_flush`), and restarts roll back to the iteration of the level
+//! that actually served them (the deepest *settled* one).
 
 use super::AppProfile;
 use crate::psmpi::{Comm, Pmd};
+use crate::scr::multilevel::MultiLevelScr;
 use crate::scr::Scr;
-use crate::sim::{FlowId, SimTime};
+use crate::sim::{FlowId, Op, SimTime};
 use crate::system::failure::FailurePlan;
 use crate::system::Machine;
 
@@ -32,6 +39,12 @@ pub struct RunStats {
     pub exchange_time: SimTime,
     pub ckpt_time: SimTime,
     pub restart_time: SimTime,
+    /// Checkpoint work that ran in the background of compute phases
+    /// (async flush promotions); zero on the blocking paths.
+    pub overlap_time: SimTime,
+    /// Wall time the application was stalled on checkpointing: the
+    /// blocking checkpoint cost plus any flush back-pressure waits.
+    pub blocked_time: SimTime,
     /// Iterations executed, incl. re-executed ones after rollbacks.
     pub iterations_run: usize,
     pub checkpoints_taken: usize,
@@ -117,11 +130,8 @@ pub fn run_iterations(
 
         // Compute phase (all nodes in parallel).
         let t0 = m.sim.now();
-        let flows: Vec<FlowId> = nodes
-            .iter()
-            .map(|&n| m.compute(n, job.profile.flops_per_iter_per_node, job.profile.cpu_efficiency))
-            .collect();
-        m.sim.wait_all(&flows);
+        let compute = compute_op(m, nodes, &job.profile);
+        m.sim.wait_op(&compute);
         stats.compute_time += m.sim.now() - t0;
 
         // Halo/moment exchange.
@@ -149,6 +159,119 @@ pub fn run_iterations(
     }
 
     stats.total_time = m.sim.now() - t_start;
+    stats.blocked_time = stats.ckpt_time;
+    stats
+}
+
+/// Issue one bulk-synchronous compute step on every node as a single
+/// [`Op`] (the unit the async flush overlaps with).
+fn compute_op(m: &mut Machine, nodes: &[usize], profile: &AppProfile) -> Op {
+    let flows: Vec<FlowId> = nodes
+        .iter()
+        .map(|&n| m.compute(n, profile.flops_per_iter_per_node, profile.cpu_efficiency))
+        .collect();
+    Op::new(flows)
+}
+
+/// Execute the iteration loop through the **multi-level checkpointer**,
+/// overlapping compute with in-flight L1→L2 flushes when `ml` has
+/// `async_flush` enabled.
+///
+/// Differences from [`run_iterations`]:
+/// * checkpoints go through [`MultiLevelScr::checkpoint_at`], so only the
+///   blocked portion of a promotion stalls the loop — the rest settles in
+///   the background while later iterations compute;
+/// * a restart rolls back to the iteration of the level that actually
+///   served it (the deepest *settled* one when a failure lands while a
+///   flush is in flight);
+/// * `stats.overlap_time` / `stats.blocked_time` report how much flush
+///   work was hidden behind compute vs how long the application stalled.
+pub fn run_iterations_multilevel(
+    m: &mut Machine,
+    nodes: &[usize],
+    job: &IterationJob,
+    ml: &mut MultiLevelScr,
+) -> RunStats {
+    assert!(!nodes.is_empty());
+    assert!(job.cp_interval > 0, "multilevel driver needs a checkpoint cadence");
+    let mut stats = RunStats::default();
+    let t_start = m.sim.now();
+    let comm = Comm::of(nodes.to_vec());
+    let mut pmd = Pmd::new();
+
+    let mut iter = 0usize;
+    let mut pending_failure: Option<usize> = None;
+    let mut last_check_time = m.sim.now();
+
+    while iter < job.iterations {
+        if let Some(f) = job.failures.failure_at_iteration(iter) {
+            if pending_failure.is_none() && stats.failures_hit < job.failures.at_iterations.len()
+            {
+                pending_failure = Some(nodes[f.node % nodes.len()]);
+            }
+        }
+        let now = m.sim.now();
+        if pending_failure.is_none() {
+            if let Some(f) = job.failures.failures_between(last_check_time, now).first() {
+                pending_failure = Some(nodes[f.node % nodes.len()]);
+            }
+        }
+        last_check_time = now;
+        if let Some(victim) = pending_failure.take() {
+            stats.failures_hit += 1;
+            // Credit a promotion that settled before the failure; one
+            // whose flows are still moving when the node dies is lost
+            // (restart_detailed aborts it, never polls it).
+            ml.poll_flush(m);
+            m.kill_node(victim);
+            let t0 = m.sim.now();
+            pmd.detect_and_isolate(m, nodes);
+            m.revive_node(victim);
+            pmd.reinstate(victim);
+            match ml.restart_detailed(m, nodes, Some(victim)) {
+                // Roll back to the iteration of the level that served the
+                // restart — the deepest *settled* checkpoint.
+                Ok(outcome) => iter = outcome.iter,
+                // No level covers a lost node yet: full restart.
+                Err(_) => iter = 0,
+            }
+            stats.restart_time += m.sim.now() - t0;
+            continue;
+        }
+
+        // Compute phase (all nodes in parallel); any in-flight flush
+        // trickles through the same virtual time.
+        let t0 = m.sim.now();
+        let compute = compute_op(m, nodes, &job.profile);
+        m.sim.wait_op(&compute);
+        stats.compute_time += m.sim.now() - t0;
+
+        if job.profile.halo_bytes > 0.0 && nodes.len() > 1 {
+            let t1 = m.sim.now();
+            comm.ring_exchange(m, job.profile.halo_bytes);
+            stats.exchange_time += m.sim.now() - t1;
+        }
+
+        iter += 1;
+        stats.iterations_run += 1;
+
+        if iter % job.cp_interval == 0 && iter < job.iterations {
+            let blocked = ml
+                .checkpoint_at(m, nodes, job.profile.ckpt_bytes_per_node, iter)
+                .expect("multilevel checkpoint failed");
+            stats.ckpt_time += blocked;
+            stats.checkpoints_taken += 1;
+        }
+    }
+
+    // Job-end barrier: the tail of the background work is blocked time.
+    let t_drain = m.sim.now();
+    ml.drain(m);
+    let drain_blocked = m.sim.now() - t_drain;
+
+    stats.total_time = m.sim.now() - t_start;
+    stats.overlap_time = ml.stats.flush_overlap;
+    stats.blocked_time = stats.ckpt_time + drain_blocked;
     stats
 }
 
@@ -156,6 +279,7 @@ pub fn run_iterations(
 mod tests {
     use super::*;
     use crate::apps::xpic;
+    use crate::scr::multilevel::MultiLevelConfig;
     use crate::scr::Strategy;
     use crate::system::presets;
 
@@ -251,6 +375,64 @@ mod tests {
         if stats.failures_hit > 0 {
             assert!(stats.restart_time > 0.0);
         }
+    }
+
+    fn ml_run(async_flush: bool, fail: bool) -> RunStats {
+        let mut m = machine();
+        let nodes = m.nodes_of(crate::system::NodeKind::Cluster);
+        let job = fig8_job(true, fail);
+        let cfg = MultiLevelConfig {
+            l1_every: 1,
+            l2_every: 2,
+            l3_every: 2,
+            async_flush,
+            ..MultiLevelConfig::default()
+        };
+        let mut ml = MultiLevelScr::new(cfg);
+        run_iterations_multilevel(&mut m, &nodes, &job, &mut ml)
+    }
+
+    #[test]
+    fn multilevel_async_flush_cuts_blocked_time() {
+        let blocking = ml_run(false, false);
+        let overlapped = ml_run(true, false);
+        assert_eq!(blocking.iterations_run, 100);
+        assert_eq!(overlapped.iterations_run, 100);
+        assert_eq!(blocking.checkpoints_taken, 9);
+        assert_eq!(overlapped.checkpoints_taken, 9);
+        assert_eq!(blocking.overlap_time, 0.0, "blocking path must not overlap");
+        assert!(overlapped.overlap_time > 0.0);
+        assert!(
+            overlapped.blocked_time < blocking.blocked_time,
+            "async {} !< blocking {}",
+            overlapped.blocked_time,
+            blocking.blocked_time
+        );
+        assert!(
+            overlapped.total_time < blocking.total_time,
+            "async {} !< blocking {}",
+            overlapped.total_time,
+            blocking.total_time
+        );
+    }
+
+    #[test]
+    fn multilevel_async_run_is_deterministic() {
+        let a = ml_run(true, true);
+        let b = ml_run(true, true);
+        assert_eq!(a.total_time, b.total_time);
+        assert_eq!(a.blocked_time, b.blocked_time);
+        assert_eq!(a.overlap_time, b.overlap_time);
+        assert_eq!(a.iterations_run, b.iterations_run);
+        assert_eq!(a.failures_hit, b.failures_hit);
+    }
+
+    #[test]
+    fn multilevel_failure_rolls_back_and_completes() {
+        let stats = ml_run(true, true);
+        assert_eq!(stats.failures_hit, 1);
+        assert!(stats.iterations_run > 100, "rollback must re-run iterations");
+        assert!(stats.restart_time > 0.0);
     }
 
     #[test]

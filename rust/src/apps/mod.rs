@@ -15,7 +15,7 @@ pub mod nbody;
 pub mod portfolio;
 pub mod xpic;
 
-pub use driver::{run_iterations, IterationJob, RunStats};
+pub use driver::{run_iterations, run_iterations_multilevel, IterationJob, RunStats};
 
 /// Cost/payload profile of an application run (one Table II/III column).
 #[derive(Debug, Clone)]

@@ -22,7 +22,7 @@ pub mod beeond;
 
 pub use beeond::{BeeOnd, CacheMode};
 
-use crate::sim::{FlowId, SimTime};
+use crate::sim::{FlowId, Op, SimTime};
 use crate::system::Machine;
 
 /// BeeGFS default stripe chunk.
@@ -71,14 +71,31 @@ impl BeeGfs {
         (0..count).map(|_| self.meta_op(m, node)).collect()
     }
 
+    /// `count` concurrent metadata operations as one [`Op`] handle.
+    pub fn meta_ops_op(&self, m: &mut Machine, node: usize, count: u64) -> Op {
+        Op::new(self.meta_ops(m, node, count))
+    }
+
     /// Write `bytes` from `node` to the global FS as one logical file
-    /// region, striped over the OSS targets.  Returns one flow per target
-    /// touched; the write is durable when all complete.
+    /// region, striped over the OSS targets.  Returns an [`Op`] handle
+    /// that completes when the write is durable on every target; callers
+    /// poll or wait it (the async flush path holds these handles across
+    /// compute phases).
+    pub fn write_striped_op(&mut self, m: &mut Machine, node: usize, bytes: f64) -> Op {
+        Op::new(self.transfer_striped(m, node, bytes, true))
+    }
+
+    /// Read `bytes` striped from the global FS, as an [`Op`] handle.
+    pub fn read_striped_op(&mut self, m: &mut Machine, node: usize, bytes: f64) -> Op {
+        Op::new(self.transfer_striped(m, node, bytes, false))
+    }
+
+    /// Flow-level shim over [`BeeGfs::write_striped_op`].
     pub fn write_striped(&mut self, m: &mut Machine, node: usize, bytes: f64) -> Vec<FlowId> {
         self.transfer_striped(m, node, bytes, true)
     }
 
-    /// Read `bytes` striped from the global FS.
+    /// Flow-level shim over [`BeeGfs::read_striped_op`].
     pub fn read_striped(&mut self, m: &mut Machine, node: usize, bytes: f64) -> Vec<FlowId> {
         self.transfer_striped(m, node, bytes, false)
     }
@@ -125,14 +142,16 @@ impl BeeGfs {
     }
 
     /// Convenience: create + write + close one file, waiting for
-    /// durability.  Returns the completion report.
+    /// durability.  Returns the completion report.  (Blocking shim: the
+    /// create must be serviced before payload flows are issued, so the
+    /// sequential waits are inherent to the VFS protocol, not the API.)
     pub fn write_file(&mut self, m: &mut Machine, node: usize, bytes: f64) -> IoReport {
-        let create = self.meta_op(m, node);
-        m.sim.wait_all(&[create]);
-        let flows = self.write_striped(m, node, bytes);
-        let done = m.sim.wait_all(&flows);
-        let close = self.meta_op(m, node);
-        let done_at = m.sim.wait_all(&[close]).max(done);
+        let create = Op::single(self.meta_op(m, node));
+        m.sim.wait_op(&create);
+        let payload = self.write_striped_op(m, node, bytes);
+        let done = m.sim.wait_op(&payload);
+        let close = Op::single(self.meta_op(m, node));
+        let done_at = m.sim.wait_op(&close).max(done);
         IoReport { meta_ops: 2, bytes, done_at }
     }
 }

@@ -8,18 +8,23 @@
 //! the *shape targets* from DESIGN.md section 4 (who wins, by what factor,
 //! where crossovers fall).
 
-use crate::apps::{self, run_iterations, IterationJob};
+use crate::apps::{self, run_iterations, run_iterations_multilevel, IterationJob, RunStats};
 use crate::beegfs::beeond::{concurrent_cache_write, concurrent_global_write, CacheDevice};
 use crate::beegfs::{BeeOnd, CacheMode};
 use crate::fabric::TOURMALET_BW;
-use crate::metrics::{fmt_bytes, fmt_bw, Figure, KvTable, Series};
+use crate::metrics::{fmt_bytes, fmt_bw, fmt_time, Figure, KvTable, Series};
 use crate::nam::NamDevice;
 use crate::ompss::{OmpssRuntime, Resilience};
+use crate::scr::multilevel::{MultiLevelConfig, MultiLevelScr};
 use crate::scr::{Scr, Strategy};
-use crate::sim::Sim;
+use crate::sim::{ResId, Sim};
 use crate::sionlib::{write_sionlib, write_task_local};
 use crate::system::failure::FailurePlan;
 use crate::system::{presets, Machine, NodeKind};
+
+/// Seed used when the CLI does not pass `--seed` (any fixed value keeps
+/// the default bench output reproducible).
+pub const DEFAULT_SEED: u64 = 0xDEE9E5;
 
 /// Everything a harness can emit.
 #[derive(Debug)]
@@ -291,6 +296,102 @@ pub fn fig8() -> Vec<Exhibit> {
     vec![Exhibit::Table(t)]
 }
 
+/// Compress a simulator's [`Sim::op_trace`] into one diagnostic line:
+/// how many flows the run issued, when the last one completed, and the
+/// busiest resource (the one the most flows routed through).
+fn trace_summary(sim: &Sim) -> String {
+    let trace = sim.op_trace();
+    let mut last_done: f64 = 0.0;
+    let mut counts: std::collections::BTreeMap<ResId, usize> = std::collections::BTreeMap::new();
+    for e in &trace {
+        if let Some(t) = e.finished_at {
+            last_done = last_done.max(t);
+        }
+        for &r in &e.route {
+            *counts.entry(r).or_insert(0) += 1;
+        }
+    }
+    let busiest = counts.iter().max_by_key(|(_, &c)| c);
+    match busiest {
+        Some((&r, &c)) => format!(
+            "{} flows, last completion {}, busiest resource {} ({} flows)",
+            trace.len(),
+            fmt_time(last_done),
+            sim.resource_name(r),
+            c
+        ),
+        None => format!("{} flows", trace.len()),
+    }
+}
+
+/// Fig. 8 counterpart (extension): the same xPic SCR scenario run through
+/// the **multi-level** checkpointer, blocking promotion vs background
+/// flush (`--async-flush`).  The failure variant draws its schedule from
+/// an exponential-MTBF plan seeded by `seed` (`repro bench --seed N`).
+pub fn fig8_async(seed: u64) -> Vec<Exhibit> {
+    let profile = apps::xpic::profile_deep_er();
+    let scenario = |async_flush: bool, failures: FailurePlan| -> (RunStats, String) {
+        let mut m = Machine::build(presets::deep_er());
+        let nodes = m.nodes_of(NodeKind::Cluster);
+        let job = IterationJob {
+            profile: profile.clone(),
+            iterations: 100,
+            cp_interval: 10,
+            failures,
+        };
+        let cfg = MultiLevelConfig {
+            l1_every: 1,
+            l2_every: 2,
+            l3_every: 2,
+            async_flush,
+            ..MultiLevelConfig::default()
+        };
+        let mut ml = MultiLevelScr::new(cfg);
+        let stats = run_iterations_multilevel(&mut m, &nodes, &job, &mut ml);
+        (stats, trace_summary(&m.sim))
+    };
+    // ~1 failure expected inside the ~2500 s run: 16 nodes, 40000 s/node.
+    let plan = || FailurePlan::exponential(16, 40_000.0, 5_000.0, seed);
+
+    let (block_clean, block_trace) = scenario(false, FailurePlan::none());
+    let (async_clean, async_trace) = scenario(true, FailurePlan::none());
+    let (block_fail, _) = scenario(false, plan());
+    let (async_fail, _) = scenario(true, plan());
+
+    let mut t = KvTable::new(
+        "Fig. 8 (async ext): xPic multi-level CP, blocking vs background flush (CP every 10)",
+    );
+    t.row("blocking: total / blocked", format!(
+        "{} / {}",
+        fmt_time(block_clean.total_time),
+        fmt_time(block_clean.blocked_time)
+    ));
+    t.row("async: total / blocked / overlap", format!(
+        "{} / {} / {}",
+        fmt_time(async_clean.total_time),
+        fmt_time(async_clean.blocked_time),
+        fmt_time(async_clean.overlap_time)
+    ));
+    t.row(
+        "blocked-time saving",
+        format!(
+            "{:.1} %",
+            (1.0 - async_clean.blocked_time / block_clean.blocked_time.max(1e-12)) * 100.0
+        ),
+    );
+    t.row(
+        format!("with failures (seed {seed}): blocking total"),
+        format!("{} ({} failures)", fmt_time(block_fail.total_time), block_fail.failures_hit),
+    );
+    t.row(
+        format!("with failures (seed {seed}): async total"),
+        format!("{} ({} failures)", fmt_time(async_fail.total_time), async_fail.failures_hit),
+    );
+    t.row("op trace (blocking)", block_trace);
+    t.row("op trace (async)", async_trace);
+    vec![Exhibit::Table(t)]
+}
+
 /// Fig. 9: Distributed XOR vs NAM XOR — bandwidth and write time.
 pub fn fig9() -> Vec<Exhibit> {
     let bytes = apps::xpic::profile_nam().ckpt_bytes_per_node; // 2 GB
@@ -397,8 +498,10 @@ pub fn cb_split() -> Vec<Exhibit> {
     vec![Exhibit::Table(t)]
 }
 
-/// All exhibits in paper order (plus the companion-paper extension).
-pub fn all() -> Vec<(&'static str, Vec<Exhibit>)> {
+/// All exhibits in paper order (plus the extensions).  `seed` drives the
+/// stochastic failure schedules (`repro bench all --seed N`); exhibits
+/// without randomness ignore it.
+pub fn all(seed: u64) -> Vec<(&'static str, Vec<Exhibit>)> {
     vec![
         ("table1", table1()),
         ("table2", table2()),
@@ -409,6 +512,7 @@ pub fn all() -> Vec<(&'static str, Vec<Exhibit>)> {
         ("fig6", fig6()),
         ("fig7", fig7()),
         ("fig8", fig8()),
+        ("fig8-async", fig8_async(seed)),
         ("fig9", fig9()),
         ("fig10", fig10()),
         ("cb-split", cb_split()),
@@ -416,7 +520,7 @@ pub fn all() -> Vec<(&'static str, Vec<Exhibit>)> {
 }
 
 /// Run one named exhibit (CLI entry point).
-pub fn by_name(name: &str) -> Option<Vec<Exhibit>> {
+pub fn by_name(name: &str, seed: u64) -> Option<Vec<Exhibit>> {
     match name {
         "table1" => Some(table1()),
         "table2" => Some(table2()),
@@ -427,6 +531,7 @@ pub fn by_name(name: &str) -> Option<Vec<Exhibit>> {
         "fig6" => Some(fig6()),
         "fig7" => Some(fig7()),
         "fig8" => Some(fig8()),
+        "fig8-async" | "fig8a" => Some(fig8_async(seed)),
         "fig9" => Some(fig9()),
         "fig10" => Some(fig10()),
         "cb-split" | "cb" => Some(cb_split()),
@@ -467,7 +572,8 @@ mod tests {
 
     #[test]
     fn by_name_roundtrip() {
-        assert!(by_name("fig9").is_some());
-        assert!(by_name("nope").is_none());
+        assert!(by_name("fig9", DEFAULT_SEED).is_some());
+        assert!(by_name("fig8-async", 7).is_some());
+        assert!(by_name("nope", DEFAULT_SEED).is_none());
     }
 }

@@ -2,16 +2,18 @@
 //!
 //! ```text
 //! repro show-config
-//! repro bench <fig3..fig10|table1..table3|all>
+//! repro bench <fig3..fig10|fig8-async|table1..table3|all> [--csv] [--seed N]
 //! repro run [--app nbody|xpic|gershwin|fwi] [--strategy single|partner|buddy|dist-xor|nam-xor]
-//!           [--iterations N] [--cp-interval N] [--fail-at I] [--nodes N]
+//!           [--iterations N] [--cp-interval N] [--fail-at I] [--mtbf S] [--seed N]
+//!           [--nodes N] [--multilevel] [--async-flush]
 //! repro e2e [--artifacts DIR]
 //! ```
 
-use deeper::apps::{self, run_iterations, IterationJob};
+use deeper::apps::{self, run_iterations, run_iterations_multilevel, IterationJob, RunStats};
 use deeper::bench;
 use deeper::metrics::fmt_time;
 use deeper::runtime::{default_artifacts_dir, Runtime, Tensor};
+use deeper::scr::multilevel::{MultiLevelConfig, MultiLevelScr};
 use deeper::scr::{Scr, Strategy};
 use deeper::system::failure::FailurePlan;
 use deeper::system::{presets, Machine, NodeKind};
@@ -22,11 +24,18 @@ repro — DEEP-ER Cluster-Booster I/O + resiliency reproduction
 
 USAGE:
   repro show-config
-  repro bench <fig3..fig10|table1..table3|cb-split|all> [--csv]
+  repro bench <fig3..fig10|fig8-async|table1..table3|cb-split|all> [--csv] [--seed N]
   repro run [--app nbody|xpic|gershwin|fwi] [--strategy single|partner|buddy|dist-xor|nam-xor]
-            [--iterations N] [--cp-interval N] [--fail-at I] [--nodes N]
+            [--iterations N] [--cp-interval N] [--fail-at I] [--mtbf S] [--seed N]
+            [--nodes N] [--multilevel] [--async-flush]
   repro split [--iterations N]          (Cluster-Booster division of labour)
   repro e2e [--artifacts DIR]
+
+  --async-flush  run the L1->L2 checkpoint promotion as a background flush
+                 overlapped with compute (implies --multilevel)
+  --mtbf S       sample node failures with an exponential per-node MTBF of
+                 S seconds (reproducible via --seed)
+  --seed N       seed for stochastic failure schedules (default 0xDEE9E5)
 ";
 
 fn parse_strategy(s: &str) -> anyhow::Result<Strategy> {
@@ -47,9 +56,10 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         .map(String::as_str)
         .unwrap_or("all");
     let csv = args.has("csv");
+    let seed = args.get_u64("seed", bench::DEFAULT_SEED);
     let render = |e: &deeper::bench::Exhibit| if csv { e.render_csv() } else { e.render() };
     if name == "all" {
-        for (n, exhibits) in bench::all() {
+        for (n, exhibits) in bench::all(seed) {
             println!("--- {n} ---");
             for e in exhibits {
                 println!("{}", render(&e));
@@ -57,9 +67,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         }
         return Ok(());
     }
-    let ex = bench::by_name(name).ok_or_else(|| {
+    let ex = bench::by_name(name, seed).ok_or_else(|| {
         anyhow::anyhow!(
-            "unknown exhibit {name}; try fig3..fig10, table1..table3, cb-split, all"
+            "unknown exhibit {name}; try fig3..fig10, fig8-async, table1..table3, cb-split, all"
         )
     })?;
     for e in ex {
@@ -80,21 +90,58 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let iterations = args.get_usize("iterations", 100);
     let cp_interval = args.get_usize("cp-interval", 10);
     let nodes = args.get_usize("nodes", 16);
+    let seed = args.get_u64("seed", bench::DEFAULT_SEED);
+    let multilevel = args.has("multilevel") || args.has("async-flush");
 
     let mut m = Machine::build(presets::deep_er());
     let node_ids: Vec<usize> = m.nodes_of(NodeKind::Cluster).into_iter().take(nodes).collect();
-    let failures = args
-        .flag("fail-at")
-        .and_then(|v| v.parse::<usize>().ok())
-        .map(|i| FailurePlan::one_at_iteration(0, i))
-        .unwrap_or_else(FailurePlan::none);
+    // Failure plan: a targeted --fail-at iteration wins; otherwise --mtbf
+    // samples an exponential schedule reproducible from --seed.
+    let failures = if let Some(i) = args.flag("fail-at").and_then(|v| v.parse::<usize>().ok()) {
+        FailurePlan::one_at_iteration(0, i)
+    } else if let Some(mtbf) = args.flag("mtbf").and_then(|v| v.parse::<f64>().ok()) {
+        FailurePlan::exponential(node_ids.len(), mtbf, 1e7, seed)
+    } else {
+        FailurePlan::none()
+    };
     let job = IterationJob { profile: profile.clone(), iterations, cp_interval, failures };
-    let mut scr = Scr::new(strat);
-    let stats = run_iterations(&mut m, &node_ids, &job, Some(&mut scr));
+
+    let stats: RunStats = if multilevel {
+        let cfg = MultiLevelConfig {
+            l1_every: 1,
+            l2_every: args.get_usize("l2-every", 2),
+            l3_every: args.get_usize("l3-every", 2),
+            l2_strategy: strat,
+            async_flush: args.has("async-flush"),
+        };
+        let mut ml = MultiLevelScr::new(cfg);
+        let stats = run_iterations_multilevel(&mut m, &node_ids, &job, &mut ml);
+        println!(
+            "flush         : {} L2 promotions ({} aborted), {} L3 flushes",
+            ml.stats.l2_count, ml.stats.flush_aborted, ml.stats.l3_count
+        );
+        stats
+    } else {
+        let mut scr = Scr::new(strat);
+        run_iterations(&mut m, &node_ids, &job, Some(&mut scr))
+    };
 
     println!("app           : {}", profile.name);
-    println!("strategy      : {}", strat.name());
+    println!(
+        "strategy      : {}{}",
+        strat.name(),
+        if multilevel {
+            if args.has("async-flush") {
+                " (multilevel, async flush)"
+            } else {
+                " (multilevel, blocking flush)"
+            }
+        } else {
+            ""
+        }
+    );
     println!("nodes         : {}", node_ids.len());
+    println!("seed          : {seed}");
     println!("iterations    : {} (run {})", iterations, stats.iterations_run);
     println!("total time    : {}", fmt_time(stats.total_time));
     println!("compute time  : {}", fmt_time(stats.compute_time));
@@ -105,6 +152,8 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         stats.checkpoints_taken,
         stats.ckpt_overhead() * 100.0
     );
+    println!("blocked time  : {}", fmt_time(stats.blocked_time));
+    println!("overlap time  : {}", fmt_time(stats.overlap_time));
     println!(
         "restart time  : {} ({} failures)",
         fmt_time(stats.restart_time),

@@ -18,7 +18,7 @@
 
 use crate::fabric::ring::RingBuffer;
 use crate::fabric::{EpId, Fabric, LAT_CLUSTER, MSG_OVERHEAD, TOURMALET_BW};
-use crate::sim::{FlowId, Sim, SimTime};
+use crate::sim::{FlowId, Op, Sim, SimTime};
 use crate::storage::{Device, DeviceParams};
 
 /// FPGA pipeline setup per parity job (command decode, DMA programming).
@@ -58,29 +58,40 @@ impl NamDevice {
         Self { ep, hmc, index }
     }
 
-    /// RDMA put into NAM memory: fabric transfer + HMC write, one flow
-    /// routed through both (the slower stage is the bottleneck, as on the
-    /// real board where the HMC controller outruns two Tourmalet links).
-    pub fn put(&self, sim: &mut Sim, fabric: &Fabric, src: EpId, bytes: f64) -> FlowId {
+    /// RDMA put into NAM memory as an [`Op`] handle: fabric transfer +
+    /// HMC write, one flow routed through both (the slower stage is the
+    /// bottleneck, as on the real board where the HMC controller outruns
+    /// two Tourmalet links).
+    pub fn put_op(&self, sim: &mut Sim, fabric: &Fabric, src: EpId, bytes: f64) -> Op {
         let s = fabric.endpoint_info(src);
         let d = fabric.endpoint_info(self.ep);
         let lat = s.latency + d.latency + MSG_OVERHEAD + FPGA_JOB_OVERHEAD;
-        sim.flow(bytes, lat, &[s.tx, fabric.backplane(), d.rx, self.hmc.write_res()])
+        Op::single(sim.flow(bytes, lat, &[s.tx, fabric.backplane(), d.rx, self.hmc.write_res()]))
     }
 
-    /// RDMA get from NAM memory.
-    pub fn get(&self, sim: &mut Sim, fabric: &Fabric, dst: EpId, bytes: f64) -> FlowId {
+    /// RDMA get from NAM memory as an [`Op`] handle.
+    pub fn get_op(&self, sim: &mut Sim, fabric: &Fabric, dst: EpId, bytes: f64) -> Op {
         let s = fabric.endpoint_info(dst);
         let d = fabric.endpoint_info(self.ep);
         let lat = 2.0 * d.latency + s.latency + MSG_OVERHEAD + FPGA_JOB_OVERHEAD;
-        sim.flow(bytes, lat, &[self.hmc.read_res(), d.tx, fabric.backplane(), s.rx])
+        Op::single(sim.flow(bytes, lat, &[self.hmc.read_res(), d.tx, fabric.backplane(), s.rx]))
+    }
+
+    /// Flow-level shim over [`NamDevice::put_op`].
+    pub fn put(&self, sim: &mut Sim, fabric: &Fabric, src: EpId, bytes: f64) -> FlowId {
+        self.put_op(sim, fabric, src, bytes).flows()[0]
+    }
+
+    /// Flow-level shim over [`NamDevice::get_op`].
+    pub fn get(&self, sim: &mut Sim, fabric: &Fabric, dst: EpId, bytes: f64) -> FlowId {
+        self.get_op(sim, fabric, dst, bytes).flows()[0]
     }
 
     /// The NAM-XOR offload: the FPGA *pulls* `bytes_per_node` from every
     /// source node and streams the XOR into HMC-resident parity.
     ///
-    /// Returns the pull flows (all must complete before parity is sealed)
-    /// — node CPUs are NOT involved, which is exactly why the strategy
+    /// Returns the pull [`Op`] (parity is sealed when it completes) —
+    /// node CPUs are NOT involved, which is exactly why the strategy
     /// wins in Fig. 9.  Errors if parity would exceed the 2 GB HMC.
     pub fn pull_and_xor(
         &mut self,
@@ -88,22 +99,22 @@ impl NamDevice {
         fabric: &Fabric,
         sources: &[EpId],
         bytes_per_node: f64,
-    ) -> crate::Result<Vec<FlowId>> {
+    ) -> crate::Result<Op> {
         self.hmc.allocate(bytes_per_node)?; // parity block only
-        let mut flows = Vec::with_capacity(sources.len());
+        let mut op = Op::done();
         for &src in sources {
             let s = fabric.endpoint_info(src);
             let d = fabric.endpoint_info(self.ep);
             let lat = 2.0 * d.latency + s.latency + MSG_OVERHEAD + FPGA_JOB_OVERHEAD;
             // Route: source NIC tx -> backplane -> NAM links -> HMC write
             // (XOR is folded at stream rate by the FPGA pipeline).
-            flows.push(sim.flow(
+            op.push(sim.flow(
                 bytes_per_node,
                 lat,
                 &[s.tx, fabric.backplane(), d.rx, self.hmc.write_res()],
             ));
         }
-        Ok(flows)
+        Ok(op)
     }
 
     /// Release a sealed parity region (checkpoint retired).
@@ -114,8 +125,8 @@ impl NamDevice {
     /// Reconstruction after a node loss: NAM streams parity to the
     /// replacement node while the survivors stream their blocks (the
     /// replacement XORs on the fly).
-    pub fn push_parity(&self, sim: &mut Sim, fabric: &Fabric, dst: EpId, bytes: f64) -> FlowId {
-        self.get(sim, fabric, dst, bytes)
+    pub fn push_parity(&self, sim: &mut Sim, fabric: &Fabric, dst: EpId, bytes: f64) -> Op {
+        self.get_op(sim, fabric, dst, bytes)
     }
 }
 
@@ -279,8 +290,8 @@ mod tests {
         let srcs: Vec<_> = (0..8)
             .map(|i| fabric.endpoint(&mut sim, &format!("n{i}"), TOURMALET_BW, LAT_CLUSTER))
             .collect();
-        let flows = nam.pull_and_xor(&mut sim, &fabric, &srcs, 250e6).unwrap();
-        let t = sim.wait_all(&flows);
+        let pulls = nam.pull_and_xor(&mut sim, &fabric, &srcs, 250e6).unwrap();
+        let t = sim.wait_op(&pulls);
         // 8 x 250 MB = 2 GB through 25 GB/s of NAM links ~ 80 ms.
         assert!((t - 0.08).abs() / 0.08 < 0.05, "t={t}");
     }

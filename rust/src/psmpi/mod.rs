@@ -11,7 +11,7 @@
 //! evaluated in Fig. 10.
 
 use crate::fabric::EpId;
-use crate::sim::{FlowId, SimTime};
+use crate::sim::{FlowId, Op, SimTime};
 use crate::system::Machine;
 
 /// Time to launch a spawned process group (fork/exec + wire-up), per node.
@@ -57,6 +57,12 @@ impl Comm {
     pub fn send(&self, m: &mut Machine, from: usize, to: usize, bytes: f64) -> FlowId {
         let (src, dst) = (self.ep(m, from), self.ep(m, to));
         m.fabric.put(&mut m.sim, src, dst, bytes)
+    }
+
+    /// Non-blocking send (`MPI_Isend` shape): the returned [`Op`]
+    /// completes when the message has been delivered.
+    pub fn isend(&self, m: &mut Machine, from: usize, to: usize, bytes: f64) -> Op {
+        Op::single(self.send(m, from, to, bytes))
     }
 
     /// Barrier: dissemination algorithm, ceil(log2(p)) rounds of zero-byte
@@ -108,22 +114,28 @@ impl Comm {
         t
     }
 
-    /// Ring exchange: every rank sends `bytes` to its right neighbour and
-    /// receives from the left (one round).  The communication pattern of
-    /// SCR's XOR reduce-scatter.
-    pub fn ring_exchange(&self, m: &mut Machine, bytes: f64) -> SimTime {
+    /// Ring exchange issued without blocking: every rank sends `bytes` to
+    /// its right neighbour and receives from the left (one round).  The
+    /// communication pattern of SCR's XOR reduce-scatter; the returned
+    /// [`Op`] completes when every pairwise transfer has landed.
+    pub fn ring_exchange_op(&self, m: &mut Machine, bytes: f64) -> Op {
         let p = self.size();
         if p <= 1 {
-            return m.sim.now();
+            return Op::done();
         }
-        let flows: Vec<FlowId> = (0..p)
-            .map(|i| {
-                let peer = (i + 1) % p;
-                let (src, dst) = (self.ep(m, i), self.ep(m, peer));
-                m.fabric.put(&mut m.sim, src, dst, bytes)
-            })
-            .collect();
-        m.sim.wait_all(&flows)
+        let mut op = Op::done();
+        for i in 0..p {
+            let peer = (i + 1) % p;
+            let (src, dst) = (self.ep(m, i), self.ep(m, peer));
+            op.push(m.fabric.put(&mut m.sim, src, dst, bytes));
+        }
+        op
+    }
+
+    /// Blocking shim over [`Comm::ring_exchange_op`].
+    pub fn ring_exchange(&self, m: &mut Machine, bytes: f64) -> SimTime {
+        let op = self.ring_exchange_op(m, bytes);
+        m.sim.wait_op(&op)
     }
 
     /// Broadcast `bytes` from `root` to all ranks: binomial tree,
@@ -207,23 +219,24 @@ impl Comm {
         t
     }
 
-    /// Gather `bytes` per rank to `root` (used by the field solver side of
-    /// xPic and by checkpoint metadata collection).
-    pub fn gather(&self, m: &mut Machine, root: usize, bytes: f64) -> SimTime {
+    /// Gather `bytes` per rank to `root`, issued without blocking (used by
+    /// the field solver side of xPic and by checkpoint metadata
+    /// collection).
+    pub fn gather_op(&self, m: &mut Machine, root: usize, bytes: f64) -> Op {
         let p = self.size();
         let root_ep = self.ep(m, root);
-        let flows: Vec<FlowId> = (0..p)
-            .filter(|&i| i != root)
-            .map(|i| {
-                let src = self.ep(m, i);
-                m.fabric.put(&mut m.sim, src, root_ep, bytes)
-            })
-            .collect();
-        if flows.is_empty() {
-            m.sim.now()
-        } else {
-            m.sim.wait_all(&flows)
+        let mut op = Op::done();
+        for i in (0..p).filter(|&i| i != root) {
+            let src = self.ep(m, i);
+            op.push(m.fabric.put(&mut m.sim, src, root_ep, bytes));
         }
+        op
+    }
+
+    /// Blocking shim over [`Comm::gather_op`].
+    pub fn gather(&self, m: &mut Machine, root: usize, bytes: f64) -> SimTime {
+        let op = self.gather_op(m, root, bytes);
+        m.sim.wait_op(&op)
     }
 }
 

@@ -29,7 +29,7 @@
 pub mod multilevel;
 
 use crate::psmpi::Comm;
-use crate::sim::{FlowId, SimTime};
+use crate::sim::{FlowId, Op, SimTime};
 use crate::sionlib;
 use crate::system::Machine;
 
@@ -121,6 +121,37 @@ pub struct RestartReport {
     pub rebuilt: bool,
 }
 
+/// A checkpoint that has been **issued but not yet sealed**: its flows are
+/// in flight and the record is *not* in the database until
+/// [`Scr::checkpoint_commit`] runs.  This is the handle the multi-level
+/// flush state machine holds while the application keeps computing — and
+/// the reason a failure mid-flight cleanly falls back to the previous
+/// *settled* checkpoint: an uncommitted record can never be restored from.
+#[derive(Debug)]
+pub struct PendingCkpt {
+    /// Completes when the checkpoint is durable at its level.
+    pub op: Op,
+    record: CkptRecord,
+    issued_at: SimTime,
+    network_bytes: f64,
+}
+
+impl PendingCkpt {
+    /// Checkpoint id this pending record will commit as.
+    pub fn id(&self) -> u64 {
+        self.record.id
+    }
+
+    pub fn strategy(&self) -> Strategy {
+        self.record.strategy
+    }
+
+    /// Virtual time the checkpoint was issued at.
+    pub fn issued_at(&self) -> SimTime {
+        self.issued_at
+    }
+}
+
 /// The SCR instance of a job.
 #[derive(Debug)]
 pub struct Scr {
@@ -163,7 +194,85 @@ impl Scr {
         })
     }
 
-    /// Take a checkpoint of `bytes_per_node` on `nodes`.
+    /// Issue a checkpoint of `bytes_per_node` on `nodes` **without
+    /// waiting for durability**: returns a [`PendingCkpt`] whose `op`
+    /// completes when the checkpoint is sealed at its level.
+    ///
+    /// Single-phase strategies (Single, Buddy, NamXor) issue every flow
+    /// up front, so the whole checkpoint can overlap compute.  Multi-phase
+    /// strategies (Partner, DistXor) perform their intermediate phases —
+    /// local write, re-read, exchange/fold — with internal waits (those
+    /// serializations *are* the protocols the paper compares) and return
+    /// the final durability phase as the pending op.
+    pub fn checkpoint_begin(
+        &mut self,
+        m: &mut Machine,
+        nodes: &[usize],
+        bytes_per_node: f64,
+    ) -> crate::Result<PendingCkpt> {
+        assert!(!nodes.is_empty());
+        let issued_at = m.sim.now();
+        let fabric_bytes = nodes.len() as f64 * bytes_per_node;
+        let (op, network_bytes, nam_index) = match self.strategy {
+            Strategy::Single => {
+                (Op::new(self.local_write_flows(m, nodes, bytes_per_node)), 0.0, None)
+            }
+            Strategy::Partner => {
+                (self.partner_ckpt_op(m, nodes, bytes_per_node), fabric_bytes, None)
+            }
+            Strategy::Buddy => {
+                (self.buddy_ckpt_op(m, nodes, bytes_per_node), fabric_bytes, None)
+            }
+            Strategy::DistXor => {
+                (self.dist_xor_ckpt_op(m, nodes, bytes_per_node), fabric_bytes, None)
+            }
+            Strategy::NamXor => {
+                let (op, idx) = self.nam_xor_ckpt_op(m, nodes, bytes_per_node)?;
+                (op, fabric_bytes, Some(idx))
+            }
+        };
+        let record = CkptRecord {
+            id: self.next_id,
+            strategy: self.strategy,
+            bytes_per_node,
+            nodes: nodes.to_vec(),
+            taken_at: f64::INFINITY, // filled in at commit
+            nam_index,
+        };
+        self.next_id += 1;
+        Ok(PendingCkpt { op, record, issued_at, network_bytes })
+    }
+
+    /// Commit a **settled** pending checkpoint into the database; panics
+    /// if its op has not completed yet (poll first, or use
+    /// [`Scr::checkpoint_finish`]).
+    pub fn checkpoint_commit(&mut self, m: &Machine, mut pending: PendingCkpt) -> CkptReport {
+        let done_at = m
+            .sim
+            .op_completion(&pending.op)
+            .unwrap_or_else(|| panic!("commit of unsettled checkpoint {}", pending.record.id));
+        let done_at = done_at.max(pending.issued_at);
+        pending.record.taken_at = done_at;
+        let blocked = done_at - pending.issued_at;
+        let payload = pending.record.nodes.len() as f64 * pending.record.bytes_per_node;
+        let network_bytes = pending.network_bytes;
+        self.db.push(pending.record);
+        CkptReport {
+            blocked,
+            bandwidth: payload / blocked.max(1e-12),
+            network_bytes,
+        }
+    }
+
+    /// Wait for a pending checkpoint to seal, then commit it.
+    pub fn checkpoint_finish(&mut self, m: &mut Machine, pending: PendingCkpt) -> CkptReport {
+        m.sim.wait_op(&pending.op);
+        self.checkpoint_commit(m, pending)
+    }
+
+    /// Take a checkpoint of `bytes_per_node` on `nodes`, blocking until
+    /// durable — a thin shim over [`Scr::checkpoint_begin`] +
+    /// [`Scr::checkpoint_finish`].
     ///
     /// Blocks the application for the returned `blocked` time (the paper's
     /// checkpoint overhead); background activity (async flush, NAM pull
@@ -174,43 +283,8 @@ impl Scr {
         nodes: &[usize],
         bytes_per_node: f64,
     ) -> crate::Result<CkptReport> {
-        assert!(!nodes.is_empty());
-        let t0 = m.sim.now();
-        let (blocked_until, network_bytes, nam_index) = match self.strategy {
-            Strategy::Single => (self.write_local_all(m, nodes, bytes_per_node), 0.0, None),
-            Strategy::Partner => {
-                let t = self.partner_ckpt(m, nodes, bytes_per_node);
-                (t, nodes.len() as f64 * bytes_per_node, None)
-            }
-            Strategy::Buddy => {
-                let t = self.buddy_ckpt(m, nodes, bytes_per_node);
-                (t, nodes.len() as f64 * bytes_per_node, None)
-            }
-            Strategy::DistXor => {
-                let t = self.dist_xor_ckpt(m, nodes, bytes_per_node);
-                (t, nodes.len() as f64 * bytes_per_node, None)
-            }
-            Strategy::NamXor => {
-                let (t, idx) = self.nam_xor_ckpt(m, nodes, bytes_per_node)?;
-                (t, nodes.len() as f64 * bytes_per_node, Some(idx))
-            }
-        };
-        let blocked = blocked_until - t0;
-        let record = CkptRecord {
-            id: self.next_id,
-            strategy: self.strategy,
-            bytes_per_node,
-            nodes: nodes.to_vec(),
-            taken_at: blocked_until,
-            nam_index,
-        };
-        self.next_id += 1;
-        self.db.push(record);
-        Ok(CkptReport {
-            blocked,
-            bandwidth: nodes.len() as f64 * bytes_per_node / blocked.max(1e-12),
-            network_bytes,
-        })
+        let pending = self.checkpoint_begin(m, nodes, bytes_per_node)?;
+        Ok(self.checkpoint_finish(m, pending))
     }
 
     /// Restart after `failed_node` died (replacement node = same index,
@@ -235,18 +309,18 @@ impl Scr {
                 // from the partner's storage over the fabric.
                 let survivors: Vec<usize> =
                     nodes.iter().copied().filter(|&n| n != f).collect();
-                let mut flows = self.read_local_flows(m, &survivors, rec.bytes_per_node);
+                let mut op = Op::new(self.read_local_flows(m, &survivors, rec.bytes_per_node));
                 let pos = nodes.iter().position(|&n| n == f).unwrap();
                 let partner = nodes[Self::partner_of(pos, nodes.len())];
-                let rf = m.nodes[partner].nvme.as_ref().unwrap().read(
+                let rf = m.nodes[partner].nvme.as_ref().unwrap().read_op(
                     &mut m.sim,
                     rec.bytes_per_node,
                     4,
                     &[],
                 );
-                m.sim.wait_all(&[rf]);
-                flows.push(sionlib::buddy_stream(m, partner, f, rec.bytes_per_node));
-                m.sim.wait_all(&flows)
+                m.sim.wait_op(&rf);
+                op.join(sionlib::buddy_stream_op(m, partner, f, rec.bytes_per_node));
+                m.sim.wait_op(&op)
             }
             (Strategy::DistXor, Some(f)) => {
                 self.xor_rebuild(m, nodes, f, rec.bytes_per_node, None)
@@ -301,35 +375,38 @@ impl Scr {
     }
 
     /// SCR_PARTNER: local write -> local re-read -> send -> partner write.
-    fn partner_ckpt(&self, m: &mut Machine, nodes: &[usize], bytes: f64) -> SimTime {
+    /// The first two phases serialize (the protocol's store-and-forward
+    /// steps); the partner streams are returned as the pending op.
+    fn partner_ckpt_op(&self, m: &mut Machine, nodes: &[usize], bytes: f64) -> Op {
         // Phase 1: everyone writes locally.
         self.write_local_all(m, nodes, bytes);
         // Phase 2: everyone re-reads its own checkpoint (the step Buddy
         // removes).
         self.read_local_all(m, nodes, bytes);
         // Phase 3: stream to partner; partner writes to its NVMe.
-        let flows: Vec<FlowId> = (0..nodes.len())
-            .map(|i| {
-                let buddy = nodes[Self::partner_of(i, nodes.len())];
-                sionlib::buddy_stream(m, nodes[i], buddy, bytes)
-            })
-            .collect();
-        m.sim.wait_all(&flows)
+        let mut op = Op::done();
+        for i in 0..nodes.len() {
+            let buddy = nodes[Self::partner_of(i, nodes.len())];
+            op.join(sionlib::buddy_stream_op(m, nodes[i], buddy, bytes));
+        }
+        op
     }
 
     /// DEEP-ER Buddy: local write || direct memory->buddy SIONlib stream.
-    fn buddy_ckpt(&self, m: &mut Machine, nodes: &[usize], bytes: f64) -> SimTime {
-        let mut flows = self.local_write_flows(m, nodes, bytes);
+    /// Single-phase: everything is issued up front as one op.
+    fn buddy_ckpt_op(&self, m: &mut Machine, nodes: &[usize], bytes: f64) -> Op {
+        let mut op = Op::new(self.local_write_flows(m, nodes, bytes));
         for i in 0..nodes.len() {
             let buddy = nodes[Self::partner_of(i, nodes.len())];
-            flows.push(sionlib::buddy_stream(m, nodes[i], buddy, bytes));
+            op.join(sionlib::buddy_stream_op(m, nodes[i], buddy, bytes));
         }
-        m.sim.wait_all(&flows)
+        op
     }
 
     /// SCR Distributed XOR: local write -> re-read -> reduce-scatter XOR
-    /// on the node CPUs -> parity write to local NVMe.
-    fn dist_xor_ckpt(&self, m: &mut Machine, nodes: &[usize], bytes: f64) -> SimTime {
+    /// on the node CPUs -> parity write to local NVMe.  Phases 1-3
+    /// serialize; the final parity write is returned as the pending op.
+    fn dist_xor_ckpt_op(&self, m: &mut Machine, nodes: &[usize], bytes: f64) -> Op {
         let k = self.group.min(nodes.len()).max(2);
         // Phase 1+2: local write and re-read (parity needs the data back).
         self.write_local_all(m, nodes, bytes);
@@ -343,34 +420,37 @@ impl Scr {
             let comm = Comm::of(group.to_vec());
             comm.ring_exchange(m, bytes * (group.len() as f64 - 1.0) / group.len() as f64);
             // CPU XOR fold, overlapped across nodes (concurrent flows).
-            let flows: Vec<FlowId> = group
-                .iter()
-                .map(|&n| {
-                    let cpu = m.nodes[n].cpu;
-                    m.sim.flow(bytes * NODE_XOR_FLOP_PER_BYTE, 0.0, &[cpu])
-                })
-                .collect();
-            m.sim.wait_all(&flows);
+            let folds = Op::new(
+                group
+                    .iter()
+                    .map(|&n| {
+                        let cpu = m.nodes[n].cpu;
+                        m.sim.flow(bytes * NODE_XOR_FLOP_PER_BYTE, 0.0, &[cpu])
+                    })
+                    .collect(),
+            );
+            m.sim.wait_op(&folds);
         }
         // Phase 4: parity segment (bytes/(k-1)) written locally.
         let parity = bytes / (k as f64 - 1.0);
-        self.write_local_all(m, nodes, parity)
+        Op::new(self.local_write_flows(m, nodes, parity))
     }
 
     /// DEEP-ER NAM XOR: local write || FPGA pulls data + folds parity on
     /// the NAM.  Node CPUs and NVMe see only the local write.
+    /// Single-phase: local writes and FPGA pulls are all issued up front.
     ///
     /// Parity is **striped across all NAM boards** (libNAM addresses the
     /// whole NAM pool, Section II-B2): each board pulls `bytes / n_boards`
     /// from every node, which both aggregates the pull bandwidth of the
     /// two-board prototype and lets checkpoints larger than one 2 GB HMC
     /// fit the pool.
-    fn nam_xor_ckpt(
+    fn nam_xor_ckpt_op(
         &mut self,
         m: &mut Machine,
         nodes: &[usize],
         bytes: f64,
-    ) -> crate::Result<(SimTime, usize)> {
+    ) -> crate::Result<(Op, usize)> {
         if m.nams.is_empty() {
             anyhow::bail!("machine has no NAM board; NamXor unavailable");
         }
@@ -387,16 +467,16 @@ impl Scr {
                 *alloc = 0.0;
             }
         }
-        let mut flows = self.local_write_flows(m, nodes, bytes);
+        let mut op = Op::new(self.local_write_flows(m, nodes, bytes));
         let eps: Vec<_> = nodes.iter().map(|&n| m.nodes[n].ep).collect();
         // Split the NAM borrow from the machine borrow.
         let (sim, fabric, nams) = (&mut m.sim, &m.fabric, &mut m.nams);
         for (i, nam) in nams.iter_mut().enumerate() {
             let pulls = nam.pull_and_xor(sim, fabric, &eps, shard)?;
             self.nam_alloc[i] = shard;
-            flows.extend(pulls);
+            op.join(pulls);
         }
-        Ok((m.sim.wait_all(&flows), 0))
+        Ok((op, 0))
     }
 
     /// Rebuild a lost node's checkpoint from parity + survivors.
@@ -425,7 +505,7 @@ impl Scr {
             .copied()
             .filter(|n| !group.contains(n))
             .collect();
-        let mut flows = self.read_local_flows(m, &others, bytes);
+        let mut op = Op::new(self.read_local_flows(m, &others, bytes));
         match nam_index {
             Some(_) => {
                 // NAM boards stream their parity shards; survivors stream
@@ -436,34 +516,34 @@ impl Scr {
                 let shard = bytes / n_boards as f64;
                 let (sim, fabric, nams) = (&mut m.sim, &m.fabric, &mut m.nams);
                 for nam in nams.iter() {
-                    flows.push(nam.push_parity(sim, fabric, dst, shard));
+                    op.join(nam.push_parity(sim, fabric, dst, shard));
                 }
                 for &s in &survivors {
                     let sep = m.nodes[s].ep;
-                    flows.push(m.fabric.put(&mut m.sim, sep, dst, bytes));
+                    op.push(m.fabric.put(&mut m.sim, sep, dst, bytes));
                 }
             }
             None => {
                 // Survivors re-read local blocks, then incast to the
                 // replacement which XOR-folds.
-                let rf = self.read_local_flows(m, &survivors, bytes);
-                m.sim.wait_all(&rf);
+                let rf = Op::new(self.read_local_flows(m, &survivors, bytes));
+                m.sim.wait_op(&rf);
                 let dst = m.nodes[failed].ep;
                 for &s in &survivors {
                     let sep = m.nodes[s].ep;
-                    flows.push(m.fabric.put(&mut m.sim, sep, dst, bytes));
+                    op.push(m.fabric.put(&mut m.sim, sep, dst, bytes));
                 }
                 let cpu = m.nodes[failed].cpu;
                 let xor = m
                     .sim
                     .flow(bytes * survivors.len() as f64 * NODE_XOR_FLOP_PER_BYTE, 0.0, &[cpu]);
-                flows.push(xor);
+                op.push(xor);
             }
         }
         // Survivors in the failed group also re-read their own state for
         // the rollback itself.
-        flows.extend(self.read_local_flows(m, &survivors, bytes));
-        m.sim.wait_all(&flows)
+        op.join(Op::new(self.read_local_flows(m, &survivors, bytes)));
+        m.sim.wait_op(&op)
     }
 }
 
@@ -533,6 +613,41 @@ mod tests {
             (0.40..=0.75).contains(&saving),
             "time saving {saving:.2} outside Fig. 9 band"
         );
+    }
+
+    #[test]
+    fn async_begin_finish_matches_blocking_checkpoint() {
+        let bytes = 2e9;
+        for strat in Strategy::ALL {
+            let mut m1 = machine();
+            let nodes = cluster_nodes(&m1);
+            let mut s1 = Scr::new(strat);
+            let r1 = s1.checkpoint(&mut m1, &nodes, bytes).unwrap();
+            let mut m2 = machine();
+            let mut s2 = Scr::new(strat);
+            let pending = s2.checkpoint_begin(&mut m2, &nodes, bytes).unwrap();
+            assert_eq!(pending.id(), 0);
+            assert_eq!(pending.strategy(), strat);
+            assert!(s2.database().is_empty(), "no commit before settle");
+            let r2 = s2.checkpoint_finish(&mut m2, pending);
+            assert!(
+                (r1.blocked - r2.blocked).abs() < 1e-9,
+                "{strat:?}: blocking {} vs begin/finish {}",
+                r1.blocked,
+                r2.blocked
+            );
+            assert_eq!(s2.database().len(), 1);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "commit of unsettled checkpoint")]
+    fn commit_before_settle_panics() {
+        let mut m = machine();
+        let nodes = cluster_nodes(&m);
+        let mut scr = Scr::new(Strategy::Buddy);
+        let pending = scr.checkpoint_begin(&mut m, &nodes, 1e9).unwrap();
+        let _ = scr.checkpoint_commit(&m, pending);
     }
 
     #[test]

@@ -13,12 +13,21 @@
 //! * **L3** global: BeeOND-async flush of the L2 checkpoint to BeeGFS,
 //!   survives rack-level faults (and job retirement).
 //!
+//! With `async_flush` enabled the L1→L2 promotion itself becomes a
+//! **background state machine** ([`FlushState`]): the L2 checkpoint is
+//! *issued* at its cadence point but settles while the application
+//! computes — the checkpoint/compute overlap pattern of Hukerikar &
+//! Engelmann (2017) that the paper's deferred Buddy copy and NAM
+//! offload exist to enable.  A node loss that lands mid-flight falls
+//! back to the deepest **settled** level: an in-flight promotion is
+//! never committed to the database, so restart logic cannot pick it.
+//!
 //! Level frequencies come from the generalized Young/Daly optimum
 //! ([`optimal_interval`]): interval_k = sqrt(2 * cost_k * MTBF_k).
 
-use super::{Scr, Strategy};
+use super::{CkptRecord, PendingCkpt, Scr, Strategy};
 use crate::beegfs::BeeGfs;
-use crate::sim::SimTime;
+use crate::sim::{OpSet, SimTime};
 use crate::system::Machine;
 
 /// Young's approximation of the optimal checkpoint interval:
@@ -49,11 +58,20 @@ pub struct MultiLevelConfig {
     pub l3_every: usize,
     /// Which strategy implements L2.
     pub l2_strategy: Strategy,
+    /// Run the L1→L2 promotion as a background flush ([`FlushState`])
+    /// instead of blocking the application on it.
+    pub async_flush: bool,
 }
 
 impl Default for MultiLevelConfig {
     fn default() -> Self {
-        Self { l1_every: 1, l2_every: 5, l3_every: 4, l2_strategy: Strategy::Buddy }
+        Self {
+            l1_every: 1,
+            l2_every: 5,
+            l3_every: 4,
+            l2_strategy: Strategy::Buddy,
+            async_flush: false,
+        }
     }
 }
 
@@ -78,9 +96,54 @@ impl MultiLevelConfig {
             l1_every: l1,
             l2_every: (l2 / l1).max(1),
             l3_every: (l3 / (l2.max(1))).max(1),
-            l2_strategy: Strategy::Buddy,
+            ..Self::default()
         }
     }
+
+    /// Toggle the background L1→L2 flush (builder style).
+    pub fn with_async_flush(mut self, on: bool) -> Self {
+        self.async_flush = on;
+        self
+    }
+}
+
+/// The background L1→L2 promotion state machine.
+///
+/// At most one promotion is outstanding: issuing the next one first
+/// settles (waits out) the previous — the back-pressure that keeps the
+/// NVMe/fabric from accumulating unbounded flush debt.
+#[derive(Debug)]
+pub enum FlushState {
+    /// No promotion outstanding; every committed level is durable.
+    Settled,
+    /// An L2 checkpoint is in flight: issued, not yet durable, **not**
+    /// in the restart database.
+    InFlight {
+        pending: PendingCkpt,
+        /// Iteration whose state the promotion snapshots.
+        iter: usize,
+        /// Node set / payload needed to issue the L3 flush on settle.
+        nodes: Vec<usize>,
+        bytes_per_node: f64,
+    },
+}
+
+/// Which level a restart was served from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RestartLevel {
+    L1,
+    L2,
+    L3,
+}
+
+/// Outcome of a multi-level restart: cost, serving level, and the
+/// iteration the application must roll back to.
+#[derive(Debug, Clone, Copy)]
+pub struct RestartOutcome {
+    pub time: SimTime,
+    pub level: RestartLevel,
+    /// Iteration of the restored checkpoint (the roll-back target).
+    pub iter: usize,
 }
 
 /// Report of one multi-level run segment.
@@ -90,9 +153,19 @@ pub struct LevelStats {
     pub l2_count: usize,
     pub l3_count: usize,
     pub l1_time: SimTime,
+    /// Blocked portion of L2 promotions (in async mode only the
+    /// back-pressure waits; in blocking mode the full promotion cost).
     pub l2_time: SimTime,
     /// L3 is asynchronous; this is the *blocked* portion only.
     pub l3_blocked: SimTime,
+    /// Background-flush duration that overlapped application compute.
+    pub flush_overlap: SimTime,
+    /// Time the application stalled waiting for a previous flush to
+    /// settle (back-pressure) before issuing the next promotion.
+    pub flush_blocked: SimTime,
+    /// In-flight promotions discarded because a node loss landed
+    /// mid-flight (restart then used the deepest settled level).
+    pub flush_aborted: usize,
 }
 
 /// The multi-level checkpointer: owns one SCR instance per level.
@@ -102,11 +175,19 @@ pub struct MultiLevelScr {
     l1: Scr,
     l2: Scr,
     global: BeeGfs,
-    /// Background L3 flush flows (drained at job end or on L3 restart).
-    l3_flows: Vec<crate::sim::FlowId>,
+    /// Background L3 flush operations (drained at job end or on L3
+    /// restart).
+    l3: OpSet,
+    /// The L1→L2 promotion state machine.
+    flush: FlushState,
     pub stats: LevelStats,
     l1_since_l2: usize,
     l2_since_l3: usize,
+    /// Iteration of the latest L1 / deepest settled L2 / flushed L3
+    /// checkpoint (roll-back targets per level).
+    last_l1_iter: usize,
+    settled_l2_iter: usize,
+    l3_iter: usize,
 }
 
 impl MultiLevelScr {
@@ -115,12 +196,26 @@ impl MultiLevelScr {
             l1: Scr::new(Strategy::Single),
             l2: Scr::new(config.l2_strategy),
             global: BeeGfs::new(),
-            l3_flows: Vec::new(),
+            l3: OpSet::new(),
+            flush: FlushState::Settled,
             stats: LevelStats::default(),
             l1_since_l2: 0,
             l2_since_l3: 0,
+            last_l1_iter: 0,
+            settled_l2_iter: 0,
+            l3_iter: 0,
             config,
         }
+    }
+
+    /// True while an L2 promotion is in flight (diagnostics / tests).
+    pub fn flush_in_flight(&self) -> bool {
+        matches!(self.flush, FlushState::InFlight { .. })
+    }
+
+    /// Settled (restorable) L2 checkpoint records.
+    pub fn l2_records(&self) -> &[CkptRecord] {
+        self.l2.database()
     }
 
     /// Checkpoint at iteration `iter`; picks the level(s) due.
@@ -132,74 +227,179 @@ impl MultiLevelScr {
         bytes_per_node: f64,
         iter: usize,
     ) -> crate::Result<SimTime> {
+        // Opportunistically commit a flush that settled during compute
+        // (no time advances here).
+        self.poll_flush(m);
         if self.config.l1_every == 0 || iter % self.config.l1_every != 0 {
             return Ok(0.0);
         }
         let t0 = m.sim.now();
-        // L1: always taken when due (cheap, local).
+        // L1: always taken when due (cheap, local, blocking).
         let r1 = self.l1.checkpoint(m, nodes, bytes_per_node)?;
         self.stats.l1_count += 1;
         self.stats.l1_time += r1.blocked;
+        self.last_l1_iter = iter;
         self.l1_since_l2 += 1;
 
         // L2: every l2_every L1s.
         if self.l1_since_l2 >= self.config.l2_every {
             self.l1_since_l2 = 0;
-            let r2 = self.l2.checkpoint(m, nodes, bytes_per_node)?;
-            self.stats.l2_count += 1;
-            self.stats.l2_time += r2.blocked;
-            self.l2_since_l3 += 1;
-
-            // L3: asynchronous flush of the freshly-taken L2 to BeeGFS.
-            if self.l2_since_l3 >= self.config.l3_every {
-                self.l2_since_l3 = 0;
-                let t3 = m.sim.now();
-                for &n in nodes {
-                    let flows = self.global.write_striped(m, n, bytes_per_node);
-                    self.l3_flows.extend(flows);
+            if self.config.async_flush {
+                // One outstanding promotion max: settle the previous one
+                // first (back-pressure), then issue the next one into the
+                // background and return to compute.
+                self.settle_flush(m);
+                let pending = self.l2.checkpoint_begin(m, nodes, bytes_per_node)?;
+                self.flush = FlushState::InFlight {
+                    pending,
+                    iter,
+                    nodes: nodes.to_vec(),
+                    bytes_per_node,
+                };
+            } else {
+                let r2 = self.l2.checkpoint(m, nodes, bytes_per_node)?;
+                self.stats.l2_count += 1;
+                self.stats.l2_time += r2.blocked;
+                self.settled_l2_iter = iter;
+                self.l2_since_l3 += 1;
+                if self.l2_since_l3 >= self.config.l3_every {
+                    self.issue_l3(m, nodes, bytes_per_node, iter);
                 }
-                self.stats.l3_count += 1;
-                // Only the issue cost blocks; the transfer is background.
-                self.stats.l3_blocked += m.sim.now() - t3;
             }
         }
         Ok(m.sim.now() - t0)
     }
 
-    /// Restart after a failure: cheapest level that covers it.
-    /// `node_lost=false` -> L1; `node_lost=true` -> L2; if L2 has no
-    /// record (node lost before any L2), fall back to L3 (global read).
-    pub fn restart(
+    /// Commit the in-flight promotion if it has settled; never advances
+    /// virtual time.
+    pub fn poll_flush(&mut self, m: &mut Machine) {
+        let settled = match &self.flush {
+            FlushState::InFlight { pending, .. } => m.sim.poll_op(&pending.op),
+            FlushState::Settled => false,
+        };
+        if settled {
+            self.commit_flush(m, 0.0);
+        }
+    }
+
+    /// Block until the in-flight promotion settles (no-op when settled).
+    pub fn settle_flush(&mut self, m: &mut Machine) {
+        let op = match &self.flush {
+            FlushState::InFlight { pending, .. } => pending.op.clone(),
+            FlushState::Settled => return,
+        };
+        let t0 = m.sim.now();
+        m.sim.wait_op(&op);
+        let blocked = m.sim.now() - t0;
+        self.commit_flush(m, blocked);
+    }
+
+    /// Move InFlight -> Settled: commit the L2 record (making it
+    /// restorable), account overlap vs blocked time, and fire the L3
+    /// flush when its cadence is due.
+    fn commit_flush(&mut self, m: &mut Machine, blocked: SimTime) {
+        let FlushState::InFlight { pending, iter, nodes, bytes_per_node } =
+            std::mem::replace(&mut self.flush, FlushState::Settled)
+        else {
+            return;
+        };
+        let r2 = self.l2.checkpoint_commit(m, pending);
+        self.stats.l2_count += 1;
+        self.stats.l2_time += blocked;
+        self.stats.flush_blocked += blocked;
+        self.stats.flush_overlap += (r2.blocked - blocked).max(0.0);
+        self.settled_l2_iter = iter;
+        self.l2_since_l3 += 1;
+        if self.l2_since_l3 >= self.config.l3_every {
+            self.issue_l3(m, &nodes, bytes_per_node, iter);
+        }
+    }
+
+    /// Discard an in-flight promotion (a node loss landed mid-flight):
+    /// the record was never committed, so restarts fall back to the
+    /// deepest settled level.
+    fn abort_flush(&mut self) {
+        if matches!(self.flush, FlushState::InFlight { .. }) {
+            self.flush = FlushState::Settled;
+            self.stats.flush_aborted += 1;
+        }
+    }
+
+    /// Fire the asynchronous L3 flush of the freshly settled L2.
+    fn issue_l3(&mut self, m: &mut Machine, nodes: &[usize], bytes_per_node: f64, iter: usize) {
+        self.l2_since_l3 = 0;
+        let t3 = m.sim.now();
+        for &n in nodes {
+            let op = self.global.write_striped_op(m, n, bytes_per_node);
+            self.l3.push(op);
+        }
+        self.stats.l3_count += 1;
+        self.l3_iter = iter;
+        // Only the issue cost blocks; the transfer is background.
+        self.stats.l3_blocked += m.sim.now() - t3;
+    }
+
+    /// Restart after a failure from the cheapest level that covers it,
+    /// reporting which level served it and the roll-back iteration.
+    ///
+    /// `failed=None` -> L1.  `failed=Some(_)` -> the deepest **settled**
+    /// L2 (an in-flight promotion is aborted, never restored from); if no
+    /// L2 record survives node loss, fall back to L3 (global read), else
+    /// error.
+    pub fn restart_detailed(
         &mut self,
         m: &mut Machine,
         nodes: &[usize],
         failed: Option<usize>,
-    ) -> crate::Result<SimTime> {
+    ) -> crate::Result<RestartOutcome> {
         match failed {
-            None => Ok(self.l1.restart(m, nodes, None)?.time),
+            None => {
+                // Transient process error: node state (and any in-flight
+                // promotion, which only reads node-local sources) is
+                // intact; L1 covers it.
+                let time = self.l1.restart(m, nodes, None)?.time;
+                Ok(RestartOutcome { time, level: RestartLevel::L1, iter: self.last_l1_iter })
+            }
             Some(f) => {
+                // Anything still in flight was invalidated by the node
+                // loss: discard it and use the deepest *settled* level.
+                // Deliberately NO poll here — between the node dying and
+                // this restart running, virtual time has passed (PMD
+                // detection/cleanup), and a promotion whose flows
+                // "completed" inside that window finished streaming from
+                // a dead node.  Callers that want a settled-in-background
+                // promotion credited must [`MultiLevelScr::poll_flush`]
+                // *before* the failure hits (the driver does, right
+                // before injecting the kill).
+                self.abort_flush();
                 if self.l2.latest_usable(Some(f)).is_some() {
-                    Ok(self.l2.restart(m, nodes, Some(f))?.time)
+                    let time = self.l2.restart(m, nodes, Some(f))?.time;
+                    Ok(RestartOutcome {
+                        time,
+                        level: RestartLevel::L2,
+                        iter: self.settled_l2_iter,
+                    })
                 } else if self.stats.l3_count > 0 {
                     // Global read-back for every node.
                     let t0 = m.sim.now();
                     // Drain pending flushes first (consistency point).
-                    let pending = std::mem::take(&mut self.l3_flows);
-                    if !pending.is_empty() {
-                        m.sim.wait_all(&pending);
-                    }
-                    let mut flows = Vec::new();
+                    self.l3.wait_all(&mut m.sim);
                     let bytes = self
                         .l1
                         .database()
                         .last()
                         .map(|r| r.bytes_per_node)
                         .unwrap_or(0.0);
+                    let mut read = crate::sim::Op::done();
                     for &n in nodes {
-                        flows.extend(self.global.read_striped(m, n, bytes));
+                        read.join(self.global.read_striped_op(m, n, bytes));
                     }
-                    let t = m.sim.wait_all(&flows);
-                    Ok(t - t0)
+                    let t = m.sim.wait_op(&read);
+                    Ok(RestartOutcome {
+                        time: t - t0,
+                        level: RestartLevel::L3,
+                        iter: self.l3_iter,
+                    })
                 } else {
                     anyhow::bail!("no checkpoint level covers a lost node yet")
                 }
@@ -207,14 +407,22 @@ impl MultiLevelScr {
         }
     }
 
-    /// Job-end barrier: all L3 flushes durable.
+    /// Shim over [`MultiLevelScr::restart_detailed`] returning the cost
+    /// only.
+    pub fn restart(
+        &mut self,
+        m: &mut Machine,
+        nodes: &[usize],
+        failed: Option<usize>,
+    ) -> crate::Result<SimTime> {
+        Ok(self.restart_detailed(m, nodes, failed)?.time)
+    }
+
+    /// Job-end barrier: the in-flight promotion settled and all L3
+    /// flushes durable.
     pub fn drain(&mut self, m: &mut Machine) -> SimTime {
-        let pending = std::mem::take(&mut self.l3_flows);
-        if pending.is_empty() {
-            m.sim.now()
-        } else {
-            m.sim.wait_all(&pending)
-        }
+        self.settle_flush(m);
+        self.l3.wait_all(&mut m.sim)
     }
 }
 
@@ -252,6 +460,7 @@ mod tests {
         assert!(c.l1_every >= 1);
         assert!(c.l2_every >= 1);
         assert!(c.l3_every >= 1);
+        assert!(!c.async_flush, "async flush is opt-in");
         // L2 period (in iterations) must be >= L1 period.
         assert!(c.l1_every * c.l2_every >= c.l1_every);
     }
@@ -260,7 +469,12 @@ mod tests {
     fn levels_fire_at_configured_cadence() {
         let mut m = machine();
         let nodes = m.nodes_of(NodeKind::Cluster);
-        let cfg = MultiLevelConfig { l1_every: 1, l2_every: 3, l3_every: 2, l2_strategy: Strategy::Buddy };
+        let cfg = MultiLevelConfig {
+            l1_every: 1,
+            l2_every: 3,
+            l3_every: 2,
+            ..MultiLevelConfig::default()
+        };
         let mut ml = MultiLevelScr::new(cfg);
         for iter in 1..=12 {
             ml.checkpoint_at(&mut m, &nodes, 1e9, iter).unwrap();
@@ -272,6 +486,74 @@ mod tests {
     }
 
     #[test]
+    fn async_cadence_matches_blocking_after_drain() {
+        // The background machine must not change *what* is checkpointed,
+        // only *when* the application blocks.
+        let mut m = machine();
+        let nodes = m.nodes_of(NodeKind::Cluster);
+        let cfg = MultiLevelConfig {
+            l1_every: 1,
+            l2_every: 3,
+            l3_every: 2,
+            async_flush: true,
+            ..MultiLevelConfig::default()
+        };
+        let mut ml = MultiLevelScr::new(cfg);
+        for iter in 1..=12 {
+            ml.checkpoint_at(&mut m, &nodes, 1e9, iter).unwrap();
+            // Give the flush compute time to settle into.
+            m.sim.advance(5.0);
+        }
+        ml.drain(&mut m);
+        assert!(!ml.flush_in_flight());
+        assert_eq!(ml.stats.l1_count, 12);
+        assert_eq!(ml.stats.l2_count, 4);
+        assert_eq!(ml.stats.l3_count, 2);
+        assert_eq!(ml.l2_records().len(), 4);
+        // With 5 s of compute between iterations the Buddy promotion
+        // (~1 GB/node) settles in the gaps: overlap dominates blocking.
+        assert!(
+            ml.stats.flush_overlap > ml.stats.flush_blocked,
+            "overlap={} blocked={}",
+            ml.stats.flush_overlap,
+            ml.stats.flush_blocked
+        );
+    }
+
+    #[test]
+    fn async_flush_blocks_less_than_blocking_promotion() {
+        let run = |async_flush: bool| -> (SimTime, LevelStats) {
+            let mut m = machine();
+            let nodes = m.nodes_of(NodeKind::Cluster);
+            let cfg = MultiLevelConfig {
+                l1_every: 1,
+                l2_every: 2,
+                l3_every: 100,
+                async_flush,
+                ..MultiLevelConfig::default()
+            };
+            let mut ml = MultiLevelScr::new(cfg);
+            // checkpoint_at's return already includes any back-pressure
+            // settle wait, so only the final out-of-loop settle is added.
+            let mut blocked = 0.0;
+            for iter in 1..=8 {
+                blocked += ml.checkpoint_at(&mut m, &nodes, 2e9, iter).unwrap();
+                m.sim.advance(30.0); // compute window for the flush
+            }
+            let t0 = m.sim.now();
+            ml.settle_flush(&mut m);
+            (blocked + (m.sim.now() - t0), ml.stats)
+        };
+        let (blocked_sync, _) = run(false);
+        let (blocked_async, stats) = run(true);
+        assert!(
+            blocked_async < blocked_sync,
+            "async {blocked_async} !< blocking {blocked_sync}"
+        );
+        assert!(stats.flush_overlap > 0.0);
+    }
+
+    #[test]
     fn l1_much_cheaper_than_l2() {
         let mut m = machine();
         let nodes = m.nodes_of(NodeKind::Cluster);
@@ -280,6 +562,7 @@ mod tests {
             l2_every: 2,
             l3_every: 100,
             l2_strategy: Strategy::Partner,
+            ..MultiLevelConfig::default()
         });
         for iter in 1..=4 {
             ml.checkpoint_at(&mut m, &nodes, 2e9, iter).unwrap();
@@ -298,13 +581,17 @@ mod tests {
             ml.checkpoint_at(&mut m, &nodes, 1e9, iter).unwrap();
         }
         // Transient: L1 restart works.
-        let t1 = ml.restart(&mut m, &nodes, None).unwrap();
-        assert!(t1 > 0.0);
+        let r1 = ml.restart_detailed(&mut m, &nodes, None).unwrap();
+        assert!(r1.time > 0.0);
+        assert_eq!(r1.level, RestartLevel::L1);
+        assert_eq!(r1.iter, 10);
         // Node loss: L2 restart works and costs more than L1.
         m.kill_node(nodes[1]);
         m.revive_node(nodes[1]);
-        let t2 = ml.restart(&mut m, &nodes, Some(nodes[1])).unwrap();
-        assert!(t2 > t1, "l1={t1} l2={t2}");
+        let r2 = ml.restart_detailed(&mut m, &nodes, Some(nodes[1])).unwrap();
+        assert!(r2.time > r1.time, "l1={} l2={}", r1.time, r2.time);
+        assert_eq!(r2.level, RestartLevel::L2);
+        assert_eq!(r2.iter, 10, "L2 fires on iters 5 and 10");
     }
 
     #[test]
@@ -315,12 +602,46 @@ mod tests {
             l1_every: 1,
             l2_every: 100, // never during this test
             l3_every: 100,
-            l2_strategy: Strategy::Buddy,
+            ..MultiLevelConfig::default()
         });
         ml.checkpoint_at(&mut m, &nodes, 1e9, 1).unwrap();
         m.kill_node(nodes[0]);
         m.revive_node(nodes[0]);
         assert!(ml.restart(&mut m, &nodes, Some(nodes[0])).is_err());
+    }
+
+    #[test]
+    fn failure_mid_flight_falls_back_to_settled_level() {
+        // The acceptance scenario: one L2 settled (iter 2), another in
+        // flight (iter 4) when the node dies.  Restart must use the
+        // *settled* record — not the in-flight one — and roll back to
+        // iteration 2.
+        let mut m = machine();
+        let nodes = m.nodes_of(NodeKind::Cluster);
+        let cfg = MultiLevelConfig {
+            l1_every: 1,
+            l2_every: 2,
+            l3_every: 100,
+            async_flush: true,
+            ..MultiLevelConfig::default()
+        };
+        let mut ml = MultiLevelScr::new(cfg);
+        ml.checkpoint_at(&mut m, &nodes, 1e9, 1).unwrap();
+        ml.checkpoint_at(&mut m, &nodes, 1e9, 2).unwrap(); // L2 issued
+        m.sim.advance(60.0); // settles
+        ml.checkpoint_at(&mut m, &nodes, 1e9, 3).unwrap(); // commits settled L2
+        assert_eq!(ml.l2_records().len(), 1);
+        ml.checkpoint_at(&mut m, &nodes, 1e9, 4).unwrap(); // next L2 issued...
+        assert!(ml.flush_in_flight(), "promotion must still be in flight");
+        // ...and the node dies before it settles.
+        m.kill_node(nodes[3]);
+        m.revive_node(nodes[3]);
+        let r = ml.restart_detailed(&mut m, &nodes, Some(nodes[3])).unwrap();
+        assert_eq!(r.level, RestartLevel::L2);
+        assert_eq!(r.iter, 2, "must roll back to the settled L2, not the in-flight one");
+        assert!(!ml.flush_in_flight(), "in-flight promotion must be aborted");
+        assert_eq!(ml.stats.flush_aborted, 1);
+        assert_eq!(ml.l2_records().len(), 1, "aborted promotion never committed");
     }
 
     #[test]
@@ -331,7 +652,7 @@ mod tests {
             l1_every: 1,
             l2_every: 1,
             l3_every: 1,
-            l2_strategy: Strategy::Buddy,
+            ..MultiLevelConfig::default()
         });
         ml.checkpoint_at(&mut m, &nodes, 1e9, 1).unwrap();
         // The L3 issue cost is (near) zero blocked time...

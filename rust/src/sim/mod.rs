@@ -35,7 +35,6 @@ pub struct FlowId(pub usize);
 
 #[derive(Debug, Clone)]
 struct Resource {
-    #[allow(dead_code)]
     name: String,
     /// Capacity in bytes/second (or flops/second for compute resources).
     capacity: f64,
@@ -54,12 +53,143 @@ struct Flow {
     route: Vec<ResId>,
     remaining: f64,
     state: FlowState,
-    /// Kept for diagnostics; scheduling reads the PendingKey heap instead.
-    #[allow(dead_code)]
+    /// Kept for diagnostics ([`Sim::op_trace`]); scheduling reads the
+    /// PendingKey heap instead.
     start_at: SimTime,
     finished_at: SimTime,
     /// Current allocated rate (recomputed on every event).
     rate: f64,
+}
+
+/// Handle to one in-flight logical **operation**: a set of flows that
+/// jointly complete.  Every I/O layer (storage, BeeGFS/BeeOND, SIONlib,
+/// NAM, psmpi) returns `Op`s; blocking calls are thin shims that
+/// immediately [`Sim::wait_op`] the handle.  This is what lets lower-tier
+/// checkpoint flushes run *in the background* of compute phases (the
+/// checkpoint/compute-overlap pattern of Hukerikar & Engelmann 2017).
+#[derive(Debug, Clone, Default)]
+pub struct Op {
+    flows: Vec<FlowId>,
+}
+
+impl Op {
+    /// An operation over an explicit flow set.
+    pub fn new(flows: Vec<FlowId>) -> Self {
+        Self { flows }
+    }
+
+    /// An operation wrapping a single flow.
+    pub fn single(flow: FlowId) -> Self {
+        Self { flows: vec![flow] }
+    }
+
+    /// An already-complete operation (no flows).
+    pub fn done() -> Self {
+        Self::default()
+    }
+
+    /// Merge several operations into one that completes when all do.
+    pub fn merge(ops: impl IntoIterator<Item = Op>) -> Self {
+        let mut flows = Vec::new();
+        for op in ops {
+            flows.extend(op.flows);
+        }
+        Self { flows }
+    }
+
+    /// Absorb another operation into this one.
+    pub fn join(&mut self, other: Op) {
+        self.flows.extend(other.flows);
+    }
+
+    /// Add a bare flow to the operation.
+    pub fn push(&mut self, flow: FlowId) {
+        self.flows.push(flow);
+    }
+
+    /// The underlying flows (diagnostics / fine-grained waits).
+    pub fn flows(&self) -> &[FlowId] {
+        &self.flows
+    }
+
+    /// True when the operation carries no flows (trivially complete).
+    pub fn is_empty(&self) -> bool {
+        self.flows.is_empty()
+    }
+}
+
+/// A set of independently issued [`Op`]s polled or awaited together —
+/// e.g. the outstanding background flushes of a BeeOND cache domain or
+/// the L3 flush queue of the multi-level checkpointer.
+#[derive(Debug, Default)]
+pub struct OpSet {
+    ops: Vec<Op>,
+}
+
+impl OpSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, op: Op) {
+        if !op.is_empty() {
+            self.ops.push(op);
+        }
+    }
+
+    /// Number of operations still tracked.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Total flows across all tracked operations.
+    pub fn flow_count(&self) -> usize {
+        self.ops.iter().map(|o| o.flows.len()).sum()
+    }
+
+    /// True when every tracked operation has completed (no time advance).
+    pub fn poll(&self, sim: &Sim) -> bool {
+        self.ops.iter().all(|o| sim.poll_op(o))
+    }
+
+    /// Drop every already-complete operation, returning how many settled.
+    pub fn reap(&mut self, sim: &Sim) -> usize {
+        let before = self.ops.len();
+        self.ops.retain(|o| !sim.poll_op(o));
+        before - self.ops.len()
+    }
+
+    /// Block until every tracked operation completes; empties the set and
+    /// returns the completion time of the last one (now when empty).
+    pub fn wait_all(&mut self, sim: &mut Sim) -> SimTime {
+        let ops = std::mem::take(&mut self.ops);
+        let all = Op::merge(ops);
+        sim.wait_op(&all)
+    }
+
+    /// Discard all tracked operations without waiting (their flows keep
+    /// progressing in the simulator, but nobody observes them anymore).
+    pub fn abandon(&mut self) {
+        self.ops.clear();
+    }
+}
+
+/// One row of [`Sim::op_trace`]: the diagnostic view of a flow.
+#[derive(Debug, Clone)]
+pub struct OpTraceEntry {
+    pub id: FlowId,
+    /// Resources the flow traverses (names via [`Sim::resource_name`]).
+    pub route: Vec<ResId>,
+    /// When the flow's latency offset elapsed / will elapse.
+    pub start_at: SimTime,
+    /// Currently allocated rate (0 for pending or finished flows).
+    pub rate: f64,
+    pub done: bool,
+    pub finished_at: Option<SimTime>,
 }
 
 /// Min-heap key for pending flows: (start_at bits, id).  start_at is
@@ -184,6 +314,35 @@ impl Sim {
         (fl.state == FlowState::Done).then_some(fl.finished_at)
     }
 
+    /// Non-advancing completion query: has `f` finished?
+    pub fn poll(&self, f: FlowId) -> bool {
+        self.flows[f.0].state == FlowState::Done
+    }
+
+    /// Non-advancing completion query over an [`Op`] (empty ops are done).
+    pub fn poll_op(&self, op: &Op) -> bool {
+        op.flows.iter().all(|&f| self.poll(f))
+    }
+
+    /// Completion time of an [`Op`]: the latest flow completion, or None
+    /// while any flow is still in flight.  Empty ops complete at 0.
+    pub fn op_completion(&self, op: &Op) -> Option<SimTime> {
+        let mut t = 0.0f64;
+        for &f in &op.flows {
+            t = t.max(self.completed(f)?);
+        }
+        Some(t)
+    }
+
+    /// Block until `op` completes; returns its completion time (now for
+    /// empty ops).  The blocking shim every async layer builds on.
+    pub fn wait_op(&mut self, op: &Op) -> SimTime {
+        if op.flows.is_empty() {
+            return self.now;
+        }
+        self.wait_all(&op.flows)
+    }
+
     /// Advance until all `flows` complete; returns the time of the last one.
     /// Other in-flight flows keep progressing (this is how BeeOND's
     /// asynchronous flush overlaps the next compute phase).
@@ -213,6 +372,36 @@ impl Sim {
         flows.iter().map(|&f| self.flows[f.0].finished_at).collect()
     }
 
+    /// Advance until the **first** of `flows` completes; returns its index
+    /// in the slice and its completion time.  Determinism: when several
+    /// flows are already (or become) complete, the winner is the one with
+    /// the earliest completion time, ties broken by the smaller flow id —
+    /// never by slice position, so permuting the wait set cannot change
+    /// the outcome.
+    pub fn wait_any(&mut self, flows: &[FlowId]) -> (usize, SimTime) {
+        assert!(!flows.is_empty(), "wait_any on an empty flow set");
+        loop {
+            let mut best: Option<(SimTime, FlowId, usize)> = None;
+            for (i, &f) in flows.iter().enumerate() {
+                if let Some(t) = self.completed(f) {
+                    let better = match best {
+                        None => true,
+                        Some((bt, bf, _)) => t < bt || (t == bt && f < bf),
+                    };
+                    if better {
+                        best = Some((t, f, i));
+                    }
+                }
+            }
+            if let Some((t, _, i)) = best {
+                return (i, t);
+            }
+            if !self.step() {
+                panic!("simulation deadlock: no waited-on flow can complete");
+            }
+        }
+    }
+
     /// Run until no pending/active flows remain.
     pub fn run_until_idle(&mut self) {
         while self.step() {}
@@ -234,9 +423,45 @@ impl Sim {
         self.now = self.now.max(target);
     }
 
+    /// Jump the clock to the **absolute** virtual time `target`
+    /// (processing any events inside); a no-op when `target` is in the
+    /// past.  The absolute-time counterpart of [`Sim::advance`] for
+    /// callers that schedule against timestamps (e.g. lining a scenario
+    /// up with a recorded completion time).
+    pub fn advance_until(&mut self, target: SimTime) {
+        let dt = target - self.now;
+        if dt > 0.0 {
+            self.advance(dt);
+        }
+    }
+
     /// Number of flows ever created (diagnostics).
     pub fn flow_count(&self) -> usize {
         self.flows.len()
+    }
+
+    /// Name a resource was registered under (diagnostics).
+    pub fn resource_name(&self, r: ResId) -> &str {
+        &self.resources[r.0].name
+    }
+
+    /// Diagnostic snapshot of every flow ever issued: route, start time,
+    /// current rate and completion.  This is the observability surface the
+    /// overlap bench prints (`repro bench fig8-async`) and the property
+    /// suite uses to audit per-resource rate allocations.
+    pub fn op_trace(&self) -> Vec<OpTraceEntry> {
+        self.flows
+            .iter()
+            .enumerate()
+            .map(|(i, fl)| OpTraceEntry {
+                id: FlowId(i),
+                route: fl.route.clone(),
+                start_at: fl.start_at,
+                rate: if fl.state == FlowState::Active { fl.rate } else { 0.0 },
+                done: fl.state == FlowState::Done,
+                finished_at: (fl.state == FlowState::Done).then_some(fl.finished_at),
+            })
+            .collect()
     }
 
     // ------------------------------------------------------------------
@@ -554,6 +779,107 @@ mod tests {
             sim.wait_each(&flows)
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn poll_does_not_advance() {
+        let mut sim = Sim::new();
+        let l = sim.resource("l", 1e9);
+        let f = sim.flow(1e9, 0.0, &[l]);
+        assert!(!sim.poll(f));
+        assert_eq!(sim.now(), 0.0);
+        sim.advance(2.0);
+        assert!(sim.poll(f));
+    }
+
+    #[test]
+    fn wait_any_returns_first_completion() {
+        let mut sim = Sim::new();
+        let l = sim.resource("l", 1e9);
+        let slow = sim.flow(4e9, 0.0, &[l]);
+        let fast = sim.delay(0.5);
+        let (idx, t) = sim.wait_any(&[slow, fast]);
+        assert_eq!(idx, 1);
+        assert!((t - 0.5).abs() < 1e-12, "t={t}");
+        assert!(!sim.poll(slow));
+    }
+
+    #[test]
+    fn wait_any_tie_breaks_by_flow_id() {
+        let mut sim = Sim::new();
+        let a = sim.delay(1.0);
+        let b = sim.delay(1.0);
+        // Presented in reverse order: the earlier id must still win.
+        let (idx, t) = sim.wait_any(&[b, a]);
+        assert_eq!(idx, 1, "tie must resolve to the smaller flow id");
+        assert!((t - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn op_wait_and_completion() {
+        let mut sim = Sim::new();
+        let l = sim.resource("l", 1e9);
+        let op = Op::new(vec![sim.flow(1e9, 0.0, &[l]), sim.flow(2e9, 0.0, &[l])]);
+        assert!(!sim.poll_op(&op));
+        assert!(sim.op_completion(&op).is_none());
+        let t = sim.wait_op(&op);
+        assert!((t - 3.0).abs() < 1e-9, "t={t}");
+        assert_eq!(sim.op_completion(&op), Some(t));
+        // Empty op: trivially complete, waits return `now`.
+        let empty = Op::done();
+        assert!(sim.poll_op(&empty));
+        assert_eq!(sim.wait_op(&empty), sim.now());
+    }
+
+    #[test]
+    fn opset_poll_reap_wait() {
+        let mut sim = Sim::new();
+        let l = sim.resource("l", 1e9);
+        let mut set = OpSet::new();
+        set.push(Op::single(sim.flow(1e9, 0.0, &[l])));
+        set.push(Op::single(sim.flow(3e9, 0.0, &[l])));
+        set.push(Op::done()); // dropped on push
+        assert_eq!(set.len(), 2);
+        assert!(!set.poll(&sim));
+        // Shared link: 0.5 GB/s each, first flow done at t=2; the second
+        // then runs at full rate, 2 GB left: done at t=4.
+        sim.advance(2.5);
+        assert_eq!(set.reap(&sim), 1);
+        assert_eq!(set.len(), 1);
+        let t = set.wait_all(&mut sim);
+        assert!(set.is_empty());
+        assert!((t - 4.0).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn advance_until_is_absolute_and_monotone() {
+        let mut sim = Sim::new();
+        let l = sim.resource("l", 1e9);
+        let f = sim.flow(1e9, 0.0, &[l]);
+        sim.advance_until(3.0);
+        assert_eq!(sim.now(), 3.0);
+        assert!(sim.poll(f));
+        sim.advance_until(1.0); // in the past: no-op
+        assert_eq!(sim.now(), 3.0);
+    }
+
+    #[test]
+    fn op_trace_reports_routes_rates_and_times() {
+        let mut sim = Sim::new();
+        let l = sim.resource("link-a", 1e9);
+        let a = sim.flow(2e9, 0.0, &[l]);
+        let _b = sim.flow(2e9, 1.0, &[l]);
+        sim.advance(0.5); // a active alone at full rate
+        let tr = sim.op_trace();
+        assert_eq!(tr.len(), 2);
+        assert_eq!(tr[0].id, a);
+        assert_eq!(sim.resource_name(tr[0].route[0]), "link-a");
+        assert!((tr[0].rate - 1e9).abs() < 1.0, "rate={}", tr[0].rate);
+        assert_eq!(tr[1].start_at, 1.0);
+        assert!(!tr[1].done && tr[1].finished_at.is_none());
+        sim.run_until_idle();
+        let tr = sim.op_trace();
+        assert!(tr.iter().all(|e| e.done && e.rate == 0.0));
     }
 
     #[test]

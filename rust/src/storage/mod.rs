@@ -15,7 +15,7 @@
 //! 400 GB NVMe and the 2 GB NAM HMC can reject oversubscription like the
 //! real parts.
 
-use crate::sim::{FlowId, ResId, Sim};
+use crate::sim::{FlowId, Op, ResId, Sim};
 
 /// Static description of a storage device model.
 #[derive(Debug, Clone)]
@@ -164,25 +164,38 @@ impl Device {
         self.used = (self.used - bytes).max(0.0);
     }
 
-    /// Issue a write of `bytes` split over `ops` operations.
+    /// Issue a write of `bytes` split over `ops` operations, returning an
+    /// [`Op`] completion handle (poll/wait via [`Sim::poll_op`] /
+    /// [`Sim::wait_op`]).
     ///
     /// Per-op latency and software overhead serialize ahead of the
     /// transfer; the payload then streams through the device write channel
     /// (which is *shared*, so concurrent writers contend).  An extra
     /// route may be supplied (e.g. the PCIe/NIC path to reach the device).
-    pub fn write(&self, sim: &mut Sim, bytes: f64, ops: u64, extra_route: &[ResId]) -> FlowId {
+    pub fn write_op(&self, sim: &mut Sim, bytes: f64, ops: u64, extra_route: &[ResId]) -> Op {
         let lat = self.params.op_latency + self.params.op_overhead * ops as f64;
         let mut route = vec![self.write_res];
         route.extend_from_slice(extra_route);
-        sim.flow(self.effective_bytes(bytes, ops, self.params.write_bw), lat, &route)
+        Op::single(sim.flow(self.effective_bytes(bytes, ops, self.params.write_bw), lat, &route))
     }
 
-    /// Issue a read of `bytes` split over `ops` operations.
-    pub fn read(&self, sim: &mut Sim, bytes: f64, ops: u64, extra_route: &[ResId]) -> FlowId {
+    /// Issue a read of `bytes` split over `ops` operations, returning an
+    /// [`Op`] completion handle.
+    pub fn read_op(&self, sim: &mut Sim, bytes: f64, ops: u64, extra_route: &[ResId]) -> Op {
         let lat = self.params.op_latency + self.params.op_overhead * ops as f64;
         let mut route = vec![self.read_res];
         route.extend_from_slice(extra_route);
-        sim.flow(self.effective_bytes(bytes, ops, self.params.read_bw), lat, &route)
+        Op::single(sim.flow(self.effective_bytes(bytes, ops, self.params.read_bw), lat, &route))
+    }
+
+    /// Flow-level shim over [`Device::write_op`] (single-flow callers).
+    pub fn write(&self, sim: &mut Sim, bytes: f64, ops: u64, extra_route: &[ResId]) -> FlowId {
+        self.write_op(sim, bytes, ops, extra_route).flows()[0]
+    }
+
+    /// Flow-level shim over [`Device::read_op`] (single-flow callers).
+    pub fn read(&self, sim: &mut Sim, bytes: f64, ops: u64, extra_route: &[ResId]) -> FlowId {
+        self.read_op(sim, bytes, ops, extra_route).flows()[0]
     }
 
     /// Single-stream inefficiency: at QD=1 a lone stream only reaches

@@ -66,6 +66,14 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// `--name` parsed as `u64` (RNG seeds), or `default` when
+    /// absent/unparseable.
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.flag(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
     /// `--name` as a string, or `default` when absent.
     pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.flag(name).unwrap_or(default)
@@ -108,6 +116,13 @@ mod tests {
         let a = parse(&["run", "--nodes", "xyz"]);
         assert_eq!(a.get_usize("nodes", 7), 7);
         assert_eq!(a.get_f64("frac", 0.5), 0.5);
+        assert_eq!(a.get_u64("seed", 42), 42);
+    }
+
+    #[test]
+    fn u64_seed_parses() {
+        let a = parse(&["run", "--seed", "18446744073709551615"]);
+        assert_eq!(a.get_u64("seed", 0), u64::MAX);
     }
 
     #[test]

@@ -202,7 +202,7 @@ fn cb_split_beats_homogeneous() {
 
 #[test]
 fn all_exhibits_render_nonempty() {
-    for (name, exhibits) in bench::all() {
+    for (name, exhibits) in bench::all(bench::DEFAULT_SEED) {
         assert!(!exhibits.is_empty(), "{name} empty");
         for e in &exhibits {
             let text = e.render();

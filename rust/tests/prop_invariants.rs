@@ -145,6 +145,126 @@ fn prop_des_completion_conserves_bytes_and_order() {
 }
 
 #[test]
+fn prop_des_rates_within_capacity_and_max_min_fair() {
+    // For any random flow set over shared resources: (1) the allocated
+    // rates on every resource sum to at most its capacity, and (2) the
+    // allocation is max-min fair — every active flow is capped by some
+    // *saturated* bottleneck resource on which no other flow holds a
+    // larger share (equivalently: all unfixed flows tied at a bottleneck
+    // receive equal shares).  Audited through Sim::op_trace.
+    check(
+        cfg(120),
+        |g| {
+            let nres = g.usize_in(1, 4);
+            let caps: Vec<f64> = g.vec(nres, |g| g.f64_in(1e8, 1e10));
+            let nflows = g.usize_in(1, 20);
+            let flows: Vec<(f64, usize)> =
+                g.vec(nflows, |g| (g.f64_in(1e6, 1e9), g.usize_in(1, (1 << nres) - 1)));
+            (caps, flows)
+        },
+        |(caps, flows)| {
+            let mut sim = Sim::new();
+            let res: Vec<_> = (0..caps.len())
+                .map(|i| sim.resource(format!("r{i}"), caps[i]))
+                .collect();
+            for &(bytes, mask) in flows {
+                let route: Vec<_> = res
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| mask >> i & 1 == 1)
+                    .map(|(_, &r)| r)
+                    .collect();
+                sim.flow(bytes, 0.0, &route);
+            }
+            // Activate everything; far too little time for any completion
+            // (>= 1e6 bytes against <= 1e10 B/s).
+            sim.advance(1e-9);
+            let trace = sim.op_trace();
+            let active: Vec<_> = trace.iter().filter(|e| !e.done).collect();
+            if active.len() != flows.len() {
+                return false; // nothing may have completed yet
+            }
+            // (1) per-resource allocated rate never exceeds capacity.
+            let mut load = vec![0.0f64; caps.len()];
+            for e in &active {
+                for r in &e.route {
+                    load[r.0] += e.rate;
+                }
+            }
+            for (i, &l) in load.iter().enumerate() {
+                if l > caps[i] * (1.0 + 1e-9) + 1e-6 {
+                    return false;
+                }
+            }
+            // (2) max-min: each flow has a saturated bottleneck where its
+            // share is maximal (ties share equally by construction).
+            active.iter().all(|e| {
+                e.route.iter().any(|r| {
+                    let saturated = load[r.0] >= caps[r.0] * (1.0 - 1e-6);
+                    let max_share = active
+                        .iter()
+                        .filter(|o| o.route.contains(r))
+                        .fold(0.0f64, |m, o| m.max(o.rate));
+                    saturated && e.rate >= max_share * (1.0 - 1e-6)
+                })
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_des_insertion_order_permutation_invariant() {
+    // Completion times are a property of the flow *set*, not of the order
+    // the flows were registered in: re-inserting the same flows in any
+    // permutation yields the same per-flow completion times.
+    check(
+        cfg(100),
+        |g| {
+            let nres = g.usize_in(1, 3);
+            let caps: Vec<f64> = g.vec(nres, |g| g.f64_in(1e8, 5e9));
+            let n = g.usize_in(1, 16);
+            let flows: Vec<(f64, f64, usize)> = g.vec(n, |g| {
+                (g.f64_in(1.0, 1e9), g.f64_in(0.0, 0.01), g.usize_in(1, (1 << nres) - 1))
+            });
+            // Fisher-Yates permutation of 0..n.
+            let mut perm: Vec<usize> = (0..n).collect();
+            for i in (1..n).rev() {
+                let j = g.usize_in(0, i);
+                perm.swap(i, j);
+            }
+            (caps, flows, perm)
+        },
+        |(caps, flows, perm)| {
+            let run = |order: &[usize]| -> Vec<f64> {
+                let mut sim = Sim::new();
+                let res: Vec<_> = (0..caps.len())
+                    .map(|i| sim.resource(format!("r{i}"), caps[i]))
+                    .collect();
+                let mut ids = vec![None; flows.len()];
+                for &k in order {
+                    let (bytes, delay, mask) = flows[k];
+                    let route: Vec<_> = res
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| mask >> i & 1 == 1)
+                        .map(|(_, &r)| r)
+                        .collect();
+                    ids[k] = Some(sim.flow(bytes, delay, &route));
+                }
+                let ids: Vec<_> = ids.into_iter().map(Option::unwrap).collect();
+                sim.wait_each(&ids)
+            };
+            let identity: Vec<usize> = (0..flows.len()).collect();
+            let a = run(&identity);
+            let b = run(perm);
+            a.iter()
+                .zip(&b)
+                .all(|(x, y)| (x - y).abs() <= 1e-6 * x.abs().max(1.0))
+        },
+    );
+}
+
+#[test]
 fn prop_des_work_conserving_single_resource() {
     // With all flows present from t=0 on one link, the last completion is
     // EXACTLY total/capacity (the fluid model wastes nothing).

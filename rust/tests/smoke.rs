@@ -66,7 +66,13 @@ fn smoke_multilevel_roundtrip_each_l2_strategy() {
     for l2 in [Strategy::Partner, Strategy::Buddy, Strategy::DistXor, Strategy::NamXor] {
         let mut m = Machine::build(presets::deep_er());
         let nodes = m.nodes_of(NodeKind::Cluster);
-        let cfg = MultiLevelConfig { l1_every: 1, l2_every: 2, l3_every: 2, l2_strategy: l2 };
+        let cfg = MultiLevelConfig {
+            l1_every: 1,
+            l2_every: 2,
+            l3_every: 2,
+            l2_strategy: l2,
+            ..MultiLevelConfig::default()
+        };
         let mut ml = MultiLevelScr::new(cfg);
         for iter in 1..=4 {
             ml.checkpoint_at(&mut m, &nodes, 5e8, iter).unwrap();
