@@ -13,7 +13,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test lint fmt clippy doc figures bench bench-smoke artifacts clean
+.PHONY: verify build test lint fmt clippy doc figures bench bench-smoke bench-scale artifacts clean
 
 verify: build test
 
@@ -48,6 +48,13 @@ bench:
 bench-smoke: build
 	$(CARGO) run --release --bin repro -- bench all --csv --seed 1 > bench-all.csv
 	@echo "wrote bench-all.csv"
+
+# Engine throughput sweep (1k/10k/100k concurrent flows) against the
+# naive reference engine; refreshes the BENCH_sim_scale.json trajectory
+# artifact with optimized + baseline numbers from THIS machine.
+bench-scale: build
+	$(CARGO) run --release --bin repro -- bench scale --csv --seed 1 --json BENCH_sim_scale.json
+	@echo "wrote BENCH_sim_scale.json"
 
 artifacts:
 	python3 python/compile/aot.py --out-dir artifacts

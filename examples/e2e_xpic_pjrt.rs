@@ -16,7 +16,8 @@
 //!
 //! Output: per-phase diagnostics (field energy trace = the "loss curve" of
 //! this workload), checkpoint/restart timings in virtual time, and the
-//! bit-exactness verdict.  Recorded in EXPERIMENTS.md section E2E.
+//! bit-exactness verdict.  The sim-vs-real boundary this example
+//! exercises is documented in DESIGN.md section 3.
 
 use deeper::runtime::{default_artifacts_dir, Runtime, Tensor};
 use deeper::scr::{Scr, Strategy};

@@ -52,6 +52,32 @@ fn staggered_events(n: usize) {
     black_box(sim.wait_all(&flows));
 }
 
+/// Staggered arrivals over DISJOINT per-node devices: every event's
+/// refill touches one single-flow component, never the other n-1 — the
+/// pattern the component-scoped recompute exists for.
+fn staggered_disjoint(n: usize) {
+    let mut sim = Sim::new();
+    let flows: Vec<_> = (0..n)
+        .map(|i| {
+            let dev = sim.resource("d", 1.9e9);
+            sim.flow(1e9, 1e-4 * i as f64, &[dev])
+        })
+        .collect();
+    black_box(sim.wait_all(&flows));
+}
+
+/// The same staggered shared-link workload on the naive reference engine
+/// (per-event sweep + global refill) — the bench prints both so the gap
+/// is visible next to the optimized numbers.
+fn staggered_events_naive(n: usize) {
+    let mut sim = deeper::sim::reference::RefSim::new();
+    let link = sim.resource(1e9);
+    let flows: Vec<_> = (0..n)
+        .map(|i| sim.flow(1e7, 1e-4 * i as f64, &[link]))
+        .collect();
+    black_box(sim.wait_all(&flows));
+}
+
 fn main() {
     let b = Bench::new("sim_core");
     b.run("shared_link_16", || shared_link(16));
@@ -59,6 +85,8 @@ fn main() {
     b.run("independent_devices_128", || independent_devices(128));
     b.run("independent_devices_672", || independent_devices(672));
     b.run("incast_64", || incast(64));
+    b.run("staggered_disjoint_512", || staggered_disjoint(512));
+    b.run("staggered_events_naive_512", || staggered_events_naive(512));
     let stats = b.run("staggered_events_512", || staggered_events(512));
     // Events/s: each flow is >= 2 events (start, finish).
     let eps = 1024.0 / stats.mean_s();

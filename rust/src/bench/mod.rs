@@ -8,19 +8,25 @@
 //! the *shape targets* from DESIGN.md section 4 (who wins, by what factor,
 //! where crossovers fall).
 
+use std::collections::BTreeMap;
+
 use crate::apps::{self, run_iterations, run_iterations_multilevel, IterationJob, RunStats};
 use crate::beegfs::beeond::{concurrent_cache_write, concurrent_global_write, CacheDevice};
 use crate::beegfs::{BeeOnd, CacheMode};
 use crate::fabric::TOURMALET_BW;
-use crate::metrics::{fmt_bytes, fmt_bw, fmt_time, Figure, KvTable, Series};
+use crate::metrics::{fmt_bytes, fmt_bw, fmt_rate, fmt_time, Figure, KvTable, Series};
+use crate::microbench;
 use crate::nam::NamDevice;
 use crate::ompss::{OmpssRuntime, Resilience};
 use crate::scr::multilevel::{MultiLevelConfig, MultiLevelScr};
 use crate::scr::{Scr, Strategy};
+use crate::sim::reference::RefSim;
+use crate::sim::rng::SplitMix64;
 use crate::sim::{ResId, Sim};
 use crate::sionlib::{write_sionlib, write_task_local};
 use crate::system::failure::FailurePlan;
 use crate::system::{presets, Machine, NodeKind};
+use crate::util::json::Json;
 
 /// Seed used when the CLI does not pass `--seed` (any fixed value keeps
 /// the default bench output reproducible).
@@ -498,25 +504,27 @@ pub fn cb_split() -> Vec<Exhibit> {
     vec![Exhibit::Table(t)]
 }
 
+/// Names of every paper exhibit, in paper order (plus the extensions).
+/// The CLI iterates this lazily so it can time each exhibit individually
+/// (the `# engine:` events/sec stats line in `--csv` mode).  The `scale`
+/// engine bench is intentionally **not** listed: it measures wall-clock,
+/// so bundling it into `all` would make `bench all` output machine-
+/// dependent.
+pub fn names() -> &'static [&'static str] {
+    &[
+        "table1", "table2", "table3", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
+        "fig8-async", "fig9", "fig10", "cb-split",
+    ]
+}
+
 /// All exhibits in paper order (plus the extensions).  `seed` drives the
 /// stochastic failure schedules (`repro bench all --seed N`); exhibits
 /// without randomness ignore it.
 pub fn all(seed: u64) -> Vec<(&'static str, Vec<Exhibit>)> {
-    vec![
-        ("table1", table1()),
-        ("table2", table2()),
-        ("table3", table3()),
-        ("fig3", fig3()),
-        ("fig4", fig4()),
-        ("fig5", fig5()),
-        ("fig6", fig6()),
-        ("fig7", fig7()),
-        ("fig8", fig8()),
-        ("fig8-async", fig8_async(seed)),
-        ("fig9", fig9()),
-        ("fig10", fig10()),
-        ("cb-split", cb_split()),
-    ]
+    names()
+        .iter()
+        .map(|&n| (n, by_name(n, seed).expect("names() entries resolve")))
+        .collect()
 }
 
 /// Run one named exhibit (CLI entry point).
@@ -537,6 +545,281 @@ pub fn by_name(name: &str, seed: u64) -> Option<Vec<Exhibit>> {
         "cb-split" | "cb" => Some(cb_split()),
         _ => None,
     }
+}
+
+// ----------------------------------------------------------------------
+// `repro bench scale` — the engine-throughput exhibit (DESIGN.md §10)
+// ----------------------------------------------------------------------
+
+/// Configuration of the engine scale sweep.
+#[derive(Debug, Clone)]
+pub struct ScaleConfig {
+    /// Concurrent-flow counts to sweep (default 1k / 10k / 100k).
+    pub sweep: Vec<usize>,
+    /// Seed for the workload's sizes/stagger (reproducible sweeps).
+    pub seed: u64,
+    /// The naive baseline engine is O(events x flows), so it is only
+    /// timed on points up to this many flows; larger points report the
+    /// optimized engine alone.
+    pub baseline_max: usize,
+}
+
+impl Default for ScaleConfig {
+    fn default() -> Self {
+        Self { sweep: vec![1_000, 10_000, 100_000], seed: DEFAULT_SEED, baseline_max: 10_000 }
+    }
+}
+
+/// One measured engine (optimized or baseline) at one sweep point.
+#[derive(Debug, Clone)]
+pub struct ScaleMeasurement {
+    pub wall_s: f64,
+    pub events: u64,
+    pub events_per_sec: f64,
+    /// Virtual time of the last completion — the determinism anchor the
+    /// equivalence check and the cross-PR trajectory compare.
+    pub last_finish: f64,
+}
+
+/// One sweep point of the scale bench.
+#[derive(Debug, Clone)]
+pub struct ScalePoint {
+    pub flows: usize,
+    pub engine: ScaleMeasurement,
+    /// Largest flow set one component-scoped refill touched.
+    pub peak_component: usize,
+    /// Present when `flows <= baseline_max`.
+    pub baseline: Option<ScaleMeasurement>,
+}
+
+impl ScalePoint {
+    /// events/sec ratio over the naive baseline, when measured.
+    pub fn speedup(&self) -> Option<f64> {
+        self.baseline
+            .as_ref()
+            .map(|b| self.engine.events_per_sec / b.events_per_sec.max(1e-12))
+    }
+}
+
+/// Engine-agnostic workload description, shaped like the DEEP-ER presets:
+/// per node a private NVMe write channel and a NIC, plus a handful of
+/// shared storage backends.  ~90% of flows are node-local (many small
+/// disjoint components — the Fig. 6/7 pattern), ~10% fan into the shared
+/// backends (one large coupled component — the incast pattern).
+struct ScaleWorkload {
+    caps: Vec<f64>,
+    /// (bytes, delay, route) with route as indices into `caps`.
+    flows: Vec<(f64, f64, Vec<usize>)>,
+}
+
+const SCALE_OSS: usize = 8;
+
+fn scale_workload(n_flows: usize, seed: u64) -> ScaleWorkload {
+    let spec = presets::deep_er();
+    let nvme_bw = spec.cluster.nvme.as_ref().expect("deep_er cluster has NVMe").write_bw;
+    let nic_bw = spec.cluster.nic_bw;
+    let oss_bw = spec.server_device.write_bw;
+    let nodes = (n_flows / 16).clamp(16, 4096);
+    // Layout: [0, nodes) NVMe channels, [nodes, 2*nodes) NICs, then OSS.
+    let mut caps = Vec::with_capacity(2 * nodes + SCALE_OSS);
+    caps.resize(nodes, nvme_bw);
+    caps.resize(2 * nodes, nic_bw);
+    caps.resize(2 * nodes + SCALE_OSS, oss_bw);
+    let mut rng = SplitMix64::new(seed ^ (n_flows as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    let mut flows = Vec::with_capacity(n_flows);
+    for i in 0..n_flows {
+        let node = i % nodes;
+        let bytes = 64e6 + rng.next_f64() * 192e6;
+        let delay = rng.next_f64() * 0.25;
+        let route = if i % 10 == 0 {
+            vec![nodes + node, 2 * nodes + (i / 10) % SCALE_OSS]
+        } else {
+            vec![node]
+        };
+        flows.push((bytes, delay, route));
+    }
+    ScaleWorkload { caps, flows }
+}
+
+fn run_scale_optimized(w: &ScaleWorkload) -> (ScaleMeasurement, usize) {
+    let ((last_finish, events, peak), wall) = microbench::time_once(|| {
+        let mut sim = Sim::new();
+        let res: Vec<ResId> = w.caps.iter().map(|&c| sim.resource("r", c)).collect();
+        let mut route_buf: Vec<ResId> = Vec::new();
+        for (bytes, delay, route) in &w.flows {
+            route_buf.clear();
+            route_buf.extend(route.iter().map(|&i| res[i]));
+            sim.flow(*bytes, *delay, &route_buf);
+        }
+        sim.run_until_idle();
+        (sim.now(), sim.events(), sim.peak_component_flows())
+    });
+    let wall_s = wall.as_secs_f64().max(1e-9);
+    (
+        ScaleMeasurement { wall_s, events, events_per_sec: events as f64 / wall_s, last_finish },
+        peak,
+    )
+}
+
+fn run_scale_baseline(w: &ScaleWorkload) -> ScaleMeasurement {
+    let ((last_finish, events), wall) = microbench::time_once(|| {
+        let mut sim = RefSim::new();
+        let res: Vec<ResId> = w.caps.iter().map(|&c| sim.resource(c)).collect();
+        let mut route_buf: Vec<ResId> = Vec::new();
+        for (bytes, delay, route) in &w.flows {
+            route_buf.clear();
+            route_buf.extend(route.iter().map(|&i| res[i]));
+            sim.flow(*bytes, *delay, &route_buf);
+        }
+        sim.run_until_idle();
+        (sim.now(), sim.events())
+    });
+    let wall_s = wall.as_secs_f64().max(1e-9);
+    ScaleMeasurement { wall_s, events, events_per_sec: events as f64 / wall_s, last_finish }
+}
+
+/// Run the sweep.  Every baselined point doubles as a runtime oracle: the
+/// optimized and naive engines must agree on the last completion time to
+/// within 1e-9 relative, or the measurement panics instead of reporting a
+/// speedup over a divergent simulation.
+pub fn scale_points(cfg: &ScaleConfig) -> Vec<ScalePoint> {
+    cfg.sweep
+        .iter()
+        .map(|&n| {
+            let w = scale_workload(n, cfg.seed);
+            let (engine, peak_component) = run_scale_optimized(&w);
+            let baseline = (n <= cfg.baseline_max).then(|| run_scale_baseline(&w));
+            if let Some(b) = &baseline {
+                let rel = (engine.last_finish - b.last_finish).abs()
+                    / engine.last_finish.abs().max(1.0);
+                assert!(
+                    rel < 1e-9,
+                    "engines diverged at {n} flows: optimized {} vs baseline {}",
+                    engine.last_finish,
+                    b.last_finish
+                );
+            }
+            ScalePoint { flows: n, engine, peak_component, baseline }
+        })
+        .collect()
+}
+
+fn scale_json(cfg: &ScaleConfig, points: &[ScalePoint]) -> Json {
+    let meas = |m: &ScaleMeasurement| {
+        let mut o = BTreeMap::new();
+        o.insert("wall_s".into(), Json::Num(m.wall_s));
+        o.insert("events".into(), Json::Num(m.events as f64));
+        o.insert("events_per_sec".into(), Json::Num(m.events_per_sec));
+        o.insert("last_finish_virtual_s".into(), Json::Num(m.last_finish));
+        Json::Obj(o)
+    };
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("sim_scale".into()));
+    doc.insert("schema_version".into(), Json::Num(1.0));
+    doc.insert("seed".into(), Json::Num(cfg.seed as f64));
+    doc.insert(
+        "sweep".into(),
+        Json::Arr(cfg.sweep.iter().map(|&n| Json::Num(n as f64)).collect()),
+    );
+    doc.insert(
+        "baseline_engine".into(),
+        Json::Str("sim::reference::RefSim — naive O(events x flows) sweep + global refill".into()),
+    );
+    doc.insert(
+        "points".into(),
+        Json::Arr(
+            points
+                .iter()
+                .map(|p| {
+                    let mut o = BTreeMap::new();
+                    o.insert("flows".into(), Json::Num(p.flows as f64));
+                    o.insert("engine".into(), meas(&p.engine));
+                    o.insert(
+                        "peak_component_flows".into(),
+                        Json::Num(p.peak_component as f64),
+                    );
+                    o.insert(
+                        "baseline".into(),
+                        p.baseline.as_ref().map(&meas).unwrap_or(Json::Null),
+                    );
+                    o.insert(
+                        "speedup_events_per_sec".into(),
+                        p.speedup().map(Json::Num).unwrap_or(Json::Null),
+                    );
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    // Largest baselined point by flow count — the sweep order is
+    // user-controlled and not necessarily ascending.
+    let headline = points
+        .iter()
+        .filter_map(|p| p.speedup().map(|s| (p.flows, s)))
+        .max_by_key(|&(flows, _)| flows);
+    doc.insert(
+        "speedup_at_largest_baselined_point".into(),
+        headline.map(|(_, s)| Json::Num(s)).unwrap_or(Json::Null),
+    );
+    doc.insert(
+        "largest_baselined_flows".into(),
+        headline.map(|(n, _)| Json::Num(n as f64)).unwrap_or(Json::Null),
+    );
+    Json::Obj(doc)
+}
+
+/// The `repro bench scale` exhibit: sweep the engine over growing
+/// concurrent-flow counts, reporting wall-clock, events/sec and peak
+/// component size, with the naive reference engine as the in-run
+/// baseline.  Returns the printable exhibits plus the
+/// `BENCH_sim_scale.json` document (the perf-trajectory artifact the CI
+/// bench-smoke job uploads).
+pub fn scale_report(cfg: &ScaleConfig) -> (Vec<Exhibit>, Json) {
+    let points = scale_points(cfg);
+    let json = scale_json(cfg, &points);
+
+    let mut eps_fig = Figure::new(
+        "Engine scale: events/sec vs concurrent flows (DEEP-ER-shaped workload)",
+        "flows",
+        "events/s",
+    );
+    let mut s_opt = Series::new("optimized engine");
+    let mut s_base = Series::new("naive baseline");
+    let mut wall_fig = Figure::new("Engine scale: wall-clock per sweep point", "flows", "s");
+    let mut w_opt = Series::new("optimized engine");
+    let mut w_base = Series::new("naive baseline");
+    for p in &points {
+        s_opt.push(p.flows as f64, p.engine.events_per_sec);
+        w_opt.push(p.flows as f64, p.engine.wall_s);
+        if let Some(b) = &p.baseline {
+            s_base.push(p.flows as f64, b.events_per_sec);
+            w_base.push(p.flows as f64, b.wall_s);
+        }
+    }
+    eps_fig.add(s_opt);
+    eps_fig.add(s_base);
+    wall_fig.add(w_opt);
+    wall_fig.add(w_base);
+
+    let mut t = KvTable::new("Engine scale summary (events/sec, peak component, speedup)");
+    for p in &points {
+        let speedup = match p.speedup() {
+            Some(s) => format!("{s:.1}x vs naive"),
+            None => "baseline skipped (too large for the naive engine)".into(),
+        };
+        t.row(
+            format!("{} flows", p.flows),
+            format!(
+                "{} over {}, {} events, peak component {} flows, {}",
+                fmt_rate(p.engine.events_per_sec),
+                fmt_time(p.engine.wall_s),
+                p.engine.events,
+                p.peak_component,
+                speedup
+            ),
+        );
+    }
+    (vec![Exhibit::Fig(eps_fig), Exhibit::Fig(wall_fig), Exhibit::Table(t)], json)
 }
 
 #[cfg(test)]

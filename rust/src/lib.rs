@@ -8,7 +8,9 @@
 //! ## Layering (see DESIGN.md)
 //!
 //! * [`sim`] — fluid-flow discrete-event engine: virtual clock, max-min
-//!   fair bandwidth sharing over shared resources, deterministic RNG.
+//!   fair bandwidth sharing over shared resources, deterministic RNG;
+//!   lazy progression + component-scoped refills (DESIGN.md §10), with
+//!   [`sim::reference`] as the naive differential oracle.
 //! * [`system`] — node/topology models of the DEEP-ER prototype (Table I),
 //!   QPACE3 and MareNostrum 3, plus failure injection.
 //! * [`fabric`] — the EXTOLL Tourmalet fabric: RDMA put/get/notification,

@@ -25,6 +25,7 @@ repro — DEEP-ER Cluster-Booster I/O + resiliency reproduction
 USAGE:
   repro show-config
   repro bench <fig3..fig10|fig8-async|table1..table3|cb-split|all> [--csv] [--seed N]
+  repro bench scale [--sweep N1,N2,..] [--baseline-max N] [--json PATH] [--csv] [--seed N]
   repro run [--app nbody|xpic|gershwin|fwi] [--strategy single|partner|buddy|dist-xor|nam-xor]
             [--iterations N] [--cp-interval N] [--fail-at I] [--mtbf S] [--seed N]
             [--nodes N] [--multilevel] [--async-flush]
@@ -36,6 +37,12 @@ USAGE:
   --mtbf S       sample node failures with an exponential per-node MTBF of
                  S seconds (reproducible via --seed)
   --seed N       seed for stochastic failure schedules (default 0xDEE9E5)
+
+  bench scale sweeps the DES engine over growing concurrent-flow counts
+  (default 1000,10000,100000), timing it against the naive reference
+  engine, and writes the BENCH_sim_scale.json trajectory artifact
+  (--json PATH, default BENCH_sim_scale.json).  With --csv every bench
+  exhibit also prints a trailing `# engine: <events> events, <rate>` line.
 ";
 
 fn parse_strategy(s: &str) -> anyhow::Result<Strategy> {
@@ -49,6 +56,61 @@ fn parse_strategy(s: &str) -> anyhow::Result<Strategy> {
     })
 }
 
+/// Print one exhibit group, timing its construction so `--csv` can append
+/// the `# engine:` stats line (events from the process-wide counter —
+/// exhibits build many simulators internally).
+fn print_exhibits(name: &str, csv: bool, seed: u64) -> Option<()> {
+    let events_before = deeper::sim::events_total();
+    let t0 = std::time::Instant::now();
+    let exhibits = bench::by_name(name, seed)?;
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let events = deeper::sim::events_total() - events_before;
+    for e in exhibits {
+        println!("{}", if csv { e.render_csv() } else { e.render() });
+    }
+    if csv {
+        println!("# engine: {events} events, {:.3e} events/s", events as f64 / wall);
+    }
+    Some(())
+}
+
+fn cmd_bench_scale(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
+    let defaults = bench::ScaleConfig::default();
+    let sweep: Vec<usize> = match args.flag("sweep") {
+        Some(s) => s
+            .split(',')
+            .map(|w| {
+                let w = w.trim();
+                w.parse()
+                    .map_err(|_| anyhow::anyhow!("--sweep: invalid flow count {w:?}"))
+            })
+            .collect::<anyhow::Result<_>>()?,
+        None => defaults.sweep.clone(),
+    };
+    anyhow::ensure!(!sweep.is_empty(), "--sweep needs a comma-separated list of flow counts");
+    let cfg = bench::ScaleConfig {
+        sweep,
+        seed,
+        baseline_max: args.get_usize("baseline-max", defaults.baseline_max),
+    };
+    let events_before = deeper::sim::events_total();
+    let t0 = std::time::Instant::now();
+    let (exhibits, json) = bench::scale_report(&cfg);
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let events = deeper::sim::events_total() - events_before;
+    for e in exhibits {
+        println!("{}", if csv { e.render_csv() } else { e.render() });
+    }
+    if csv {
+        println!("# engine: {events} events, {:.3e} events/s", events as f64 / wall);
+    }
+    let path = args.get_str("json", "BENCH_sim_scale.json");
+    std::fs::write(path, json.to_pretty_string())
+        .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+    println!("{}wrote {path}", if csv { "# " } else { "" });
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let name = args
         .positionals
@@ -57,24 +119,21 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         .unwrap_or("all");
     let csv = args.has("csv");
     let seed = args.get_u64("seed", bench::DEFAULT_SEED);
-    let render = |e: &deeper::bench::Exhibit| if csv { e.render_csv() } else { e.render() };
+    if name == "scale" {
+        return cmd_bench_scale(args, csv, seed);
+    }
     if name == "all" {
-        for (n, exhibits) in bench::all(seed) {
+        for n in bench::names() {
             println!("--- {n} ---");
-            for e in exhibits {
-                println!("{}", render(&e));
-            }
+            print_exhibits(n, csv, seed).expect("names() entries resolve");
         }
         return Ok(());
     }
-    let ex = bench::by_name(name, seed).ok_or_else(|| {
+    print_exhibits(name, csv, seed).ok_or_else(|| {
         anyhow::anyhow!(
-            "unknown exhibit {name}; try fig3..fig10, fig8-async, table1..table3, cb-split, all"
+            "unknown exhibit {name}; try fig3..fig10, fig8-async, table1..table3, cb-split, scale, all"
         )
     })?;
-    for e in ex {
-        println!("{}", render(&e));
-    }
     Ok(())
 }
 

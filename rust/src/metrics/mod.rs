@@ -195,6 +195,20 @@ pub fn fmt_bw(bps: f64) -> String {
     format!("{}/s", fmt_bytes(bps))
 }
 
+/// Human-readable event/operation rate (the events/sec column of the
+/// `repro bench scale` exhibit and the `# engine:` CSV stats line).
+pub fn fmt_rate(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2} G/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2} M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2} K/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.1} /s")
+    }
+}
+
 /// Human-readable seconds.
 pub fn fmt_time(s: f64) -> String {
     if s >= 1.0 {
@@ -244,6 +258,8 @@ mod tests {
         assert_eq!(fmt_bytes(100.0), "100 B");
         assert!(fmt_bw(12.5e9).contains("GB/s"));
         assert!(fmt_time(0.5e-3).contains("us") || fmt_time(0.5e-3).contains("ms"));
+        assert_eq!(fmt_rate(3.2e6), "3.20 M/s");
+        assert_eq!(fmt_rate(450.0), "450.0 /s");
     }
 
     #[test]

@@ -127,6 +127,16 @@ impl Bench {
     }
 }
 
+/// Time a **single** invocation of `f`, returning its result and the
+/// elapsed wall-clock time.  For workloads too heavy to sample repeatedly
+/// (the 100k-flow point of `repro bench scale` runs once, not in a
+/// calibrated warmup/sample loop).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let v = black_box(f());
+    (v, t0.elapsed())
+}
+
 fn fmt_dur(d: Duration) -> String {
     let s = d.as_secs_f64();
     if s >= 1.0 {
@@ -155,6 +165,13 @@ mod tests {
         assert!(stats.mean > Duration::ZERO);
         assert!(stats.iters_per_sample >= 1);
         assert!(stats.min <= stats.mean && stats.mean <= stats.max + Duration::from_nanos(1));
+    }
+
+    #[test]
+    fn time_once_returns_value_and_duration() {
+        let (v, d) = time_once(|| (0..10_000u64).map(|x| x.wrapping_mul(7)).sum::<u64>());
+        assert_eq!(v, (0..10_000u64).map(|x| x.wrapping_mul(7)).sum::<u64>());
+        assert!(d > Duration::ZERO);
     }
 
     #[test]

@@ -16,11 +16,34 @@
 //!
 //! Determinism: ties are broken by flow id; the only randomness comes from
 //! the seeded [`rng::SplitMix64`].
+//!
+//! # Hot-path design (DESIGN.md section 10)
+//!
+//! Per-event cost scales with *what changed*, not with everything active:
+//!
+//! * **Lazy flow progression** — a flow's byte count is settled only when
+//!   its rate changes ([`Sim::flow_remaining`] settles on query); between
+//!   rate changes the invariant `remaining(t) = remaining - rate * (t -
+//!   touched_at)` holds implicitly, so an event never sweeps the active
+//!   set.
+//! * **Indexed finish heap** — predicted finish times live in a lazy-
+//!   deletion min-heap keyed by `(finish-time bits, flow id)` (the same
+//!   bit-ordering trick as [`PendingKey`]); an entry is valid only while
+//!   its flow is active *and* still predicts that exact finish, so
+//!   `next_event_time` is O(log n) amortized instead of an O(active) scan.
+//! * **Component-scoped rate recomputation** — a per-resource incidence
+//!   index (`res_flows`) is maintained on activation/retirement, and a
+//!   change event re-runs progressive filling only over the connected
+//!   component(s) of resources reachable from the changed flows.  Disjoint
+//!   subsystems (each node's private NVMe channel, each CPU) keep their
+//!   rates, predictions and heap entries untouched.
 
+pub mod reference;
 pub mod rng;
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Virtual time in seconds.
 pub type SimTime = f64;
@@ -32,6 +55,16 @@ pub struct ResId(pub usize);
 /// Index of a flow.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct FlowId(pub usize);
+
+/// Process-wide count of simulation events, summed over every [`Sim`]
+/// instance (exhibits build many simulators internally; the `repro bench
+/// --csv` stats line reports the delta across one exhibit).
+static EVENTS_TOTAL: AtomicU64 = AtomicU64::new(0);
+
+/// Total events processed by every simulator in this process so far.
+pub fn events_total() -> u64 {
+    EVENTS_TOTAL.load(Ordering::Relaxed)
+}
 
 #[derive(Debug, Clone)]
 struct Resource {
@@ -51,14 +84,33 @@ enum FlowState {
 #[derive(Debug, Clone)]
 struct Flow {
     route: Vec<ResId>,
+    /// Bytes left **as of `touched_at`** (lazy progression: the live value
+    /// at time `t` is `remaining - rate * (t - touched_at)`; it is settled
+    /// only when the rate changes or the flow is queried/finished).
     remaining: f64,
+    /// Virtual time `remaining` was last settled at.
+    touched_at: SimTime,
     state: FlowState,
     /// Kept for diagnostics ([`Sim::op_trace`]); scheduling reads the
     /// PendingKey heap instead.
     start_at: SimTime,
     finished_at: SimTime,
-    /// Current allocated rate (recomputed on every event).
+    /// Current allocated rate (updated by the component-scoped refill).
     rate: f64,
+    /// Predicted finish at the current rate (INFINITY while rate is 0);
+    /// the finish-heap entry carrying exactly these bits is the valid one.
+    finish_at: SimTime,
+}
+
+impl Flow {
+    /// Live remaining bytes at time `now` (does not settle).
+    fn remaining_at(&self, now: SimTime) -> f64 {
+        if self.state == FlowState::Active && self.rate > 0.0 {
+            (self.remaining - self.rate * (now - self.touched_at)).max(0.0)
+        } else {
+            self.remaining
+        }
+    }
 }
 
 /// Handle to one in-flight logical **operation**: a set of flows that
@@ -213,6 +265,25 @@ impl PendingKey {
     }
 }
 
+/// Min-heap key for predicted finishes: (finish_at bits, id), same
+/// bit-ordering trick as [`PendingKey`].  Entries are **lazy-deletion**:
+/// a rate change makes a flow's older entries stale (their bits no longer
+/// match the flow's `finish_at`), and stale entries are discarded when
+/// they surface at the top of the heap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct FinishKey(u64, usize);
+
+impl FinishKey {
+    fn new(finish_at: SimTime, id: FlowId) -> Self {
+        debug_assert!(finish_at >= 0.0);
+        Self(finish_at.to_bits(), id.0)
+    }
+
+    fn time(&self) -> SimTime {
+        f64::from_bits(self.0)
+    }
+}
+
 /// The discrete-event engine.
 ///
 /// ```
@@ -229,29 +300,45 @@ pub struct Sim {
     now: SimTime,
     resources: Vec<Resource>,
     flows: Vec<Flow>,
-    /// Active flows in activation order (deterministic; never re-sorted).
-    active: Vec<FlowId>,
+    /// Incidence index: **active** flows on each resource (one entry per
+    /// route occurrence), maintained on activation/retirement.  These are
+    /// both the component-discovery adjacency lists and the progressive-
+    /// filling work lists — nothing is rebuilt per event.
+    res_flows: Vec<Vec<FlowId>>,
     /// Pending flows in a min-heap by (start_at, id): O(log P) activation
-    /// instead of an O(P) scan per event (see EXPERIMENTS.md section Perf).
+    /// instead of an O(P) scan per event (see DESIGN.md section 10).
     pending: BinaryHeap<Reverse<PendingKey>>,
+    /// Predicted finishes, lazy-deletion min-heap (DESIGN.md section 10).
+    finish: BinaryHeap<Reverse<FinishKey>>,
+    /// Flows whose activation/retirement triggered this event's refill.
+    dirty: Vec<FlowId>,
+    /// Flows that completed during the most recent [`Sim::step`]; waiters
+    /// examine only this delta instead of rescanning their wait sets.
+    finished_step: Vec<FlowId>,
     /// Scratch buffers reused across rate recomputations (hot path):
-    /// per-resource residual capacity / unfixed count / flow lists, plus
-    /// the list of touched resources so clearing is O(touched) not O(R).
+    /// per-resource residual capacity / unfixed count, plus the list of
+    /// component resources so clearing is O(component), not O(R).
     scratch_residual: Vec<f64>,
     scratch_unfixed: Vec<u32>,
-    scratch_flows_on: Vec<Vec<FlowId>>,
     scratch_touched: Vec<ResId>,
-    /// Epoch-stamped "fixed" marks per flow id: no per-call clearing.
+    /// Flows of the component(s) being refilled, in discovery order.
+    comp_flows: Vec<FlowId>,
+    /// Epoch stamps (no per-call clearing): resource-in-component,
+    /// flow-in-component, flow-rate-fixed.
+    scratch_res_epoch: Vec<u64>,
+    scratch_comp_epoch: Vec<u64>,
     scratch_fixed_epoch: Vec<u64>,
     epoch: u64,
-    /// Earliest finish time over active flows, maintained by
-    /// recompute_rates so next_event_time is O(1) instead of O(active).
-    cached_next_finish: SimTime,
+    /// Events processed by this simulator (diagnostics).
+    events: u64,
+    /// Largest flow set a single refill had to touch (diagnostics; the
+    /// `repro bench scale` exhibit reports this as "peak component").
+    peak_component: usize,
 }
 
 impl Sim {
     pub fn new() -> Self {
-        Self { cached_next_finish: f64::INFINITY, ..Self::default() }
+        Self::default()
     }
 
     /// Current virtual time in seconds.
@@ -263,6 +350,7 @@ impl Sim {
     pub fn resource(&mut self, name: impl Into<String>, capacity: f64) -> ResId {
         assert!(capacity > 0.0, "resource capacity must be positive");
         self.resources.push(Resource { name: name.into(), capacity });
+        self.res_flows.push(Vec::new());
         ResId(self.resources.len() - 1)
     }
 
@@ -281,10 +369,12 @@ impl Sim {
         self.flows.push(Flow {
             route: route.to_vec(),
             remaining: bytes,
+            touched_at: start_at,
             state: FlowState::Pending,
             start_at,
             finished_at: f64::INFINITY,
             rate: 0.0,
+            finish_at: f64::INFINITY,
         });
         self.pending.push(Reverse(PendingKey::new(start_at, id)));
         id
@@ -299,10 +389,12 @@ impl Sim {
         self.flows.push(Flow {
             route: Vec::new(),
             remaining: 0.0,
+            touched_at: start_at,
             state: FlowState::Pending,
             start_at,
             finished_at: f64::INFINITY,
             rate: 0.0,
+            finish_at: f64::INFINITY,
         });
         self.pending.push(Reverse(PendingKey::new(start_at, id)));
         id
@@ -347,9 +439,11 @@ impl Sim {
     /// Other in-flight flows keep progressing (this is how BeeOND's
     /// asynchronous flush overlaps the next compute phase).
     pub fn wait_all(&mut self, flows: &[FlowId]) -> SimTime {
-        // Amortized-O(1) completion check: a cursor over the wait set
-        // (flows complete roughly in submission order, so the cursor
-        // rarely re-visits) instead of an O(W) scan per event.
+        // Amortized-O(1) completion check: a cursor over the wait set.
+        // Each event re-examines exactly one flow (`flows[cursor]`), never
+        // the whole set; completions of the others are picked up as the
+        // cursor passes them (step() additionally surfaces the per-event
+        // finish delta via finished_last_step for wait_any-style waiters).
         let mut cursor = 0;
         while cursor < flows.len() {
             if self.flows[flows[cursor].0].state == FlowState::Done {
@@ -378,28 +472,47 @@ impl Sim {
     /// the earliest completion time, ties broken by the smaller flow id —
     /// never by slice position, so permuting the wait set cannot change
     /// the outcome.
+    ///
+    /// Cost: one full scan of the wait set on entry (flows may have
+    /// completed before the call); afterwards only the per-event finish
+    /// delta surfaced by `step()` is examined, so a large wait set adds
+    /// nothing to the per-event cost.
     pub fn wait_any(&mut self, flows: &[FlowId]) -> (usize, SimTime) {
         assert!(!flows.is_empty(), "wait_any on an empty flow set");
-        loop {
-            let mut best: Option<(SimTime, FlowId, usize)> = None;
-            for (i, &f) in flows.iter().enumerate() {
-                if let Some(t) = self.completed(f) {
-                    let better = match best {
-                        None => true,
-                        Some((bt, bf, _)) => t < bt || (t == bt && f < bf),
-                    };
-                    if better {
-                        best = Some((t, f, i));
-                    }
-                }
+        // Duplicate entries keep their first slice position (that is the
+        // index the old full-rescan loop would have reported).
+        let mut index_of: HashMap<FlowId, usize> = HashMap::with_capacity(flows.len());
+        for (i, &f) in flows.iter().enumerate() {
+            index_of.entry(f).or_insert(i);
+        }
+        let mut best: Option<(SimTime, FlowId)> = None;
+        let consider = |best: &mut Option<(SimTime, FlowId)>, t: SimTime, f: FlowId| {
+            let better = match *best {
+                None => true,
+                Some((bt, bf)) => t < bt || (t == bt && f < bf),
+            };
+            if better {
+                *best = Some((t, f));
             }
-            if let Some((t, _, i)) = best {
-                return (i, t);
+        };
+        for &f in flows {
+            if let Some(t) = self.completed(f) {
+                consider(&mut best, t, f);
             }
+        }
+        while best.is_none() {
             if !self.step() {
                 panic!("simulation deadlock: no waited-on flow can complete");
             }
+            for &f in &self.finished_step {
+                if index_of.contains_key(&f) {
+                    let t = self.flows[f.0].finished_at;
+                    consider(&mut best, t, f);
+                }
+            }
         }
+        let (t, f) = best.unwrap();
+        (index_of[&f], t)
     }
 
     /// Run until no pending/active flows remain.
@@ -420,6 +533,9 @@ impl Sim {
                 _ => break,
             }
         }
+        // Parking the clock between events is safe: per-flow progress is a
+        // function of (remaining, touched_at, rate), not of the event the
+        // bytes were last settled at, so nothing is lost by the jump.
         self.now = self.now.max(target);
     }
 
@@ -438,6 +554,26 @@ impl Sim {
     /// Number of flows ever created (diagnostics).
     pub fn flow_count(&self) -> usize {
         self.flows.len()
+    }
+
+    /// Events processed by this simulator so far (diagnostics; see
+    /// [`events_total`] for the process-wide aggregate).
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// Largest flow set one rate refill touched (the union of connected
+    /// components reachable from an event's changed flows); the scale
+    /// bench reports this as "peak component".
+    pub fn peak_component_flows(&self) -> usize {
+        self.peak_component
+    }
+
+    /// Flows that completed during the most recent event (the delta
+    /// surfaced for [`Sim::wait_any`]-style waiters).  All entries share
+    /// the same `finished_at` (the event time).
+    pub fn finished_last_step(&self) -> &[FlowId] {
+        &self.finished_step
     }
 
     /// Name a resource was registered under (diagnostics).
@@ -468,32 +604,48 @@ impl Sim {
     // engine internals
     // ------------------------------------------------------------------
 
-    fn next_event_time(&self) -> Option<SimTime> {
+    /// Earliest upcoming event: the pending-heap top or the first *valid*
+    /// finish-heap entry (stale entries are discarded on the way).
+    fn next_event_time(&mut self) -> Option<SimTime> {
         let start = self
             .pending
             .peek()
             .map(|Reverse(k)| k.time())
             .unwrap_or(f64::INFINITY);
-        let t = start.min(self.cached_next_finish);
+        let finish = loop {
+            match self.finish.peek() {
+                None => break f64::INFINITY,
+                Some(&Reverse(k)) => {
+                    let fl = &self.flows[k.1];
+                    if fl.state != FlowState::Active || fl.finish_at.to_bits() != k.0 {
+                        self.finish.pop(); // lazy deletion
+                    } else {
+                        break k.time();
+                    }
+                }
+            }
+        };
+        let t = start.min(finish);
         t.is_finite().then_some(t)
     }
 
-    /// Process one event; returns false when idle.
+    /// Process one event; returns false when idle.  No per-flow sweep
+    /// happens here: progression is implicit in (remaining, touched_at,
+    /// rate), and only the flows whose state changes are settled.
     fn step(&mut self) -> bool {
+        self.finished_step.clear();
         let Some(t) = self.next_event_time() else {
             return false;
         };
-        let dt = (t - self.now).max(0.0);
-        // Progress all active flows by dt at their current rates.
-        for &f in &self.active {
-            let fl = &mut self.flows[f.0];
-            fl.remaining = (fl.remaining - fl.rate * dt).max(0.0);
+        if t > self.now {
+            self.now = t;
         }
-        self.now = t;
+        self.events += 1;
+        EVENTS_TOTAL.fetch_add(1, Ordering::Relaxed);
+        self.dirty.clear();
 
         // Activate pending flows whose latency elapsed (heap pops in
         // (start_at, id) order, so activation order is deterministic).
-        let mut changed = false;
         while let Some(&Reverse(k)) = self.pending.peek() {
             if k.time() > self.now + 1e-15 {
                 break;
@@ -501,103 +653,179 @@ impl Sim {
             self.pending.pop();
             let f = k.id();
             let fl = &mut self.flows[f.0];
-            if fl.remaining == 0.0 {
-                fl.state = FlowState::Done;
-                fl.finished_at = self.now;
-            } else {
-                fl.state = FlowState::Active;
-                self.active.push(f);
-            }
-            changed = true;
-        }
-
-        // Retire finished flows, preserving activation order (no re-sort).
-        let flows = &mut self.flows;
-        let now = self.now;
-        let before = self.active.len();
-        self.active.retain(|&f| {
-            let fl = &mut flows[f.0];
-            if fl.remaining <= 1e-9 * fl.rate.max(1.0) {
+            // Sub-nanobyte flows (and pure delays) complete on arrival —
+            // the same threshold the retirement check applies to a
+            // just-activated (rate 0) flow.
+            if fl.remaining <= 1e-9 {
                 fl.remaining = 0.0;
                 fl.state = FlowState::Done;
-                fl.finished_at = now;
-                false
+                fl.finished_at = self.now;
+                self.finished_step.push(f);
             } else {
-                true
+                fl.state = FlowState::Active;
+                fl.touched_at = self.now;
+                for &r in &self.flows[f.0].route {
+                    self.res_flows[r.0].push(f);
+                }
+                self.dirty.push(f);
             }
-        });
-        changed |= self.active.len() != before;
+        }
 
-        if changed {
-            self.recompute_rates();
-        } else {
-            // Rates unchanged but remaining decreased: refresh the cache.
-            self.refresh_next_finish();
+        // Retire due finishes: pop valid heap entries whose flows are
+        // within the completion epsilon of `now` (remaining <= 1e-9 *
+        // max(rate, 1) bytes — near-simultaneous finishes merge into one
+        // event, exactly like the eager engine's retirement scan did).
+        loop {
+            let Some(&Reverse(k)) = self.finish.peek() else {
+                break;
+            };
+            let f = FlowId(k.1);
+            {
+                let fl = &self.flows[f.0];
+                if fl.state != FlowState::Active || fl.finish_at.to_bits() != k.0 {
+                    self.finish.pop(); // stale
+                    continue;
+                }
+                let due = k.time() <= self.now
+                    || (k.time() - self.now) * fl.rate <= 1e-9 * fl.rate.max(1.0);
+                if !due {
+                    break;
+                }
+            }
+            self.finish.pop();
+            let fl = &mut self.flows[f.0];
+            fl.remaining = 0.0;
+            fl.touched_at = self.now;
+            fl.state = FlowState::Done;
+            fl.finished_at = self.now;
+            self.finished_step.push(f);
+            // One incidence entry is removed per route occurrence; the
+            // O(flows-on-resource) scan is dominated by the refill that
+            // must visit the same component anyway.
+            for &r in &self.flows[f.0].route {
+                let v = &mut self.res_flows[r.0];
+                if let Some(p) = v.iter().position(|&x| x == f) {
+                    v.swap_remove(p);
+                }
+            }
+            self.dirty.push(f);
+        }
+
+        if !self.dirty.is_empty() {
+            self.recompute_component();
         }
         true
     }
 
-    /// Recompute the cached earliest finish over active flows.
-    fn refresh_next_finish(&mut self) {
-        let mut finish = f64::INFINITY;
-        for &f in &self.active {
-            let fl = &self.flows[f.0];
-            let t = if fl.rate > 0.0 {
-                self.now + fl.remaining / fl.rate
-            } else if fl.remaining == 0.0 {
-                self.now
-            } else {
-                f64::INFINITY
-            };
-            if t < finish {
-                finish = t;
-            }
+    /// Settle `f`'s progress at `now` and assign a new rate, refreshing
+    /// its predicted finish and finish-heap entry.  A no-op when the rate
+    /// is unchanged — the standing prediction and heap entry stay valid,
+    /// which is what keeps disjoint components entirely untouched.
+    ///
+    /// An associated function over the two fields it mutates, so callers
+    /// can invoke it while iterating the (disjoint) incidence lists.
+    fn assign_rate(
+        flows: &mut [Flow],
+        finish: &mut BinaryHeap<Reverse<FinishKey>>,
+        now: SimTime,
+        f: FlowId,
+        new_rate: f64,
+    ) {
+        let fl = &mut flows[f.0];
+        if fl.rate == new_rate {
+            return;
         }
-        self.cached_next_finish = finish;
+        if fl.rate > 0.0 {
+            // Lazy-progression settlement: bank the bytes moved at the
+            // old rate since the flow was last touched.
+            fl.remaining = (fl.remaining - fl.rate * (now - fl.touched_at)).max(0.0);
+        }
+        fl.touched_at = now;
+        fl.rate = new_rate;
+        fl.finish_at = if new_rate > 0.0 {
+            now + fl.remaining / new_rate
+        } else {
+            f64::INFINITY
+        };
+        if fl.finish_at.is_finite() {
+            finish.push(Reverse(FinishKey::new(fl.finish_at, f)));
+        }
     }
 
-    /// Progressive-filling max-min fair allocation across all active flows.
+    /// Component-scoped progressive-filling max-min fair allocation.
     ///
-    /// Hot-path notes (see EXPERIMENTS.md section Perf): only resources
-    /// actually *loaded* by active flows are scanned; clearing is
-    /// O(touched), not O(all resources); all bottlenecks tied at the
-    /// minimum share are fixed in one pass (672 independent NVMe writers
-    /// collapse to a single iteration instead of 672); and the "fixed"
-    /// marks are epoch-stamped per flow id so nothing is re-allocated or
-    /// re-hashed per call.
-    fn recompute_rates(&mut self) {
+    /// Hot-path notes (DESIGN.md section 10): starting from the routes of
+    /// this event's changed flows, the incidence index is walked to close
+    /// over the connected component(s) they touch; progressive filling
+    /// then runs over exactly that flow/resource set.  Rates, predictions
+    /// and heap entries of disjoint subsystems are untouched, and within
+    /// the component a flow whose refilled rate is unchanged keeps its
+    /// standing finish prediction (no settle, no heap churn).  All
+    /// bottlenecks tied at the minimum share fix in one pass (672
+    /// independent NVMe writers collapse to a single iteration), and the
+    /// "fixed"/"visited" marks are epoch-stamped so nothing is cleared or
+    /// re-allocated per call.
+    fn recompute_component(&mut self) {
         let nres = self.resources.len();
         if self.scratch_residual.len() < nres {
             self.scratch_residual.resize(nres, 0.0);
             self.scratch_unfixed.resize(nres, 0);
-            self.scratch_flows_on.resize(nres, Vec::new());
+            self.scratch_res_epoch.resize(nres, 0);
         }
-        if self.scratch_fixed_epoch.len() < self.flows.len() {
-            self.scratch_fixed_epoch.resize(self.flows.len(), 0);
+        let nflows = self.flows.len();
+        if self.scratch_fixed_epoch.len() < nflows {
+            self.scratch_fixed_epoch.resize(nflows, 0);
+            self.scratch_comp_epoch.resize(nflows, 0);
         }
-        // Clear only what the previous call touched.
-        for &r in &self.scratch_touched {
-            self.scratch_unfixed[r.0] = 0;
-            self.scratch_flows_on[r.0].clear();
-        }
-        self.scratch_touched.clear();
         self.epoch += 1;
         let epoch = self.epoch;
+        self.scratch_touched.clear();
+        self.comp_flows.clear();
 
-        for &f in &self.active {
+        // Seed the walk with the routes of the changed flows (finished
+        // flows are already out of the incidence lists but their resources
+        // must be refilled; activated flows are in and will be found).
+        for &f in &self.dirty {
             for &r in &self.flows[f.0].route {
-                if self.scratch_unfixed[r.0] == 0 {
+                if self.scratch_res_epoch[r.0] != epoch {
+                    self.scratch_res_epoch[r.0] = epoch;
                     self.scratch_touched.push(r);
-                    self.scratch_residual[r.0] = self.resources[r.0].capacity;
                 }
-                self.scratch_unfixed[r.0] += 1;
-                self.scratch_flows_on[r.0].push(f);
             }
         }
+        // Close over the flow<->resource incidence: `scratch_touched`
+        // doubles as the BFS queue (cursor `i`).
+        let mut i = 0;
+        while i < self.scratch_touched.len() {
+            let r = self.scratch_touched[i];
+            i += 1;
+            for &f in &self.res_flows[r.0] {
+                if self.scratch_comp_epoch[f.0] != epoch {
+                    self.scratch_comp_epoch[f.0] = epoch;
+                    self.comp_flows.push(f);
+                    for &r2 in &self.flows[f.0].route {
+                        if self.scratch_res_epoch[r2.0] != epoch {
+                            self.scratch_res_epoch[r2.0] = epoch;
+                            self.scratch_touched.push(r2);
+                        }
+                    }
+                }
+            }
+        }
+        if self.comp_flows.len() > self.peak_component {
+            self.peak_component = self.comp_flows.len();
+        }
 
-        let mut remaining = self.active.len();
+        for &r in &self.scratch_touched {
+            self.scratch_residual[r.0] = self.resources[r.0].capacity;
+            self.scratch_unfixed[r.0] = self.res_flows[r.0].len() as u32;
+        }
+
+        let now = self.now;
+        let mut remaining = self.comp_flows.len();
         while remaining > 0 {
-            // Smallest fair share among loaded resources with unfixed flows.
+            // Smallest fair share among component resources with unfixed
+            // flows.
             let mut min_share = f64::INFINITY;
             for &r in &self.scratch_touched {
                 let n = self.scratch_unfixed[r.0];
@@ -611,9 +839,9 @@ impl Sim {
             }
             if !min_share.is_finite() {
                 // Remaining flows have no loaded resource left: rate 0.
-                for &f in &self.active {
+                for &f in &self.comp_flows {
                     if self.scratch_fixed_epoch[f.0] != epoch {
-                        self.flows[f.0].rate = 0.0;
+                        Self::assign_rate(&mut self.flows, &mut self.finish, now, f, 0.0);
                     }
                 }
                 break;
@@ -621,8 +849,7 @@ impl Sim {
             // Fix every unfixed flow on every bottleneck tied at min_share.
             let eps = min_share * 1e-12 + 1e-30;
             let mut progressed = false;
-            for ti in 0..self.scratch_touched.len() {
-                let r = self.scratch_touched[ti];
+            for &r in &self.scratch_touched {
                 let n = self.scratch_unfixed[r.0];
                 if n == 0 {
                     continue;
@@ -632,17 +859,15 @@ impl Sim {
                     continue;
                 }
                 // This resource is a bottleneck: fix its unfixed flows.
-                for fi in 0..self.scratch_flows_on[r.0].len() {
-                    let f = self.scratch_flows_on[r.0][fi];
+                for &f in &self.res_flows[r.0] {
                     if self.scratch_fixed_epoch[f.0] == epoch {
                         continue;
                     }
                     self.scratch_fixed_epoch[f.0] = epoch;
-                    self.flows[f.0].rate = min_share;
+                    Self::assign_rate(&mut self.flows, &mut self.finish, now, f, min_share);
                     remaining -= 1;
                     progressed = true;
-                    for ri in 0..self.flows[f.0].route.len() {
-                        let fr = self.flows[f.0].route[ri];
+                    for &fr in &self.flows[f.0].route {
                         self.scratch_residual[fr.0] =
                             (self.scratch_residual[fr.0] - min_share).max(0.0);
                         self.scratch_unfixed[fr.0] -= 1;
@@ -651,15 +876,20 @@ impl Sim {
             }
             if !progressed {
                 // Numerical corner: nothing progressed; zero out the rest.
-                for &f in &self.active {
+                for &f in &self.comp_flows {
                     if self.scratch_fixed_epoch[f.0] != epoch {
-                        self.flows[f.0].rate = 0.0;
+                        Self::assign_rate(&mut self.flows, &mut self.finish, now, f, 0.0);
                     }
                 }
                 break;
             }
         }
-        self.refresh_next_finish();
+    }
+
+    /// Live remaining bytes of a flow at the current clock (settling is
+    /// read-only: the stored state is untouched).  Diagnostics / tests.
+    pub fn flow_remaining(&self, f: FlowId) -> f64 {
+        self.flows[f.0].remaining_at(self.now)
     }
 }
 
@@ -816,6 +1046,21 @@ mod tests {
     }
 
     #[test]
+    fn wait_any_already_done_prefers_earliest_completion() {
+        let mut sim = Sim::new();
+        let l = sim.resource("l", 1e9);
+        let early = sim.flow(1e9, 0.0, &[l]); // alone: done at 1.0
+        sim.wait_all(&[early]);
+        let late = sim.flow(1e9, 0.0, &[l]); // done at 2.0
+        sim.wait_all(&[late]);
+        // Both complete before the call: earliest completion wins even
+        // though it sits later in the slice.
+        let (idx, t) = sim.wait_any(&[late, early]);
+        assert_eq!(idx, 1);
+        assert!((t - 1.0).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
     fn op_wait_and_completion() {
         let mut sim = Sim::new();
         let l = sim.resource("l", 1e9);
@@ -864,6 +1109,22 @@ mod tests {
     }
 
     #[test]
+    fn advance_between_events_loses_no_progress() {
+        // Park the clock twice between events: lazy progression must not
+        // drop the bytes moved across the parks (the eager engine's sweep
+        // only ran at events, so mid-gap parking lost the gap's bytes).
+        let mut sim = Sim::new();
+        let l = sim.resource("l", 1e9);
+        let f = sim.flow(2e9, 0.0, &[l]);
+        sim.advance(0.5);
+        assert!((sim.flow_remaining(f) - 1.5e9).abs() < 1.0);
+        sim.advance(0.5);
+        assert!((sim.flow_remaining(f) - 1.0e9).abs() < 1.0);
+        let t = sim.wait_all(&[f]);
+        assert!((t - 2.0).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
     fn op_trace_reports_routes_rates_and_times() {
         let mut sim = Sim::new();
         let l = sim.resource("link-a", 1e9);
@@ -891,5 +1152,60 @@ mod tests {
         assert_eq!(sim.now(), 5.0);
         assert!(sim.completed(f).is_some());
         assert!((sim.completed(f).unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn refill_is_component_scoped() {
+        // Two disjoint links with staggered activity: each refill touches
+        // only the changed link's component, never the union of both.
+        let mut sim = Sim::new();
+        let la = sim.resource("la", 1e9);
+        let lb = sim.resource("lb", 1e9);
+        let a1 = sim.flow(4e9, 0.0, &[la]);
+        let a2 = sim.flow(4e9, 0.0, &[la]);
+        let _b = sim.flow(1e9, 0.5, &[lb]); // activates alone at t=0.5
+        sim.run_until_idle();
+        assert!(sim.poll(a1) && sim.poll(a2));
+        // Peak refill: the two flows sharing `la` (t=0).  b's activation
+        // at t=0.5 and every later finish touch strictly fewer flows.
+        assert_eq!(sim.peak_component_flows(), 2);
+    }
+
+    #[test]
+    fn event_counters_tick() {
+        let g0 = events_total();
+        let mut sim = Sim::new();
+        let l = sim.resource("l", 1e9);
+        sim.flow(1e9, 0.0, &[l]);
+        sim.flow(1e9, 0.1, &[l]);
+        sim.run_until_idle();
+        assert!(sim.events() >= 3, "events={}", sim.events());
+        assert!(events_total() >= g0 + sim.events());
+    }
+
+    #[test]
+    fn finished_last_step_surfaces_delta() {
+        let mut sim = Sim::new();
+        let l = sim.resource("l", 1e9);
+        let a = sim.flow(1e9, 0.0, &[l]);
+        let b = sim.flow(1e9, 0.0, &[l]); // same size: both finish at t=2
+        sim.advance(3.0);
+        // Both completed during the same (final) event.
+        assert!(sim.poll(a) && sim.poll(b));
+        let delta = sim.finished_last_step();
+        assert_eq!(delta.len(), 2, "delta={delta:?}");
+        assert!(delta.contains(&a) && delta.contains(&b));
+    }
+
+    #[test]
+    fn lazy_remaining_matches_rate_integral() {
+        let mut sim = Sim::new();
+        let l = sim.resource("l", 1e9);
+        let a = sim.flow(3e9, 0.0, &[l]);
+        let _b = sim.flow(1e9, 1.0, &[l]);
+        sim.advance(0.25); // a alone at 1 GB/s
+        assert!((sim.flow_remaining(a) - 2.75e9).abs() < 1.0);
+        sim.advance(1.25); // t=1.5: a ran 1 s at 1 GB/s, then 0.5 s at 0.5
+        assert!((sim.flow_remaining(a) - 1.75e9).abs() < 1.0);
     }
 }

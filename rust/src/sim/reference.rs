@@ -1,0 +1,366 @@
+//! Deliberately naive reference engine — the differential oracle for the
+//! optimized [`Sim`](crate::sim::Sim) and the *baseline* measurement of
+//! the `repro bench scale` exhibit.
+//!
+//! This is the textbook O(events x flows) formulation the optimized
+//! engine replaced: every event sweeps the whole active set
+//! (`remaining -= rate * dt`), the next finish is found by a linear scan,
+//! and any activation/retirement triggers a **global** progressive-filling
+//! recomputation over all active flows.  It is kept semantically aligned
+//! with the hot engine — identical activation order ((start, id), bit
+//! comparison), identical retirement epsilon (`remaining <= 1e-9 *
+//! max(rate, 1)` bytes), identical tie-batched filling epsilons — so
+//! randomized workloads must produce the same completion times and rates
+//! to within 1e-9 (asserted by `rust/tests/prop_engine_oracle.rs` and, at
+//! run time, by the scale bench before it reports a speedup).
+//!
+//! One deliberate divergence from the *pre-overhaul* engine: parking the
+//! clock between events (`advance`) sweeps active flows up to the target
+//! first.  The old engine skipped that sweep and silently lost the bytes
+//! moved since the last event; the lazy engine is immune by construction,
+//! and the oracle models the *intended* fluid semantics.
+//!
+//! Not a public-API surface for simulations — the I/O layers all build on
+//! [`crate::sim::Sim`].  This module exists so the optimized engine can be
+//! checked against, and timed against, an implementation too simple to be
+//! wrong.
+
+use super::{FlowId, ResId, SimTime};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Pending,
+    Active,
+    Done,
+}
+
+#[derive(Debug, Clone)]
+struct RefFlow {
+    route: Vec<usize>,
+    remaining: f64,
+    state: State,
+    start_at: SimTime,
+    finished_at: SimTime,
+    rate: f64,
+}
+
+/// The naive engine.  Mirrors the subset of [`crate::sim::Sim`]'s API the
+/// oracle tests and the scale-bench baseline need.
+#[derive(Debug, Default)]
+pub struct RefSim {
+    now: SimTime,
+    capacities: Vec<f64>,
+    flows: Vec<RefFlow>,
+    /// Active flow indices in activation order.
+    active: Vec<usize>,
+    /// Pending flow indices (scanned linearly — deliberately naive).
+    pending: Vec<usize>,
+    events: u64,
+}
+
+impl RefSim {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Events processed so far (the baseline events/sec numerator).
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    pub fn resource(&mut self, capacity: f64) -> ResId {
+        assert!(capacity > 0.0);
+        self.capacities.push(capacity);
+        ResId(self.capacities.len() - 1)
+    }
+
+    pub fn flow(&mut self, bytes: f64, delay: SimTime, route: &[ResId]) -> FlowId {
+        assert!(bytes >= 0.0 && delay >= 0.0 && !route.is_empty());
+        let id = self.flows.len();
+        self.flows.push(RefFlow {
+            route: route.iter().map(|r| r.0).collect(),
+            remaining: bytes,
+            state: State::Pending,
+            start_at: self.now + delay,
+            finished_at: f64::INFINITY,
+            rate: 0.0,
+        });
+        self.pending.push(id);
+        FlowId(id)
+    }
+
+    pub fn delay(&mut self, seconds: SimTime) -> FlowId {
+        let id = self.flows.len();
+        self.flows.push(RefFlow {
+            route: Vec::new(),
+            remaining: 0.0,
+            state: State::Pending,
+            start_at: self.now + seconds,
+            finished_at: f64::INFINITY,
+            rate: 0.0,
+        });
+        self.pending.push(id);
+        FlowId(id)
+    }
+
+    pub fn completed(&self, f: FlowId) -> Option<SimTime> {
+        let fl = &self.flows[f.0];
+        (fl.state == State::Done).then_some(fl.finished_at)
+    }
+
+    /// Current allocated rate (0 for pending/finished flows) — the rate
+    /// half of the oracle comparison.
+    pub fn rate_of(&self, f: FlowId) -> f64 {
+        let fl = &self.flows[f.0];
+        if fl.state == State::Active {
+            fl.rate
+        } else {
+            0.0
+        }
+    }
+
+    pub fn wait_all(&mut self, flows: &[FlowId]) -> SimTime {
+        while flows.iter().any(|&f| self.flows[f.0].state != State::Done) {
+            if !self.step() {
+                panic!("reference engine deadlock");
+            }
+        }
+        flows
+            .iter()
+            .map(|&f| self.flows[f.0].finished_at)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn wait_each(&mut self, flows: &[FlowId]) -> Vec<SimTime> {
+        self.wait_all(flows);
+        flows.iter().map(|&f| self.flows[f.0].finished_at).collect()
+    }
+
+    pub fn run_until_idle(&mut self) {
+        while self.step() {}
+    }
+
+    pub fn advance(&mut self, seconds: SimTime) {
+        let target = self.now + seconds;
+        loop {
+            match self.next_event_time() {
+                Some(t) if t <= target => {
+                    if !self.step() {
+                        break;
+                    }
+                }
+                _ => break,
+            }
+        }
+        if target > self.now {
+            // Eager engines must sweep when parking between events (see
+            // the module docs); dt is target - now.
+            let dt = target - self.now;
+            for &f in &self.active {
+                let fl = &mut self.flows[f];
+                fl.remaining = (fl.remaining - fl.rate * dt).max(0.0);
+            }
+            self.now = target;
+        }
+    }
+
+    fn next_event_time(&self) -> Option<SimTime> {
+        let mut t = f64::INFINITY;
+        for &f in &self.pending {
+            t = t.min(self.flows[f].start_at);
+        }
+        for &f in &self.active {
+            let fl = &self.flows[f];
+            let fin = if fl.rate > 0.0 {
+                self.now + fl.remaining / fl.rate
+            } else if fl.remaining == 0.0 {
+                self.now
+            } else {
+                f64::INFINITY
+            };
+            t = t.min(fin);
+        }
+        t.is_finite().then_some(t)
+    }
+
+    fn step(&mut self) -> bool {
+        let Some(t) = self.next_event_time() else {
+            return false;
+        };
+        let dt = (t - self.now).max(0.0);
+        for &f in &self.active {
+            let fl = &mut self.flows[f];
+            fl.remaining = (fl.remaining - fl.rate * dt).max(0.0);
+        }
+        self.now = t;
+        self.events += 1;
+
+        // Activate due pending flows in (start_at, id) order — the same
+        // bit-exact order the optimized engine's pending heap pops in.
+        let mut due: Vec<usize> = self
+            .pending
+            .iter()
+            .copied()
+            .filter(|&f| self.flows[f].start_at <= self.now + 1e-15)
+            .collect();
+        due.sort_by_key(|&f| (self.flows[f].start_at.to_bits(), f));
+        let mut changed = false;
+        for &f in &due {
+            self.pending.retain(|&p| p != f);
+            let fl = &mut self.flows[f];
+            if fl.remaining <= 1e-9 {
+                fl.remaining = 0.0;
+                fl.state = State::Done;
+                fl.finished_at = self.now;
+            } else {
+                fl.state = State::Active;
+                self.active.push(f);
+            }
+            changed = true;
+        }
+
+        // Retire finished flows (same epsilon as the optimized engine).
+        let now = self.now;
+        let flows = &mut self.flows;
+        let before = self.active.len();
+        self.active.retain(|&f| {
+            let fl = &mut flows[f];
+            if fl.remaining <= 1e-9 * fl.rate.max(1.0) {
+                fl.remaining = 0.0;
+                fl.state = State::Done;
+                fl.finished_at = now;
+                false
+            } else {
+                true
+            }
+        });
+        changed |= self.active.len() != before;
+
+        if changed {
+            self.recompute_rates();
+        }
+        true
+    }
+
+    /// Global progressive-filling max-min allocation over ALL active
+    /// flows — fresh allocations every call, no incremental state, no
+    /// scratch reuse.  Identical epsilons to the optimized engine.
+    fn recompute_rates(&mut self) {
+        let nres = self.capacities.len();
+        let mut residual = self.capacities.clone();
+        let mut unfixed = vec![0u32; nres];
+        let mut flows_on: Vec<Vec<usize>> = vec![Vec::new(); nres];
+        for &f in &self.active {
+            for &r in &self.flows[f].route {
+                unfixed[r] += 1;
+                flows_on[r].push(f);
+            }
+        }
+        let mut fixed = vec![false; self.flows.len()];
+        let mut remaining = self.active.len();
+        while remaining > 0 {
+            let mut min_share = f64::INFINITY;
+            for r in 0..nres {
+                if unfixed[r] == 0 {
+                    continue;
+                }
+                let share = residual[r] / unfixed[r] as f64;
+                if share < min_share {
+                    min_share = share;
+                }
+            }
+            if !min_share.is_finite() {
+                for &f in &self.active {
+                    if !fixed[f] {
+                        self.flows[f].rate = 0.0;
+                    }
+                }
+                break;
+            }
+            let eps = min_share * 1e-12 + 1e-30;
+            let mut progressed = false;
+            for r in 0..nres {
+                if unfixed[r] == 0 {
+                    continue;
+                }
+                let share = residual[r] / unfixed[r] as f64;
+                if share - min_share > eps {
+                    continue;
+                }
+                for &f in &flows_on[r] {
+                    if fixed[f] {
+                        continue;
+                    }
+                    fixed[f] = true;
+                    self.flows[f].rate = min_share;
+                    remaining -= 1;
+                    progressed = true;
+                    for &fr in &self.flows[f].route {
+                        residual[fr] = (residual[fr] - min_share).max(0.0);
+                        unfixed[fr] -= 1;
+                    }
+                }
+            }
+            if !progressed {
+                for &f in &self.active {
+                    if !fixed[f] {
+                        self.flows[f].rate = 0.0;
+                    }
+                }
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_textbook_sharing() {
+        let mut sim = RefSim::new();
+        let l = sim.resource(2e9);
+        let a = sim.flow(1e9, 0.0, &[l]);
+        let b = sim.flow(3e9, 0.0, &[l]);
+        let times = sim.wait_each(&[a, b]);
+        assert!((times[0] - 1.0).abs() < 1e-9);
+        assert!((times[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bottleneck_and_spare_capacity() {
+        let mut sim = RefSim::new();
+        let l1 = sim.resource(1e9);
+        let l2 = sim.resource(10e9);
+        let a = sim.flow(1e9, 0.0, &[l1, l2]);
+        let b = sim.flow(9e9, 0.0, &[l2]);
+        let times = sim.wait_each(&[a, b]);
+        assert!((times[0] - 1.0).abs() < 1e-6);
+        assert!((times[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn advance_parks_without_losing_progress() {
+        let mut sim = RefSim::new();
+        let l = sim.resource(1e9);
+        let f = sim.flow(2e9, 0.0, &[l]);
+        sim.advance(0.5);
+        sim.advance(0.5);
+        let t = sim.wait_all(&[f]);
+        assert!((t - 2.0).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn counts_events() {
+        let mut sim = RefSim::new();
+        let l = sim.resource(1e9);
+        sim.flow(1e9, 0.0, &[l]);
+        sim.run_until_idle();
+        assert!(sim.events() >= 2);
+    }
+}

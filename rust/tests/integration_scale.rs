@@ -1,0 +1,102 @@
+//! The `repro bench scale` harness at a small sweep: schema, equivalence
+//! and determinism checks that run everywhere (the full 1k/10k/100k sweep
+//! with its >= 5x events/sec acceptance bar is a release-binary
+//! measurement — `make bench-scale` — not a unit-test assertion, because
+//! wall-clock ratios are machine- and profile-dependent).
+
+use deeper::bench::{scale_points, scale_report, ScaleConfig};
+use deeper::util::json::{self, Json};
+
+fn small_cfg() -> ScaleConfig {
+    ScaleConfig { sweep: vec![64, 256], seed: 1, baseline_max: 256 }
+}
+
+#[test]
+fn scale_report_exhibits_and_schema() {
+    let (exhibits, json) = scale_report(&small_cfg());
+    assert_eq!(exhibits.len(), 3, "events/sec figure, wall figure, summary table");
+    for e in &exhibits {
+        assert!(!e.render().is_empty());
+        assert!(!e.render_csv().is_empty());
+    }
+
+    // The JSON must round-trip through our own parser and carry the
+    // schema the CI artifact consumers rely on.
+    let parsed = json::parse(&json.to_pretty_string()).expect("pretty JSON parses");
+    assert_eq!(parsed, json);
+    assert_eq!(json.get("bench").and_then(Json::as_str), Some("sim_scale"));
+    assert_eq!(json.get("schema_version").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(json.get("seed").and_then(Json::as_f64), Some(1.0));
+    let points = json.get("points").and_then(Json::as_arr).expect("points array");
+    assert_eq!(points.len(), 2);
+    for p in points {
+        let flows = p.get("flows").and_then(Json::as_f64).unwrap();
+        assert!(flows == 64.0 || flows == 256.0);
+        let engine = p.get("engine").expect("engine measurement");
+        assert!(engine.get("events").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(engine.get("events_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(engine.get("wall_s").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(engine.get("last_finish_virtual_s").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(p.get("peak_component_flows").and_then(Json::as_f64).unwrap() >= 1.0);
+        // Both sweep points sit inside baseline_max: the naive engine ran
+        // and the speedup ratio is recorded (its magnitude is the
+        // release-bench's business, not this test's).
+        assert!(p.get("baseline").unwrap().get("events").is_some());
+        assert!(p.get("speedup_events_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+    assert!(json
+        .get("speedup_at_largest_baselined_point")
+        .and_then(Json::as_f64)
+        .is_some());
+    assert_eq!(
+        json.get("largest_baselined_flows").and_then(Json::as_f64),
+        Some(256.0)
+    );
+}
+
+#[test]
+fn scale_points_are_deterministic_in_virtual_terms() {
+    // Wall-clock varies run to run; the simulated trajectory must not.
+    let a = scale_points(&small_cfg());
+    let b = scale_points(&small_cfg());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.flows, y.flows);
+        assert_eq!(x.engine.events, y.engine.events);
+        assert_eq!(x.engine.last_finish, y.engine.last_finish);
+        assert_eq!(x.peak_component, y.peak_component);
+        let (bx, by) = (x.baseline.as_ref().unwrap(), y.baseline.as_ref().unwrap());
+        assert_eq!(bx.events, by.events);
+        assert_eq!(bx.last_finish, by.last_finish);
+    }
+    // scale_points itself asserts optimized-vs-naive equivalence on every
+    // baselined point; reaching here means both sweeps passed it.
+}
+
+#[test]
+fn scale_workload_keeps_components_bounded() {
+    // The DEEP-ER-shaped workload is mostly node-local: the peak refill
+    // component must stay well below the total flow count (that locality
+    // is the whole point of component scoping).
+    let pts = scale_points(&ScaleConfig { sweep: vec![512], seed: 1, baseline_max: 0 });
+    assert_eq!(pts.len(), 1);
+    assert!(pts[0].baseline.is_none(), "512 > baseline_max 0: naive engine skipped");
+    let peak = pts[0].peak_component;
+    assert!(
+        peak < 512 / 2,
+        "peak component {peak} should be far below the 512 concurrent flows"
+    );
+    assert!(peak >= 1);
+}
+
+#[test]
+fn committed_trajectory_artifact_parses() {
+    // BENCH_sim_scale.json at the repo root is the cross-PR perf
+    // trajectory record; whatever regenerates it (make bench-scale / the
+    // CI bench-smoke job) must keep it parseable with the pinned schema.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_sim_scale.json");
+    let text = std::fs::read_to_string(path).expect("BENCH_sim_scale.json exists");
+    let doc = json::parse(&text).expect("artifact parses");
+    assert_eq!(doc.get("bench").and_then(Json::as_str), Some("sim_scale"));
+    assert_eq!(doc.get("schema_version").and_then(Json::as_f64), Some(1.0));
+    assert!(doc.get("points").and_then(Json::as_arr).is_some());
+}
