@@ -13,7 +13,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test lint fmt clippy doc figures bench bench-smoke bench-scale artifacts clean
+.PHONY: verify build test lint fmt clippy doc figures bench bench-smoke bench-scale bench-fleet artifacts clean
 
 verify: build test
 
@@ -55,6 +55,12 @@ bench-smoke: build
 bench-scale: build
 	$(CARGO) run --release --bin repro -- bench scale --csv --seed 1 --json BENCH_sim_scale.json
 	@echo "wrote BENCH_sim_scale.json"
+
+# Fleet co-scheduling sweep (2/4/8/16 jobs under fcfs and backfill);
+# refreshes the BENCH_fleet.json trajectory artifact.
+bench-fleet: build
+	$(CARGO) run --release --bin repro -- bench fleet --csv --seed 1 --json BENCH_fleet.json
+	@echo "wrote BENCH_fleet.json"
 
 artifacts:
 	python3 python/compile/aot.py --out-dir artifacts

@@ -7,6 +7,15 @@
 //! an SCR restart that rolls the run back to the last checkpoint (or to
 //! iteration 0 if no usable checkpoint exists — the unprotected baseline).
 //!
+//! Since the fleet scheduler ([`crate::sched`]) arrived, the loop body
+//! lives in a **resumable per-job state machine**, [`JobExec`]: every
+//! phase (compute, halo exchange, checkpoint) is issued as a non-blocking
+//! [`Op`] and the machine pauses whenever its front op is still in
+//! flight.  The classic blocking entry points below are thin runners that
+//! wait out each front op immediately, which reproduces the historical
+//! blocking semantics flow-for-flow; the scheduler instead interleaves
+//! many `JobExec`s on one clock so their I/O genuinely contends.
+//!
 //! [`run_iterations_multilevel`] is the overlapped variant: checkpoints go
 //! through [`MultiLevelScr`], whose L1→L2 promotion can run as a
 //! background flush *during* the following compute iterations
@@ -16,7 +25,7 @@
 use super::AppProfile;
 use crate::psmpi::{Comm, Pmd};
 use crate::scr::multilevel::MultiLevelScr;
-use crate::scr::Scr;
+use crate::scr::{PendingCkpt, Scr};
 use crate::sim::{FlowId, Op, SimTime};
 use crate::system::failure::FailurePlan;
 use crate::system::Machine;
@@ -58,109 +67,360 @@ impl RunStats {
     }
 }
 
+/// Borrowed view of the checkpoint machinery a job runs with — how the
+/// one [`JobExec`] state machine serves the "w/o CP" baseline, the five
+/// single-level SCR strategies and the multi-level checkpointer alike.
+/// The fleet scheduler owns the backing `Scr`/`MultiLevelScr` per job and
+/// re-borrows this view on every advance.
+#[derive(Debug)]
+pub enum CkptBackendRef<'a> {
+    /// No checkpointing (the unprotected "w/o CP" bars of Fig. 8).
+    None,
+    /// One single-level SCR strategy; checkpoints are issued via
+    /// [`Scr::checkpoint_begin`] and committed when their op settles, so
+    /// the fleet scheduler never blocks the shared clock on them.
+    Scr(&'a mut Scr),
+    /// The multi-level checkpointer.  Its `checkpoint_at` keeps its own
+    /// (bounded) blocking discipline — L1 cost plus any flush
+    /// back-pressure — exactly like the historical driver.
+    Multi(&'a mut MultiLevelScr),
+}
+
+/// What the job is currently waiting on.
+#[derive(Debug)]
+enum Phase {
+    /// At an iteration boundary: nothing in flight.
+    Ready,
+    /// Bulk-synchronous compute step on every node.
+    Compute(Op),
+    /// Halo/moment ring exchange.
+    Exchange(Op),
+    /// A single-level checkpoint in flight (committed when it settles).
+    Ckpt(PendingCkpt),
+    /// All iterations executed (and, for multilevel, flushes drained).
+    Done,
+}
+
+/// Resumable per-job execution state: one bulk-synchronous application
+/// run, advanced phase by phase.  Between [`JobExec::bind`] (nodes
+/// attached) and completion, callers repeatedly wait out
+/// [`JobExec::front_op`] and call [`JobExec::advance`]; the solo runners
+/// below do this back-to-back on a private machine, the fleet scheduler
+/// round-robins it across many jobs on one shared machine.
+#[derive(Debug)]
+pub struct JobExec {
+    job: IterationJob,
+    nodes: Vec<usize>,
+    comm: Option<Comm>,
+    pmd: Pmd,
+    phase: Phase,
+    iter: usize,
+    last_cp_iter: usize,
+    pending_failure: Option<usize>,
+    last_check_time: SimTime,
+    bound_at: SimTime,
+    phase_t0: SimTime,
+    pub stats: RunStats,
+}
+
+impl JobExec {
+    pub fn new(job: IterationJob) -> Self {
+        Self {
+            job,
+            nodes: Vec::new(),
+            comm: None,
+            pmd: Pmd::new(),
+            phase: Phase::Ready,
+            iter: 0,
+            last_cp_iter: 0,
+            pending_failure: None,
+            last_check_time: 0.0,
+            bound_at: 0.0,
+            phase_t0: 0.0,
+            stats: RunStats::default(),
+        }
+    }
+
+    /// Attach a node set (initial dispatch, or re-dispatch after a
+    /// failure requeue).  Execution resumes from the current — possibly
+    /// rolled-back — iteration.
+    pub fn bind(&mut self, m: &Machine, nodes: Vec<usize>) {
+        assert!(!nodes.is_empty());
+        assert!(self.nodes.is_empty(), "bind while already bound");
+        self.comm = Some(Comm::of(nodes.clone()));
+        self.nodes = nodes;
+        self.bound_at = m.sim.now();
+        self.last_check_time = m.sim.now();
+    }
+
+    /// Detach from the node set (fleet requeue): banks the active-segment
+    /// wall time and abandons whatever phase op was in flight — the
+    /// rolled-back attempt's traffic keeps draining in the simulator, but
+    /// nobody observes it anymore.  Returns the released nodes.
+    pub fn unbind(&mut self, m: &Machine) -> Vec<usize> {
+        assert!(!self.is_done(), "unbind after completion");
+        assert!(!self.nodes.is_empty(), "unbind while not bound");
+        self.stats.total_time += m.sim.now() - self.bound_at;
+        self.phase = Phase::Ready;
+        self.comm = None;
+        std::mem::take(&mut self.nodes)
+    }
+
+    /// Iteration the job will (re)start from.
+    pub fn current_iter(&self) -> usize {
+        self.iter
+    }
+
+    /// Target iteration count.
+    pub fn iterations(&self) -> usize {
+        self.job.iterations
+    }
+
+    pub fn is_done(&self) -> bool {
+        matches!(self.phase, Phase::Done)
+    }
+
+    /// The op the job is currently blocked on (None at a boundary or when
+    /// done).  [`JobExec::advance`] must only run once this op polls
+    /// complete.
+    pub fn front_op(&self) -> Option<Op> {
+        match &self.phase {
+            Phase::Compute(op) | Phase::Exchange(op) => Some(op.clone()),
+            Phase::Ckpt(pending) => Some(pending.op.clone()),
+            Phase::Ready | Phase::Done => None,
+        }
+    }
+
+    /// Drive the state machine as far as it can go without waiting:
+    /// settle the completed front op, account its stats, and issue phases
+    /// until a new front op is still in flight or the job finishes.
+    pub fn advance(&mut self, m: &mut Machine, backend: &mut CkptBackendRef) {
+        assert!(!self.nodes.is_empty(), "advance on an unbound job");
+        loop {
+            match std::mem::replace(&mut self.phase, Phase::Ready) {
+                Phase::Done => {
+                    self.phase = Phase::Done;
+                    return;
+                }
+                Phase::Ready => {
+                    if self.iter >= self.job.iterations {
+                        self.finish(m, backend);
+                        return;
+                    }
+                    // Failure injection at this iteration boundary?  Both
+                    // plan kinds are honoured: iteration-keyed (the
+                    // paper's targeted errors) and time-keyed
+                    // (exponential-MTBF schedules) — time-keyed failures
+                    // are observed at the boundary following their
+                    // timestamp, which is when application-level
+                    // checkpointing can react.
+                    if self.check_boundary_failure(m, backend) {
+                        continue; // re-run the boundary checks post-restart
+                    }
+                    self.phase_t0 = m.sim.now();
+                    let op = compute_op(m, &self.nodes, &self.job.profile);
+                    self.phase = Phase::Compute(op);
+                }
+                Phase::Compute(op) => {
+                    let done = m.sim.op_completion(&op).expect("compute op not settled");
+                    self.stats.compute_time += done - self.phase_t0;
+                    if self.job.profile.halo_bytes > 0.0 && self.nodes.len() > 1 {
+                        self.phase_t0 = m.sim.now();
+                        let comm = self.comm.as_ref().expect("bound job has a comm");
+                        let op = comm.ring_exchange_op(m, self.job.profile.halo_bytes);
+                        self.phase = Phase::Exchange(op);
+                    } else {
+                        self.post_iteration(m, backend);
+                    }
+                }
+                Phase::Exchange(op) => {
+                    let done = m.sim.op_completion(&op).expect("exchange op not settled");
+                    self.stats.exchange_time += done - self.phase_t0;
+                    self.post_iteration(m, backend);
+                }
+                Phase::Ckpt(pending) => {
+                    let report = match backend {
+                        CkptBackendRef::Scr(scr) => scr.checkpoint_commit(m, pending),
+                        _ => unreachable!("Ckpt phase only exists for single-level SCR"),
+                    };
+                    self.stats.ckpt_time += report.blocked;
+                    self.stats.checkpoints_taken += 1;
+                    self.last_cp_iter = self.iter;
+                    // phase is already Ready
+                }
+            }
+            if let Some(op) = self.front_op() {
+                if !m.sim.poll_op(&op) {
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Iteration bookkeeping after compute(+exchange): bump counters and
+    /// issue whatever checkpoint level is due.
+    fn post_iteration(&mut self, m: &mut Machine, backend: &mut CkptBackendRef) {
+        self.iter += 1;
+        self.stats.iterations_run += 1;
+        let due = self.job.cp_interval > 0
+            && self.iter % self.job.cp_interval == 0
+            && self.iter < self.job.iterations;
+        if !due {
+            return;
+        }
+        let bytes = self.job.profile.ckpt_bytes_per_node;
+        match backend {
+            CkptBackendRef::None => {}
+            CkptBackendRef::Scr(scr) => {
+                let pending = scr
+                    .checkpoint_begin(m, &self.nodes, bytes)
+                    .expect("checkpoint failed");
+                self.phase = Phase::Ckpt(pending);
+            }
+            CkptBackendRef::Multi(ml) => {
+                let blocked = ml
+                    .checkpoint_at(m, &self.nodes, bytes, self.iter)
+                    .expect("multilevel checkpoint failed");
+                self.stats.ckpt_time += blocked;
+                self.stats.checkpoints_taken += 1;
+                self.last_cp_iter = self.iter;
+            }
+        }
+    }
+
+    /// The boundary failure check of the historical driver, verbatim:
+    /// iteration-keyed failures first, then the earliest time-keyed
+    /// failure since the last boundary.  Returns true when a failure was
+    /// handled (the caller re-runs the boundary).
+    fn check_boundary_failure(&mut self, m: &mut Machine, backend: &mut CkptBackendRef) -> bool {
+        if let Some(f) = self.job.failures.failure_at_iteration(self.iter) {
+            if self.pending_failure.is_none()
+                && self.stats.failures_hit < self.job.failures.at_iterations.len()
+            {
+                self.pending_failure = Some(self.nodes[f.node % self.nodes.len()]);
+            }
+        }
+        let now = m.sim.now();
+        if self.pending_failure.is_none() {
+            if let Some(f) = self
+                .job
+                .failures
+                .failures_between(self.last_check_time, now)
+                .first()
+            {
+                self.pending_failure = Some(self.nodes[f.node % self.nodes.len()]);
+            }
+        }
+        self.last_check_time = now;
+        match self.pending_failure.take() {
+            Some(victim) => {
+                self.handle_failure(m, backend, victim);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Kill `victim`, run PMD detection/isolation, restart from the
+    /// backend's best covering checkpoint and roll the iteration counter
+    /// back.  Public so the fleet scheduler can inject machine-level
+    /// failures into the owning job; any phase op in flight belongs to
+    /// the rolled-back attempt and is abandoned.
+    pub fn handle_failure(&mut self, m: &mut Machine, backend: &mut CkptBackendRef, victim: usize) {
+        self.stats.failures_hit += 1;
+        // Credit a promotion that settled before the failure; one whose
+        // flows are still moving when the node dies is lost
+        // (restart_detailed aborts it, never polls it).
+        if let CkptBackendRef::Multi(ml) = backend {
+            ml.poll_flush(m);
+        }
+        m.kill_node(victim);
+        let t0 = m.sim.now();
+        self.pmd.detect_and_isolate(m, &self.nodes);
+        m.revive_node(victim);
+        self.pmd.reinstate(victim);
+        match backend {
+            CkptBackendRef::Multi(ml) => match ml.restart_detailed(m, &self.nodes, Some(victim)) {
+                // Roll back to the iteration of the level that served the
+                // restart — the deepest *settled* checkpoint.
+                Ok(outcome) => self.iter = outcome.iter,
+                // No level covers a lost node yet: full restart.
+                Err(_) => self.iter = 0,
+            },
+            CkptBackendRef::Scr(scr) => match scr.restart(m, &self.nodes, Some(victim)) {
+                // Roll back to the last checkpointed iteration.
+                Ok(_) => self.iter = self.last_cp_iter,
+                // No usable checkpoint: full restart.
+                Err(_) => {
+                    self.iter = 0;
+                    self.last_cp_iter = 0;
+                }
+            },
+            CkptBackendRef::None => {
+                // Unprotected: lose everything, start over.
+                self.iter = 0;
+                self.last_cp_iter = 0;
+            }
+        }
+        self.stats.restart_time += m.sim.now() - t0;
+        if !matches!(self.phase, Phase::Done) {
+            self.phase = Phase::Ready;
+        }
+    }
+
+    /// Job-end bookkeeping: drain background flushes (multilevel), fill
+    /// the derived totals and close the active segment.
+    fn finish(&mut self, m: &mut Machine, backend: &mut CkptBackendRef) {
+        if let CkptBackendRef::Multi(ml) = backend {
+            // Job-end barrier: the tail of the background work is blocked
+            // time.
+            let t_drain = m.sim.now();
+            ml.drain(m);
+            let drain_blocked = m.sim.now() - t_drain;
+            self.stats.overlap_time = ml.stats.flush_overlap;
+            self.stats.blocked_time = self.stats.ckpt_time + drain_blocked;
+        } else {
+            self.stats.blocked_time = self.stats.ckpt_time;
+        }
+        self.stats.total_time += m.sim.now() - self.bound_at;
+        self.phase = Phase::Done;
+    }
+}
+
+/// Run a [`JobExec`] to completion solo: wait out every front op
+/// immediately, which reproduces the historical blocking drivers
+/// flow-for-flow on a private machine.
+fn run_to_completion(
+    m: &mut Machine,
+    nodes: &[usize],
+    job: &IterationJob,
+    mut backend: CkptBackendRef,
+) -> RunStats {
+    let mut exec = JobExec::new(job.clone());
+    exec.bind(m, nodes.to_vec());
+    while !exec.is_done() {
+        if let Some(op) = exec.front_op() {
+            m.sim.wait_op(&op);
+        }
+        exec.advance(m, &mut backend);
+    }
+    exec.stats
+}
+
 /// Execute the iteration loop.  `scr` may be None (no checkpointing at
 /// all: the "w/o CP" bars of Fig. 8).
 pub fn run_iterations(
     m: &mut Machine,
     nodes: &[usize],
     job: &IterationJob,
-    mut scr: Option<&mut Scr>,
+    scr: Option<&mut Scr>,
 ) -> RunStats {
     assert!(!nodes.is_empty());
-    let mut stats = RunStats::default();
-    let t_start = m.sim.now();
-    let comm = Comm::of(nodes.to_vec());
-    let mut pmd = Pmd::new();
-
-    let mut iter = 0usize;
-    let mut last_cp_iter = 0usize;
-    let mut pending_failure: Option<usize> = None; // node to fail at iter k
-    let mut last_check_time = m.sim.now();
-
-    while iter < job.iterations {
-        // Failure injection at this iteration boundary?  Both plan kinds
-        // are honoured: iteration-keyed (the paper's targeted errors) and
-        // time-keyed (exponential-MTBF schedules) — time-keyed failures
-        // are observed at the boundary following their timestamp, which
-        // is when application-level checkpointing can react.
-        if let Some(f) = job.failures.failure_at_iteration(iter) {
-            if pending_failure.is_none() && stats.failures_hit < job.failures.at_iterations.len()
-            {
-                pending_failure = Some(nodes[f.node % nodes.len()]);
-            }
-        }
-        let now = m.sim.now();
-        if pending_failure.is_none() {
-            if let Some(f) = job.failures.failures_between(last_check_time, now).first() {
-                pending_failure = Some(nodes[f.node % nodes.len()]);
-            }
-        }
-        last_check_time = now;
-        if let Some(victim) = pending_failure.take() {
-            stats.failures_hit += 1;
-            m.kill_node(victim);
-            let t0 = m.sim.now();
-            pmd.detect_and_isolate(m, nodes);
-            m.revive_node(victim);
-            pmd.reinstate(victim);
-            match scr.as_deref_mut() {
-                Some(scr_ref) => {
-                    let failed = Some(victim);
-                    match scr_ref.restart(m, nodes, failed) {
-                        Ok(_) => {
-                            // Roll back to the last checkpointed iteration.
-                            iter = last_cp_iter;
-                        }
-                        Err(_) => {
-                            // No usable checkpoint: full restart.
-                            iter = 0;
-                            last_cp_iter = 0;
-                        }
-                    }
-                }
-                None => {
-                    // Unprotected: lose everything, start over.
-                    iter = 0;
-                    last_cp_iter = 0;
-                }
-            }
-            stats.restart_time += m.sim.now() - t0;
-            continue;
-        }
-
-        // Compute phase (all nodes in parallel).
-        let t0 = m.sim.now();
-        let compute = compute_op(m, nodes, &job.profile);
-        m.sim.wait_op(&compute);
-        stats.compute_time += m.sim.now() - t0;
-
-        // Halo/moment exchange.
-        if job.profile.halo_bytes > 0.0 && nodes.len() > 1 {
-            let t1 = m.sim.now();
-            comm.ring_exchange(m, job.profile.halo_bytes);
-            stats.exchange_time += m.sim.now() - t1;
-        }
-
-        iter += 1;
-        stats.iterations_run += 1;
-
-        // Checkpoint at interval boundaries.
-        if job.cp_interval > 0 && iter % job.cp_interval == 0 && iter < job.iterations {
-            if let Some(scr_ref) = scr.as_deref_mut() {
-                let t2 = m.sim.now();
-                scr_ref
-                    .checkpoint(m, nodes, job.profile.ckpt_bytes_per_node)
-                    .expect("checkpoint failed");
-                stats.ckpt_time += m.sim.now() - t2;
-                stats.checkpoints_taken += 1;
-                last_cp_iter = iter;
-            }
-        }
-    }
-
-    stats.total_time = m.sim.now() - t_start;
-    stats.blocked_time = stats.ckpt_time;
-    stats
+    let backend = match scr {
+        Some(s) => CkptBackendRef::Scr(s),
+        None => CkptBackendRef::None,
+    };
+    run_to_completion(m, nodes, job, backend)
 }
 
 /// Issue one bulk-synchronous compute step on every node as a single
@@ -194,85 +454,7 @@ pub fn run_iterations_multilevel(
 ) -> RunStats {
     assert!(!nodes.is_empty());
     assert!(job.cp_interval > 0, "multilevel driver needs a checkpoint cadence");
-    let mut stats = RunStats::default();
-    let t_start = m.sim.now();
-    let comm = Comm::of(nodes.to_vec());
-    let mut pmd = Pmd::new();
-
-    let mut iter = 0usize;
-    let mut pending_failure: Option<usize> = None;
-    let mut last_check_time = m.sim.now();
-
-    while iter < job.iterations {
-        if let Some(f) = job.failures.failure_at_iteration(iter) {
-            if pending_failure.is_none() && stats.failures_hit < job.failures.at_iterations.len()
-            {
-                pending_failure = Some(nodes[f.node % nodes.len()]);
-            }
-        }
-        let now = m.sim.now();
-        if pending_failure.is_none() {
-            if let Some(f) = job.failures.failures_between(last_check_time, now).first() {
-                pending_failure = Some(nodes[f.node % nodes.len()]);
-            }
-        }
-        last_check_time = now;
-        if let Some(victim) = pending_failure.take() {
-            stats.failures_hit += 1;
-            // Credit a promotion that settled before the failure; one
-            // whose flows are still moving when the node dies is lost
-            // (restart_detailed aborts it, never polls it).
-            ml.poll_flush(m);
-            m.kill_node(victim);
-            let t0 = m.sim.now();
-            pmd.detect_and_isolate(m, nodes);
-            m.revive_node(victim);
-            pmd.reinstate(victim);
-            match ml.restart_detailed(m, nodes, Some(victim)) {
-                // Roll back to the iteration of the level that served the
-                // restart — the deepest *settled* checkpoint.
-                Ok(outcome) => iter = outcome.iter,
-                // No level covers a lost node yet: full restart.
-                Err(_) => iter = 0,
-            }
-            stats.restart_time += m.sim.now() - t0;
-            continue;
-        }
-
-        // Compute phase (all nodes in parallel); any in-flight flush
-        // trickles through the same virtual time.
-        let t0 = m.sim.now();
-        let compute = compute_op(m, nodes, &job.profile);
-        m.sim.wait_op(&compute);
-        stats.compute_time += m.sim.now() - t0;
-
-        if job.profile.halo_bytes > 0.0 && nodes.len() > 1 {
-            let t1 = m.sim.now();
-            comm.ring_exchange(m, job.profile.halo_bytes);
-            stats.exchange_time += m.sim.now() - t1;
-        }
-
-        iter += 1;
-        stats.iterations_run += 1;
-
-        if iter % job.cp_interval == 0 && iter < job.iterations {
-            let blocked = ml
-                .checkpoint_at(m, nodes, job.profile.ckpt_bytes_per_node, iter)
-                .expect("multilevel checkpoint failed");
-            stats.ckpt_time += blocked;
-            stats.checkpoints_taken += 1;
-        }
-    }
-
-    // Job-end barrier: the tail of the background work is blocked time.
-    let t_drain = m.sim.now();
-    ml.drain(m);
-    let drain_blocked = m.sim.now() - t_drain;
-
-    stats.total_time = m.sim.now() - t_start;
-    stats.overlap_time = ml.stats.flush_overlap;
-    stats.blocked_time = stats.ckpt_time + drain_blocked;
-    stats
+    run_to_completion(m, nodes, job, CkptBackendRef::Multi(ml))
 }
 
 #[cfg(test)]
@@ -449,5 +631,78 @@ mod tests {
         // 12 before failure + (12-10)=2 re-run + 8 remaining = 22.
         assert_eq!(stats.iterations_run, 22);
         assert!(stats.restart_time > 0.0);
+    }
+
+    // ------------------------------------------------------------------
+    // JobExec as a resumable machine (the fleet scheduler's contract)
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn job_exec_phase_stepping_matches_blocking_run() {
+        // Driving the state machine by hand (poll + advance, stepping
+        // events in between) must land on the identical trajectory the
+        // blocking runner produces.
+        let job = fig8_job(true, false);
+        let mut m1 = machine();
+        let nodes = m1.nodes_of(crate::system::NodeKind::Cluster);
+        let mut scr1 = Scr::new(Strategy::Buddy);
+        let blocking = run_iterations(&mut m1, &nodes, &job, Some(&mut scr1));
+
+        let mut m2 = machine();
+        let mut scr2 = Scr::new(Strategy::Buddy);
+        let mut backend = CkptBackendRef::Scr(&mut scr2);
+        let mut exec = JobExec::new(job);
+        exec.bind(&m2, nodes.clone());
+        while !exec.is_done() {
+            match exec.front_op() {
+                Some(op) if !m2.sim.poll_op(&op) => {
+                    assert!(m2.sim.step_event(), "no events while an op is pending");
+                }
+                _ => exec.advance(&mut m2, &mut backend),
+            }
+        }
+        let stepped = exec.stats;
+        assert_eq!(stepped.total_time, blocking.total_time);
+        assert_eq!(stepped.compute_time, blocking.compute_time);
+        assert_eq!(stepped.exchange_time, blocking.exchange_time);
+        assert_eq!(stepped.ckpt_time, blocking.ckpt_time);
+        assert_eq!(stepped.iterations_run, blocking.iterations_run);
+        assert_eq!(stepped.checkpoints_taken, blocking.checkpoints_taken);
+    }
+
+    #[test]
+    fn job_exec_unbind_rebind_resumes_where_it_left() {
+        let mut m = machine();
+        let nodes: Vec<usize> = (0..4).collect();
+        let mut job = fig8_job(true, false);
+        job.iterations = 10;
+        job.cp_interval = 3;
+        let mut scr = Scr::new(Strategy::Buddy);
+        let mut backend = CkptBackendRef::Scr(&mut scr);
+        let mut exec = JobExec::new(job);
+        exec.bind(&m, nodes.clone());
+        // Run a few phases, then pull the nodes out from under the job.
+        for _ in 0..4 {
+            if let Some(op) = exec.front_op() {
+                m.sim.wait_op(&op);
+            }
+            exec.advance(&mut m, &mut backend);
+        }
+        let before = exec.current_iter();
+        assert!(before > 0 && !exec.is_done());
+        let released = exec.unbind(&m);
+        assert_eq!(released, nodes);
+        assert!(exec.front_op().is_none(), "unbind abandons the in-flight phase");
+        // Rebind on a different node set and finish.
+        let other: Vec<usize> = (4..8).collect();
+        exec.bind(&m, other);
+        assert_eq!(exec.current_iter(), before, "progress survives the requeue");
+        while !exec.is_done() {
+            if let Some(op) = exec.front_op() {
+                m.sim.wait_op(&op);
+            }
+            exec.advance(&mut m, &mut backend);
+        }
+        assert_eq!(exec.stats.iterations_run, 10);
     }
 }

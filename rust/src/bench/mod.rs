@@ -18,6 +18,7 @@ use crate::metrics::{fmt_bytes, fmt_bw, fmt_rate, fmt_time, Figure, KvTable, Ser
 use crate::microbench;
 use crate::nam::NamDevice;
 use crate::ompss::{OmpssRuntime, Resilience};
+use crate::sched::{self, FleetConfig, FleetReport};
 use crate::scr::multilevel::{MultiLevelConfig, MultiLevelScr};
 use crate::scr::{Scr, Strategy};
 use crate::sim::reference::RefSim;
@@ -509,7 +510,8 @@ pub fn cb_split() -> Vec<Exhibit> {
 /// (the `# engine:` events/sec stats line in `--csv` mode).  The `scale`
 /// engine bench is intentionally **not** listed: it measures wall-clock,
 /// so bundling it into `all` would make `bench all` output machine-
-/// dependent.
+/// dependent.  `fleet` is likewise separate: it takes its own flags
+/// (`--sweep`, `--mtbf`, `--json`) and writes a trajectory artifact.
 pub fn names() -> &'static [&'static str] {
     &[
         "table1", "table2", "table3", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
@@ -820,6 +822,163 @@ pub fn scale_report(cfg: &ScaleConfig) -> (Vec<Exhibit>, Json) {
         );
     }
     (vec![Exhibit::Fig(eps_fig), Exhibit::Fig(wall_fig), Exhibit::Table(t)], json)
+}
+
+// ----------------------------------------------------------------------
+// `repro bench fleet` — the co-scheduling exhibit (DESIGN.md section 11)
+// ----------------------------------------------------------------------
+
+/// Configuration of the fleet sweep.
+#[derive(Debug, Clone)]
+pub struct FleetBenchConfig {
+    /// Job counts to sweep; each point runs the same synthetic mix under
+    /// both policies.
+    pub sweep: Vec<usize>,
+    pub seed: u64,
+    /// Optional exponential per-node MTBF, to exercise the
+    /// failure→restart→requeue path inside the sweep.
+    pub mtbf_node: Option<f64>,
+}
+
+impl Default for FleetBenchConfig {
+    fn default() -> Self {
+        Self { sweep: vec![2, 4, 8, 16], seed: DEFAULT_SEED, mtbf_node: None }
+    }
+}
+
+/// One (job count, policy) measurement of the fleet sweep.
+#[derive(Debug)]
+pub struct FleetPoint {
+    pub jobs: usize,
+    pub policy: sched::policy::Policy,
+    pub report: FleetReport,
+}
+
+/// Run the sweep: every job count under both policies, same seed, on a
+/// fresh DEEP-ER prototype machine each time.
+pub fn fleet_points(cfg: &FleetBenchConfig) -> Vec<FleetPoint> {
+    let mut out = Vec::new();
+    for &n in &cfg.sweep {
+        for policy in sched::policy::Policy::ALL {
+            let fleet_cfg = FleetConfig {
+                policy,
+                seed: cfg.seed,
+                mtbf_node: cfg.mtbf_node,
+                ..FleetConfig::default()
+            };
+            let report = sched::run_fleet(sched::synthetic_jobs(n, cfg.seed), fleet_cfg)
+                .expect("synthetic jobs fit the DEEP-ER prototype");
+            out.push(FleetPoint { jobs: n, policy, report });
+        }
+    }
+    out
+}
+
+fn fleet_json(cfg: &FleetBenchConfig, points: &[FleetPoint]) -> Json {
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("fleet".into()));
+    doc.insert("schema_version".into(), Json::Num(1.0));
+    doc.insert("seed".into(), Json::Num(cfg.seed as f64));
+    doc.insert(
+        "mtbf_node_s".into(),
+        cfg.mtbf_node.map(Json::Num).unwrap_or(Json::Null),
+    );
+    doc.insert(
+        "sweep".into(),
+        Json::Arr(cfg.sweep.iter().map(|&n| Json::Num(n as f64)).collect()),
+    );
+    doc.insert(
+        "points".into(),
+        Json::Arr(
+            points
+                .iter()
+                .map(|p| {
+                    let mut o = BTreeMap::new();
+                    o.insert("jobs".into(), Json::Num(p.jobs as f64));
+                    o.insert("policy".into(), Json::Str(p.policy.name().into()));
+                    o.insert("makespan_s".into(), Json::Num(p.report.makespan));
+                    o.insert("utilization".into(), Json::Num(p.report.utilization));
+                    o.insert("avg_wait_s".into(), Json::Num(p.report.avg_wait));
+                    o.insert(
+                        "failures_injected".into(),
+                        Json::Num(p.report.failures_injected as f64),
+                    );
+                    o.insert("sim_events".into(), Json::Num(p.report.sim_events as f64));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    // Headline: backfill's wait-time win at the largest sweep point.
+    let largest = cfg.sweep.iter().copied().max();
+    let at = |policy: sched::policy::Policy| {
+        points
+            .iter()
+            .find(|p| Some(p.jobs) == largest && p.policy == policy)
+            .map(|p| p.report.avg_wait)
+    };
+    let headline = match (at(sched::policy::Policy::Fcfs), at(sched::policy::Policy::Backfill)) {
+        (Some(f), Some(b)) => Json::Num(f - b),
+        _ => Json::Null,
+    };
+    doc.insert("backfill_wait_saving_at_largest_point_s".into(), headline);
+    doc.insert(
+        "largest_point_jobs".into(),
+        largest.map(|n| Json::Num(n as f64)).unwrap_or(Json::Null),
+    );
+    Json::Obj(doc)
+}
+
+/// The `repro bench fleet` exhibit: sweep co-scheduled job counts under
+/// both policies, reporting makespan, utilization and queue waits, and
+/// return the `BENCH_fleet.json` trajectory document.
+pub fn fleet_report(cfg: &FleetBenchConfig) -> (Vec<Exhibit>, Json) {
+    let points = fleet_points(cfg);
+    let json = fleet_json(cfg, &points);
+
+    let mut mk_fig = Figure::new(
+        "Fleet: makespan vs co-scheduled jobs (DEEP-ER prototype, mixed apps)",
+        "jobs",
+        "s",
+    );
+    let mut ut_fig = Figure::new("Fleet: machine utilization vs co-scheduled jobs", "jobs", "frac");
+    let mut wait_fig = Figure::new("Fleet: mean queue wait vs co-scheduled jobs", "jobs", "s");
+    for policy in sched::policy::Policy::ALL {
+        let mut mk = Series::new(policy.name());
+        let mut ut = Series::new(policy.name());
+        let mut wt = Series::new(policy.name());
+        for p in points.iter().filter(|p| p.policy == policy) {
+            mk.push(p.jobs as f64, p.report.makespan);
+            ut.push(p.jobs as f64, p.report.utilization);
+            wt.push(p.jobs as f64, p.report.avg_wait);
+        }
+        mk_fig.add(mk);
+        ut_fig.add(ut);
+        wait_fig.add(wt);
+    }
+
+    let mut t = KvTable::new("Fleet summary (per sweep point: makespan / utilization / avg wait)");
+    for p in &points {
+        t.row(
+            format!("{} jobs, {}", p.jobs, p.policy.name()),
+            format!(
+                "{} makespan, {:.1} % util, {} avg wait, {} failures",
+                fmt_time(p.report.makespan),
+                p.report.utilization * 100.0,
+                fmt_time(p.report.avg_wait),
+                p.report.failures_injected
+            ),
+        );
+    }
+    (
+        vec![
+            Exhibit::Fig(mk_fig),
+            Exhibit::Fig(ut_fig),
+            Exhibit::Fig(wait_fig),
+            Exhibit::Table(t),
+        ],
+        json,
+    )
 }
 
 #[cfg(test)]

@@ -29,6 +29,9 @@
 //! * [`ompss`] — OmpSs task runtime with the three DEEP-ER resiliency
 //!   features (lightweight CP, persistent CP, resilient offload).
 //! * [`apps`] — the co-design applications: N-body, xPic, GERShWIN, FWI.
+//! * [`sched`] — the multi-tenant fleet scheduler: FCFS / conservative
+//!   backfill over one shared machine, concurrent jobs on one clock,
+//!   failure → restart → requeue (DESIGN.md section 11).
 //! * [`runtime`] — PJRT executor for the AOT-lowered JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`); the only bridge to real compute.
 //! * [`bench`] — harnesses regenerating every paper figure/table.
@@ -46,6 +49,7 @@ pub mod nam;
 pub mod ompss;
 pub mod psmpi;
 pub mod runtime;
+pub mod sched;
 pub mod scr;
 pub mod sim;
 pub mod sionlib;

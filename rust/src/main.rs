@@ -6,6 +6,7 @@
 //! repro run [--app nbody|xpic|gershwin|fwi] [--strategy single|partner|buddy|dist-xor|nam-xor]
 //!           [--iterations N] [--cp-interval N] [--fail-at I] [--mtbf S] [--seed N]
 //!           [--nodes N] [--multilevel] [--async-flush]
+//! repro fleet [--jobs N] [--policy fcfs|backfill] [--seed S] [--mtbf S] [--json PATH]
 //! repro e2e [--artifacts DIR]
 //! ```
 
@@ -13,6 +14,7 @@ use deeper::apps::{self, run_iterations, run_iterations_multilevel, IterationJob
 use deeper::bench;
 use deeper::metrics::fmt_time;
 use deeper::runtime::{default_artifacts_dir, Runtime, Tensor};
+use deeper::sched::{self, FleetConfig, Policy};
 use deeper::scr::multilevel::{MultiLevelConfig, MultiLevelScr};
 use deeper::scr::{Scr, Strategy};
 use deeper::system::failure::FailurePlan;
@@ -29,6 +31,9 @@ USAGE:
   repro run [--app nbody|xpic|gershwin|fwi] [--strategy single|partner|buddy|dist-xor|nam-xor]
             [--iterations N] [--cp-interval N] [--fail-at I] [--mtbf S] [--seed N]
             [--nodes N] [--multilevel] [--async-flush]
+  repro fleet [--jobs N] [--policy fcfs|backfill] [--seed S] [--mtbf S]
+              [--json PATH]
+  repro bench fleet [--sweep N1,N2,..] [--mtbf S] [--json PATH] [--csv] [--seed N]
   repro split [--iterations N]          (Cluster-Booster division of labour)
   repro e2e [--artifacts DIR]
 
@@ -37,6 +42,13 @@ USAGE:
   --mtbf S       sample node failures with an exponential per-node MTBF of
                  S seconds (reproducible via --seed)
   --seed N       seed for stochastic failure schedules (default 0xDEE9E5)
+
+  fleet co-schedules N synthetic jobs (mixed apps, node splits, checkpoint
+  strategies, priorities drawn from --seed) on one shared DEEP-ER
+  prototype machine under the chosen policy; node failures kill the
+  owning job, restart it from its best settled checkpoint and requeue it.
+  bench fleet sweeps job counts under both policies and writes the
+  BENCH_fleet.json trajectory artifact (--json PATH).
 
   bench scale sweeps the DES engine over growing concurrent-flow counts
   (default 1000,10000,100000), timing it against the naive reference
@@ -74,20 +86,27 @@ fn print_exhibits(name: &str, csv: bool, seed: u64) -> Option<()> {
     Some(())
 }
 
-fn cmd_bench_scale(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
-    let defaults = bench::ScaleConfig::default();
+/// Parse a `--sweep N1,N2,..` comma list (shared by the scale and fleet
+/// bench commands); `noun` names the counted thing in error messages.
+fn parse_sweep(args: &Args, noun: &str, default: &[usize]) -> anyhow::Result<Vec<usize>> {
     let sweep: Vec<usize> = match args.flag("sweep") {
         Some(s) => s
             .split(',')
             .map(|w| {
                 let w = w.trim();
                 w.parse()
-                    .map_err(|_| anyhow::anyhow!("--sweep: invalid flow count {w:?}"))
+                    .map_err(|_| anyhow::anyhow!("--sweep: invalid {noun} {w:?}"))
             })
             .collect::<anyhow::Result<_>>()?,
-        None => defaults.sweep.clone(),
+        None => default.to_vec(),
     };
-    anyhow::ensure!(!sweep.is_empty(), "--sweep needs a comma-separated list of flow counts");
+    anyhow::ensure!(!sweep.is_empty(), "--sweep needs a comma-separated list of {noun}s");
+    Ok(sweep)
+}
+
+fn cmd_bench_scale(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
+    let defaults = bench::ScaleConfig::default();
+    let sweep = parse_sweep(args, "flow count", &defaults.sweep)?;
     let cfg = bench::ScaleConfig {
         sweep,
         seed,
@@ -111,6 +130,21 @@ fn cmd_bench_scale(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_bench_fleet(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
+    let defaults = bench::FleetBenchConfig::default();
+    let sweep = parse_sweep(args, "job count", &defaults.sweep)?;
+    let cfg = bench::FleetBenchConfig { sweep, seed, mtbf_node: args.get_parsed::<f64>("mtbf")? };
+    let (exhibits, json) = bench::fleet_report(&cfg);
+    for e in exhibits {
+        println!("{}", if csv { e.render_csv() } else { e.render() });
+    }
+    let path = args.get_str("json", "BENCH_fleet.json");
+    std::fs::write(path, json.to_pretty_string())
+        .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+    println!("{}wrote {path}", if csv { "# " } else { "" });
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let name = args
         .positionals
@@ -122,6 +156,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     if name == "scale" {
         return cmd_bench_scale(args, csv, seed);
     }
+    if name == "fleet" {
+        return cmd_bench_fleet(args, csv, seed);
+    }
     if name == "all" {
         for n in bench::names() {
             println!("--- {n} ---");
@@ -131,9 +168,64 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     }
     print_exhibits(name, csv, seed).ok_or_else(|| {
         anyhow::anyhow!(
-            "unknown exhibit {name}; try fig3..fig10, fig8-async, table1..table3, cb-split, scale, all"
+            "unknown exhibit {name}; try fig3..fig10, fig8-async, table1..table3, cb-split, scale, fleet, all"
         )
     })?;
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_parsed::<usize>("jobs")?.unwrap_or(8);
+    anyhow::ensure!(n > 0, "--jobs must be positive");
+    let policy = Policy::parse(args.get_str("policy", "fcfs"))?;
+    let seed = args.get_u64("seed", bench::DEFAULT_SEED);
+    let mtbf = args.get_parsed::<f64>("mtbf")?;
+    let cfg = FleetConfig { policy, seed, mtbf_node: mtbf, ..FleetConfig::default() };
+    let report = sched::run_fleet(sched::synthetic_jobs(n, seed), cfg)?;
+
+    println!(
+        "fleet         : {} jobs, policy {}, seed {seed}{}",
+        report.jobs.len(),
+        report.policy.name(),
+        match report.mtbf_node {
+            Some(m) => format!(", per-node MTBF {m} s"),
+            None => ", no failure injection".into(),
+        }
+    );
+    println!(
+        "{:<22} {:>5} {:>5} {:>4} {:>9} {:>9} {:>9} {:>5} {:>4} {:>7}",
+        "job", "nodes", "prio", "iter", "start", "end", "wait", "fail", "rq", "cp-ovh"
+    );
+    for j in &report.jobs {
+        println!(
+            "{:<22} {:>2}c+{:>1}b {:>5} {:>4} {:>9} {:>9} {:>9} {:>5} {:>4} {:>6.1}%",
+            j.name,
+            j.cluster,
+            j.booster,
+            j.priority,
+            j.iterations,
+            fmt_time(j.first_start),
+            fmt_time(j.finished_at),
+            fmt_time(j.wait_time),
+            j.stats.failures_hit,
+            j.requeues,
+            j.stats.ckpt_overhead() * 100.0
+        );
+    }
+    println!("makespan      : {}", fmt_time(report.makespan));
+    println!("utilization   : {:.1} %", report.utilization * 100.0);
+    println!("avg wait      : {}", fmt_time(report.avg_wait));
+    println!(
+        "failures      : {} on jobs, {} on idle nodes",
+        report.failures_injected, report.idle_failures
+    );
+    println!("finish order  : {:?}", report.finish_order);
+    println!("sim events    : {}", report.sim_events);
+    if let Some(path) = args.flag("json") {
+        std::fs::write(path, report.to_json().to_pretty_string())
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
@@ -284,6 +376,7 @@ fn main() -> anyhow::Result<()> {
             Ok(())
         }
         Some("run") => cmd_run(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("e2e") => cmd_e2e(&args),
         Some(other) => {
             eprintln!("unknown subcommand {other}\n{USAGE}");

@@ -44,6 +44,8 @@ pub struct TaskGraph {
 }
 
 impl TaskGraph {
+    /// Empty graph; equivalent to [`TaskGraph::default`] (clippy's
+    /// `new_without_default` pairing, pinned by `default_matches_new`).
     pub fn new() -> Self {
         Self::default()
     }
@@ -361,6 +363,17 @@ mod tests {
             });
         }
         g
+    }
+
+    #[test]
+    fn default_matches_new() {
+        // Guards the Default impl clippy's new_without_default pairs
+        // with `TaskGraph::new()` (and the same invariant repo-wide:
+        // every argless `new()` type derives or implements Default).
+        let d = TaskGraph::default();
+        let n = TaskGraph::new();
+        assert!(d.tasks.is_empty() && n.tasks.is_empty());
+        assert!(d.waves().is_empty());
     }
 
     #[test]

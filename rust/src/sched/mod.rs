@@ -1,0 +1,919 @@
+//! Multi-tenant fleet scheduler: co-scheduled Cluster-Booster workloads
+//! on one shared machine.
+//!
+//! The Cluster-Booster value proposition (paper Section II) is
+//! *co-scheduling*: heterogeneous applications share one machine, its
+//! BeeGFS/NAM I/O tiers and its failure domain.  This module is the batch
+//! system on top of everything below it: it admits a queue of
+//! [`JobSpec`]s, allocates nodes from one shared [`Machine`] without
+//! oversubscription ([`Machine::try_allocate`] is the audited ledger),
+//! and drives all running jobs **concurrently on a single virtual
+//! clock** through the resumable [`JobExec`] state machine — so
+//! checkpoint flushes, halo exchanges and NAM parity pulls of different
+//! tenants genuinely contend for the shared BeeGFS servers, NAM boards
+//! and fabric instead of running back-to-back.
+//!
+//! Two policies ([`policy::Policy`]): **FCFS with head reservation** and
+//! **conservative backfill** over a capacity profile.  Failure handling
+//! follows the requeue/restart resilience pattern (Hukerikar &
+//! Engelmann's pattern language): a node loss kills the owning job,
+//! triggers its SCR/multilevel restart path, rolls it back to its best
+//! settled checkpoint iteration and requeues it; the scheduler then
+//! re-dispatches it under the active policy.
+//!
+//! Determinism: one event-driven control loop over [`Sim::step_event`],
+//! jobs advanced in (completion-time, job-id) order, failures drawn from
+//! a seeded plan — the same seed reproduces the fleet bit-for-bit
+//! (pinned by `rust/tests/integration_fleet.rs`).
+//!
+//! [`Sim::step_event`]: crate::sim::Sim::step_event
+
+pub mod policy;
+
+use std::collections::BTreeMap;
+
+use crate::apps::driver::{CkptBackendRef, JobExec};
+use crate::apps::{AppProfile, IterationJob, RunStats};
+use crate::scr::multilevel::{MultiLevelConfig, MultiLevelScr};
+use crate::scr::{Scr, Strategy};
+use crate::sim::rng::SplitMix64;
+use crate::sim::SimTime;
+use crate::system::failure::{Failure, FailurePlan};
+use crate::system::{presets, Machine, MachineSpec, NodeKind};
+use crate::util::json::Json;
+use self::policy::{NodeReq, QueuedReq, RunningRes};
+pub use self::policy::Policy;
+
+/// How a fleet job protects itself against failures.
+#[derive(Debug, Clone)]
+pub enum CkptStrategy {
+    /// Unprotected: any failure reruns the job from iteration 0.
+    None,
+    /// One single-level SCR strategy.
+    Scr(Strategy),
+    /// The multi-level checkpointer (L1 local / L2 strategy / L3 global),
+    /// optionally with the background flush.
+    MultiLevel(MultiLevelConfig),
+}
+
+impl CkptStrategy {
+    fn name(&self) -> String {
+        match self {
+            CkptStrategy::None => "none".into(),
+            CkptStrategy::Scr(s) => s.name().into(),
+            CkptStrategy::MultiLevel(c) => format!(
+                "multilevel/{}{}",
+                c.l2_strategy.name(),
+                if c.async_flush { "+async" } else { "" }
+            ),
+        }
+    }
+}
+
+/// One job submission: application profile, node split across the two
+/// partitions, checkpoint discipline and priority.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    pub profile: AppProfile,
+    /// Nodes requested from the Cluster partition.
+    pub cluster_nodes: usize,
+    /// Nodes requested from the Booster partition.
+    pub booster_nodes: usize,
+    pub iterations: usize,
+    /// Checkpoint every `cp_interval` iterations (0 disables).
+    pub cp_interval: usize,
+    pub ckpt: CkptStrategy,
+    /// Larger runs earlier; ties broken by submission order.
+    pub priority: u32,
+}
+
+/// Walltime estimate the backfill reservations are built from: exact for
+/// the compute part (each node's CPU is private, so compute never
+/// contends across jobs), doubled for the contention-dependent exchange
+/// and checkpoint terms so the estimate stays an upper bound in ordinary
+/// mixes — which is what the conservative-backfill no-delay guarantee
+/// leans on.  `from_iter` estimates the *remaining* runtime of a
+/// partially executed (requeued) job.
+pub fn estimate_runtime(spec: &JobSpec, m: &MachineSpec, from_iter: usize) -> SimTime {
+    let iters = spec.iterations.saturating_sub(from_iter) as f64;
+    if iters == 0.0 {
+        return 0.0;
+    }
+    let mut peak = f64::INFINITY;
+    if spec.cluster_nodes > 0 {
+        peak = peak.min(m.cluster.peak_flops);
+    }
+    if spec.booster_nodes > 0 {
+        if let Some(b) = &m.booster {
+            peak = peak.min(b.peak_flops);
+        }
+    }
+    assert!(peak.is_finite(), "job requests no schedulable partition");
+    let p = &spec.profile;
+    let t_compute = p.flops_per_iter_per_node / (p.cpu_efficiency.clamp(1e-3, 1.0) * peak);
+    let n_nodes = (spec.cluster_nodes + spec.booster_nodes) as f64;
+    let t_exch = if p.halo_bytes > 0.0 && n_nodes > 1.0 {
+        2.0 * p.halo_bytes / m.cluster.nic_bw
+    } else {
+        0.0
+    };
+    let cps = if spec.cp_interval == 0 || matches!(spec.ckpt, CkptStrategy::None) {
+        0.0
+    } else {
+        (iters / spec.cp_interval as f64).floor()
+    };
+    let nvme_bw = m.cluster.nvme.as_ref().map(|d| d.write_bw).unwrap_or(1e9);
+    let t_ckpt = 4.0 * p.ckpt_bytes_per_node / nvme_bw;
+    // The tiny relative inflation keeps the estimate an upper bound under
+    // floating-point drift on the exactly-predictable compute-only path.
+    (iters * (t_compute + t_exch) + cps * t_ckpt) * (1.0 + 1e-9) + 1e-9
+}
+
+/// The per-job checkpoint machinery the scheduler owns (the [`JobExec`]
+/// borrows it as a [`CkptBackendRef`] on every advance).
+#[derive(Debug)]
+enum CkptBackend {
+    None,
+    Scr(Scr),
+    Multi(MultiLevelScr),
+}
+
+impl CkptBackend {
+    fn of(strategy: &CkptStrategy) -> Self {
+        match strategy {
+            CkptStrategy::None => CkptBackend::None,
+            CkptStrategy::Scr(s) => CkptBackend::Scr(Scr::new(*s)),
+            CkptStrategy::MultiLevel(cfg) => CkptBackend::Multi(MultiLevelScr::new(cfg.clone())),
+        }
+    }
+
+    fn as_backend_ref(&mut self) -> CkptBackendRef<'_> {
+        match self {
+            CkptBackend::None => CkptBackendRef::None,
+            CkptBackend::Scr(s) => CkptBackendRef::Scr(s),
+            CkptBackend::Multi(ml) => CkptBackendRef::Multi(ml),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum JobStatus {
+    Queued,
+    Running,
+    Done,
+}
+
+#[derive(Debug)]
+struct JobState {
+    spec: JobSpec,
+    exec: JobExec,
+    backend: CkptBackend,
+    status: JobStatus,
+    enqueued_at: SimTime,
+    first_start: Option<SimTime>,
+    finished_at: Option<SimTime>,
+    wait_time: SimTime,
+    requeues: usize,
+    held: Vec<usize>,
+    bind_at: SimTime,
+    est_end: SimTime,
+    node_seconds: f64,
+    open_seg: Option<usize>,
+}
+
+/// One contiguous interval during which a job held a concrete node set —
+/// the audit trail `rust/tests/prop_sched.rs` checks for
+/// oversubscription.
+#[derive(Debug, Clone)]
+pub struct AllocSegment {
+    pub job: usize,
+    pub nodes: Vec<usize>,
+    pub from: SimTime,
+    pub until: SimTime,
+}
+
+/// Fleet-level configuration.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub policy: Policy,
+    /// Seeds the failure schedule (and is echoed into the report).
+    pub seed: u64,
+    /// Exponential per-node MTBF across the whole machine; None disables
+    /// failure injection.
+    pub mtbf_node: Option<f64>,
+    /// Horizon the failure schedule is sampled over.
+    pub failure_horizon: SimTime,
+    /// Explicit failure plan (tests); wins over `mtbf_node`.  Only the
+    /// time-keyed entries are consumed, and `Failure::node` is a
+    /// **machine-global** node index here (not a job-list index as in
+    /// the per-job driver plans).
+    pub failure_plan: Option<FailurePlan>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            policy: Policy::Fcfs,
+            seed: 0xDEE9E5,
+            mtbf_node: None,
+            failure_horizon: 1e7,
+            failure_plan: None,
+        }
+    }
+}
+
+/// Per-job outcome in the fleet report.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub id: usize,
+    pub name: String,
+    pub app: &'static str,
+    pub ckpt: String,
+    pub priority: u32,
+    pub cluster: usize,
+    pub booster: usize,
+    pub iterations: usize,
+    pub stats: RunStats,
+    pub requeues: usize,
+    pub first_start: SimTime,
+    pub finished_at: SimTime,
+    pub wait_time: SimTime,
+}
+
+/// Outcome of one fleet run.
+#[derive(Debug)]
+pub struct FleetReport {
+    pub policy: Policy,
+    pub seed: u64,
+    pub mtbf_node: Option<f64>,
+    pub jobs: Vec<JobReport>,
+    /// Job ids in completion order (a golden-determinism anchor).
+    pub finish_order: Vec<usize>,
+    pub makespan: SimTime,
+    /// Allocated node-seconds over (total nodes x makespan).
+    pub utilization: f64,
+    pub avg_wait: SimTime,
+    /// Failures that hit an allocated node (killed a job).
+    pub failures_injected: usize,
+    /// Failures that landed on idle nodes (no job to kill).
+    pub idle_failures: usize,
+    /// Events the shared simulator processed (per-`Sim`, so concurrent
+    /// test binaries cannot pollute it the way the process-wide counter
+    /// could).
+    pub sim_events: u64,
+    pub allocations: Vec<AllocSegment>,
+}
+
+impl FleetReport {
+    /// Deterministic JSON summary (object keys sorted, floats via the
+    /// shortest round-trip formatting): byte-identical across same-seed
+    /// runs, which is exactly what the golden test compares.
+    pub fn to_json(&self) -> Json {
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".into(), Json::Str("fleet".into()));
+        doc.insert("schema_version".into(), Json::Num(1.0));
+        doc.insert("policy".into(), Json::Str(self.policy.name().into()));
+        doc.insert("seed".into(), Json::Num(self.seed as f64));
+        doc.insert(
+            "mtbf_node_s".into(),
+            self.mtbf_node.map(Json::Num).unwrap_or(Json::Null),
+        );
+        doc.insert("makespan_s".into(), Json::Num(self.makespan));
+        doc.insert("utilization".into(), Json::Num(self.utilization));
+        doc.insert("avg_wait_s".into(), Json::Num(self.avg_wait));
+        doc.insert("failures_injected".into(), Json::Num(self.failures_injected as f64));
+        doc.insert("idle_failures".into(), Json::Num(self.idle_failures as f64));
+        doc.insert("sim_events".into(), Json::Num(self.sim_events as f64));
+        doc.insert(
+            "finish_order".into(),
+            Json::Arr(self.finish_order.iter().map(|&i| Json::Num(i as f64)).collect()),
+        );
+        doc.insert(
+            "jobs".into(),
+            Json::Arr(
+                self.jobs
+                    .iter()
+                    .map(|j| {
+                        let mut o = BTreeMap::new();
+                        o.insert("id".into(), Json::Num(j.id as f64));
+                        o.insert("name".into(), Json::Str(j.name.clone()));
+                        o.insert("app".into(), Json::Str(j.app.into()));
+                        o.insert("ckpt".into(), Json::Str(j.ckpt.clone()));
+                        o.insert("priority".into(), Json::Num(j.priority as f64));
+                        o.insert("cluster_nodes".into(), Json::Num(j.cluster as f64));
+                        o.insert("booster_nodes".into(), Json::Num(j.booster as f64));
+                        o.insert("iterations".into(), Json::Num(j.iterations as f64));
+                        o.insert(
+                            "iterations_run".into(),
+                            Json::Num(j.stats.iterations_run as f64),
+                        );
+                        o.insert(
+                            "checkpoints".into(),
+                            Json::Num(j.stats.checkpoints_taken as f64),
+                        );
+                        o.insert("failures".into(), Json::Num(j.stats.failures_hit as f64));
+                        o.insert("requeues".into(), Json::Num(j.requeues as f64));
+                        o.insert("first_start_s".into(), Json::Num(j.first_start));
+                        o.insert("finished_s".into(), Json::Num(j.finished_at));
+                        o.insert("wait_s".into(), Json::Num(j.wait_time));
+                        o.insert("active_s".into(), Json::Num(j.stats.total_time));
+                        o.insert("compute_s".into(), Json::Num(j.stats.compute_time));
+                        o.insert("ckpt_s".into(), Json::Num(j.stats.ckpt_time));
+                        o.insert("blocked_s".into(), Json::Num(j.stats.blocked_time));
+                        o.insert("restart_s".into(), Json::Num(j.stats.restart_time));
+                        o.insert("ckpt_overhead".into(), Json::Num(j.stats.ckpt_overhead()));
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(doc)
+    }
+}
+
+/// The batch system: a queue of jobs over one shared machine.
+#[derive(Debug)]
+pub struct Scheduler {
+    m: Machine,
+    cfg: FleetConfig,
+    jobs: Vec<JobState>,
+    queue: Vec<usize>,
+    /// Time-ordered failure schedule and the cursor of the next due one.
+    failures: Vec<Failure>,
+    next_failure: usize,
+    failures_injected: usize,
+    idle_failures: usize,
+    finish_order: Vec<usize>,
+    allocations: Vec<AllocSegment>,
+}
+
+impl Scheduler {
+    pub fn new(m: Machine, cfg: FleetConfig) -> Self {
+        let mut failures = match (&cfg.failure_plan, cfg.mtbf_node) {
+            (Some(plan), _) => plan.at_times.clone(),
+            (None, Some(mtbf)) => {
+                FailurePlan::exponential(m.nodes.len(), mtbf, cfg.failure_horizon, cfg.seed)
+                    .at_times
+            }
+            (None, None) => Vec::new(),
+        };
+        // The cursor in process_due_failures assumes time order (the
+        // exponential sampler already is; explicit test plans may not be).
+        failures.sort_by(|a, b| a.at.partial_cmp(&b.at).expect("finite failure times"));
+        Self {
+            m,
+            cfg,
+            jobs: Vec::new(),
+            queue: Vec::new(),
+            failures,
+            next_failure: 0,
+            failures_injected: 0,
+            idle_failures: 0,
+            finish_order: Vec::new(),
+            allocations: Vec::new(),
+        }
+    }
+
+    /// Shared machine (read access for tests / reporting).
+    pub fn machine(&self) -> &Machine {
+        &self.m
+    }
+
+    /// Admit a job; validated against the machine's partition sizes so a
+    /// queued job can always eventually be placed.
+    pub fn submit(&mut self, spec: JobSpec) -> crate::Result<usize> {
+        anyhow::ensure!(
+            spec.cluster_nodes + spec.booster_nodes > 0,
+            "job {:?} requests no nodes",
+            spec.name
+        );
+        anyhow::ensure!(
+            spec.cluster_nodes <= self.m.spec.n_cluster,
+            "job {:?} wants {} cluster nodes of {}",
+            spec.name,
+            spec.cluster_nodes,
+            self.m.spec.n_cluster
+        );
+        anyhow::ensure!(
+            spec.booster_nodes <= self.m.spec.n_booster,
+            "job {:?} wants {} booster nodes of {}",
+            spec.name,
+            spec.booster_nodes,
+            self.m.spec.n_booster
+        );
+        anyhow::ensure!(spec.iterations > 0, "job {:?} has no iterations", spec.name);
+        if matches!(spec.ckpt, CkptStrategy::MultiLevel(_)) {
+            anyhow::ensure!(
+                spec.cp_interval > 0,
+                "job {:?}: multilevel checkpointing needs a cadence",
+                spec.name
+            );
+        }
+        let id = self.jobs.len();
+        let job = IterationJob {
+            profile: spec.profile.clone(),
+            iterations: spec.iterations,
+            cp_interval: spec.cp_interval,
+            // Fleet failures are machine-level and injected by the
+            // scheduler; the per-job plan stays empty.
+            failures: FailurePlan::none(),
+        };
+        let backend = CkptBackend::of(&spec.ckpt);
+        self.jobs.push(JobState {
+            exec: JobExec::new(job),
+            backend,
+            spec,
+            status: JobStatus::Queued,
+            enqueued_at: self.m.sim.now(),
+            first_start: None,
+            finished_at: None,
+            wait_time: 0.0,
+            requeues: 0,
+            held: Vec::new(),
+            bind_at: 0.0,
+            est_end: 0.0,
+            node_seconds: 0.0,
+            open_seg: None,
+        });
+        self.queue.push(id);
+        Ok(id)
+    }
+
+    /// Run the fleet to completion and report.
+    pub fn run(mut self) -> FleetReport {
+        let t0 = self.m.sim.now();
+        let events0 = self.m.sim.events();
+        self.dispatch();
+        loop {
+            self.process_due_failures();
+            // The running job whose front op completed earliest (ties by
+            // job id) gets control; jobs at a boundary count as ready now.
+            let mut best: Option<(SimTime, usize)> = None;
+            for (id, j) in self.jobs.iter().enumerate() {
+                if j.status != JobStatus::Running {
+                    continue;
+                }
+                let t = match j.exec.front_op() {
+                    None => self.m.sim.now(),
+                    Some(op) => match self.m.sim.op_completion(&op) {
+                        Some(t) => t,
+                        None => continue,
+                    },
+                };
+                let better = match best {
+                    None => true,
+                    Some((bt, bid)) => t < bt || (t == bt && id < bid),
+                };
+                if better {
+                    best = Some((t, id));
+                }
+            }
+            if let Some((_, id)) = best {
+                self.advance_job(id);
+                continue;
+            }
+            if self.jobs.iter().all(|j| j.status != JobStatus::Running) {
+                if self.queue.is_empty() {
+                    break;
+                }
+                self.dispatch();
+                assert!(
+                    self.jobs.iter().any(|j| j.status == JobStatus::Running),
+                    "scheduler stall: a queued job cannot be placed on an empty machine"
+                );
+                continue;
+            }
+            if !self.m.sim.step_event() {
+                panic!("fleet deadlock: running jobs with no simulation events");
+            }
+        }
+        self.into_report(t0, events0)
+    }
+
+    /// Give one ready job control: settle its completed phase, issue the
+    /// next one, and finish/release it when it completes.
+    fn advance_job(&mut self, id: usize) {
+        let done = {
+            let job = &mut self.jobs[id];
+            let JobState { exec, backend, .. } = job;
+            let mut bref = backend.as_backend_ref();
+            exec.advance(&mut self.m, &mut bref);
+            exec.is_done()
+        };
+        if !done {
+            return;
+        }
+        let now = self.m.sim.now();
+        let (held, seg) = {
+            let job = &mut self.jobs[id];
+            job.status = JobStatus::Done;
+            job.finished_at = Some(now);
+            job.node_seconds += job.held.len() as f64 * (now - job.bind_at);
+            (std::mem::take(&mut job.held), job.open_seg.take())
+        };
+        if let Some(si) = seg {
+            self.allocations[si].until = now;
+        }
+        self.m.release_nodes(&held, id as u64);
+        self.finish_order.push(id);
+        self.dispatch();
+    }
+
+    /// Inject every failure whose timestamp the clock has passed.  A
+    /// failure on an allocated node kills the owning job: restart I/O
+    /// runs as part of the failure cleanup (rolling the job back to its
+    /// best settled checkpoint), then the job is requeued and competes
+    /// for nodes again under the active policy.
+    fn process_due_failures(&mut self) {
+        while self.next_failure < self.failures.len() {
+            let f = self.failures[self.next_failure];
+            if f.at > self.m.sim.now() {
+                break;
+            }
+            self.next_failure += 1;
+            let victim = f.node % self.m.nodes.len();
+            let Some(owner) = self.m.node_owner(victim) else {
+                self.idle_failures += 1;
+                continue;
+            };
+            let id = owner as usize;
+            self.failures_injected += 1;
+            {
+                let job = &mut self.jobs[id];
+                let JobState { exec, backend, .. } = job;
+                let mut bref = backend.as_backend_ref();
+                exec.handle_failure(&mut self.m, &mut bref, victim);
+            }
+            self.requeue(id);
+        }
+    }
+
+    fn requeue(&mut self, id: usize) {
+        let now = self.m.sim.now();
+        let (held, seg) = {
+            let job = &mut self.jobs[id];
+            let released = job.exec.unbind(&self.m);
+            debug_assert_eq!(released, job.held);
+            job.node_seconds += job.held.len() as f64 * (now - job.bind_at);
+            job.status = JobStatus::Queued;
+            job.enqueued_at = now;
+            job.requeues += 1;
+            (std::mem::take(&mut job.held), job.open_seg.take())
+        };
+        if let Some(si) = seg {
+            self.allocations[si].until = now;
+        }
+        self.m.release_nodes(&held, id as u64);
+        self.queue.push(id);
+        self.dispatch();
+    }
+
+    /// Queue order: priority (descending), then submission id.
+    fn sort_queue(&mut self) {
+        let mut q = std::mem::take(&mut self.queue);
+        q.sort_by_key(|&id| (std::cmp::Reverse(self.jobs[id].spec.priority), id));
+        self.queue = q;
+    }
+
+    /// Ask the policy which queued jobs start now, and start them.
+    fn dispatch(&mut self) {
+        if self.queue.is_empty() {
+            return;
+        }
+        self.sort_queue();
+        let now = self.m.sim.now();
+        let free = NodeReq {
+            cluster: self.m.free_count(NodeKind::Cluster),
+            booster: self.m.free_count(NodeKind::Booster),
+        };
+        let queued: Vec<QueuedReq> = self
+            .queue
+            .iter()
+            .map(|&id| {
+                let j = &self.jobs[id];
+                QueuedReq {
+                    id,
+                    req: NodeReq {
+                        cluster: j.spec.cluster_nodes,
+                        booster: j.spec.booster_nodes,
+                    },
+                    est: estimate_runtime(&j.spec, &self.m.spec, j.exec.current_iter()),
+                }
+            })
+            .collect();
+        let running: Vec<RunningRes> = self
+            .jobs
+            .iter()
+            .filter(|j| j.status == JobStatus::Running)
+            .map(|j| RunningRes {
+                req: NodeReq {
+                    cluster: j.spec.cluster_nodes,
+                    booster: j.spec.booster_nodes,
+                },
+                est_end: j.est_end.max(now),
+            })
+            .collect();
+        let starts = policy::plan_starts(self.cfg.policy, now, free, &queued, &running);
+        for id in starts {
+            self.start_job(id, now);
+        }
+    }
+
+    /// Bind a planned start to concrete nodes.  Returns false (leaving
+    /// the job queued) when the machine cannot actually place it: the
+    /// backfill profile treats an *overdue* running job's nodes as free
+    /// (its estimate under-predicted, e.g. under heavy checkpoint
+    /// contention), so a planned start can exceed the real free count.
+    /// Deferring to the next dispatch — triggered when the overdue job
+    /// actually releases — is the correct degradation, not a panic.
+    fn start_job(&mut self, id: usize, now: SimTime) -> bool {
+        let (c, b) = (self.jobs[id].spec.cluster_nodes, self.jobs[id].spec.booster_nodes);
+        let Some(mut nodes) = self.m.try_allocate(NodeKind::Cluster, c, id as u64) else {
+            return false;
+        };
+        match self.m.try_allocate(NodeKind::Booster, b, id as u64) {
+            Some(more) => nodes.extend(more),
+            None => {
+                self.m.release_nodes(&nodes, id as u64);
+                return false;
+            }
+        }
+        let est = estimate_runtime(&self.jobs[id].spec, &self.m.spec, self.jobs[id].exec.current_iter());
+        self.allocations.push(AllocSegment {
+            job: id,
+            nodes: nodes.clone(),
+            from: now,
+            until: f64::INFINITY,
+        });
+        let seg = self.allocations.len() - 1;
+        let job = &mut self.jobs[id];
+        job.wait_time += now - job.enqueued_at;
+        if job.first_start.is_none() {
+            job.first_start = Some(now);
+        }
+        job.bind_at = now;
+        job.est_end = now + est;
+        job.exec.bind(&self.m, nodes.clone());
+        job.held = nodes;
+        job.status = JobStatus::Running;
+        job.open_seg = Some(seg);
+        self.queue.retain(|&q| q != id);
+        true
+    }
+
+    fn into_report(self, t0: SimTime, events0: u64) -> FleetReport {
+        let makespan = self.m.sim.now() - t0;
+        let total_nodes = self.m.nodes.len() as f64;
+        let node_seconds: f64 = self.jobs.iter().map(|j| j.node_seconds).sum();
+        let utilization = if makespan > 0.0 {
+            node_seconds / (total_nodes * makespan)
+        } else {
+            0.0
+        };
+        let n_jobs = self.jobs.len().max(1) as f64;
+        let avg_wait = self.jobs.iter().map(|j| j.wait_time).sum::<f64>() / n_jobs;
+        let jobs = self
+            .jobs
+            .iter()
+            .enumerate()
+            .map(|(id, j)| JobReport {
+                id,
+                name: j.spec.name.clone(),
+                app: j.spec.profile.name,
+                ckpt: j.spec.ckpt.name(),
+                priority: j.spec.priority,
+                cluster: j.spec.cluster_nodes,
+                booster: j.spec.booster_nodes,
+                iterations: j.spec.iterations,
+                stats: j.exec.stats,
+                requeues: j.requeues,
+                first_start: j.first_start.unwrap_or(0.0),
+                finished_at: j.finished_at.unwrap_or(0.0),
+                wait_time: j.wait_time,
+            })
+            .collect();
+        FleetReport {
+            policy: self.cfg.policy,
+            seed: self.cfg.seed,
+            mtbf_node: self.cfg.mtbf_node,
+            jobs,
+            finish_order: self.finish_order,
+            makespan,
+            utilization,
+            avg_wait,
+            failures_injected: self.failures_injected,
+            idle_failures: self.idle_failures,
+            sim_events: self.m.sim.events() - events0,
+            allocations: self.allocations,
+        }
+    }
+}
+
+/// Build the DEEP-ER prototype machine, submit `specs` and run the fleet.
+pub fn run_fleet(specs: Vec<JobSpec>, cfg: FleetConfig) -> crate::Result<FleetReport> {
+    let m = Machine::build(presets::deep_er());
+    let mut s = Scheduler::new(m, cfg);
+    for spec in specs {
+        s.submit(spec)?;
+    }
+    Ok(s.run())
+}
+
+/// A reproducible mixed workload over the five co-design applications:
+/// node splits, iteration counts, checkpoint disciplines and priorities
+/// drawn from a seeded stream.  This is what `repro fleet --jobs N` and
+/// the `repro bench fleet` exhibit submit.
+pub fn synthetic_jobs(n: usize, seed: u64) -> Vec<JobSpec> {
+    let mut rng = SplitMix64::new(seed ^ 0xF1EE7D0C);
+    (0..n)
+        .map(|i| {
+            let profile = match i % 5 {
+                0 => crate::apps::xpic::profile_deep_er(),
+                1 => crate::apps::nbody::profile(),
+                2 => crate::apps::gershwin::profile_p1(),
+                3 => crate::apps::fwi::profile(),
+                _ => crate::apps::xpic::profile_nam(),
+            };
+            let cluster_nodes = 2 + rng.next_below(5) as usize; // 2..=6
+            // Every third job spans the Cluster-Booster divide (the
+            // apps::split division-of-labour shape).
+            let booster_nodes = if i % 3 == 2 { 1 + rng.next_below(3) as usize } else { 0 };
+            let iterations = 16 + rng.next_below(17) as usize; // 16..=32
+            let cp_interval = if rng.next_below(2) == 0 { 5 } else { 8 };
+            let ckpt = match i % 4 {
+                0 => CkptStrategy::Scr(Strategy::Buddy),
+                1 => CkptStrategy::MultiLevel(MultiLevelConfig {
+                    l1_every: 1,
+                    l2_every: 2,
+                    l3_every: 2,
+                    l2_strategy: Strategy::Buddy,
+                    async_flush: true,
+                }),
+                2 => CkptStrategy::Scr(Strategy::Partner),
+                _ => CkptStrategy::None,
+            };
+            let priority = rng.next_below(3) as u32;
+            JobSpec {
+                name: format!("job{i}-{}", profile.name),
+                profile,
+                cluster_nodes,
+                booster_nodes,
+                iterations,
+                cp_interval,
+                ckpt,
+                priority,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn compute_only_spec(name: &str, nodes: usize, iterations: usize) -> JobSpec {
+        JobSpec {
+            name: name.into(),
+            profile: AppProfile {
+                name: "compute-only",
+                flops_per_iter_per_node: 0.5e12,
+                cpu_efficiency: 0.25,
+                ckpt_bytes_per_node: 0.0,
+                halo_bytes: 0.0,
+                io_tasks_per_node: 1,
+                io_records_per_task: 1,
+                artifact: "xpic_step",
+            },
+            cluster_nodes: nodes,
+            booster_nodes: 0,
+            iterations,
+            cp_interval: 0,
+            ckpt: CkptStrategy::None,
+            priority: 0,
+        }
+    }
+
+    #[test]
+    fn two_jobs_share_the_machine_concurrently() {
+        // Both fit at once: both start at t=0 and the makespan is the
+        // slower job alone, not the sum.
+        let specs = vec![
+            compute_only_spec("a", 4, 10),
+            compute_only_spec("b", 4, 10),
+        ];
+        let r = run_fleet(specs, FleetConfig::default()).unwrap();
+        assert_eq!(r.jobs.len(), 2);
+        for j in &r.jobs {
+            assert_eq!(j.first_start, 0.0);
+            assert_eq!(j.stats.iterations_run, 10);
+        }
+        // 0.5e12 flops at 25% of 1 TF/s = 2 s per iteration, 10 iters.
+        assert!((r.makespan - 20.0).abs() < 1e-6, "makespan={}", r.makespan);
+        assert_eq!(r.finish_order, vec![0, 1], "equal finish times tie by id");
+    }
+
+    #[test]
+    fn fcfs_queues_when_the_partition_is_full() {
+        let specs = vec![
+            compute_only_spec("a", 8, 10),
+            compute_only_spec("b", 8, 10),
+            compute_only_spec("c", 8, 10),
+        ];
+        let r = run_fleet(specs, FleetConfig::default()).unwrap();
+        assert_eq!(r.jobs[0].first_start, 0.0);
+        assert_eq!(r.jobs[1].first_start, 0.0);
+        assert!(r.jobs[2].wait_time > 0.0, "third 8-node job must queue");
+        assert!((r.jobs[2].first_start - 20.0).abs() < 1e-6);
+        assert!(r.utilization > 0.0 && r.utilization <= 1.0);
+    }
+
+    #[test]
+    fn priority_reorders_the_queue() {
+        let mut specs = vec![
+            compute_only_spec("a", 16, 10), // fills the cluster
+            compute_only_spec("b", 8, 10),
+            compute_only_spec("c", 8, 10),
+        ];
+        specs[2].priority = 5; // c outranks b once the machine frees up
+        let r = run_fleet(specs, FleetConfig::default()).unwrap();
+        assert!(r.jobs[2].first_start <= r.jobs[1].first_start);
+    }
+
+    #[test]
+    fn failure_requeues_and_the_job_still_completes() {
+        // One targeted failure at t=30 on node 0, held by the only job.
+        let mut spec = compute_only_spec("a", 4, 20);
+        spec.cp_interval = 5;
+        spec.ckpt = CkptStrategy::Scr(Strategy::Buddy);
+        spec.profile.ckpt_bytes_per_node = 1e9;
+        let cfg = FleetConfig {
+            failure_plan: Some(FailurePlan {
+                at_iterations: Vec::new(),
+                at_times: vec![Failure { node: 0, at: 30.0 }],
+            }),
+            ..FleetConfig::default()
+        };
+        let r = run_fleet(vec![spec], cfg).unwrap();
+        assert_eq!(r.failures_injected, 1);
+        assert_eq!(r.jobs[0].stats.failures_hit, 1);
+        assert_eq!(r.jobs[0].requeues, 1);
+        assert!(
+            r.jobs[0].stats.iterations_run > 20,
+            "rollback must re-run iterations ({} run)",
+            r.jobs[0].stats.iterations_run
+        );
+        assert!(r.jobs[0].stats.restart_time > 0.0);
+        assert_eq!(r.finish_order, vec![0]);
+    }
+
+    #[test]
+    fn failure_on_idle_node_kills_nobody() {
+        let cfg = FleetConfig {
+            failure_plan: Some(FailurePlan {
+                at_iterations: Vec::new(),
+                // Node 15 is never allocated by a single 4-node job.
+                at_times: vec![Failure { node: 15, at: 5.0 }],
+            }),
+            ..FleetConfig::default()
+        };
+        let r = run_fleet(vec![compute_only_spec("a", 4, 10)], cfg).unwrap();
+        assert_eq!(r.failures_injected, 0);
+        assert_eq!(r.idle_failures, 1);
+        assert_eq!(r.jobs[0].stats.failures_hit, 0);
+    }
+
+    #[test]
+    fn synthetic_jobs_are_valid_and_deterministic() {
+        let a = synthetic_jobs(10, 7);
+        let b = synthetic_jobs(10, 7);
+        assert_eq!(a.len(), 10);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.cluster_nodes, y.cluster_nodes);
+            assert_eq!(x.booster_nodes, y.booster_nodes);
+            assert_eq!(x.iterations, y.iterations);
+            assert_eq!(x.priority, y.priority);
+        }
+        let spec = presets::deep_er();
+        for s in &a {
+            assert!(s.cluster_nodes >= 2 && s.cluster_nodes <= spec.n_cluster);
+            assert!(s.booster_nodes <= spec.n_booster);
+            assert!(s.iterations > 0 && s.cp_interval > 0);
+            assert!(estimate_runtime(s, &spec, 0) > 0.0);
+        }
+    }
+
+    #[test]
+    fn estimate_is_exact_for_compute_only_jobs() {
+        let spec = compute_only_spec("a", 4, 10);
+        let m = presets::deep_er();
+        let est = estimate_runtime(&spec, &m, 0);
+        // 10 x 0.5e12 / (0.25 x 1e12) = 20 s (plus the ulp inflation).
+        assert!((est - 20.0).abs() < 1e-3, "est={est}");
+        // Remaining-work form.
+        let half = estimate_runtime(&spec, &m, 5);
+        assert!((half - 10.0).abs() < 1e-3, "half={half}");
+        assert_eq!(estimate_runtime(&spec, &m, 10), 0.0);
+    }
+}

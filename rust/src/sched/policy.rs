@@ -1,0 +1,321 @@
+//! Scheduling policies: FCFS with head reservation, and conservative
+//! backfill over a capacity profile.
+//!
+//! Everything here is pure bookkeeping over node *counts* (nodes of one
+//! kind are fungible — the machine ledger picks concrete indices), which
+//! keeps the policies unit-testable without a simulator.
+//!
+//! **FCFS-with-head-reservation**: jobs start strictly in queue order;
+//! the first job that does not fit blocks everything behind it (its
+//! implicit reservation is "all future releases until I fit").
+//!
+//! **Conservative backfill**: every queued job, in queue order, gets a
+//! reservation at the earliest time the *capacity profile* (current free
+//! nodes + estimated releases of running jobs + reservations of jobs
+//! ahead in the queue) can hold it for its whole estimated runtime.  Jobs
+//! whose reservation is "now" start immediately.  Because **every** job
+//! ahead holds a reservation (not just the head, as in EASY backfill), a
+//! backfilled job can never displace any earlier-queued job: with exact
+//! runtime estimates no job starts later than it would under FCFS — the
+//! invariant `rust/tests/prop_sched.rs` checks.
+
+use crate::sim::SimTime;
+
+/// Which batch policy drives the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Fcfs,
+    Backfill,
+}
+
+impl Policy {
+    pub const ALL: [Policy; 2] = [Policy::Fcfs, Policy::Backfill];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Fcfs => "fcfs",
+            Policy::Backfill => "backfill",
+        }
+    }
+
+    /// Parse a CLI spelling (`--policy fcfs|backfill`).
+    pub fn parse(s: &str) -> crate::Result<Policy> {
+        Ok(match s {
+            "fcfs" => Policy::Fcfs,
+            "backfill" => Policy::Backfill,
+            other => anyhow::bail!("unknown policy {other}; try fcfs or backfill"),
+        })
+    }
+}
+
+/// A node request split across the two partitions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeReq {
+    pub cluster: usize,
+    pub booster: usize,
+}
+
+impl NodeReq {
+    fn fits(&self, free: NodeReq) -> bool {
+        self.cluster <= free.cluster && self.booster <= free.booster
+    }
+}
+
+/// One queued job, as the policy sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct QueuedReq {
+    pub id: usize,
+    pub req: NodeReq,
+    /// Estimated remaining runtime (the scheduler's walltime estimate).
+    pub est: SimTime,
+}
+
+/// One running job's held nodes and estimated completion.
+#[derive(Debug, Clone, Copy)]
+pub struct RunningRes {
+    pub req: NodeReq,
+    pub est_end: SimTime,
+}
+
+/// Step-wise capacity profile: `pts[i]` is the available (cluster,
+/// booster) node count from `pts[i].0` until the next breakpoint; the
+/// last segment extends to infinity.  Breakpoints only exist where
+/// capacity changes (releases and reservation edges).
+#[derive(Debug)]
+struct CapProfile {
+    pts: Vec<(SimTime, isize, isize)>,
+}
+
+impl CapProfile {
+    /// Profile seen at `now`: `free` nodes immediately, plus each running
+    /// job's nodes returning at its estimated end.
+    fn new(now: SimTime, free: NodeReq, running: &[RunningRes]) -> Self {
+        let mut p = Self { pts: vec![(now, free.cluster as isize, free.booster as isize)] };
+        for r in running {
+            p.add(r.est_end.max(now), r.req.cluster as isize, r.req.booster as isize);
+        }
+        p
+    }
+
+    /// Index of the segment containing `t` (t >= first breakpoint).
+    fn seg_at(&self, t: SimTime) -> usize {
+        // Profiles are tiny (O(jobs)); a linear scan keeps this simple.
+        let mut i = 0;
+        while i + 1 < self.pts.len() && self.pts[i + 1].0 <= t {
+            i += 1;
+        }
+        i
+    }
+
+    /// Insert a breakpoint at `t` (no capacity change), returning its
+    /// segment index.
+    fn ensure_breakpoint(&mut self, t: SimTime) -> usize {
+        let i = self.seg_at(t);
+        if self.pts[i].0 == t {
+            return i;
+        }
+        let (_, c, b) = self.pts[i];
+        self.pts.insert(i + 1, (t, c, b));
+        i + 1
+    }
+
+    /// Add (or with negative values, subtract) capacity from `t` onwards.
+    fn add(&mut self, t: SimTime, c: isize, b: isize) {
+        let i = self.ensure_breakpoint(t);
+        for p in &mut self.pts[i..] {
+            p.1 += c;
+            p.2 += b;
+        }
+    }
+
+    /// Does `req` fit in every segment overlapping `[t0, t0 + dur)`?
+    fn fits_window(&self, t0: SimTime, dur: SimTime, req: NodeReq) -> bool {
+        let t1 = t0 + dur;
+        let mut i = self.seg_at(t0);
+        loop {
+            let (_, c, b) = self.pts[i];
+            if (req.cluster as isize) > c || (req.booster as isize) > b {
+                return false;
+            }
+            i += 1;
+            if i >= self.pts.len() || self.pts[i].0 >= t1 {
+                return true;
+            }
+        }
+    }
+
+    /// Earliest `t >= now` at which `req` fits for `dur` — always exists
+    /// because the final segment carries every release and reservation
+    /// returned (callers validate that `req` fits the whole machine).
+    fn earliest_fit(&self, now: SimTime, dur: SimTime, req: NodeReq) -> SimTime {
+        if self.fits_window(now, dur, req) {
+            return now;
+        }
+        for &(t, _, _) in &self.pts {
+            if t > now && self.fits_window(t, dur, req) {
+                return t;
+            }
+        }
+        unreachable!("request exceeds total machine capacity (validated at submit)")
+    }
+
+    /// Carve a reservation `[t0, t0 + dur)` out of the profile.
+    fn reserve(&mut self, t0: SimTime, dur: SimTime, req: NodeReq) {
+        self.add(t0, -(req.cluster as isize), -(req.booster as isize));
+        self.add(t0 + dur, req.cluster as isize, req.booster as isize);
+    }
+}
+
+/// Decide which queued jobs start **now**.  `queue` must already be in
+/// queue order (priority, then submission); the returned ids preserve
+/// that order.  `free` is the machine's current unallocated node count
+/// per partition; `running` describes the jobs currently holding nodes.
+pub fn plan_starts(
+    policy: Policy,
+    now: SimTime,
+    free: NodeReq,
+    queue: &[QueuedReq],
+    running: &[RunningRes],
+) -> Vec<usize> {
+    match policy {
+        Policy::Fcfs => {
+            let mut avail = free;
+            let mut starts = Vec::new();
+            for q in queue {
+                if !q.req.fits(avail) {
+                    break; // head reservation: nobody overtakes
+                }
+                avail.cluster -= q.req.cluster;
+                avail.booster -= q.req.booster;
+                starts.push(q.id);
+            }
+            starts
+        }
+        Policy::Backfill => {
+            let mut profile = CapProfile::new(now, free, running);
+            let mut starts = Vec::new();
+            for q in queue {
+                let t = profile.earliest_fit(now, q.est, q.req);
+                profile.reserve(t, q.est, q.req);
+                if t <= now {
+                    starts.push(q.id);
+                }
+            }
+            starts
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(c: usize, b: usize) -> NodeReq {
+        NodeReq { cluster: c, booster: b }
+    }
+
+    #[test]
+    fn fcfs_head_blocks_the_queue() {
+        // Head wants 8 of 4 free; the small job behind it fits but must
+        // not overtake under FCFS.
+        let queue = [
+            QueuedReq { id: 0, req: req(8, 0), est: 10.0 },
+            QueuedReq { id: 1, req: req(2, 0), est: 1.0 },
+        ];
+        let running = [RunningRes { req: req(12, 0), est_end: 5.0 }];
+        let starts = plan_starts(Policy::Fcfs, 0.0, req(4, 0), &queue, &running);
+        assert!(starts.is_empty());
+    }
+
+    #[test]
+    fn fcfs_starts_in_order_while_it_fits() {
+        let queue = [
+            QueuedReq { id: 0, req: req(2, 0), est: 10.0 },
+            QueuedReq { id: 1, req: req(2, 1), est: 10.0 },
+            QueuedReq { id: 2, req: req(8, 0), est: 10.0 },
+            QueuedReq { id: 3, req: req(1, 0), est: 10.0 },
+        ];
+        let starts = plan_starts(Policy::Fcfs, 0.0, req(4, 2), &queue, &[]);
+        assert_eq!(starts, vec![0, 1], "id 2 blocks, id 3 must not overtake");
+    }
+
+    #[test]
+    fn backfill_fills_the_head_shadow() {
+        // Head (8 nodes) waits for the running job's release at t=5; the
+        // 1-node job ends at t=3 < 5, so it backfills now.
+        let queue = [
+            QueuedReq { id: 0, req: req(8, 0), est: 10.0 },
+            QueuedReq { id: 1, req: req(1, 0), est: 3.0 },
+        ];
+        let running = [RunningRes { req: req(12, 0), est_end: 5.0 }];
+        let starts = plan_starts(Policy::Backfill, 0.0, req(4, 0), &queue, &running);
+        assert_eq!(starts, vec![1]);
+    }
+
+    #[test]
+    fn backfill_never_steals_the_head_reservation() {
+        // Same shadow (head starts at t=5 on the released nodes), but the
+        // backfill candidate would still be running then *and* its nodes
+        // are needed: it must wait.
+        let queue = [
+            QueuedReq { id: 0, req: req(16, 0), est: 10.0 },
+            QueuedReq { id: 1, req: req(2, 0), est: 9.0 },
+        ];
+        let running = [RunningRes { req: req(12, 0), est_end: 5.0 }];
+        let starts = plan_starts(Policy::Backfill, 0.0, req(4, 0), &queue, &running);
+        assert!(starts.is_empty(), "candidate overlaps the head reservation");
+    }
+
+    #[test]
+    fn backfill_uses_nodes_the_head_leaves_over() {
+        // Head reserved at t=5 needs only 12 of 16; a long job fitting in
+        // the 4 leftover nodes may start now even though it outlives the
+        // shadow time.
+        let queue = [
+            QueuedReq { id: 0, req: req(12, 0), est: 10.0 },
+            QueuedReq { id: 1, req: req(4, 0), est: 100.0 },
+        ];
+        let running = [RunningRes { req: req(12, 0), est_end: 5.0 }];
+        let starts = plan_starts(Policy::Backfill, 0.0, req(4, 0), &queue, &running);
+        assert_eq!(starts, vec![1]);
+    }
+
+    #[test]
+    fn backfill_reservations_chain_in_queue_order() {
+        // Two big jobs queue behind one runner; the second's reservation
+        // must stack *after* the first's, and a small job may only slip
+        // into the first gap.
+        let queue = [
+            QueuedReq { id: 0, req: req(16, 0), est: 10.0 },
+            QueuedReq { id: 1, req: req(16, 0), est: 10.0 },
+            QueuedReq { id: 2, req: req(4, 0), est: 4.0 },
+        ];
+        let running = [RunningRes { req: req(16, 0), est_end: 5.0 }];
+        let starts = plan_starts(Policy::Backfill, 0.0, req(0, 0), &queue, &running);
+        assert!(starts.is_empty(), "4-node job overlaps the t=5 head reservation");
+        // With free nodes on the side (12 running, 4 idle) the same small
+        // job slips in ahead of both stacked reservations.
+        let running2 = [RunningRes { req: req(12, 0), est_end: 5.0 }];
+        let starts = plan_starts(Policy::Backfill, 0.0, req(4, 0), &queue, &running2);
+        assert_eq!(starts, vec![2], "fits the idle nodes until the t=5 shadow");
+    }
+
+    #[test]
+    fn both_policies_start_everything_on_an_empty_machine() {
+        let queue = [
+            QueuedReq { id: 0, req: req(4, 2), est: 10.0 },
+            QueuedReq { id: 1, req: req(4, 0), est: 10.0 },
+        ];
+        for p in Policy::ALL {
+            assert_eq!(plan_starts(p, 0.0, req(16, 8), &queue, &[]), vec![0, 1]);
+        }
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in Policy::ALL {
+            assert_eq!(Policy::parse(p.name()).unwrap(), p);
+        }
+        assert!(Policy::parse("sjf").is_err());
+    }
+}

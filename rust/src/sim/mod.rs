@@ -891,6 +891,15 @@ impl Sim {
     pub fn flow_remaining(&self, f: FlowId) -> f64 {
         self.flows[f.0].remaining_at(self.now)
     }
+
+    /// Process exactly **one** simulation event; returns false when no
+    /// pending or active flows remain.  The public single-step entry for
+    /// schedulers that interleave many independent waiters on one clock
+    /// (the fleet scheduler polls its jobs' front [`Op`]s between events
+    /// instead of blocking inside any single job's wait).
+    pub fn step_event(&mut self) -> bool {
+        self.step()
+    }
 }
 
 #[cfg(test)]

@@ -12,7 +12,11 @@ use crate::sim::SimTime;
 /// A single injected failure.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Failure {
-    /// Node index within the job's node list.
+    /// Node index **within the consuming scope's node list**: for the
+    /// per-job plans the iteration driver walks, an index into the job's
+    /// node list; for machine-level plans (the fleet scheduler's
+    /// `FleetConfig`), an index into the machine's node array.  Both
+    /// consumers reduce it modulo their list length.
     pub node: usize,
     /// Either a virtual time or an iteration index, per plan kind.
     pub at: f64,

@@ -116,6 +116,11 @@ pub struct Machine {
     pub mds_ep: EpId,
     pub mds_res: ResId,
     pub nams: Vec<NamDevice>,
+    /// Allocation ledger: which fleet job (if any) holds each compute
+    /// node.  [`Machine::try_allocate`] is the only path that sets an
+    /// entry, so the no-oversubscription invariant the scheduler property
+    /// tests audit is enforced here, not re-derived by every caller.
+    owners: Vec<Option<u64>>,
 }
 
 impl Machine {
@@ -164,7 +169,8 @@ impl Machine {
             nams.push(NamDevice::new(&mut sim, &mut fabric, i));
         }
 
-        Self { sim, fabric, spec, nodes, servers, mds_ep, mds_res, nams }
+        let owners = vec![None; nodes.len()];
+        Self { sim, fabric, spec, nodes, servers, mds_ep, mds_res, nams, owners }
     }
 
     /// Indices of compute nodes of a given kind.
@@ -198,6 +204,61 @@ impl Machine {
 
     pub fn alive_nodes(&self) -> usize {
         self.nodes.iter().filter(|n| n.alive).count()
+    }
+
+    // ------------------------------------------------------------------
+    // partition allocation (the fleet scheduler's node ledger)
+    // ------------------------------------------------------------------
+
+    /// Nodes of `kind` not currently allocated to any job, in index order.
+    pub fn free_nodes_of(&self, kind: NodeKind) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|&(i, n)| n.kind == kind && self.owners[i].is_none())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Number of unallocated nodes of `kind`.
+    pub fn free_count(&self, kind: NodeKind) -> usize {
+        self.free_nodes_of(kind).len()
+    }
+
+    /// Allocate `count` nodes of `kind` to `owner` (lowest free indices
+    /// first, deterministically); `None` when not enough are free.  A node
+    /// is never handed to two owners: the pick comes from the free list
+    /// and each entry is asserted unowned before it is stamped.
+    pub fn try_allocate(&mut self, kind: NodeKind, count: usize, owner: u64) -> Option<Vec<usize>> {
+        let free = self.free_nodes_of(kind);
+        if free.len() < count {
+            return None;
+        }
+        let picked: Vec<usize> = free[..count].to_vec();
+        for &i in &picked {
+            assert!(self.owners[i].is_none(), "node {i} already allocated");
+            self.owners[i] = Some(owner);
+        }
+        Some(picked)
+    }
+
+    /// Release nodes held by `owner`; panics if any entry is not theirs
+    /// (the ledger must stay consistent for the oversubscription audit).
+    pub fn release_nodes(&mut self, nodes: &[usize], owner: u64) {
+        for &i in nodes {
+            assert_eq!(self.owners[i], Some(owner), "release of node {i} not held by job {owner}");
+            self.owners[i] = None;
+        }
+    }
+
+    /// Fleet job currently holding node `i`, if any.
+    pub fn node_owner(&self, i: usize) -> Option<u64> {
+        self.owners[i]
+    }
+
+    /// Total nodes currently allocated (utilization accounting).
+    pub fn allocated_count(&self) -> usize {
+        self.owners.iter().filter(|o| o.is_some()).count()
     }
 }
 
@@ -281,5 +342,35 @@ mod tests {
         let mut m = Machine::build(presets::deep_er());
         m.kill_node(0);
         let _ = m.compute(0, 1e9, 0.5);
+    }
+
+    #[test]
+    fn allocation_ledger_tracks_owners() {
+        let mut m = Machine::build(presets::deep_er());
+        assert_eq!(m.free_count(NodeKind::Cluster), 16);
+        assert_eq!(m.free_count(NodeKind::Booster), 8);
+        let a = m.try_allocate(NodeKind::Cluster, 4, 1).unwrap();
+        assert_eq!(a, vec![0, 1, 2, 3], "lowest free indices first");
+        assert_eq!(m.free_count(NodeKind::Cluster), 12);
+        assert_eq!(m.allocated_count(), 4);
+        assert_eq!(m.node_owner(0), Some(1));
+        assert_eq!(m.node_owner(4), None);
+        // A second job never receives an already-held node.
+        let b = m.try_allocate(NodeKind::Cluster, 4, 2).unwrap();
+        assert!(a.iter().all(|n| !b.contains(n)));
+        // Over-ask fails without touching the ledger.
+        assert!(m.try_allocate(NodeKind::Cluster, 9, 3).is_none());
+        assert_eq!(m.free_count(NodeKind::Cluster), 8);
+        m.release_nodes(&a, 1);
+        assert_eq!(m.free_count(NodeKind::Cluster), 12);
+        assert_eq!(m.node_owner(0), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "not held by job")]
+    fn release_by_wrong_owner_panics() {
+        let mut m = Machine::build(presets::deep_er());
+        let a = m.try_allocate(NodeKind::Cluster, 2, 7).unwrap();
+        m.release_nodes(&a, 8);
     }
 }

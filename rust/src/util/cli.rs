@@ -78,6 +78,22 @@ impl Args {
     pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.flag(name).unwrap_or(default)
     }
+
+    /// `--name` parsed as `T`: `Ok(None)` when the flag is absent,
+    /// `Err` on a malformed value.  The strict counterpart of the
+    /// defaulting getters above — used where silently falling back would
+    /// mask a typo (e.g. `repro fleet --jobs eight`).  Note a bare
+    /// boolean `--name` stores the value `"true"`, which is malformed
+    /// for numeric `T` and therefore also an error.
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<Option<T>> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{name}: invalid value {v:?}")),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -130,5 +146,68 @@ mod tests {
         let a = parse(&[]);
         assert!(a.subcommand.is_none());
         assert!(a.positionals.is_empty());
+    }
+
+    #[test]
+    fn duplicate_flag_last_value_wins() {
+        let a = parse(&["run", "--nodes", "4", "--nodes", "9"]);
+        assert_eq!(a.get_usize("nodes", 0), 9);
+        let b = parse(&["run", "--mode=a", "--mode", "b"]);
+        assert_eq!(b.get_str("mode", "?"), "b");
+    }
+
+    #[test]
+    fn boolean_then_flag_does_not_consume_the_next_flag() {
+        // `--verbose --nodes 4`: --verbose must stay boolean, not eat
+        // `--nodes` as its value.
+        let a = parse(&["run", "--verbose", "--nodes", "4"]);
+        assert!(a.has("verbose"));
+        assert_eq!(a.flag("verbose"), Some("true"));
+        assert_eq!(a.get_usize("nodes", 0), 4);
+    }
+
+    #[test]
+    fn defaulting_getters_swallow_malformed_values() {
+        // The lenient getters fall back silently on every malformed
+        // spelling a sweep could produce...
+        let a = parse(&["run", "--nodes", "4x", "--frac", "half", "--seed", "-1"]);
+        assert_eq!(a.get_usize("nodes", 7), 7);
+        assert_eq!(a.get_f64("frac", 0.25), 0.25);
+        assert_eq!(a.get_u64("seed", 3), 3);
+        // ...while get_str hands back the raw word.
+        assert_eq!(a.get_str("nodes", "?"), "4x");
+    }
+
+    #[test]
+    fn get_parsed_strict_error_paths() {
+        let a = parse(&["fleet", "--jobs", "eight", "--mtbf", "3600", "--dry-run"]);
+        // Malformed value: a real error naming the flag.
+        let err = a.get_parsed::<usize>("jobs").unwrap_err();
+        assert!(err.to_string().contains("--jobs"), "err={err}");
+        assert!(err.to_string().contains("eight"), "err={err}");
+        // Well-formed value parses; absent flag is Ok(None).
+        assert_eq!(a.get_parsed::<f64>("mtbf").unwrap(), Some(3600.0));
+        assert_eq!(a.get_parsed::<u64>("seed").unwrap(), None);
+        // A bare boolean flag is malformed for numeric targets.
+        assert!(a.get_parsed::<usize>("dry-run").is_err());
+    }
+
+    #[test]
+    fn get_parsed_duplicate_takes_last() {
+        let a = parse(&["fleet", "--jobs", "3", "--jobs", "12"]);
+        assert_eq!(a.get_parsed::<usize>("jobs").unwrap(), Some(12));
+        // Last value malformed -> the error wins, even after a good one.
+        let b = parse(&["fleet", "--jobs", "3", "--jobs", "x"]);
+        assert!(b.get_parsed::<usize>("jobs").is_err());
+    }
+
+    #[test]
+    fn negative_word_is_a_value_not_a_flag() {
+        // "-5" does not start with "--", so it is consumed as the value.
+        let a = parse(&["run", "--offset", "-5"]);
+        assert_eq!(a.flag("offset"), Some("-5"));
+        assert_eq!(a.get_parsed::<i64>("offset").unwrap(), Some(-5));
+        // ...but u64 rejects it (seeds must be non-negative).
+        assert!(a.get_parsed::<u64>("offset").is_err());
     }
 }

@@ -1,0 +1,155 @@
+//! Integration: the multi-tenant fleet scheduler end to end — golden
+//! determinism of the JSON summary, the ISSUE 4 acceptance scenario
+//! (8 co-scheduled jobs under backfill with MTBF-driven failures), and
+//! the `repro bench fleet` schema contract.
+
+use deeper::bench::{fleet_report, FleetBenchConfig};
+use deeper::sched::policy::Policy;
+use deeper::sched::{run_fleet, synthetic_jobs, FleetConfig, FleetReport};
+use deeper::util::json::{self, Json};
+
+fn run_once(policy: Policy, jobs: usize, seed: u64, mtbf: Option<f64>) -> FleetReport {
+    run_fleet(
+        synthetic_jobs(jobs, seed),
+        FleetConfig { policy, seed, mtbf_node: mtbf, ..FleetConfig::default() },
+    )
+    .expect("synthetic fleet fits the DEEP-ER prototype")
+}
+
+#[test]
+fn fleet_summary_is_bit_identical_per_seed_for_both_policies() {
+    // Golden determinism: same seed -> byte-identical JSON summary (job
+    // finish order, completion times, per-Sim event count) across two
+    // in-process runs, for both policies.  The per-Sim event counter is
+    // the anchor here (unlike the process-wide sim::events_total(),
+    // which concurrent test threads would pollute).
+    for policy in Policy::ALL {
+        let a = run_once(policy, 6, 42, Some(8_000.0));
+        let b = run_once(policy, 6, 42, Some(8_000.0));
+        assert_eq!(
+            a.to_json().to_pretty_string(),
+            b.to_json().to_pretty_string(),
+            "fleet JSON must be bit-identical under policy {}",
+            policy.name()
+        );
+        assert_eq!(a.finish_order, b.finish_order);
+        assert_eq!(a.sim_events, b.sim_events);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+        // The seed genuinely steers the fleet: a different seed yields a
+        // different trajectory.
+        let c = run_once(policy, 6, 43, Some(8_000.0));
+        assert_ne!(
+            a.to_json().to_pretty_string(),
+            c.to_json().to_pretty_string(),
+            "a different seed must change the fleet trajectory"
+        );
+    }
+}
+
+#[test]
+fn acceptance_eight_jobs_backfill_with_failures() {
+    // The ISSUE 4 acceptance criterion: `repro fleet --jobs 8 --policy
+    // backfill --seed 1 --mtbf 3600` completes with every job finished
+    // (or restarted-then-finished), and reports fleet utilization plus
+    // per-job checkpoint overhead.
+    let r = run_once(Policy::Backfill, 8, 1, Some(3_600.0));
+    assert_eq!(r.jobs.len(), 8);
+    assert_eq!(r.finish_order.len(), 8, "every job must finish");
+    for j in &r.jobs {
+        assert!(
+            j.stats.iterations_run >= j.iterations,
+            "job {} finished short: {} of {}",
+            j.name,
+            j.stats.iterations_run,
+            j.iterations
+        );
+        assert!(j.finished_at > j.first_start);
+        assert!(j.stats.ckpt_overhead().is_finite());
+        // A job that was failure-hit must have been requeued and charged
+        // restart time.
+        if j.stats.failures_hit > 0 {
+            assert!(j.requeues >= 1, "job {} hit but never requeued", j.name);
+            assert!(j.stats.restart_time > 0.0);
+            assert!(j.stats.iterations_run > j.iterations, "rollback re-runs iterations");
+        }
+    }
+    assert!(r.utilization > 0.0 && r.utilization <= 1.0, "util={}", r.utilization);
+    assert!(r.makespan > 0.0);
+    // A 3600 s per-node MTBF over 24 nodes means a ~150 s system MTBF:
+    // failures certainly land inside a multi-hundred-second makespan.
+    assert!(
+        r.failures_injected + r.idle_failures > 0,
+        "the MTBF schedule must actually fire inside the run"
+    );
+}
+
+#[test]
+fn fleet_json_schema_round_trips() {
+    let r = run_once(Policy::Fcfs, 3, 7, None);
+    let doc = r.to_json();
+    let parsed = json::parse(&doc.to_pretty_string()).expect("fleet JSON parses");
+    assert_eq!(parsed, doc);
+    assert_eq!(doc.get("bench").and_then(Json::as_str), Some("fleet"));
+    assert_eq!(doc.get("schema_version").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(doc.get("policy").and_then(Json::as_str), Some("fcfs"));
+    assert!(doc.get("makespan_s").and_then(Json::as_f64).unwrap() > 0.0);
+    assert!(doc.get("utilization").and_then(Json::as_f64).unwrap() > 0.0);
+    let jobs = doc.get("jobs").and_then(Json::as_arr).expect("jobs array");
+    assert_eq!(jobs.len(), 3);
+    for j in jobs {
+        assert!(j.get("iterations_run").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(j.get("finished_s").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(j.get("ckpt_overhead").is_some());
+    }
+    assert_eq!(
+        doc.get("finish_order").and_then(Json::as_arr).map(<[Json]>::len),
+        Some(3)
+    );
+}
+
+#[test]
+fn bench_fleet_exhibits_and_schema() {
+    let cfg = FleetBenchConfig { sweep: vec![2, 3], seed: 5, mtbf_node: None };
+    let (exhibits, json) = fleet_report(&cfg);
+    assert_eq!(exhibits.len(), 4, "makespan fig, utilization fig, wait fig, summary");
+    for e in &exhibits {
+        assert!(!e.render().is_empty());
+        assert!(!e.render_csv().is_empty());
+    }
+    let parsed = json::parse(&json.to_pretty_string()).expect("bench JSON parses");
+    assert_eq!(parsed, json);
+    assert_eq!(json.get("bench").and_then(Json::as_str), Some("fleet"));
+    assert_eq!(json.get("schema_version").and_then(Json::as_f64), Some(1.0));
+    let points = json.get("points").and_then(Json::as_arr).expect("points array");
+    assert_eq!(points.len(), 4, "2 sweep points x 2 policies");
+    for p in points {
+        assert!(p.get("makespan_s").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(p.get("utilization").and_then(Json::as_f64).unwrap() > 0.0);
+        let policy = p.get("policy").and_then(Json::as_str).unwrap();
+        assert!(policy == "fcfs" || policy == "backfill");
+    }
+    assert_eq!(json.get("largest_point_jobs").and_then(Json::as_f64), Some(3.0));
+    assert!(json.get("backfill_wait_saving_at_largest_point_s").is_some());
+}
+
+#[test]
+fn bench_fleet_is_deterministic() {
+    let cfg = FleetBenchConfig { sweep: vec![2], seed: 11, mtbf_node: Some(6_000.0) };
+    let (_, a) = fleet_report(&cfg);
+    let (_, b) = fleet_report(&cfg);
+    assert_eq!(a.to_pretty_string(), b.to_pretty_string());
+}
+
+#[test]
+fn committed_fleet_artifact_parses() {
+    // BENCH_fleet.json at the repo root is the cross-PR trajectory
+    // record; whatever regenerates it (make bench-fleet / the CI
+    // bench-smoke job) must keep it parseable with the pinned schema.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_fleet.json");
+    let text = std::fs::read_to_string(path).expect("BENCH_fleet.json exists");
+    let doc = json::parse(&text).expect("artifact parses");
+    assert_eq!(doc.get("bench").and_then(Json::as_str), Some("fleet"));
+    assert_eq!(doc.get("schema_version").and_then(Json::as_f64), Some(1.0));
+    assert!(doc.get("points").and_then(Json::as_arr).is_some());
+}
