@@ -13,7 +13,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test lint fmt clippy doc figures bench bench-smoke bench-scale bench-fleet artifacts clean
+.PHONY: verify build test lint fmt clippy doc figures bench bench-smoke bench-scale bench-fleet bench-qos artifacts clean
 
 verify: build test
 
@@ -61,6 +61,13 @@ bench-scale: build
 bench-fleet: build
 	$(CARGO) run --release --bin repro -- bench fleet --csv --seed 1 --json BENCH_fleet.json
 	@echo "wrote BENCH_fleet.json"
+
+# Traffic-class QoS exhibit: p99 exchange-phase slowdown under a
+# neighbor's checkpoint flush, unshaped vs shaped; refreshes the
+# BENCH_qos.json trajectory artifact.
+bench-qos: build
+	$(CARGO) run --release --bin repro -- bench qos --csv --seed 1 --json BENCH_qos.json
+	@echo "wrote BENCH_qos.json"
 
 artifacts:
 	python3 python/compile/aot.py --out-dir artifacts

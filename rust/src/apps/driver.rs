@@ -58,6 +58,10 @@ pub struct RunStats {
     pub iterations_run: usize,
     pub checkpoints_taken: usize,
     pub failures_hit: usize,
+    /// Flows of doomed phase attempts that were cancelled
+    /// (settle-then-retired) at failure/unbind time instead of draining
+    /// unobserved; zero on clean runs.
+    pub flows_cancelled: usize,
 }
 
 impl RunStats {
@@ -154,12 +158,17 @@ impl JobExec {
     }
 
     /// Detach from the node set (fleet requeue): banks the active-segment
-    /// wall time and abandons whatever phase op was in flight — the
-    /// rolled-back attempt's traffic keeps draining in the simulator, but
-    /// nobody observes it anymore.  Returns the released nodes.
-    pub fn unbind(&mut self, m: &Machine) -> Vec<usize> {
+    /// wall time and **cancels** whatever phase op was still in flight —
+    /// the rolled-back attempt's flows are settle-then-retired so they
+    /// stop contending the shared machine immediately, instead of
+    /// draining unobserved to a phantom finish (the documented §11.4
+    /// wart, fixed).  Returns the released nodes.
+    pub fn unbind(&mut self, m: &mut Machine) -> Vec<usize> {
         assert!(!self.is_done(), "unbind after completion");
         assert!(!self.nodes.is_empty(), "unbind while not bound");
+        if let Some(op) = self.front_op() {
+            self.stats.flows_cancelled += m.sim.cancel_op(&op);
+        }
         self.stats.total_time += m.sim.now() - self.bound_at;
         self.phase = Phase::Ready;
         self.comm = None;
@@ -325,12 +334,19 @@ impl JobExec {
     /// backend's best covering checkpoint and roll the iteration counter
     /// back.  Public so the fleet scheduler can inject machine-level
     /// failures into the owning job; any phase op in flight belongs to
-    /// the rolled-back attempt and is abandoned.
+    /// the rolled-back attempt and is **cancelled** at kill time — its
+    /// flows are settle-then-retired so contenders' rates recover
+    /// immediately (no-op for the solo drivers, which only observe
+    /// failures at iteration boundaries where no phase is in flight).
     pub fn handle_failure(&mut self, m: &mut Machine, backend: &mut CkptBackendRef, victim: usize) {
         self.stats.failures_hit += 1;
+        if let Some(op) = self.front_op() {
+            self.stats.flows_cancelled += m.sim.cancel_op(&op);
+        }
         // Credit a promotion that settled before the failure; one whose
         // flows are still moving when the node dies is lost
-        // (restart_detailed aborts it, never polls it).
+        // (restart_detailed aborts it — cancelling its flows — and never
+        // polls it).
         if let CkptBackendRef::Multi(ml) = backend {
             ml.poll_flush(m);
         }
@@ -671,6 +687,45 @@ mod tests {
     }
 
     #[test]
+    fn failure_mid_phase_cancels_the_doomed_attempt() {
+        // The §11.4 pin at the driver level: a machine-level failure that
+        // lands while a phase op is in flight must settle-then-retire the
+        // attempt's flows at kill time (stats.flows_cancelled counts
+        // them, op_trace shows them cancelled) — not let them drain
+        // unobserved against the restart I/O.
+        let mut m = machine();
+        let nodes: Vec<usize> = (0..4).collect();
+        let mut job = fig8_job(true, false);
+        job.iterations = 10;
+        let mut scr = Scr::new(Strategy::Buddy);
+        let mut backend = CkptBackendRef::Scr(&mut scr);
+        let mut exec = JobExec::new(job);
+        exec.bind(&m, nodes.clone());
+        exec.advance(&mut m, &mut backend); // issues the first compute op
+        let front = exec.front_op().expect("compute phase in flight");
+        assert!(!m.sim.poll_op(&front));
+        exec.handle_failure(&mut m, &mut backend, nodes[1]);
+        assert_eq!(exec.stats.failures_hit, 1);
+        assert_eq!(
+            exec.stats.flows_cancelled,
+            front.flows().len(),
+            "every in-flight phase flow must be cancelled at kill time"
+        );
+        for &f in front.flows() {
+            assert!(m.sim.was_cancelled(f));
+            assert!(m.sim.poll(f), "cancelled flows poll complete");
+        }
+        // The job recovers and completes normally afterwards.
+        while !exec.is_done() {
+            if let Some(op) = exec.front_op() {
+                m.sim.wait_op(&op);
+            }
+            exec.advance(&mut m, &mut backend);
+        }
+        assert!(exec.stats.iterations_run >= 10);
+    }
+
+    #[test]
     fn job_exec_unbind_rebind_resumes_where_it_left() {
         let mut m = machine();
         let nodes: Vec<usize> = (0..4).collect();
@@ -690,9 +745,9 @@ mod tests {
         }
         let before = exec.current_iter();
         assert!(before > 0 && !exec.is_done());
-        let released = exec.unbind(&m);
+        let released = exec.unbind(&mut m);
         assert_eq!(released, nodes);
-        assert!(exec.front_op().is_none(), "unbind abandons the in-flight phase");
+        assert!(exec.front_op().is_none(), "unbind cancels the in-flight phase");
         // Rebind on a different node set and finish.
         let other: Vec<usize> = (4..8).collect();
         exec.bind(&m, other);

@@ -10,7 +10,7 @@
 //! Buddy checkpoint's deferred global copy.
 
 use super::BeeGfs;
-use crate::sim::{FlowId, Op, OpSet, SimTime};
+use crate::sim::{FlowId, Op, OpSet, SimTime, TrafficClass};
 use crate::system::Machine;
 
 /// Which node-local device class backs the cache domain.
@@ -62,7 +62,8 @@ impl BeeOnd {
     /// protocol, not an API artifact).
     pub fn write_op(&mut self, m: &mut Machine, node: usize, bytes: f64, ops: u64) -> Op {
         let local = self.local_write_flow(m, node, bytes, ops);
-        match self.mode {
+        let prev = m.sim.default_issue_class(TrafficClass::CkptFlush);
+        let op = match self.mode {
             CacheMode::Sync => {
                 m.sim.wait_all(&[local]);
                 let mut op = self.global.write_striped_op(m, node, bytes);
@@ -74,7 +75,9 @@ impl BeeOnd {
                 self.flushes.push(flush);
                 Op::single(local)
             }
-        }
+        };
+        m.sim.set_issue_class(prev);
+        op
     }
 
     /// Blocking write with **whole-file store-and-forward** semantics:
@@ -85,7 +88,8 @@ impl BeeOnd {
     pub fn write(&mut self, m: &mut Machine, node: usize, bytes: f64, ops: u64) -> SimTime {
         let local = self.local_write_flow(m, node, bytes, ops);
         let t_local = m.sim.wait_all(&[local]);
-        match self.mode {
+        let prev = m.sim.default_issue_class(TrafficClass::CkptFlush);
+        let t = match self.mode {
             CacheMode::Sync => {
                 let op = self.global.write_striped_op(m, node, bytes);
                 m.sim.wait_op(&op).max(t_local)
@@ -95,20 +99,30 @@ impl BeeOnd {
                 self.flushes.push(flush);
                 t_local
             }
-        }
+        };
+        m.sim.set_issue_class(prev);
+        t
     }
 
     /// Cache-local write flow without global copy (checkpoint strategies
     /// that never leave the node, e.g. SCR Single, use this path).
+    /// QoS: tagged [`TrafficClass::CkptLocal`] unless the caller set a
+    /// more specific ambient class.
     pub fn local_write_flow(&self, m: &mut Machine, node: usize, bytes: f64, ops: u64) -> FlowId {
         let dev = self.pick_device(m, node).clone();
-        dev.write(&mut m.sim, bytes, ops, &[])
+        let prev = m.sim.default_issue_class(TrafficClass::CkptLocal);
+        let f = dev.write(&mut m.sim, bytes, ops, &[]);
+        m.sim.set_issue_class(prev);
+        f
     }
 
     /// Cache-local read flow (restart path / partner exchange source).
     pub fn local_read_flow(&self, m: &mut Machine, node: usize, bytes: f64, ops: u64) -> FlowId {
         let dev = self.pick_device(m, node).clone();
-        dev.read(&mut m.sim, bytes, ops, &[])
+        let prev = m.sim.default_issue_class(TrafficClass::CkptLocal);
+        let f = dev.read(&mut m.sim, bytes, ops, &[]);
+        m.sim.set_issue_class(prev);
+        f
     }
 
     /// Non-advancing query: are all background flushes durable?

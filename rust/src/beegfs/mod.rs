@@ -22,7 +22,7 @@ pub mod beeond;
 
 pub use beeond::{BeeOnd, CacheMode};
 
-use crate::sim::{FlowId, Op, SimTime};
+use crate::sim::{FlowId, Op, SimTime, TrafficClass};
 use crate::system::Machine;
 
 /// BeeGFS default stripe chunk.
@@ -56,13 +56,18 @@ impl BeeGfs {
 
     /// One metadata operation (create/open/stat/close) issued by `node`.
     /// Returns the flow completing when the MDS has serviced it.
+    /// QoS: tagged [`TrafficClass::Meta`] (unless the caller set a more
+    /// specific ambient class); payload stripes keep the caller's class.
     pub fn meta_op(&self, m: &mut Machine, node: usize) -> FlowId {
         let ep = m.nodes[node].ep;
         let client = m.fabric.endpoint_info(ep);
         let mds = m.fabric.endpoint_info(m.mds_ep);
         let rtt = 2.0 * (client.latency + mds.latency);
         // "1 op" through the MDS service resource (capacity = ops/s).
-        m.sim.flow(1.0, rtt, &[m.mds_res])
+        let prev = m.sim.default_issue_class(TrafficClass::Meta);
+        let f = m.sim.flow(1.0, rtt, &[m.mds_res]);
+        m.sim.set_issue_class(prev);
+        f
     }
 
     /// `count` metadata operations, issued concurrently (they queue at the

@@ -12,19 +12,23 @@ use std::collections::BTreeMap;
 
 use crate::apps::{self, run_iterations, run_iterations_multilevel, IterationJob, RunStats};
 use crate::beegfs::beeond::{concurrent_cache_write, concurrent_global_write, CacheDevice};
-use crate::beegfs::{BeeOnd, CacheMode};
+use crate::beegfs::{BeeGfs, BeeOnd, CacheMode};
 use crate::fabric::TOURMALET_BW;
-use crate::metrics::{fmt_bytes, fmt_bw, fmt_rate, fmt_time, Figure, KvTable, Series};
+use crate::metrics::{
+    fmt_bytes, fmt_bw, fmt_rate, fmt_time, p50, p95, p99, Figure, KvTable, Series,
+};
 use crate::microbench;
 use crate::nam::NamDevice;
 use crate::ompss::{OmpssRuntime, Resilience};
+use crate::psmpi::Comm;
 use crate::sched::{self, FleetConfig, FleetReport};
 use crate::scr::multilevel::{MultiLevelConfig, MultiLevelScr};
 use crate::scr::{Scr, Strategy};
 use crate::sim::reference::RefSim;
 use crate::sim::rng::SplitMix64;
-use crate::sim::{ResId, Sim};
+use crate::sim::{Op, ResId, Sim, TrafficClass};
 use crate::sionlib::{write_sionlib, write_task_local};
+use crate::storage::DeviceParams;
 use crate::system::failure::FailurePlan;
 use crate::system::{presets, Machine, NodeKind};
 use crate::util::json::Json;
@@ -979,6 +983,368 @@ pub fn fleet_report(cfg: &FleetBenchConfig) -> (Vec<Exhibit>, Json) {
         ],
         json,
     )
+}
+
+// ----------------------------------------------------------------------
+// `repro bench qos` — the traffic-class QoS exhibit (DESIGN.md section 12)
+// ----------------------------------------------------------------------
+
+/// Configuration of the qos bench scenario.
+#[derive(Debug, Clone)]
+pub struct QosBenchConfig {
+    /// Exchange iterations of the latency-sensitive victim job.
+    pub iterations: usize,
+    /// Seeds the per-iteration halo-size jitter; output is
+    /// byte-deterministic for a fixed seed (virtual times only).
+    pub seed: u64,
+    /// Shaped run: CkptFlush ceiling on the backplane, as a fraction of
+    /// its capacity.
+    pub flush_ceiling_frac: f64,
+    /// Shaped run: Exchange floor on the backplane (fraction).
+    pub exchange_floor_frac: f64,
+    /// Shaped run: Exchange class weight (Bulk stays 1.0).
+    pub exchange_weight: f64,
+}
+
+impl Default for QosBenchConfig {
+    fn default() -> Self {
+        Self {
+            iterations: 120,
+            seed: DEFAULT_SEED,
+            flush_ceiling_frac: 0.4,
+            exchange_floor_frac: 0.3,
+            exchange_weight: 4.0,
+        }
+    }
+}
+
+/// Oversubscribed shared switch: 24 node links of 12.5 GB/s behind
+/// 20 GB/s of switching — the regime where a neighbor's bulk flush lands
+/// directly on top of latency-critical exchanges.
+const QOS_BACKPLANE_BW: f64 = 20e9;
+/// Victim halo bytes per rank per iteration (before jitter).
+const QOS_HALO_BYTES: f64 = 250e6;
+/// One neighbor checkpoint flush (striped to the global FS).  Sized so
+/// individual flush flows complete well inside even a reduced-iteration
+/// run (the per-class latency summary needs finished flows).
+const QOS_FLUSH_BYTES: f64 = 1e9;
+/// Victim job: cluster nodes 0..4.
+const QOS_VICTIM_NODES: usize = 4;
+/// Neighbor flusher job: cluster nodes 8..16.
+const QOS_FLUSHERS: std::ops::Range<usize> = 8..16;
+/// Outstanding flushes each neighbor node keeps in flight.
+const QOS_FLUSH_DEPTH: usize = 2;
+/// Victim compute time between exchanges, seconds.
+const QOS_COMPUTE_GAP: f64 = 0.01;
+
+/// The scenario machine: the DEEP-ER prototype with an oversubscribed
+/// fabric and a flash-era storage backend (4 fast OSS), so the *switch*
+/// — not the spinning disks — is where flush and exchange traffic meet.
+fn qos_machine() -> Machine {
+    let mut spec = presets::deep_er();
+    spec.backplane_bw = QOS_BACKPLANE_BW;
+    spec.n_storage_servers = 4;
+    spec.server_device = DeviceParams::qpace3_global();
+    Machine::build(spec)
+}
+
+/// Shaping applied to the contended run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum QosMode {
+    Unshaped,
+    Shaped,
+}
+
+/// Per-class latency summary of one contended run (nearest-rank
+/// percentiles over finished-flow durations).
+#[derive(Debug, Clone)]
+pub struct ClassLatency {
+    pub class: TrafficClass,
+    pub n: usize,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// One measured run of the victim + flusher scenario.
+#[derive(Debug)]
+pub struct QosRun {
+    pub mode: &'static str,
+    /// Per-iteration exchange-phase durations, virtual seconds.
+    pub exchange_s: Vec<f64>,
+    /// Per-iteration slowdown vs the isolated baseline (same seed, same
+    /// halo jitters, no neighbor).
+    pub slowdown: Vec<f64>,
+    pub flushes_issued: usize,
+    pub class_latency: Vec<ClassLatency>,
+}
+
+impl QosRun {
+    /// p99 of the per-iteration exchange slowdown — the headline metric.
+    pub fn p99_slowdown(&self) -> f64 {
+        p99(&self.slowdown)
+    }
+}
+
+/// The whole exhibit's measurements.
+#[derive(Debug)]
+pub struct QosBenchResult {
+    /// Isolated per-iteration exchange durations (the slowdown divisor).
+    pub isolated_s: Vec<f64>,
+    pub unshaped: QosRun,
+    pub shaped: QosRun,
+}
+
+/// Run the victim's exchange loop, optionally against the flushing
+/// neighbor, returning per-iteration exchange durations, flushes issued
+/// and the per-class latency summary.
+fn qos_exchange_times(
+    cfg: &QosBenchConfig,
+    mode: Option<QosMode>,
+) -> (Vec<f64>, usize, Vec<ClassLatency>) {
+    let mut m = qos_machine();
+    if mode == Some(QosMode::Shaped) {
+        let bp = m.fabric.backplane();
+        let cap = m.sim.capacity(bp);
+        m.sim.set_class_ceiling(bp, TrafficClass::CkptFlush, cfg.flush_ceiling_frac * cap);
+        m.sim.set_class_floor(bp, TrafficClass::Exchange, cfg.exchange_floor_frac * cap);
+        m.sim.set_class_weight(TrafficClass::Exchange, cfg.exchange_weight);
+    }
+    let victim = Comm::of((0..QOS_VICTIM_NODES).collect());
+    // Pre-draw the halo jitters so isolated and contended runs measure
+    // the exact same per-iteration payloads.
+    let mut rng = SplitMix64::new(cfg.seed ^ 0x0905_BEEF);
+    let halos: Vec<f64> = (0..cfg.iterations)
+        .map(|_| QOS_HALO_BYTES * (0.9 + 0.2 * rng.next_f64()))
+        .collect();
+    let mut fs = BeeGfs::new();
+    let mut inflight: Vec<Vec<Op>> = vec![Vec::new(); QOS_FLUSHERS.len()];
+    let mut issued = 0usize;
+    let mut times = Vec::with_capacity(cfg.iterations);
+    for &halo in &halos {
+        if mode.is_some() {
+            // The neighbor keeps each node QOS_FLUSH_DEPTH checkpoint
+            // flushes deep — sustained background pressure, reissued as
+            // flushes drain (deterministic: poll + refill per iteration).
+            for (k, node) in QOS_FLUSHERS.enumerate() {
+                let q = &mut inflight[k];
+                q.retain(|op| !m.sim.poll_op(op));
+                while q.len() < QOS_FLUSH_DEPTH {
+                    let prev = m.sim.default_issue_class(TrafficClass::CkptFlush);
+                    let op = fs.write_striped_op(&mut m, node, QOS_FLUSH_BYTES);
+                    m.sim.set_issue_class(prev);
+                    q.push(op);
+                    issued += 1;
+                }
+            }
+        }
+        let t0 = m.sim.now();
+        let op = victim.ring_exchange_op(&mut m, halo);
+        let t = m.sim.wait_op(&op);
+        times.push(t - t0);
+        // Compute gap between exchanges (flushes keep draining inside).
+        let gap = m.sim.delay(QOS_COMPUTE_GAP);
+        m.sim.wait_all(&[gap]);
+    }
+    // Per-class latency summary over every finished flow of the run.
+    // Pure-delay timers (empty route — the compute-gap markers above)
+    // are instrumentation, not traffic: they would otherwise publish a
+    // junk zero-latency "bulk" row.
+    let mut per_class: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+    for e in m.sim.op_trace() {
+        if e.route.is_empty() {
+            continue;
+        }
+        if let Some(fin) = e.finished_at {
+            per_class.entry(e.class.index()).or_default().push(fin - e.start_at);
+        }
+    }
+    let class_latency = TrafficClass::ALL
+        .iter()
+        .filter_map(|&c| {
+            per_class.get(&c.index()).map(|v| ClassLatency {
+                class: c,
+                n: v.len(),
+                p50: p50(v),
+                p95: p95(v),
+                p99: p99(v),
+            })
+        })
+        .collect();
+    (times, issued, class_latency)
+}
+
+/// Run the full exhibit: isolated baseline, unshaped contended run,
+/// shaped contended run (same seed everywhere).
+pub fn qos_points(cfg: &QosBenchConfig) -> QosBenchResult {
+    assert!(cfg.iterations > 0, "qos bench needs at least one iteration");
+    let (isolated_s, _, _) = qos_exchange_times(cfg, None);
+    let run = |mode: QosMode, name: &'static str| {
+        let (exchange_s, flushes_issued, class_latency) = qos_exchange_times(cfg, Some(mode));
+        let slowdown = exchange_s
+            .iter()
+            .zip(&isolated_s)
+            .map(|(&c, &i)| c / i.max(1e-12))
+            .collect();
+        QosRun { mode: name, exchange_s, slowdown, flushes_issued, class_latency }
+    };
+    QosBenchResult {
+        unshaped: run(QosMode::Unshaped, "unshaped"),
+        shaped: run(QosMode::Shaped, "shaped"),
+        isolated_s,
+    }
+}
+
+fn dist_json(v: &[f64]) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("p50".into(), Json::Num(p50(v)));
+    o.insert("p95".into(), Json::Num(p95(v)));
+    o.insert("p99".into(), Json::Num(p99(v)));
+    o.insert("max".into(), Json::Num(v.iter().copied().fold(f64::MIN, f64::max)));
+    o.insert(
+        "mean".into(),
+        Json::Num(v.iter().sum::<f64>() / v.len().max(1) as f64),
+    );
+    Json::Obj(o)
+}
+
+fn qos_json(cfg: &QosBenchConfig, r: &QosBenchResult) -> Json {
+    let run_json = |run: &QosRun| {
+        let mut o = BTreeMap::new();
+        o.insert("mode".into(), Json::Str(run.mode.into()));
+        o.insert("flushes_issued".into(), Json::Num(run.flushes_issued as f64));
+        o.insert("slowdown".into(), dist_json(&run.slowdown));
+        o.insert("exchange_s".into(), dist_json(&run.exchange_s));
+        let mut classes = BTreeMap::new();
+        for cl in &run.class_latency {
+            let mut c = BTreeMap::new();
+            c.insert("n".into(), Json::Num(cl.n as f64));
+            c.insert("p50_s".into(), Json::Num(cl.p50));
+            c.insert("p95_s".into(), Json::Num(cl.p95));
+            c.insert("p99_s".into(), Json::Num(cl.p99));
+            classes.insert(cl.class.name().into(), Json::Obj(c));
+        }
+        o.insert("class_latency_s".into(), Json::Obj(classes));
+        Json::Obj(o)
+    };
+    let mut scenario = BTreeMap::new();
+    scenario.insert("backplane_bw".into(), Json::Num(QOS_BACKPLANE_BW));
+    scenario.insert("halo_bytes".into(), Json::Num(QOS_HALO_BYTES));
+    scenario.insert("flush_bytes".into(), Json::Num(QOS_FLUSH_BYTES));
+    scenario.insert("victim_nodes".into(), Json::Num(QOS_VICTIM_NODES as f64));
+    scenario.insert("flusher_nodes".into(), Json::Num(QOS_FLUSHERS.len() as f64));
+    scenario.insert("flush_depth".into(), Json::Num(QOS_FLUSH_DEPTH as f64));
+    let mut shaping = BTreeMap::new();
+    shaping.insert("flush_ceiling_frac".into(), Json::Num(cfg.flush_ceiling_frac));
+    shaping.insert("exchange_floor_frac".into(), Json::Num(cfg.exchange_floor_frac));
+    shaping.insert("exchange_weight".into(), Json::Num(cfg.exchange_weight));
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("qos".into()));
+    doc.insert("schema_version".into(), Json::Num(1.0));
+    doc.insert("seed".into(), Json::Num(cfg.seed as f64));
+    doc.insert("iterations".into(), Json::Num(cfg.iterations as f64));
+    doc.insert("scenario".into(), Json::Obj(scenario));
+    doc.insert("shaping".into(), Json::Obj(shaping));
+    doc.insert("isolated_exchange_s".into(), dist_json(&r.isolated_s));
+    doc.insert(
+        "runs".into(),
+        Json::Arr(vec![run_json(&r.unshaped), run_json(&r.shaped)]),
+    );
+    doc.insert("p99_slowdown_unshaped".into(), Json::Num(r.unshaped.p99_slowdown()));
+    doc.insert("p99_slowdown_shaped".into(), Json::Num(r.shaped.p99_slowdown()));
+    doc.insert(
+        "p99_improvement".into(),
+        Json::Num(r.unshaped.p99_slowdown() / r.shaped.p99_slowdown().max(1e-12)),
+    );
+    Json::Obj(doc)
+}
+
+/// The `repro bench qos` exhibit: a latency-sensitive job's exchange
+/// phases measured against a neighbor's sustained checkpoint flushes on
+/// an oversubscribed shared fabric, unshaped vs shaped (CkptFlush
+/// ceiling + Exchange floor/weight), reporting per-iteration p50/p95/p99
+/// slowdown and a per-class latency summary.  Returns the printable
+/// exhibits plus the `BENCH_qos.json` trajectory document.
+pub fn qos_report(cfg: &QosBenchConfig) -> (Vec<Exhibit>, Json) {
+    let r = qos_points(cfg);
+    let json = qos_json(cfg, &r);
+
+    let mut fig = Figure::new(
+        "QoS: exchange-phase slowdown per iteration (victim vs flushing neighbor)",
+        "iteration",
+        "x isolated",
+    );
+    for run in [&r.unshaped, &r.shaped] {
+        let mut s = Series::new(run.mode);
+        for (i, &x) in run.slowdown.iter().enumerate() {
+            s.push(i as f64, x);
+        }
+        fig.add(s);
+    }
+
+    let mut t = KvTable::new("QoS summary (exchange slowdown vs isolated, nearest-rank)");
+    t.row(
+        "scenario",
+        format!(
+            "{} victim ranks vs {} flushers x {} deep, {} switch",
+            QOS_VICTIM_NODES,
+            QOS_FLUSHERS.len(),
+            QOS_FLUSH_DEPTH,
+            fmt_bw(QOS_BACKPLANE_BW)
+        ),
+    );
+    t.row(
+        "shaping",
+        format!(
+            "flush ceiling {:.0}% + exchange floor {:.0}% + weight {:.0}x",
+            cfg.flush_ceiling_frac * 100.0,
+            cfg.exchange_floor_frac * 100.0,
+            cfg.exchange_weight
+        ),
+    );
+    t.row(
+        "isolated exchange",
+        format!(
+            "p50 {} / p99 {}",
+            fmt_time(p50(&r.isolated_s)),
+            fmt_time(p99(&r.isolated_s))
+        ),
+    );
+    for run in [&r.unshaped, &r.shaped] {
+        t.row(
+            format!("{} slowdown", run.mode),
+            format!(
+                "p50 {:.2}x / p95 {:.2}x / p99 {:.2}x ({} flushes)",
+                p50(&run.slowdown),
+                p95(&run.slowdown),
+                run.p99_slowdown(),
+                run.flushes_issued
+            ),
+        );
+    }
+    t.row(
+        "p99 improvement",
+        format!(
+            "{:.2}x lower with shaping",
+            r.unshaped.p99_slowdown() / r.shaped.p99_slowdown().max(1e-12)
+        ),
+    );
+
+    let mut ct = KvTable::new("QoS per-class flow latency (shaped contended run)");
+    for cl in &r.shaped.class_latency {
+        ct.row(
+            cl.class.name(),
+            format!(
+                "{} flows: p50 {} / p95 {} / p99 {}",
+                cl.n,
+                fmt_time(cl.p50),
+                fmt_time(cl.p95),
+                fmt_time(cl.p99)
+            ),
+        );
+    }
+
+    (vec![Exhibit::Fig(fig), Exhibit::Table(t), Exhibit::Table(ct)], json)
 }
 
 #[cfg(test)]

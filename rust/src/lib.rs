@@ -32,6 +32,10 @@
 //! * [`sched`] — the multi-tenant fleet scheduler: FCFS / conservative
 //!   backfill over one shared machine, concurrent jobs on one clock,
 //!   failure → restart → requeue (DESIGN.md section 11).
+//! * [`qos`] — traffic-class QoS: the [`qos::TrafficClass`] taxonomy every
+//!   flow carries, per-class weights / rate floors / shaping ceilings in
+//!   the engine's weighted max-min fill, and Chameleon-style admission
+//!   control over per-resource guarantee budgets (DESIGN.md section 12).
 //! * [`runtime`] — PJRT executor for the AOT-lowered JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`); the only bridge to real compute.
 //! * [`bench`] — harnesses regenerating every paper figure/table.
@@ -48,6 +52,7 @@ pub mod microbench;
 pub mod nam;
 pub mod ompss;
 pub mod psmpi;
+pub mod qos;
 pub mod runtime;
 pub mod sched;
 pub mod scr;

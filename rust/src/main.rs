@@ -3,10 +3,11 @@
 //! ```text
 //! repro show-config
 //! repro bench <fig3..fig10|fig8-async|table1..table3|all> [--csv] [--seed N]
+//! repro bench qos [--iters N] [--csv] [--seed N] [--json PATH]
 //! repro run [--app nbody|xpic|gershwin|fwi] [--strategy single|partner|buddy|dist-xor|nam-xor]
 //!           [--iterations N] [--cp-interval N] [--fail-at I] [--mtbf S] [--seed N]
 //!           [--nodes N] [--multilevel] [--async-flush]
-//! repro fleet [--jobs N] [--policy fcfs|backfill] [--seed S] [--mtbf S] [--json PATH]
+//! repro fleet [--jobs N] [--policy fcfs|backfill] [--seed S] [--mtbf S] [--qos] [--json PATH]
 //! repro e2e [--artifacts DIR]
 //! ```
 
@@ -28,11 +29,12 @@ USAGE:
   repro show-config
   repro bench <fig3..fig10|fig8-async|table1..table3|cb-split|all> [--csv] [--seed N]
   repro bench scale [--sweep N1,N2,..] [--baseline-max N] [--json PATH] [--csv] [--seed N]
+  repro bench qos [--iters N] [--json PATH] [--csv] [--seed N]
   repro run [--app nbody|xpic|gershwin|fwi] [--strategy single|partner|buddy|dist-xor|nam-xor]
             [--iterations N] [--cp-interval N] [--fail-at I] [--mtbf S] [--seed N]
             [--nodes N] [--multilevel] [--async-flush]
   repro fleet [--jobs N] [--policy fcfs|backfill] [--seed S] [--mtbf S]
-              [--json PATH]
+              [--qos] [--json PATH]
   repro bench fleet [--sweep N1,N2,..] [--mtbf S] [--json PATH] [--csv] [--seed N]
   repro split [--iterations N]          (Cluster-Booster division of labour)
   repro e2e [--artifacts DIR]
@@ -55,6 +57,14 @@ USAGE:
   engine, and writes the BENCH_sim_scale.json trajectory artifact
   (--json PATH, default BENCH_sim_scale.json).  With --csv every bench
   exhibit also prints a trailing `# engine: <events> events, <rate>` line.
+
+  bench qos measures a latency-sensitive job's p50/p95/p99 exchange-phase
+  slowdown while a neighbor flushes checkpoints over an oversubscribed
+  shared fabric, with and without traffic shaping (CkptFlush ceiling +
+  Exchange floor/weight), and writes BENCH_qos.json (--json PATH).
+  --qos on `repro fleet` enables admission control: jobs' declared
+  exchange guarantees are admitted against a backplane budget at dispatch
+  and installed as rate floors while they run.
 ";
 
 fn parse_strategy(s: &str) -> anyhow::Result<Strategy> {
@@ -145,6 +155,27 @@ fn cmd_bench_fleet(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_bench_qos(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
+    let defaults = bench::QosBenchConfig::default();
+    let cfg = bench::QosBenchConfig {
+        // Strict parse: a typo'd --iters must error, not silently write
+        // a default-configuration BENCH_qos.json.
+        iterations: args.get_parsed::<usize>("iters")?.unwrap_or(defaults.iterations),
+        seed,
+        ..defaults
+    };
+    anyhow::ensure!(cfg.iterations > 0, "--iters must be positive");
+    let (exhibits, json) = bench::qos_report(&cfg);
+    for e in exhibits {
+        println!("{}", if csv { e.render_csv() } else { e.render() });
+    }
+    let path = args.get_str("json", "BENCH_qos.json");
+    std::fs::write(path, json.to_pretty_string())
+        .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+    println!("{}wrote {path}", if csv { "# " } else { "" });
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let name = args
         .positionals
@@ -159,6 +190,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     if name == "fleet" {
         return cmd_bench_fleet(args, csv, seed);
     }
+    if name == "qos" {
+        return cmd_bench_qos(args, csv, seed);
+    }
     if name == "all" {
         for n in bench::names() {
             println!("--- {n} ---");
@@ -168,7 +202,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     }
     print_exhibits(name, csv, seed).ok_or_else(|| {
         anyhow::anyhow!(
-            "unknown exhibit {name}; try fig3..fig10, fig8-async, table1..table3, cb-split, scale, fleet, all"
+            "unknown exhibit {name}; try fig3..fig10, fig8-async, table1..table3, cb-split, scale, fleet, qos, all"
         )
     })?;
     Ok(())
@@ -180,17 +214,19 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     let policy = Policy::parse(args.get_str("policy", "fcfs"))?;
     let seed = args.get_u64("seed", bench::DEFAULT_SEED);
     let mtbf = args.get_parsed::<f64>("mtbf")?;
-    let cfg = FleetConfig { policy, seed, mtbf_node: mtbf, ..FleetConfig::default() };
+    let qos = args.has("qos");
+    let cfg = FleetConfig { policy, seed, mtbf_node: mtbf, qos, ..FleetConfig::default() };
     let report = sched::run_fleet(sched::synthetic_jobs(n, seed), cfg)?;
 
     println!(
-        "fleet         : {} jobs, policy {}, seed {seed}{}",
+        "fleet         : {} jobs, policy {}, seed {seed}{}{}",
         report.jobs.len(),
         report.policy.name(),
         match report.mtbf_node {
             Some(m) => format!(", per-node MTBF {m} s"),
             None => ", no failure injection".into(),
-        }
+        },
+        if report.qos { ", qos admission on" } else { "" }
     );
     println!(
         "{:<22} {:>5} {:>5} {:>4} {:>9} {:>9} {:>9} {:>5} {:>4} {:>7}",
@@ -219,6 +255,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         "failures      : {} on jobs, {} on idle nodes",
         report.failures_injected, report.idle_failures
     );
+    println!("cancelled     : {} in-flight flows at kill time", report.flows_cancelled);
     println!("finish order  : {:?}", report.finish_order);
     println!("sim events    : {}", report.sim_events);
     if let Some(path) = args.flag("json") {

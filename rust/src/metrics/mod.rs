@@ -209,6 +209,40 @@ pub fn fmt_rate(per_sec: f64) -> String {
     }
 }
 
+/// Nearest-rank percentile over f64 samples, `p` in [0, 100]:
+/// the smallest sample whose rank is `ceil(p/100 * n)` (1-based), i.e.
+/// the classic inclusive nearest-rank definition — deterministic (sorts
+/// by IEEE total order, no interpolation), so same samples always give
+/// the same answer bit-for-bit.  `p = 0` returns the minimum, `p = 100`
+/// the maximum.  Panics on an empty slice.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!(!samples.is_empty(), "percentile of an empty sample set");
+    assert!((0.0..=100.0).contains(&p), "percentile {p} outside [0, 100]");
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    if p <= 0.0 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Median via nearest rank (see [`percentile`]).
+pub fn p50(samples: &[f64]) -> f64 {
+    percentile(samples, 50.0)
+}
+
+/// 95th percentile via nearest rank (see [`percentile`]).
+pub fn p95(samples: &[f64]) -> f64 {
+    percentile(samples, 95.0)
+}
+
+/// 99th percentile via nearest rank (see [`percentile`]) — the tail
+/// metric the qos bench reports for exchange-phase slowdown.
+pub fn p99(samples: &[f64]) -> f64 {
+    percentile(samples, 99.0)
+}
+
 /// Human-readable seconds.
 pub fn fmt_time(s: f64) -> String {
     if s >= 1.0 {
@@ -260,6 +294,47 @@ mod tests {
         assert!(fmt_time(0.5e-3).contains("us") || fmt_time(0.5e-3).contains("ms"));
         assert_eq!(fmt_rate(3.2e6), "3.20 M/s");
         assert_eq!(fmt_rate(450.0), "450.0 /s");
+    }
+
+    #[test]
+    fn percentile_nearest_rank_is_exact() {
+        // Classic nearest-rank worked example.
+        let s = [15.0, 20.0, 35.0, 40.0, 50.0];
+        assert_eq!(percentile(&s, 5.0), 15.0); // ceil(0.25) = rank 1
+        assert_eq!(percentile(&s, 30.0), 20.0); // ceil(1.5) = rank 2
+        assert_eq!(percentile(&s, 40.0), 20.0); // ceil(2.0) = rank 2
+        assert_eq!(percentile(&s, 50.0), 35.0); // ceil(2.5) = rank 3
+        assert_eq!(percentile(&s, 100.0), 50.0);
+        assert_eq!(percentile(&s, 0.0), 15.0);
+        assert_eq!(p50(&s), 35.0);
+    }
+
+    #[test]
+    fn percentile_tails_on_hundred_samples() {
+        // 1..=100: p99 = ceil(99) = rank 99 -> value 99; p95 -> 95.
+        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(p99(&s), 99.0);
+        assert_eq!(p95(&s), 95.0);
+        assert_eq!(p50(&s), 50.0);
+        assert_eq!(percentile(&s, 100.0), 100.0);
+    }
+
+    #[test]
+    fn percentile_is_order_independent_and_deterministic() {
+        let a = [3.0, 1.0, 2.0, 5.0, 4.0];
+        let b = [5.0, 4.0, 3.0, 2.0, 1.0];
+        for p in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(percentile(&a, p).to_bits(), percentile(&b, p).to_bits());
+        }
+        // Single sample: every percentile is that sample.
+        assert_eq!(percentile(&[7.5], 99.0), 7.5);
+        assert_eq!(percentile(&[7.5], 0.0), 7.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty sample set")]
+    fn percentile_empty_panics() {
+        let _ = percentile(&[], 50.0);
     }
 
     #[test]

@@ -18,7 +18,7 @@
 
 use crate::fabric::ring::RingBuffer;
 use crate::fabric::{EpId, Fabric, LAT_CLUSTER, MSG_OVERHEAD, TOURMALET_BW};
-use crate::sim::{FlowId, Op, Sim, SimTime};
+use crate::sim::{FlowId, Op, Sim, SimTime, TrafficClass};
 use crate::storage::{Device, DeviceParams};
 
 /// FPGA pipeline setup per parity job (command decode, DMA programming).
@@ -101,6 +101,9 @@ impl NamDevice {
         bytes_per_node: f64,
     ) -> crate::Result<Op> {
         self.hmc.allocate(bytes_per_node)?; // parity block only
+        // QoS: parity pulls are their own traffic class (what the NAM
+        // strategy offloads; shaped independently of checkpoint flushes).
+        let prev = sim.default_issue_class(TrafficClass::Parity);
         let mut op = Op::done();
         for &src in sources {
             let s = fabric.endpoint_info(src);
@@ -114,6 +117,7 @@ impl NamDevice {
                 &[s.tx, fabric.backplane(), d.rx, self.hmc.write_res()],
             ));
         }
+        sim.set_issue_class(prev);
         Ok(op)
     }
 
@@ -126,7 +130,10 @@ impl NamDevice {
     /// replacement node while the survivors stream their blocks (the
     /// replacement XORs on the fly).
     pub fn push_parity(&self, sim: &mut Sim, fabric: &Fabric, dst: EpId, bytes: f64) -> Op {
-        self.get_op(sim, fabric, dst, bytes)
+        let prev = sim.default_issue_class(TrafficClass::Parity);
+        let op = self.get_op(sim, fabric, dst, bytes);
+        sim.set_issue_class(prev);
+        op
     }
 }
 

@@ -11,7 +11,7 @@
 //! evaluated in Fig. 10.
 
 use crate::fabric::EpId;
-use crate::sim::{FlowId, Op, SimTime};
+use crate::sim::{FlowId, Op, SimTime, TrafficClass};
 use crate::system::Machine;
 
 /// Time to launch a spawned process group (fork/exec + wire-up), per node.
@@ -118,17 +118,23 @@ impl Comm {
     /// its right neighbour and receives from the left (one round).  The
     /// communication pattern of SCR's XOR reduce-scatter; the returned
     /// [`Op`] completes when every pairwise transfer has landed.
+    ///
+    /// QoS: tagged [`TrafficClass::Exchange`] unless a caller already set
+    /// a more specific ambient class (the XOR strategies' reduce-scatter
+    /// rides this as `Parity`).
     pub fn ring_exchange_op(&self, m: &mut Machine, bytes: f64) -> Op {
         let p = self.size();
         if p <= 1 {
             return Op::done();
         }
+        let prev = m.sim.default_issue_class(TrafficClass::Exchange);
         let mut op = Op::done();
         for i in 0..p {
             let peer = (i + 1) % p;
             let (src, dst) = (self.ep(m, i), self.ep(m, peer));
             op.push(m.fabric.put(&mut m.sim, src, dst, bytes));
         }
+        m.sim.set_issue_class(prev);
         op
     }
 

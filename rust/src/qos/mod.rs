@@ -1,0 +1,281 @@
+//! Traffic-class QoS: the class taxonomy every simulated flow carries,
+//! and Chameleon-style admission control over per-resource guarantee
+//! budgets (DESIGN.md section 12).
+//!
+//! DEEP-ER's whole point is that checkpoint flushes, BeeGFS stripes and
+//! NAM parity traffic share the same EXTOLL fabric and storage servers as
+//! the applications' halo exchanges — and the fleet scheduler
+//! ([`crate::sched`]) makes that contention multi-tenant.  This module
+//! supplies the vocabulary and the admission ledger for protecting one
+//! tenant's latency-critical traffic from another tenant's bulk I/O:
+//!
+//! * [`TrafficClass`] — the class tag on every [`crate::sim`] flow.  The
+//!   I/O layers tag the flows they issue (psmpi exchanges, SCR local
+//!   writes, BeeOND/L3 flushes, NAM parity, BeeGFS metadata); everything
+//!   untagged is [`TrafficClass::Bulk`].
+//! * Per-class **weights**, per-(resource, class) rate **floors**
+//!   (guarantees) and **ceilings** (shaping caps) live in the engine
+//!   ([`crate::sim::Sim::set_class_weight`],
+//!   [`crate::sim::Sim::set_class_floor`],
+//!   [`crate::sim::Sim::set_class_ceiling`]) and are enforced by the
+//!   weighted max-min fill.
+//! * [`Policy`] — the admission ledger: a guarantee (floor) is only
+//!   installed after [`Policy::try_admit`] checked it against the
+//!   resource's budget, so over-subscription of floors is impossible by
+//!   construction — the same shape as the fleet scheduler's node-owner
+//!   ledger (`Machine::try_allocate`), and the admitted-demand model of
+//!   nsg-ethz/Chameleon.
+
+use std::collections::BTreeMap;
+
+use crate::sim::ResId;
+
+/// The traffic class a flow belongs to.  Classes are the granularity of
+/// QoS: weights, floors and ceilings are all per class, never per flow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum TrafficClass {
+    /// Latency-critical application communication (halo/moment ring
+    /// exchanges between iterations).
+    Exchange,
+    /// Node-local checkpoint traffic: NVMe/ramdisk writes and reads,
+    /// partner/buddy streams (L1/L2 of the multi-level hierarchy).
+    CkptLocal,
+    /// Checkpoint promotion to shared storage: BeeOND background flushes
+    /// and the multi-level L3 flush to BeeGFS.
+    CkptFlush,
+    /// XOR parity traffic: reduce-scatter exchanges, CPU folds, NAM
+    /// pulls/pushes.
+    Parity,
+    /// Metadata operations (MDS create/open/stat round-trips).
+    Meta,
+    /// Everything untagged — generic file I/O, compute flows, raw RDMA.
+    #[default]
+    Bulk,
+}
+
+impl TrafficClass {
+    /// All classes, in the (deterministic) order used everywhere.
+    pub const ALL: [TrafficClass; 6] = [
+        TrafficClass::Exchange,
+        TrafficClass::CkptLocal,
+        TrafficClass::CkptFlush,
+        TrafficClass::Parity,
+        TrafficClass::Meta,
+        TrafficClass::Bulk,
+    ];
+
+    /// Number of classes (sizes the engine's per-class tables).
+    pub const COUNT: usize = 6;
+
+    /// Dense index into per-class tables.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Stable display name (also used in shadow-resource labels and the
+    /// qos bench JSON).
+    pub fn name(self) -> &'static str {
+        match self {
+            TrafficClass::Exchange => "exchange",
+            TrafficClass::CkptLocal => "ckpt-local",
+            TrafficClass::CkptFlush => "ckpt-flush",
+            TrafficClass::Parity => "parity",
+            TrafficClass::Meta => "meta",
+            TrafficClass::Bulk => "bulk",
+        }
+    }
+}
+
+/// A declared guarantee demand: aggregate rate floors for one class on a
+/// set of resources.  This is what a tenant asks the admission ledger
+/// for, and what the scheduler installs into the engine once admitted.
+#[derive(Debug, Clone)]
+pub struct Demand {
+    pub class: TrafficClass,
+    /// `(resource, bytes/s floor)` pairs; duplicates are summed.
+    pub floors: Vec<(ResId, f64)>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Budget {
+    /// Grantable guarantee capacity on the resource (set below the real
+    /// capacity so non-guaranteed traffic can never be starved outright).
+    cap: f64,
+    /// Sum of currently admitted floors.
+    granted: f64,
+}
+
+/// The admission ledger: per-resource guarantee budgets and the grants
+/// charged against them.
+///
+/// Mirrors the fleet scheduler's node-owner ledger: [`Policy::try_admit`]
+/// is the **only** path that adds to `granted`, and it checks the budget
+/// before stamping, so the invariant `granted <= cap` per resource holds
+/// by construction (no caller can over-subscribe floors).
+#[derive(Debug, Default)]
+pub struct Policy {
+    budgets: BTreeMap<usize, Budget>,
+    grants: BTreeMap<u64, Demand>,
+}
+
+impl Policy {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare `cap` bytes/s of `r` grantable as guarantees.  Callers
+    /// set this below the resource's real capacity (the engine
+    /// additionally asserts that installed floors never exceed it).
+    pub fn set_budget(&mut self, r: ResId, cap: f64) {
+        assert!(cap > 0.0 && cap.is_finite(), "qos budget must be positive");
+        let granted = self.budgets.get(&r.0).map(|b| b.granted).unwrap_or(0.0);
+        assert!(
+            granted <= cap * (1.0 + 1e-9),
+            "cannot shrink budget below already-granted floors"
+        );
+        self.budgets.insert(r.0, Budget { cap, granted });
+    }
+
+    /// Grantable budget on `r`, if one was declared.
+    pub fn budget(&self, r: ResId) -> Option<f64> {
+        self.budgets.get(&r.0).map(|b| b.cap)
+    }
+
+    /// Sum of currently admitted floors on `r`.
+    pub fn granted(&self, r: ResId) -> f64 {
+        self.budgets.get(&r.0).map(|b| b.granted).unwrap_or(0.0)
+    }
+
+    /// Remaining grantable capacity on `r` (0 when no budget declared).
+    pub fn headroom(&self, r: ResId) -> f64 {
+        self.budgets
+            .get(&r.0)
+            .map(|b| (b.cap - b.granted).max(0.0))
+            .unwrap_or(0.0)
+    }
+
+    /// Does `owner` currently hold a grant?
+    pub fn has_grant(&self, owner: u64) -> bool {
+        self.grants.contains_key(&owner)
+    }
+
+    /// Admit `demand` for `owner`: all-or-nothing.  Returns false (and
+    /// charges nothing) when any resource lacks a budget or lacks
+    /// headroom.  Panics if `owner` already holds a grant — release
+    /// first; one grant per owner keeps the ledger auditable.
+    pub fn try_admit(&mut self, owner: u64, demand: &Demand) -> bool {
+        assert!(
+            !self.grants.contains_key(&owner),
+            "owner {owner} already holds a qos grant"
+        );
+        // Aggregate duplicate resources, then check before charging.
+        let mut asks: BTreeMap<usize, f64> = BTreeMap::new();
+        for &(r, g) in &demand.floors {
+            assert!(g > 0.0 && g.is_finite(), "demanded floor must be positive");
+            *asks.entry(r.0).or_insert(0.0) += g;
+        }
+        for (&r, &g) in &asks {
+            match self.budgets.get(&r) {
+                None => return false, // resource was never budgeted
+                Some(b) if b.granted + g > b.cap * (1.0 + 1e-9) => return false,
+                Some(_) => {}
+            }
+        }
+        for (&r, &g) in &asks {
+            self.budgets.get_mut(&r).expect("checked above").granted += g;
+        }
+        self.grants.insert(owner, demand.clone());
+        true
+    }
+
+    /// Release `owner`'s grant, returning the demand so the caller can
+    /// uninstall the matching engine floors.  `None` when no grant held.
+    pub fn release(&mut self, owner: u64) -> Option<Demand> {
+        let demand = self.grants.remove(&owner)?;
+        for &(r, g) in &demand.floors {
+            let b = self.budgets.get_mut(&r.0).expect("granted resource has a budget");
+            b.granted = (b.granted - g).max(0.0);
+        }
+        Some(demand)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_table_is_dense_and_named() {
+        assert_eq!(TrafficClass::ALL.len(), TrafficClass::COUNT);
+        for (i, c) in TrafficClass::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i);
+            assert!(!c.name().is_empty());
+        }
+        assert_eq!(TrafficClass::default(), TrafficClass::Bulk);
+    }
+
+    #[test]
+    fn admit_charges_and_release_refunds() {
+        let mut p = Policy::new();
+        let r = ResId(0);
+        p.set_budget(r, 10e9);
+        assert_eq!(p.headroom(r), 10e9);
+        let d = Demand { class: TrafficClass::Exchange, floors: vec![(r, 4e9)] };
+        assert!(p.try_admit(1, &d));
+        assert!(p.has_grant(1));
+        assert!((p.granted(r) - 4e9).abs() < 1.0);
+        assert!((p.headroom(r) - 6e9).abs() < 1.0);
+        let back = p.release(1).expect("grant held");
+        assert_eq!(back.floors.len(), 1);
+        assert_eq!(p.granted(r), 0.0);
+        assert!(p.release(1).is_none(), "double release is a no-op");
+    }
+
+    #[test]
+    fn oversubscription_is_rejected_all_or_nothing() {
+        let mut p = Policy::new();
+        let (a, b) = (ResId(0), ResId(1));
+        p.set_budget(a, 10e9);
+        p.set_budget(b, 1e9);
+        assert!(p.try_admit(1, &Demand {
+            class: TrafficClass::Exchange,
+            floors: vec![(a, 8e9)],
+        }));
+        // Second ask fits on `b` but not on `a`: nothing may be charged.
+        let d = Demand { class: TrafficClass::Exchange, floors: vec![(a, 4e9), (b, 0.5e9)] };
+        assert!(!p.try_admit(2, &d));
+        assert!((p.granted(a) - 8e9).abs() < 1.0, "rejected ask must charge nothing");
+        assert_eq!(p.granted(b), 0.0);
+        // Unbudgeted resource: rejected outright.
+        assert!(!p.try_admit(2, &Demand {
+            class: TrafficClass::Bulk,
+            floors: vec![(ResId(9), 1.0)],
+        }));
+        // After releasing, the big ask fits.
+        p.release(1);
+        assert!(p.try_admit(2, &d));
+    }
+
+    #[test]
+    fn duplicate_resources_in_one_demand_are_summed() {
+        let mut p = Policy::new();
+        let r = ResId(0);
+        p.set_budget(r, 5e9);
+        // 3 + 3 > 5: must be rejected even though each half fits alone.
+        assert!(!p.try_admit(7, &Demand {
+            class: TrafficClass::CkptFlush,
+            floors: vec![(r, 3e9), (r, 3e9)],
+        }));
+        assert_eq!(p.granted(r), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "already holds a qos grant")]
+    fn double_grant_panics() {
+        let mut p = Policy::new();
+        p.set_budget(ResId(0), 10e9);
+        let d = Demand { class: TrafficClass::Exchange, floors: vec![(ResId(0), 1e9)] };
+        assert!(p.try_admit(1, &d));
+        let _ = p.try_admit(1, &d);
+    }
+}

@@ -34,10 +34,11 @@ use std::collections::BTreeMap;
 
 use crate::apps::driver::{CkptBackendRef, JobExec};
 use crate::apps::{AppProfile, IterationJob, RunStats};
+use crate::qos;
 use crate::scr::multilevel::{MultiLevelConfig, MultiLevelScr};
 use crate::scr::{Scr, Strategy};
 use crate::sim::rng::SplitMix64;
-use crate::sim::SimTime;
+use crate::sim::{SimTime, TrafficClass};
 use crate::system::failure::{Failure, FailurePlan};
 use crate::system::{presets, Machine, MachineSpec, NodeKind};
 use crate::util::json::Json;
@@ -70,8 +71,20 @@ impl CkptStrategy {
     }
 }
 
+/// A guarantee a fleet job may declare: an aggregate rate floor for one
+/// traffic class on the shared fabric backplane.  Admitted against the
+/// scheduler's guarantee budget at dispatch ([`qos::Policy`]); installed
+/// into the engine as a per-(resource, class) floor while the job runs.
+#[derive(Debug, Clone, Copy)]
+pub struct QosDemand {
+    pub class: TrafficClass,
+    /// Requested floor on the fabric backplane, bytes/s.
+    pub backplane_floor: f64,
+}
+
 /// One job submission: application profile, node split across the two
-/// partitions, checkpoint discipline and priority.
+/// partitions, checkpoint discipline, priority, and an optional QoS
+/// guarantee demand.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
     pub name: String,
@@ -86,6 +99,9 @@ pub struct JobSpec {
     pub ckpt: CkptStrategy,
     /// Larger runs earlier; ties broken by submission order.
     pub priority: u32,
+    /// Declared I/O guarantee; consulted only when the fleet runs with
+    /// QoS enabled ([`FleetConfig::qos`]).
+    pub qos: Option<QosDemand>,
 }
 
 /// Walltime estimate the backfill reservations are built from: exact for
@@ -164,6 +180,16 @@ enum JobStatus {
     Done,
 }
 
+/// Outcome of one [`Scheduler::start_job`] attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum StartResult {
+    Started,
+    /// QoS admission rejected the job's guarantee demand.
+    NoGrant,
+    /// The machine could not place the requested node split.
+    NoNodes,
+}
+
 #[derive(Debug)]
 struct JobState {
     spec: JobSpec,
@@ -180,6 +206,8 @@ struct JobState {
     est_end: SimTime,
     node_seconds: f64,
     open_seg: Option<usize>,
+    /// Holds an admitted QoS grant (floors installed in the engine).
+    granted: bool,
 }
 
 /// One contiguous interval during which a job held a concrete node set —
@@ -209,7 +237,17 @@ pub struct FleetConfig {
     /// **machine-global** node index here (not a job-list index as in
     /// the per-job driver plans).
     pub failure_plan: Option<FailurePlan>,
+    /// Enable traffic-class QoS: jobs' [`JobSpec::qos`] demands are
+    /// admitted against a backplane guarantee budget at dispatch
+    /// ([`QOS_BUDGET_FRAC`] of its capacity), and admitted floors are
+    /// installed into the engine while the job runs.
+    pub qos: bool,
 }
+
+/// Fraction of the backplane capacity grantable as QoS floors under
+/// [`FleetConfig::qos`] — the rest is always left to best-effort
+/// traffic, so guarantees can never starve it outright.
+pub const QOS_BUDGET_FRAC: f64 = 0.5;
 
 impl Default for FleetConfig {
     fn default() -> Self {
@@ -219,6 +257,7 @@ impl Default for FleetConfig {
             mtbf_node: None,
             failure_horizon: 1e7,
             failure_plan: None,
+            qos: false,
         }
     }
 }
@@ -263,6 +302,11 @@ pub struct FleetReport {
     /// could).
     pub sim_events: u64,
     pub allocations: Vec<AllocSegment>,
+    /// Whether QoS admission/guarantees were active for this run.
+    pub qos: bool,
+    /// Total flows of doomed phase attempts cancelled at failure/requeue
+    /// time across all jobs (the §11.4 fix's observable).
+    pub flows_cancelled: usize,
 }
 
 impl FleetReport {
@@ -285,6 +329,8 @@ impl FleetReport {
         doc.insert("failures_injected".into(), Json::Num(self.failures_injected as f64));
         doc.insert("idle_failures".into(), Json::Num(self.idle_failures as f64));
         doc.insert("sim_events".into(), Json::Num(self.sim_events as f64));
+        doc.insert("qos".into(), Json::Bool(self.qos));
+        doc.insert("flows_cancelled".into(), Json::Num(self.flows_cancelled as f64));
         doc.insert(
             "finish_order".into(),
             Json::Arr(self.finish_order.iter().map(|&i| Json::Num(i as f64)).collect()),
@@ -313,6 +359,10 @@ impl FleetReport {
                             Json::Num(j.stats.checkpoints_taken as f64),
                         );
                         o.insert("failures".into(), Json::Num(j.stats.failures_hit as f64));
+                        o.insert(
+                            "cancelled_flows".into(),
+                            Json::Num(j.stats.flows_cancelled as f64),
+                        );
                         o.insert("requeues".into(), Json::Num(j.requeues as f64));
                         o.insert("first_start_s".into(), Json::Num(j.first_start));
                         o.insert("finished_s".into(), Json::Num(j.finished_at));
@@ -346,6 +396,9 @@ pub struct Scheduler {
     idle_failures: usize,
     finish_order: Vec<usize>,
     allocations: Vec<AllocSegment>,
+    /// QoS admission ledger (present when [`FleetConfig::qos`]); grants
+    /// are charged at dispatch and refunded on completion/requeue.
+    qos_policy: Option<qos::Policy>,
 }
 
 impl Scheduler {
@@ -361,6 +414,12 @@ impl Scheduler {
         // The cursor in process_due_failures assumes time order (the
         // exponential sampler already is; explicit test plans may not be).
         failures.sort_by(|a, b| a.at.partial_cmp(&b.at).expect("finite failure times"));
+        let qos_policy = cfg.qos.then(|| {
+            let mut p = qos::Policy::new();
+            let bp = m.fabric.backplane();
+            p.set_budget(bp, QOS_BUDGET_FRAC * m.sim.capacity(bp));
+            p
+        });
         Self {
             m,
             cfg,
@@ -372,6 +431,7 @@ impl Scheduler {
             idle_failures: 0,
             finish_order: Vec::new(),
             allocations: Vec::new(),
+            qos_policy,
         }
     }
 
@@ -410,6 +470,23 @@ impl Scheduler {
                 spec.name
             );
         }
+        // A demand a lone job could never be admitted with would stall
+        // the queue forever; reject it at the door instead.
+        if let (Some(policy), Some(d)) = (&self.qos_policy, &spec.qos) {
+            anyhow::ensure!(
+                d.backplane_floor > 0.0,
+                "job {:?}: qos floor must be positive",
+                spec.name
+            );
+            let budget = policy.budget(self.m.fabric.backplane()).unwrap_or(0.0);
+            anyhow::ensure!(
+                d.backplane_floor <= budget,
+                "job {:?}: demanded floor {:.3e} B/s exceeds the qos budget {:.3e} B/s",
+                spec.name,
+                d.backplane_floor,
+                budget
+            );
+        }
         let id = self.jobs.len();
         let job = IterationJob {
             profile: spec.profile.clone(),
@@ -435,6 +512,7 @@ impl Scheduler {
             est_end: 0.0,
             node_seconds: 0.0,
             open_seg: None,
+            granted: false,
         });
         self.queue.push(id);
         Ok(id)
@@ -516,8 +594,45 @@ impl Scheduler {
             self.allocations[si].until = now;
         }
         self.m.release_nodes(&held, id as u64);
+        self.release_grant(id);
         self.finish_order.push(id);
         self.dispatch();
+    }
+
+    /// Admit job `id`'s QoS demand and install its floor into the
+    /// engine.  True when the job holds a grant afterwards (trivially so
+    /// without QoS or without a demand); false leaves nothing charged.
+    fn try_grant(&mut self, id: usize) -> bool {
+        let Some(policy) = &mut self.qos_policy else {
+            return true;
+        };
+        let Some(d) = self.jobs[id].spec.qos else {
+            return true;
+        };
+        let bp = self.m.fabric.backplane();
+        let demand = qos::Demand { class: d.class, floors: vec![(bp, d.backplane_floor)] };
+        if !policy.try_admit(id as u64, &demand) {
+            return false;
+        }
+        self.m.sim.add_class_floor(bp, d.class, d.backplane_floor);
+        self.jobs[id].granted = true;
+        true
+    }
+
+    /// Refund job `id`'s QoS grant (completion or requeue) and remove
+    /// its floor from the engine.  No-op when no grant is held.
+    fn release_grant(&mut self, id: usize) {
+        if !self.jobs[id].granted {
+            return;
+        }
+        self.jobs[id].granted = false;
+        if let Some(policy) = &mut self.qos_policy {
+            if let Some(d) = policy.release(id as u64) {
+                for (r, g) in d.floors {
+                    self.m.sim.add_class_floor(r, d.class, -g);
+                }
+            }
+        }
     }
 
     /// Inject every failure whose timestamp the clock has passed.  A
@@ -553,7 +668,9 @@ impl Scheduler {
         let now = self.m.sim.now();
         let (held, seg) = {
             let job = &mut self.jobs[id];
-            let released = job.exec.unbind(&self.m);
+            // unbind cancels any phase op still in flight (§11.4): the
+            // rolled-back attempt's flows stop contending at kill time.
+            let released = job.exec.unbind(&mut self.m);
             debug_assert_eq!(released, job.held);
             job.node_seconds += job.held.len() as f64 * (now - job.bind_at);
             job.status = JobStatus::Queued;
@@ -565,6 +682,7 @@ impl Scheduler {
             self.allocations[si].until = now;
         }
         self.m.release_nodes(&held, id as u64);
+        self.release_grant(id);
         self.queue.push(id);
         self.dispatch();
     }
@@ -615,28 +733,47 @@ impl Scheduler {
             })
             .collect();
         let starts = policy::plan_starts(self.cfg.policy, now, free, &queued, &running);
+        // QoS-budget FIFO: once an earlier-queued job's guarantee demand
+        // is rejected for lack of budget, later *demanding* jobs must not
+        // snatch the refunds out from under it (they would starve it —
+        // the budget has no reservation profile the way nodes do).
+        // Best-effort jobs charge nothing and may still start.
+        let mut budget_blocked = false;
         for id in starts {
-            self.start_job(id, now);
+            if budget_blocked && self.jobs[id].spec.qos.is_some() {
+                continue;
+            }
+            if matches!(self.start_job(id, now), StartResult::NoGrant) {
+                budget_blocked = true;
+            }
         }
     }
 
-    /// Bind a planned start to concrete nodes.  Returns false (leaving
-    /// the job queued) when the machine cannot actually place it: the
-    /// backfill profile treats an *overdue* running job's nodes as free
-    /// (its estimate under-predicted, e.g. under heavy checkpoint
-    /// contention), so a planned start can exceed the real free count.
-    /// Deferring to the next dispatch — triggered when the overdue job
-    /// actually releases — is the correct degradation, not a panic.
-    fn start_job(&mut self, id: usize, now: SimTime) -> bool {
+    /// Bind a planned start to concrete nodes.  A non-`Started` outcome
+    /// leaves the job queued: `NoNodes` when the machine cannot actually
+    /// place it (the backfill profile treats an *overdue* running job's
+    /// nodes as free — its estimate under-predicted, e.g. under heavy
+    /// checkpoint contention — so a planned start can exceed the real
+    /// free count; deferring to the next dispatch, triggered when the
+    /// overdue job actually releases, is the correct degradation, not a
+    /// panic), or `NoGrant` when QoS admission rejected its guarantee
+    /// demand (deferred until a grant is refunded; dispatch uses this to
+    /// keep the budget FIFO).
+    fn start_job(&mut self, id: usize, now: SimTime) -> StartResult {
+        if !self.try_grant(id) {
+            return StartResult::NoGrant; // budget exhausted; stays queued
+        }
         let (c, b) = (self.jobs[id].spec.cluster_nodes, self.jobs[id].spec.booster_nodes);
         let Some(mut nodes) = self.m.try_allocate(NodeKind::Cluster, c, id as u64) else {
-            return false;
+            self.release_grant(id);
+            return StartResult::NoNodes;
         };
         match self.m.try_allocate(NodeKind::Booster, b, id as u64) {
             Some(more) => nodes.extend(more),
             None => {
                 self.m.release_nodes(&nodes, id as u64);
-                return false;
+                self.release_grant(id);
+                return StartResult::NoNodes;
             }
         }
         let est = estimate_runtime(&self.jobs[id].spec, &self.m.spec, self.jobs[id].exec.current_iter());
@@ -659,7 +796,7 @@ impl Scheduler {
         job.status = JobStatus::Running;
         job.open_seg = Some(seg);
         self.queue.retain(|&q| q != id);
-        true
+        StartResult::Started
     }
 
     fn into_report(self, t0: SimTime, events0: u64) -> FleetReport {
@@ -673,6 +810,7 @@ impl Scheduler {
         };
         let n_jobs = self.jobs.len().max(1) as f64;
         let avg_wait = self.jobs.iter().map(|j| j.wait_time).sum::<f64>() / n_jobs;
+        let flows_cancelled = self.jobs.iter().map(|j| j.exec.stats.flows_cancelled).sum();
         let jobs = self
             .jobs
             .iter()
@@ -706,6 +844,8 @@ impl Scheduler {
             idle_failures: self.idle_failures,
             sim_events: self.m.sim.events() - events0,
             allocations: self.allocations,
+            qos: self.cfg.qos,
+            flows_cancelled,
         }
     }
 }
@@ -754,6 +894,12 @@ pub fn synthetic_jobs(n: usize, seed: u64) -> Vec<JobSpec> {
                 _ => CkptStrategy::None,
             };
             let priority = rng.next_below(3) as u32;
+            // Top-priority jobs declare an exchange guarantee; it only
+            // takes effect when the fleet runs with QoS enabled.
+            let qos = (priority == 2).then_some(QosDemand {
+                class: TrafficClass::Exchange,
+                backplane_floor: 2e9,
+            });
             JobSpec {
                 name: format!("job{i}-{}", profile.name),
                 profile,
@@ -763,6 +909,7 @@ pub fn synthetic_jobs(n: usize, seed: u64) -> Vec<JobSpec> {
                 cp_interval,
                 ckpt,
                 priority,
+                qos,
             }
         })
         .collect()
@@ -791,6 +938,7 @@ mod tests {
             cp_interval: 0,
             ckpt: CkptStrategy::None,
             priority: 0,
+            qos: None,
         }
     }
 
@@ -859,6 +1007,11 @@ mod tests {
         assert_eq!(r.jobs[0].stats.failures_hit, 1);
         assert_eq!(r.jobs[0].requeues, 1);
         assert!(
+            r.flows_cancelled > 0,
+            "a mid-phase kill must cancel the doomed attempt's flows"
+        );
+        assert_eq!(r.jobs[0].stats.flows_cancelled, r.flows_cancelled);
+        assert!(
             r.jobs[0].stats.iterations_run > 20,
             "rollback must re-run iterations ({} run)",
             r.jobs[0].stats.iterations_run
@@ -902,6 +1055,92 @@ mod tests {
             assert!(s.iterations > 0 && s.cp_interval > 0);
             assert!(estimate_runtime(s, &spec, 0) > 0.0);
         }
+    }
+
+    #[test]
+    fn qos_grants_serialize_when_the_budget_is_exhausted() {
+        // DEEP-ER backplane is 400 GB/s -> guarantee budget 200 GB/s.
+        // Two jobs each demanding 150 GB/s fit the machine node-wise but
+        // not the guarantee budget: admission control must serialize
+        // them (the over-subscription-impossible property, end to end).
+        let mk = |name: &str| {
+            let mut s = compute_only_spec(name, 4, 5);
+            s.qos = Some(QosDemand {
+                class: TrafficClass::Exchange,
+                backplane_floor: 150e9,
+            });
+            s
+        };
+        let cfg = FleetConfig { qos: true, ..FleetConfig::default() };
+        let r = run_fleet(vec![mk("a"), mk("b")], cfg).unwrap();
+        assert!(r.qos);
+        assert_eq!(r.finish_order, vec![0, 1]);
+        assert_eq!(r.jobs[0].first_start, 0.0);
+        assert!(
+            (r.jobs[1].first_start - r.jobs[0].finished_at).abs() < 1e-9,
+            "second grant must wait for the first refund: start={} vs end={}",
+            r.jobs[1].first_start,
+            r.jobs[0].finished_at
+        );
+        assert!(r.jobs[1].wait_time > 0.0);
+
+        // Without QoS the same pair co-schedules immediately.
+        let r2 = run_fleet(
+            vec![mk("a"), mk("b")],
+            FleetConfig { qos: false, ..FleetConfig::default() },
+        )
+        .unwrap();
+        assert!(!r2.qos);
+        assert_eq!(r2.jobs[1].first_start, 0.0, "demands are inert without --qos");
+    }
+
+    #[test]
+    fn qos_budget_is_fifo_and_best_effort_is_not_blocked() {
+        // Budget 200 GB/s.  J0 (100) runs; J1 (150) is rejected at t=0;
+        // J2 (100) would fit the remaining headroom but must NOT snatch
+        // it ahead of J1 (budget FIFO, no starvation); best-effort J3
+        // charges nothing and starts immediately.  After J0 finishes,
+        // J1 is admitted; J2 follows once J1's grant is refunded.
+        let demand = |floor: f64| {
+            Some(QosDemand { class: TrafficClass::Exchange, backplane_floor: floor })
+        };
+        let mut j0 = compute_only_spec("j0", 4, 5);
+        j0.qos = demand(100e9);
+        let mut j1 = compute_only_spec("j1", 4, 5);
+        j1.qos = demand(150e9);
+        let mut j2 = compute_only_spec("j2", 4, 5);
+        j2.qos = demand(100e9);
+        let j3 = compute_only_spec("j3", 4, 5);
+        let cfg = FleetConfig { qos: true, ..FleetConfig::default() };
+        let r = run_fleet(vec![j0, j1, j2, j3], cfg).unwrap();
+        assert_eq!(r.jobs[0].first_start, 0.0);
+        assert_eq!(r.jobs[3].first_start, 0.0, "best-effort must not be budget-blocked");
+        assert!(
+            (r.jobs[1].first_start - r.jobs[0].finished_at).abs() < 1e-9,
+            "J1 must get the first refund (got {} vs J0 end {})",
+            r.jobs[1].first_start,
+            r.jobs[0].finished_at
+        );
+        assert!(
+            (r.jobs[2].first_start - r.jobs[1].finished_at).abs() < 1e-9,
+            "J2 must wait for J1's grant, not overtake it (got {} vs J1 end {})",
+            r.jobs[2].first_start,
+            r.jobs[1].finished_at
+        );
+    }
+
+    #[test]
+    fn qos_demand_above_budget_is_rejected_at_submit() {
+        let mut s = compute_only_spec("greedy", 4, 5);
+        s.qos = Some(QosDemand {
+            class: TrafficClass::Exchange,
+            backplane_floor: 300e9, // > 50% of the 400 GB/s backplane
+        });
+        let cfg = FleetConfig { qos: true, ..FleetConfig::default() };
+        assert!(run_fleet(vec![s.clone()], cfg).is_err());
+        // The same spec is accepted when QoS is off (demand unread).
+        let r = run_fleet(vec![s], FleetConfig::default()).unwrap();
+        assert_eq!(r.jobs.len(), 1);
     }
 
     #[test]

@@ -29,7 +29,7 @@
 pub mod multilevel;
 
 use crate::psmpi::Comm;
-use crate::sim::{FlowId, Op, SimTime};
+use crate::sim::{FlowId, Op, SimTime, TrafficClass};
 use crate::sionlib;
 use crate::system::Machine;
 
@@ -336,13 +336,17 @@ impl Scr {
     // strategy write paths
     // ------------------------------------------------------------------
 
+    /// QoS: local checkpoint writes/reads are [`TrafficClass::CkptLocal`]
+    /// unless a more specific ambient class is set (the XOR strategies
+    /// run their parity phases under [`TrafficClass::Parity`]).
     fn local_write_flows(
         &self,
         m: &mut Machine,
         nodes: &[usize],
         bytes: f64,
     ) -> Vec<FlowId> {
-        nodes
+        let prev = m.sim.default_issue_class(TrafficClass::CkptLocal);
+        let flows = nodes
             .iter()
             .map(|&n| {
                 let dev = m.nodes[n]
@@ -351,17 +355,22 @@ impl Scr {
                     .unwrap_or_else(|| panic!("node {n} has no NVMe for checkpoints"));
                 dev.write(&mut m.sim, bytes, 4, &[])
             })
-            .collect()
+            .collect();
+        m.sim.set_issue_class(prev);
+        flows
     }
 
     fn read_local_flows(&self, m: &mut Machine, nodes: &[usize], bytes: f64) -> Vec<FlowId> {
-        nodes
+        let prev = m.sim.default_issue_class(TrafficClass::CkptLocal);
+        let flows = nodes
             .iter()
             .map(|&n| {
                 let dev = m.nodes[n].nvme.as_ref().unwrap();
                 dev.read(&mut m.sim, bytes, 4, &[])
             })
-            .collect()
+            .collect();
+        m.sim.set_issue_class(prev);
+        flows
     }
 
     fn write_local_all(&self, m: &mut Machine, nodes: &[usize], bytes: f64) -> SimTime {
@@ -411,6 +420,9 @@ impl Scr {
         // Phase 1+2: local write and re-read (parity needs the data back).
         self.write_local_all(m, nodes, bytes);
         self.read_local_all(m, nodes, bytes);
+        // Phases 3+4 are parity traffic (the reduce-scatter keeps this
+        // class through psmpi's ring exchange).
+        let prev = m.sim.default_issue_class(TrafficClass::Parity);
         // Phase 3: pipelined reduce-scatter within each XOR group — each
         // node sends ~bytes over the ring and XOR-folds on the CPU.
         for group in nodes.chunks(k) {
@@ -433,7 +445,9 @@ impl Scr {
         }
         // Phase 4: parity segment (bytes/(k-1)) written locally.
         let parity = bytes / (k as f64 - 1.0);
-        Op::new(self.local_write_flows(m, nodes, parity))
+        let op = Op::new(self.local_write_flows(m, nodes, parity));
+        m.sim.set_issue_class(prev);
+        op
     }
 
     /// DEEP-ER NAM XOR: local write || FPGA pulls data + folds parity on
@@ -506,6 +520,7 @@ impl Scr {
             .filter(|n| !group.contains(n))
             .collect();
         let mut op = Op::new(self.read_local_flows(m, &others, bytes));
+        let prev = m.sim.default_issue_class(TrafficClass::Parity);
         match nam_index {
             Some(_) => {
                 // NAM boards stream their parity shards; survivors stream
@@ -540,6 +555,7 @@ impl Scr {
                 op.push(xor);
             }
         }
+        m.sim.set_issue_class(prev);
         // Survivors in the failed group also re-read their own state for
         // the rollback itself.
         op.join(Op::new(self.read_local_flows(m, &survivors, bytes)));

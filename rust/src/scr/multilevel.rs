@@ -27,7 +27,7 @@
 
 use super::{CkptRecord, PendingCkpt, Scr, Strategy};
 use crate::beegfs::BeeGfs;
-use crate::sim::{OpSet, SimTime};
+use crate::sim::{OpSet, SimTime, TrafficClass};
 use crate::system::Machine;
 
 /// Young's approximation of the optimal checkpoint interval:
@@ -317,22 +317,31 @@ impl MultiLevelScr {
 
     /// Discard an in-flight promotion (a node loss landed mid-flight):
     /// the record was never committed, so restarts fall back to the
-    /// deepest settled level.
-    fn abort_flush(&mut self) {
-        if matches!(self.flush, FlushState::InFlight { .. }) {
-            self.flush = FlushState::Settled;
+    /// deepest settled level.  The promotion's in-flight flows are
+    /// **cancelled** (settle-then-retire) — the DMA died with the node,
+    /// so its traffic must stop contending with the restart I/O and
+    /// other tenants now, not drain unobserved to a phantom finish
+    /// (DESIGN.md section 12.4).
+    fn abort_flush(&mut self, m: &mut Machine) {
+        if let FlushState::InFlight { pending, .. } =
+            std::mem::replace(&mut self.flush, FlushState::Settled)
+        {
+            m.sim.cancel_op(&pending.op);
             self.stats.flush_aborted += 1;
         }
     }
 
     /// Fire the asynchronous L3 flush of the freshly settled L2.
+    /// QoS: L3 promotion traffic is [`TrafficClass::CkptFlush`].
     fn issue_l3(&mut self, m: &mut Machine, nodes: &[usize], bytes_per_node: f64, iter: usize) {
         self.l2_since_l3 = 0;
         let t3 = m.sim.now();
+        let prev = m.sim.default_issue_class(TrafficClass::CkptFlush);
         for &n in nodes {
             let op = self.global.write_striped_op(m, n, bytes_per_node);
             self.l3.push(op);
         }
+        m.sim.set_issue_class(prev);
         self.stats.l3_count += 1;
         self.l3_iter = iter;
         // Only the issue cost blocks; the transfer is background.
@@ -371,7 +380,7 @@ impl MultiLevelScr {
                 // promotion credited must [`MultiLevelScr::poll_flush`]
                 // *before* the failure hits (the driver does, right
                 // before injecting the kill).
-                self.abort_flush();
+                self.abort_flush(m);
                 if self.l2.latest_usable(Some(f)).is_some() {
                     let time = self.l2.restart(m, nodes, Some(f))?.time;
                     Ok(RestartOutcome {
@@ -390,10 +399,12 @@ impl MultiLevelScr {
                         .last()
                         .map(|r| r.bytes_per_node)
                         .unwrap_or(0.0);
+                    let prev = m.sim.default_issue_class(TrafficClass::CkptFlush);
                     let mut read = crate::sim::Op::done();
                     for &n in nodes {
                         read.join(self.global.read_striped_op(m, n, bytes));
                     }
+                    m.sim.set_issue_class(prev);
                     let t = m.sim.wait_op(&read);
                     Ok(RestartOutcome {
                         time: t - t0,

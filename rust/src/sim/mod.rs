@@ -37,6 +37,44 @@
 //!   component(s) of resources reachable from the changed flows.  Disjoint
 //!   subsystems (each node's private NVMe channel, each CPU) keep their
 //!   rates, predictions and heap entries untouched.
+//!
+//! # Traffic-class QoS (DESIGN.md section 12)
+//!
+//! Every flow carries a [`TrafficClass`] and a weight, and the
+//! progressive fill is **weighted** max-min with optional per-(resource,
+//! class) rate **floors** (guarantees) and **ceilings** (shaping caps):
+//!
+//! * The ambient [`Sim::issue_class`] tags newly issued flows; the I/O
+//!   layers set/restore it around the flows they issue
+//!   ([`Sim::default_issue_class`]), so callers that know a more specific
+//!   purpose win.  Weights come from the per-class table
+//!   ([`Sim::set_class_weight`]) unless overridden per flow.
+//! * A **ceiling** ([`Sim::set_class_ceiling`]) materializes as a shadow
+//!   resource of that capacity appended to the routes of matching flows —
+//!   shaping reuses the untouched max-min machinery, and the shadow joins
+//!   the incidence graph so component scoping stays lossless.  Configure
+//!   ceilings before issuing the flows they should cap (routes are fixed
+//!   at creation).
+//! * A **floor** ([`Sim::set_class_floor`]) reserves aggregate rate for a
+//!   class on a resource: the refill first grants each guaranteed flow
+//!   its weight-share of the floors on its route (clamped to route
+//!   residuals, granted in flow-id order), then runs the weighted fill
+//!   over the remaining capacity.  Installed floors on one resource may
+//!   never exceed its capacity (asserted — the admission backstop for
+//!   [`crate::qos::Policy`]).  Floors may change between events
+//!   (grant install/release); rates pick the change up at the next
+//!   refill of the component.
+//!
+//! With every flow in one class, all weights 1 and no floors/ceilings
+//! configured, the weighted fill is **bit-identical** to the unweighted
+//! engine (the regression gate `rust/tests/prop_invariants.rs` pins this
+//! against [`reference::RefSim`]).
+//!
+//! **Cancellation**: [`Sim::cancel_op`] / [`Sim::cancel_flow`]
+//! settle-then-retire in-flight flows — progress is banked, the flow is
+//! retired from its resources and the component refilled at the current
+//! clock, so contenders' rates recover at cancellation time instead of at
+//! the phantom finish time of traffic nobody observes anymore.
 
 pub mod reference;
 pub mod rng;
@@ -44,6 +82,8 @@ pub mod rng;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
+
+pub use crate::qos::TrafficClass;
 
 /// Virtual time in seconds.
 pub type SimTime = f64;
@@ -100,6 +140,13 @@ struct Flow {
     /// Predicted finish at the current rate (INFINITY while rate is 0);
     /// the finish-heap entry carrying exactly these bits is the valid one.
     finish_at: SimTime,
+    /// QoS class the flow was issued under (selects weights and bounds).
+    class: TrafficClass,
+    /// Weight in the weighted max-min fill (> 0; default 1.0).
+    weight: f64,
+    /// True when the flow was retired by [`Sim::cancel_op`] rather than
+    /// by completing.
+    cancelled: bool,
 }
 
 impl Flow {
@@ -234,7 +281,8 @@ impl OpSet {
 #[derive(Debug, Clone)]
 pub struct OpTraceEntry {
     pub id: FlowId,
-    /// Resources the flow traverses (names via [`Sim::resource_name`]).
+    /// Resources the flow traverses (names via [`Sim::resource_name`]);
+    /// includes any ceiling shadow resources appended at issue time.
     pub route: Vec<ResId>,
     /// When the flow's latency offset elapsed / will elapse.
     pub start_at: SimTime,
@@ -242,6 +290,22 @@ pub struct OpTraceEntry {
     pub rate: f64,
     pub done: bool,
     pub finished_at: Option<SimTime>,
+    /// Traffic class the flow was issued under.
+    pub class: TrafficClass,
+    /// Weight in the weighted fill.
+    pub weight: f64,
+    /// Retired by cancellation, not completion ([`Sim::cancel_op`]).
+    pub cancelled: bool,
+}
+
+/// Per-class weight table; defaults to 1.0 everywhere (plain max-min).
+#[derive(Debug, Clone)]
+struct ClassWeights([f64; TrafficClass::COUNT]);
+
+impl Default for ClassWeights {
+    fn default() -> Self {
+        Self([1.0; TrafficClass::COUNT])
+    }
 }
 
 /// Min-heap key for pending flows: (start_at bits, id).  start_at is
@@ -316,19 +380,42 @@ pub struct Sim {
     /// examine only this delta instead of rescanning their wait sets.
     finished_step: Vec<FlowId>,
     /// Scratch buffers reused across rate recomputations (hot path):
-    /// per-resource residual capacity / unfixed count, plus the list of
-    /// component resources so clearing is O(component), not O(R).
+    /// per-resource residual capacity / unfixed count / unfixed weight
+    /// sum, plus the list of component resources so clearing is
+    /// O(component), not O(R).
     scratch_residual: Vec<f64>,
     scratch_unfixed: Vec<u32>,
+    scratch_wsum: Vec<f64>,
     scratch_touched: Vec<ResId>,
     /// Flows of the component(s) being refilled, in discovery order.
     comp_flows: Vec<FlowId>,
     /// Epoch stamps (no per-call clearing): resource-in-component,
-    /// flow-in-component, flow-rate-fixed.
+    /// flow-in-component, flow-rate-fixed, flow-holds-a-pass-1-grant.
     scratch_res_epoch: Vec<u64>,
     scratch_comp_epoch: Vec<u64>,
     scratch_fixed_epoch: Vec<u64>,
+    scratch_mcr_epoch: Vec<u64>,
+    /// Pass-1 granted rate per flow (valid while its mcr epoch matches).
+    scratch_pass1: Vec<f64>,
+    /// Pass-1 scratch: per-(resource, class) weight of guaranteed flows.
+    scratch_floor_w: HashMap<(usize, usize), f64>,
+    /// Pass-1 scratch: guaranteed flows of the component, (flow id, mcr).
+    scratch_guar: Vec<(usize, f64)>,
     epoch: u64,
+    /// Ambient class newly issued flows are tagged with (Bulk = unset).
+    issue_class: TrafficClass,
+    /// Per-class default weights for the weighted fill.
+    class_weight: ClassWeights,
+    /// Shaping ceilings: (resource, class index) -> shadow resource.
+    ceilings: HashMap<(usize, usize), ResId>,
+    /// Rate floors: (resource, class index) -> guaranteed bytes/s.
+    floors: HashMap<(usize, usize), f64>,
+    /// Dense per-resource "has any floor" flag (indexed by resource id,
+    /// may be shorter than `resources`): lets a refill skip the pass-1
+    /// hash lookups entirely when its component touches no floored
+    /// resource — floors on the shared backplane must not tax refills of
+    /// each node's private NVMe/CPU components.
+    res_has_floor: Vec<bool>,
     /// Events processed by this simulator (diagnostics).
     events: u64,
     /// Largest flow set a single refill had to touch (diagnostics; the
@@ -360,14 +447,52 @@ impl Sim {
     }
 
     /// Start a flow of `bytes` through `route`, beginning after `delay`
-    /// seconds of latency (pure offset, consumes no bandwidth).
+    /// seconds of latency (pure offset, consumes no bandwidth).  The flow
+    /// is tagged with the ambient [`Sim::issue_class`].
     pub fn flow(&mut self, bytes: f64, delay: SimTime, route: &[ResId]) -> FlowId {
+        self.flow_classed(bytes, delay, route, self.issue_class)
+    }
+
+    /// [`Sim::flow`] with an explicit traffic class (weight comes from
+    /// the per-class table).
+    pub fn flow_classed(
+        &mut self,
+        bytes: f64,
+        delay: SimTime,
+        route: &[ResId],
+        class: TrafficClass,
+    ) -> FlowId {
+        let weight = self.class_weight.0[class.index()];
+        self.flow_weighted(bytes, delay, route, class, weight)
+    }
+
+    /// [`Sim::flow`] with an explicit class **and** per-flow weight
+    /// override.  Any ceiling configured for `(r, class)` on a route
+    /// resource appends its shadow resource to the route here — shaping
+    /// only applies to flows issued after the ceiling was configured.
+    pub fn flow_weighted(
+        &mut self,
+        bytes: f64,
+        delay: SimTime,
+        route: &[ResId],
+        class: TrafficClass,
+        weight: f64,
+    ) -> FlowId {
         assert!(bytes >= 0.0 && delay >= 0.0);
         assert!(!route.is_empty(), "flow route must name at least one resource");
+        assert!(weight > 0.0 && weight.is_finite(), "flow weight must be positive");
         let id = FlowId(self.flows.len());
         let start_at = self.now + delay;
+        let mut full_route = route.to_vec();
+        if !self.ceilings.is_empty() {
+            for &r in route {
+                if let Some(&shadow) = self.ceilings.get(&(r.0, class.index())) {
+                    full_route.push(shadow);
+                }
+            }
+        }
         self.flows.push(Flow {
-            route: route.to_vec(),
+            route: full_route,
             remaining: bytes,
             touched_at: start_at,
             state: FlowState::Pending,
@@ -375,6 +500,9 @@ impl Sim {
             finished_at: f64::INFINITY,
             rate: 0.0,
             finish_at: f64::INFINITY,
+            class,
+            weight,
+            cancelled: false,
         });
         self.pending.push(Reverse(PendingKey::new(start_at, id)));
         id
@@ -395,9 +523,199 @@ impl Sim {
             finished_at: f64::INFINITY,
             rate: 0.0,
             finish_at: f64::INFINITY,
+            class: self.issue_class,
+            weight: 1.0,
+            cancelled: false,
         });
         self.pending.push(Reverse(PendingKey::new(start_at, id)));
         id
+    }
+
+    // ------------------------------------------------------------------
+    // traffic-class QoS configuration (DESIGN.md section 12)
+    // ------------------------------------------------------------------
+
+    /// Set the ambient class newly issued flows are tagged with; returns
+    /// the previous class so callers can restore it afterwards.
+    pub fn set_issue_class(&mut self, class: TrafficClass) -> TrafficClass {
+        std::mem::replace(&mut self.issue_class, class)
+    }
+
+    /// Ambient class new flows are currently tagged with.
+    pub fn issue_class(&self) -> TrafficClass {
+        self.issue_class
+    }
+
+    /// Tag the ambient class for the duration of one layer call **unless
+    /// a caller higher up already set a more specific class** (Bulk is
+    /// the unset default).  Returns the previous class; restore it with
+    /// [`Sim::set_issue_class`].  This is how e.g. the XOR strategies'
+    /// ring exchanges stay `Parity` instead of being re-tagged `Exchange`
+    /// by the psmpi layer underneath.
+    pub fn default_issue_class(&mut self, class: TrafficClass) -> TrafficClass {
+        let prev = self.issue_class;
+        if prev == TrafficClass::Bulk {
+            self.issue_class = class;
+        }
+        prev
+    }
+
+    /// Set the default weight flows of `class` are issued with (> 0).
+    /// Affects only flows issued afterwards.
+    pub fn set_class_weight(&mut self, class: TrafficClass, weight: f64) {
+        assert!(weight > 0.0 && weight.is_finite(), "class weight must be positive");
+        self.class_weight.0[class.index()] = weight;
+    }
+
+    /// Current default weight of `class`.
+    pub fn class_weight_of(&self, class: TrafficClass) -> f64 {
+        self.class_weight.0[class.index()]
+    }
+
+    /// Cap the aggregate rate of `class` traffic on `r` at `ceiling`
+    /// bytes/s, materialized as a shadow resource appended to the routes
+    /// of matching flows issued **after** this call.  Re-configuring an
+    /// existing ceiling adjusts the shadow's capacity (taking effect at
+    /// the component's next refill).  Returns the shadow resource id.
+    pub fn set_class_ceiling(&mut self, r: ResId, class: TrafficClass, ceiling: f64) -> ResId {
+        assert!(ceiling > 0.0 && ceiling.is_finite(), "ceiling must be positive");
+        if let Some(&shadow) = self.ceilings.get(&(r.0, class.index())) {
+            self.resources[shadow.0].capacity = ceiling;
+            return shadow;
+        }
+        let name = format!("{}|{}:cap", self.resources[r.0].name, class.name());
+        let shadow = self.resource(name, ceiling);
+        self.ceilings.insert((r.0, class.index()), shadow);
+        shadow
+    }
+
+    /// Configured ceiling for `class` on `r`, if any.
+    pub fn class_ceiling(&self, r: ResId, class: TrafficClass) -> Option<f64> {
+        self.ceilings
+            .get(&(r.0, class.index()))
+            .map(|s| self.resources[s.0].capacity)
+    }
+
+    /// Install (or, with 0, remove) an aggregate rate **floor** for
+    /// `class` on `r`: the refill guarantees class members their
+    /// weight-share of the floor before sharing the excess.  The sum of
+    /// floors on one resource may never exceed its capacity — asserted
+    /// here, the engine-level backstop behind [`crate::qos::Policy`]'s
+    /// admission budgets.  Floors may change between events; rates pick
+    /// the change up at the component's next refill.
+    pub fn set_class_floor(&mut self, r: ResId, class: TrafficClass, floor: f64) {
+        assert!(floor >= 0.0 && floor.is_finite(), "floor must be non-negative");
+        if floor <= 0.0 {
+            self.floors.remove(&(r.0, class.index()));
+        } else {
+            self.floors.insert((r.0, class.index()), floor);
+        }
+        let total: f64 = TrafficClass::ALL
+            .iter()
+            .map(|&c| self.class_floor(r, c))
+            .sum();
+        assert!(
+            total <= self.resources[r.0].capacity * (1.0 + 1e-9),
+            "floors on {} oversubscribed: {:.3e} B/s > capacity {:.3e} B/s",
+            self.resources[r.0].name,
+            total,
+            self.resources[r.0].capacity
+        );
+        if self.res_has_floor.len() <= r.0 {
+            self.res_has_floor.resize(r.0 + 1, false);
+        }
+        self.res_has_floor[r.0] = total > 0.0;
+    }
+
+    /// Adjust the floor for `class` on `r` by `delta` (grant install /
+    /// release), clamping at zero.
+    pub fn add_class_floor(&mut self, r: ResId, class: TrafficClass, delta: f64) {
+        let cur = self.class_floor(r, class);
+        self.set_class_floor(r, class, (cur + delta).max(0.0));
+    }
+
+    /// Configured floor for `class` on `r` (0 when none).
+    pub fn class_floor(&self, r: ResId, class: TrafficClass) -> f64 {
+        self.floors
+            .get(&(r.0, class.index()))
+            .copied()
+            .unwrap_or(0.0)
+    }
+
+    /// Traffic class `f` was issued under.
+    pub fn flow_class(&self, f: FlowId) -> TrafficClass {
+        self.flows[f.0].class
+    }
+
+    /// Was `f` retired by [`Sim::cancel_op`] rather than by completing?
+    pub fn was_cancelled(&self, f: FlowId) -> bool {
+        self.flows[f.0].cancelled
+    }
+
+    /// Cancel every not-yet-finished flow of `op`: settle each flow's
+    /// progress at the current clock, retire it from its resources and
+    /// refill the affected component(s) **now**, so contenders' rates
+    /// recover at cancellation time — not at the phantom finish time of
+    /// traffic nobody observes anymore (DESIGN.md section 12.4).
+    ///
+    /// Cancelled flows report [`Sim::poll`] true and [`Sim::completed`]
+    /// = the cancellation time (waiters cannot deadlock);
+    /// [`Sim::was_cancelled`] distinguishes them.  Pending flows are
+    /// cancelled before ever activating (their heap entries go stale and
+    /// are skipped).  Returns how many flows were actually cancelled.
+    pub fn cancel_op(&mut self, op: &Op) -> usize {
+        let now = self.now;
+        self.dirty.clear();
+        let mut cancelled = 0usize;
+        for &f in op.flows() {
+            let was_active = {
+                let fl = &mut self.flows[f.0];
+                match fl.state {
+                    FlowState::Done => continue,
+                    FlowState::Pending => {
+                        // Never consumed bandwidth; the pending-heap entry
+                        // becomes stale and step() skips it.
+                        fl.state = FlowState::Done;
+                        false
+                    }
+                    FlowState::Active => {
+                        if fl.rate > 0.0 {
+                            fl.remaining =
+                                (fl.remaining - fl.rate * (now - fl.touched_at)).max(0.0);
+                        }
+                        fl.state = FlowState::Done;
+                        true
+                    }
+                }
+            };
+            {
+                let fl = &mut self.flows[f.0];
+                fl.cancelled = true;
+                fl.finished_at = now;
+                fl.touched_at = now;
+                fl.rate = 0.0;
+                fl.finish_at = f64::INFINITY;
+            }
+            cancelled += 1;
+            if was_active {
+                for &r in &self.flows[f.0].route {
+                    let v = &mut self.res_flows[r.0];
+                    if let Some(p) = v.iter().position(|&x| x == f) {
+                        v.swap_remove(p);
+                    }
+                }
+                self.dirty.push(f);
+            }
+        }
+        if !self.dirty.is_empty() {
+            self.recompute_component();
+        }
+        cancelled
+    }
+
+    /// Cancel a single flow; returns false when it had already finished.
+    pub fn cancel_flow(&mut self, f: FlowId) -> bool {
+        self.cancel_op(&Op::single(f)) == 1
     }
 
     /// Completion time of a finished flow.
@@ -596,6 +914,9 @@ impl Sim {
                 rate: if fl.state == FlowState::Active { fl.rate } else { 0.0 },
                 done: fl.state == FlowState::Done,
                 finished_at: (fl.state == FlowState::Done).then_some(fl.finished_at),
+                class: fl.class,
+                weight: fl.weight,
+                cancelled: fl.cancelled,
             })
             .collect()
     }
@@ -605,13 +926,22 @@ impl Sim {
     // ------------------------------------------------------------------
 
     /// Earliest upcoming event: the pending-heap top or the first *valid*
-    /// finish-heap entry (stale entries are discarded on the way).
+    /// finish-heap entry (stale entries — re-predicted finishes, and
+    /// pending flows cancelled before activation — are discarded on the
+    /// way).
     fn next_event_time(&mut self) -> Option<SimTime> {
-        let start = self
-            .pending
-            .peek()
-            .map(|Reverse(k)| k.time())
-            .unwrap_or(f64::INFINITY);
+        let start = loop {
+            match self.pending.peek() {
+                None => break f64::INFINITY,
+                Some(&Reverse(k)) => {
+                    if self.flows[k.1].state != FlowState::Pending {
+                        self.pending.pop(); // cancelled before activation
+                    } else {
+                        break k.time();
+                    }
+                }
+            }
+        };
         let finish = loop {
             match self.finish.peek() {
                 None => break f64::INFINITY,
@@ -653,6 +983,9 @@ impl Sim {
             self.pending.pop();
             let f = k.id();
             let fl = &mut self.flows[f.0];
+            if fl.state != FlowState::Pending {
+                continue; // cancelled before activation: stale heap entry
+            }
             // Sub-nanobyte flows (and pure delays) complete on arrival —
             // the same threshold the retirement check applies to a
             // just-activated (rate 0) flow.
@@ -752,30 +1085,47 @@ impl Sim {
         }
     }
 
-    /// Component-scoped progressive-filling max-min fair allocation.
+    /// Component-scoped **weighted** progressive-filling max-min fair
+    /// allocation, with per-(resource, class) floors and ceilings.
     ///
     /// Hot-path notes (DESIGN.md section 10): starting from the routes of
     /// this event's changed flows, the incidence index is walked to close
-    /// over the connected component(s) they touch; progressive filling
-    /// then runs over exactly that flow/resource set.  Rates, predictions
-    /// and heap entries of disjoint subsystems are untouched, and within
-    /// the component a flow whose refilled rate is unchanged keeps its
+    /// over the connected component(s) they touch; the fill then runs
+    /// over exactly that flow/resource set.  Rates, predictions and heap
+    /// entries of disjoint subsystems are untouched, and within the
+    /// component a flow whose refilled rate is unchanged keeps its
     /// standing finish prediction (no settle, no heap churn).  All
     /// bottlenecks tied at the minimum share fix in one pass (672
     /// independent NVMe writers collapse to a single iteration), and the
     /// "fixed"/"visited" marks are epoch-stamped so nothing is cleared or
     /// re-allocated per call.
+    ///
+    /// QoS (DESIGN.md section 12): **pass 1** grants each guaranteed flow
+    /// its weight-share of the floors on its route, capped on unfloored
+    /// hops at the flow's plain fair share so guarantees never starve
+    /// best-effort traffic there (clamped to route residuals, granted in
+    /// flow-id order); **pass 2** is weighted progressive filling of the
+    /// remaining capacity over all flows, so a flow's rate is `pass-1
+    /// grant + weighted excess share`.  Ceilings need no code here at
+    /// all — they are shadow resources on the routes.  With no floored
+    /// resource in the component and all weights exactly 1.0, both
+    /// passes reduce bit-identically to the unweighted fill (weight sums
+    /// built from 1.0 increments equal the old integer counts, and
+    /// `x * 1.0` / `0.0 + x` are exact).
     fn recompute_component(&mut self) {
         let nres = self.resources.len();
         if self.scratch_residual.len() < nres {
             self.scratch_residual.resize(nres, 0.0);
             self.scratch_unfixed.resize(nres, 0);
+            self.scratch_wsum.resize(nres, 0.0);
             self.scratch_res_epoch.resize(nres, 0);
         }
         let nflows = self.flows.len();
         if self.scratch_fixed_epoch.len() < nflows {
             self.scratch_fixed_epoch.resize(nflows, 0);
             self.scratch_comp_epoch.resize(nflows, 0);
+            self.scratch_mcr_epoch.resize(nflows, 0);
+            self.scratch_pass1.resize(nflows, 0.0);
         }
         self.epoch += 1;
         let epoch = self.epoch;
@@ -789,23 +1139,28 @@ impl Sim {
             for &r in &self.flows[f.0].route {
                 if self.scratch_res_epoch[r.0] != epoch {
                     self.scratch_res_epoch[r.0] = epoch;
+                    self.scratch_wsum[r.0] = 0.0;
                     self.scratch_touched.push(r);
                 }
             }
         }
         // Close over the flow<->resource incidence: `scratch_touched`
-        // doubles as the BFS queue (cursor `i`).
+        // doubles as the BFS queue (cursor `i`).  Each (resource, flow)
+        // incidence pair is visited exactly once here, which is where the
+        // per-resource unfixed weight sums are accumulated.
         let mut i = 0;
         while i < self.scratch_touched.len() {
             let r = self.scratch_touched[i];
             i += 1;
             for &f in &self.res_flows[r.0] {
+                self.scratch_wsum[r.0] += self.flows[f.0].weight;
                 if self.scratch_comp_epoch[f.0] != epoch {
                     self.scratch_comp_epoch[f.0] = epoch;
                     self.comp_flows.push(f);
                     for &r2 in &self.flows[f.0].route {
                         if self.scratch_res_epoch[r2.0] != epoch {
                             self.scratch_res_epoch[r2.0] = epoch;
+                            self.scratch_wsum[r2.0] = 0.0;
                             self.scratch_touched.push(r2);
                         }
                     }
@@ -816,32 +1171,108 @@ impl Sim {
             self.peak_component = self.comp_flows.len();
         }
 
+        let mut comp_floored = false;
         for &r in &self.scratch_touched {
             self.scratch_residual[r.0] = self.resources[r.0].capacity;
             self.scratch_unfixed[r.0] = self.res_flows[r.0].len() as u32;
+            comp_floored |= self.res_has_floor.get(r.0).copied().unwrap_or(false);
         }
 
         let now = self.now;
+
+        // --- pass 1: rate floors (guarantees) ------------------------------
+        //
+        // A guaranteed flow (>= 1 floored (resource, class) pair on its
+        // route) receives min over its route of `floor * w / W_class` on
+        // floored hops and its plain weighted fair share on unfloored
+        // hops (a guarantee is min(floor, achievable demand) end to end
+        // — it can never confiscate a hop that made no promise), clamped
+        // to route residuals, granted in flow-id order (deterministic).
+        let mut pass1_active = false;
+        if comp_floored {
+            self.scratch_floor_w.clear();
+            for &f in &self.comp_flows {
+                let fl = &self.flows[f.0];
+                let c = fl.class.index();
+                for &r in &fl.route {
+                    if self.floors.contains_key(&(r.0, c)) {
+                        *self.scratch_floor_w.entry((r.0, c)).or_insert(0.0) += fl.weight;
+                    }
+                }
+            }
+            self.scratch_guar.clear();
+            for &f in &self.comp_flows {
+                let fl = &self.flows[f.0];
+                let c = fl.class.index();
+                let mut mcr = f64::INFINITY;
+                let mut floored = false;
+                for &r in &fl.route {
+                    if let Some(&g) = self.floors.get(&(r.0, c)) {
+                        floored = true;
+                        let w_class = self.scratch_floor_w[&(r.0, c)];
+                        mcr = mcr.min(g * fl.weight / w_class);
+                    } else {
+                        // Unfloored hop: the guarantee may claim at most
+                        // the flow's plain weighted fair share there, so
+                        // pass 1 can never starve best-effort flows on a
+                        // hop that made no promise (the guarantee is
+                        // min(floor, achievable demand) end to end).
+                        mcr = mcr.min(
+                            self.resources[r.0].capacity * fl.weight
+                                / self.scratch_wsum[r.0].max(1e-300),
+                        );
+                    }
+                }
+                if floored && mcr.is_finite() {
+                    self.scratch_guar.push((f.0, mcr));
+                }
+            }
+            if !self.scratch_guar.is_empty() {
+                pass1_active = true;
+                self.scratch_guar.sort_unstable_by_key(|&(id, _)| id);
+                for &(fid, mcr) in &self.scratch_guar {
+                    let mut grant = mcr;
+                    for &r in &self.flows[fid].route {
+                        grant = grant.min(self.scratch_residual[r.0]);
+                    }
+                    let grant = grant.max(0.0);
+                    self.scratch_mcr_epoch[fid] = epoch;
+                    self.scratch_pass1[fid] = grant;
+                    for &r in &self.flows[fid].route {
+                        self.scratch_residual[r.0] =
+                            (self.scratch_residual[r.0] - grant).max(0.0);
+                    }
+                }
+            }
+        }
+
+        // --- pass 2: weighted max-min over the residual capacity -----------
         let mut remaining = self.comp_flows.len();
         while remaining > 0 {
-            // Smallest fair share among component resources with unfixed
-            // flows.
+            // Smallest per-unit-weight share among component resources
+            // with unfixed flows.
             let mut min_share = f64::INFINITY;
             for &r in &self.scratch_touched {
                 let n = self.scratch_unfixed[r.0];
                 if n == 0 {
                     continue;
                 }
-                let share = self.scratch_residual[r.0] / n as f64;
+                let share = self.scratch_residual[r.0] / self.scratch_wsum[r.0].max(1e-300);
                 if share < min_share {
                     min_share = share;
                 }
             }
             if !min_share.is_finite() {
-                // Remaining flows have no loaded resource left: rate 0.
+                // Remaining flows have no loaded resource left: their
+                // pass-1 grant (0 without floors) is all they get.
                 for &f in &self.comp_flows {
                     if self.scratch_fixed_epoch[f.0] != epoch {
-                        Self::assign_rate(&mut self.flows, &mut self.finish, now, f, 0.0);
+                        let base = if pass1_active && self.scratch_mcr_epoch[f.0] == epoch {
+                            self.scratch_pass1[f.0]
+                        } else {
+                            0.0
+                        };
+                        Self::assign_rate(&mut self.flows, &mut self.finish, now, f, base);
                     }
                 }
                 break;
@@ -854,7 +1285,7 @@ impl Sim {
                 if n == 0 {
                     continue;
                 }
-                let share = self.scratch_residual[r.0] / n as f64;
+                let share = self.scratch_residual[r.0] / self.scratch_wsum[r.0].max(1e-300);
                 if share - min_share > eps {
                     continue;
                 }
@@ -864,21 +1295,35 @@ impl Sim {
                         continue;
                     }
                     self.scratch_fixed_epoch[f.0] = epoch;
-                    Self::assign_rate(&mut self.flows, &mut self.finish, now, f, min_share);
+                    let w = self.flows[f.0].weight;
+                    let extra = min_share * w;
+                    let rate = if pass1_active && self.scratch_mcr_epoch[f.0] == epoch {
+                        self.scratch_pass1[f.0] + extra
+                    } else {
+                        extra
+                    };
+                    Self::assign_rate(&mut self.flows, &mut self.finish, now, f, rate);
                     remaining -= 1;
                     progressed = true;
                     for &fr in &self.flows[f.0].route {
                         self.scratch_residual[fr.0] =
-                            (self.scratch_residual[fr.0] - min_share).max(0.0);
+                            (self.scratch_residual[fr.0] - extra).max(0.0);
                         self.scratch_unfixed[fr.0] -= 1;
+                        self.scratch_wsum[fr.0] -= w;
                     }
                 }
             }
             if !progressed {
-                // Numerical corner: nothing progressed; zero out the rest.
+                // Numerical corner: nothing progressed; the rest keep
+                // only their pass-1 grants.
                 for &f in &self.comp_flows {
                     if self.scratch_fixed_epoch[f.0] != epoch {
-                        Self::assign_rate(&mut self.flows, &mut self.finish, now, f, 0.0);
+                        let base = if pass1_active && self.scratch_mcr_epoch[f.0] == epoch {
+                            self.scratch_pass1[f.0]
+                        } else {
+                            0.0
+                        };
+                        Self::assign_rate(&mut self.flows, &mut self.finish, now, f, base);
                     }
                 }
                 break;
@@ -1216,5 +1661,224 @@ mod tests {
         assert!((sim.flow_remaining(a) - 2.75e9).abs() < 1.0);
         sim.advance(1.25); // t=1.5: a ran 1 s at 1 GB/s, then 0.5 s at 0.5
         assert!((sim.flow_remaining(a) - 1.75e9).abs() < 1.0);
+    }
+
+    // ------------------------------------------------------------------
+    // traffic-class QoS (DESIGN.md section 12)
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn weighted_sharing_splits_by_weight() {
+        // Weights 3:1 on one link: rates 0.75 / 0.25 of capacity while
+        // both are active.
+        let mut sim = Sim::new();
+        let l = sim.resource("l", 1e9);
+        let a = sim.flow_weighted(3e9, 0.0, &[l], TrafficClass::Exchange, 3.0);
+        let b = sim.flow_weighted(1e9, 0.0, &[l], TrafficClass::Bulk, 1.0);
+        sim.advance(1e-9);
+        let tr = sim.op_trace();
+        assert!((tr[a.0].rate - 0.75e9).abs() < 1.0, "a rate={}", tr[a.0].rate);
+        assert!((tr[b.0].rate - 0.25e9).abs() < 1.0, "b rate={}", tr[b.0].rate);
+        // Both carry 3e9/1e9 bytes at 3:1 rates: both finish at t=4.
+        let times = sim.wait_each(&[a, b]);
+        assert!((times[0] - 4.0).abs() < 1e-9, "a={}", times[0]);
+        assert!((times[1] - 4.0).abs() < 1e-9, "b={}", times[1]);
+    }
+
+    #[test]
+    fn class_weight_table_applies_to_new_flows() {
+        let mut sim = Sim::new();
+        sim.set_class_weight(TrafficClass::Exchange, 4.0);
+        let l = sim.resource("l", 1e9);
+        let a = sim.flow_classed(1e9, 0.0, &[l], TrafficClass::Exchange);
+        let b = sim.flow_classed(1e9, 0.0, &[l], TrafficClass::Bulk);
+        sim.advance(1e-9);
+        let tr = sim.op_trace();
+        assert!((tr[a.0].rate - 0.8e9).abs() < 1.0, "a rate={}", tr[a.0].rate);
+        assert!((tr[b.0].rate - 0.2e9).abs() < 1.0, "b rate={}", tr[b.0].rate);
+        assert_eq!(tr[a.0].class, TrafficClass::Exchange);
+        assert_eq!(tr[a.0].weight, 4.0);
+        assert_eq!(sim.flow_class(b), TrafficClass::Bulk);
+    }
+
+    #[test]
+    fn ceiling_caps_class_aggregate_and_releases_rest() {
+        // Bulk capped at 0.2 GB/s on a 1 GB/s link: the two bulk flows
+        // share the cap, the exchange flow takes everything else.
+        let mut sim = Sim::new();
+        let l = sim.resource("l", 1e9);
+        sim.set_class_ceiling(l, TrafficClass::Bulk, 0.2e9);
+        let b1 = sim.flow_classed(1e9, 0.0, &[l], TrafficClass::Bulk);
+        let b2 = sim.flow_classed(1e9, 0.0, &[l], TrafficClass::Bulk);
+        let e = sim.flow_classed(1e9, 0.0, &[l], TrafficClass::Exchange);
+        sim.advance(1e-9);
+        let tr = sim.op_trace();
+        let bulk = tr[b1.0].rate + tr[b2.0].rate;
+        assert!(bulk <= 0.2e9 * (1.0 + 1e-9) + 1.0, "bulk agg={bulk}");
+        assert!((tr[e.0].rate - 0.8e9).abs() < 1.0, "exchange={}", tr[e.0].rate);
+        assert_eq!(sim.class_ceiling(l, TrafficClass::Bulk), Some(0.2e9));
+    }
+
+    #[test]
+    fn floor_guarantees_class_aggregate_under_pressure() {
+        // 8 bulk flows vs 1 exchange flow on one link: unprotected the
+        // exchange gets 1/9; with a 0.5 GB/s floor it gets >= 0.5 GB/s
+        // and bulk shares the rest.
+        let mut sim = Sim::new();
+        let l = sim.resource("l", 1e9);
+        sim.set_class_floor(l, TrafficClass::Exchange, 0.5e9);
+        let e = sim.flow_classed(4e9, 0.0, &[l], TrafficClass::Exchange);
+        let bulk: Vec<_> = (0..8)
+            .map(|_| sim.flow_classed(4e9, 0.0, &[l], TrafficClass::Bulk))
+            .collect();
+        sim.advance(1e-9);
+        let tr = sim.op_trace();
+        // Floor 0.5 + weighted share of the other 0.5 over 9 flows.
+        let expect = 0.5e9 + 0.5e9 / 9.0;
+        assert!(
+            (tr[e.0].rate - expect).abs() < 1.0,
+            "exchange rate {} != {expect}",
+            tr[e.0].rate
+        );
+        let total: f64 = tr.iter().map(|x| x.rate).sum();
+        assert!(total <= 1e9 * (1.0 + 1e-9) + 1.0, "conservation: {total}");
+        for &b in &bulk {
+            assert!((tr[b.0].rate - 0.5e9 / 9.0).abs() < 1.0);
+        }
+        assert_eq!(sim.class_floor(l, TrafficClass::Exchange), 0.5e9);
+    }
+
+    #[test]
+    fn floor_grant_cannot_starve_best_effort_on_unfloored_hop() {
+        // A 10 GB/s floor on resource B would give the guaranteed flow a
+        // 10 GB/s claim, far above the 1 GB/s unfloored hop A it shares
+        // with a best-effort flow.  Pass 1 must cap the grant at the
+        // flow's plain fair share of A (0.5 GB/s) — the bulk flow keeps
+        // a positive rate instead of being starved to zero.
+        let mut sim = Sim::new();
+        let a = sim.resource("a", 1e9);
+        let b = sim.resource("b", 10e9);
+        sim.set_class_floor(b, TrafficClass::Exchange, 10e9);
+        let g = sim.flow_classed(4e9, 0.0, &[a, b], TrafficClass::Exchange);
+        let be = sim.flow_classed(4e9, 0.0, &[a], TrafficClass::Bulk);
+        sim.advance(1e-9);
+        let tr = sim.op_trace();
+        // grant = fair share 0.5e9; pass 2 splits the remaining 0.5e9.
+        assert!((tr[g.0].rate - 0.75e9).abs() < 1.0, "g={}", tr[g.0].rate);
+        assert!((tr[be.0].rate - 0.25e9).abs() < 1.0, "bulk={}", tr[be.0].rate);
+        assert!(tr[be.0].rate > 0.1e9, "best-effort must never be starved to zero");
+        let total = tr[g.0].rate + tr[be.0].rate;
+        assert!(total <= 1e9 * (1.0 + 1e-9) + 1.0, "conservation on A: {total}");
+    }
+
+    #[test]
+    fn add_class_floor_accumulates_and_removes() {
+        let mut sim = Sim::new();
+        let l = sim.resource("l", 1e9);
+        sim.add_class_floor(l, TrafficClass::Exchange, 0.3e9);
+        sim.add_class_floor(l, TrafficClass::Exchange, 0.2e9);
+        assert!((sim.class_floor(l, TrafficClass::Exchange) - 0.5e9).abs() < 1.0);
+        sim.add_class_floor(l, TrafficClass::Exchange, -0.5e9);
+        assert_eq!(sim.class_floor(l, TrafficClass::Exchange), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "oversubscribed")]
+    fn floor_oversubscription_panics() {
+        let mut sim = Sim::new();
+        let l = sim.resource("l", 1e9);
+        sim.set_class_floor(l, TrafficClass::Exchange, 0.7e9);
+        sim.set_class_floor(l, TrafficClass::CkptFlush, 0.7e9);
+    }
+
+    #[test]
+    fn issue_class_is_scoped_and_default_only_overrides_bulk() {
+        let mut sim = Sim::new();
+        let l = sim.resource("l", 1e9);
+        assert_eq!(sim.issue_class(), TrafficClass::Bulk);
+        let prev = sim.default_issue_class(TrafficClass::Exchange);
+        assert_eq!(prev, TrafficClass::Bulk);
+        let a = sim.flow(1e9, 0.0, &[l]);
+        // A nested layer must NOT re-tag a more specific ambient class.
+        let prev2 = sim.default_issue_class(TrafficClass::Meta);
+        assert_eq!(prev2, TrafficClass::Exchange);
+        let b = sim.flow(1e9, 0.0, &[l]);
+        sim.set_issue_class(prev2);
+        sim.set_issue_class(prev);
+        let c = sim.flow(1e9, 0.0, &[l]);
+        assert_eq!(sim.flow_class(a), TrafficClass::Exchange);
+        assert_eq!(sim.flow_class(b), TrafficClass::Exchange);
+        assert_eq!(sim.flow_class(c), TrafficClass::Bulk);
+    }
+
+    #[test]
+    fn cancel_recovers_neighbor_rate_at_cancel_time() {
+        // The §11.4 pin: two equal flows share a 1 GB/s link; cancelling
+        // one at t=1 must hand the survivor the full link *immediately* —
+        // it finishes at 1 + 3.5 = 4.5 s, not at the phantom-finish time
+        // (t=8 would be the "keeps draining" trajectory's implied end).
+        let mut sim = Sim::new();
+        let l = sim.resource("l", 1e9);
+        let a = sim.flow(4e9, 0.0, &[l]);
+        let b = sim.flow(4e9, 0.0, &[l]);
+        sim.advance(1.0); // 0.5 GB/s each: both moved 0.5 GB
+        assert!(sim.cancel_flow(b));
+        assert!(sim.was_cancelled(b));
+        assert!(sim.poll(b), "cancelled flows poll complete");
+        assert_eq!(sim.completed(b), Some(1.0));
+        // Settle-then-retire: the cancelled flow's banked progress stays.
+        assert!((sim.flow_remaining(b) - 3.5e9).abs() < 1.0);
+        let t = sim.wait_all(&[a]);
+        assert!((t - 4.5).abs() < 1e-9, "survivor must recover at cancel time: t={t}");
+        // Cancelling an already-finished flow is a no-op.
+        assert!(!sim.cancel_flow(a));
+        assert!(!sim.was_cancelled(a));
+    }
+
+    #[test]
+    fn cancel_pending_flow_never_activates() {
+        let mut sim = Sim::new();
+        let l = sim.resource("l", 1e9);
+        let a = sim.flow(1e9, 0.0, &[l]);
+        let p = sim.flow(1e9, 5.0, &[l]); // would activate at t=5
+        assert!(sim.cancel_flow(p));
+        let t = sim.wait_all(&[a]);
+        assert!((t - 1.0).abs() < 1e-9, "a never shared the link: t={t}");
+        sim.advance(10.0);
+        assert!(sim.was_cancelled(p));
+        let tr = sim.op_trace();
+        assert!(tr[p.0].cancelled && tr[p.0].done);
+        assert_eq!(tr[p.0].rate, 0.0);
+    }
+
+    #[test]
+    fn cancel_op_batches_and_waiters_observe_completion() {
+        let mut sim = Sim::new();
+        let l = sim.resource("l", 1e9);
+        let op = Op::new(vec![sim.flow(4e9, 0.0, &[l]), sim.flow(4e9, 0.0, &[l])]);
+        let survivor = sim.flow(1e9, 0.0, &[l]);
+        sim.advance(0.3);
+        assert_eq!(sim.cancel_op(&op), 2);
+        assert!(sim.poll_op(&op));
+        assert_eq!(sim.op_completion(&op), Some(0.3));
+        // Waiting on a cancelled op returns its cancellation time.
+        assert_eq!(sim.wait_op(&op), 0.3);
+        // Survivor had 1e9 - 0.1e9 left at the full link rate.
+        let t = sim.wait_all(&[survivor]);
+        assert!((t - 1.2).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn default_qos_path_is_unchanged() {
+        // flow() with no QoS configuration must behave exactly as before:
+        // the unequal-flows scenario from above, re-run through the
+        // classed API with default weights.
+        let mut sim = Sim::new();
+        let link = sim.resource("l", 2e9);
+        let a = sim.flow_classed(1e9, 0.0, &[link], TrafficClass::Meta);
+        let b = sim.flow_classed(3e9, 0.0, &[link], TrafficClass::Parity);
+        let times = sim.wait_each(&[a, b]);
+        assert!((times[0] - 1.0).abs() < 1e-9, "a={}", times[0]);
+        assert!((times[1] - 2.0).abs() < 1e-9, "b={}", times[1]);
     }
 }

@@ -4,11 +4,15 @@
 //! Invariants from DESIGN.md section 7: XOR reconstruction, buddy mapping
 //! derangement, SIONlib chunk layout disjointness, DES determinism and
 //! monotonicity, ring-buffer conservation, conservation of bytes in the
-//! fluid model, and JSON parser robustness.
+//! fluid model, the traffic-class QoS invariants (weighted-fill
+//! conservation, floors/ceilings respected, default-weight equivalence
+//! with the reference engine — DESIGN.md section 12), and JSON parser
+//! robustness.
 
 use deeper::fabric::ring::RingBuffer;
 use deeper::scr::Scr;
-use deeper::sim::Sim;
+use deeper::sim::reference::RefSim;
+use deeper::sim::{Sim, TrafficClass};
 use deeper::sionlib;
 use deeper::testing::{check, check_with, Config};
 use deeper::util::json;
@@ -281,6 +285,237 @@ fn prop_des_work_conserving_single_resource() {
             let t = sim.wait_all(&ids);
             let expect = sizes.iter().sum::<f64>() / 1e9;
             (t - expect).abs() / expect < 1e-6
+        },
+    );
+}
+
+#[test]
+fn prop_qos_weighted_fill_conserves_and_respects_ceilings() {
+    // For any random flow set with random classes, weights, ceilings and
+    // admissible floors: (1) the allocated rates on every resource
+    // (including ceiling shadow resources) sum to at most its capacity,
+    // and (2) every (resource, class) ceiling bounds that class's
+    // aggregate rate.  Audited through Sim::op_trace.
+    check(
+        cfg(120),
+        |g| {
+            let nres = g.usize_in(1, 3);
+            let caps: Vec<f64> = g.vec(nres, |g| g.f64_in(1e8, 1e10));
+            // Ceilings: at most one per (resource, class) — re-configuring
+            // overrides, so duplicates would invalidate the audit below.
+            let mut ceilings: Vec<(usize, usize, f64)> = Vec::new();
+            for r in 0..nres {
+                let k = g.usize_in(0, 2);
+                for _ in 0..k {
+                    let c = g.usize_in(0, TrafficClass::COUNT - 1);
+                    if !ceilings.iter().any(|&(cr, cc, _)| cr == r && cc == c) {
+                        ceilings.push((r, c, g.f64_in(0.05, 0.9)));
+                    }
+                }
+            }
+            // Floors: at most one class per resource, fraction <= 0.4 of
+            // capacity (admissible by construction).
+            let mut floors: Vec<(usize, usize, f64)> = Vec::new();
+            for r in 0..nres {
+                if g.bool() {
+                    floors.push((r, g.usize_in(0, TrafficClass::COUNT - 1), g.f64_in(0.05, 0.4)));
+                }
+            }
+            let nflows = g.usize_in(1, 16);
+            let flows: Vec<(f64, usize, usize, f64)> = g.vec(nflows, |g| {
+                (
+                    g.f64_in(1e6, 1e9),
+                    g.usize_in(1, (1 << nres) - 1),
+                    g.usize_in(0, TrafficClass::COUNT - 1),
+                    g.f64_in(0.1, 8.0),
+                )
+            });
+            (caps, ceilings, floors, flows)
+        },
+        |(caps, ceilings, floors, flows)| {
+            let mut sim = Sim::new();
+            let res: Vec<_> = (0..caps.len())
+                .map(|i| sim.resource(format!("r{i}"), caps[i]))
+                .collect();
+            // Bounds must be configured before the flows they shape.
+            for &(r, c, frac) in ceilings {
+                sim.set_class_ceiling(res[r], TrafficClass::ALL[c], frac * caps[r]);
+            }
+            for &(r, c, frac) in floors {
+                sim.set_class_floor(res[r], TrafficClass::ALL[c], frac * caps[r]);
+            }
+            for &(bytes, mask, class, weight) in flows {
+                let route: Vec<_> = res
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| mask >> i & 1 == 1)
+                    .map(|(_, &r)| r)
+                    .collect();
+                sim.flow_weighted(bytes, 0.0, &route, TrafficClass::ALL[class], weight);
+            }
+            sim.advance(1e-9); // activate everything; nothing completes
+            let trace = sim.op_trace();
+            let active: Vec<_> = trace.iter().filter(|e| !e.done).collect();
+            if active.len() != flows.len() {
+                return false;
+            }
+            // (1) conservation on every resource, shadows included.
+            let mut load: std::collections::HashMap<usize, f64> = Default::default();
+            for e in &active {
+                for r in &e.route {
+                    *load.entry(r.0).or_insert(0.0) += e.rate;
+                }
+            }
+            for (&r, &l) in &load {
+                let cap = sim.capacity(deeper::sim::ResId(r));
+                if l > cap * (1.0 + 1e-9) + 1e-6 {
+                    return false;
+                }
+            }
+            // (2) explicit per-(resource, class) ceiling audit on the
+            // base resources.
+            for &(r, c, frac) in ceilings {
+                let class = TrafficClass::ALL[c];
+                let agg: f64 = active
+                    .iter()
+                    .filter(|e| e.class == class && e.route.contains(&res[r]))
+                    .map(|e| e.rate)
+                    .sum();
+                if agg > frac * caps[r] * (1.0 + 1e-9) + 1e-6 {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_qos_floor_respected_on_single_resource() {
+    // On one shared resource with admissible floors (sum <= 0.9 of
+    // capacity): every floored class with at least one active flow
+    // receives at least its floor in aggregate (fluid flows always have
+    // demand), and the total stays within capacity.
+    check(
+        cfg(150),
+        |g| {
+            let cap = g.f64_in(1e8, 1e10);
+            // Distinct floored classes with fractions summing <= 0.9.
+            let k = g.usize_in(1, 3);
+            let mut budget = 0.9;
+            let mut floors = Vec::new();
+            let mut used = [false; TrafficClass::COUNT];
+            for _ in 0..k {
+                if budget < 0.06 {
+                    break;
+                }
+                let c = g.usize_in(0, TrafficClass::COUNT - 1);
+                if used[c] {
+                    continue;
+                }
+                used[c] = true;
+                let frac = g.f64_in(0.05, budget.min(0.5));
+                budget -= frac;
+                floors.push((c, frac));
+            }
+            let nflows = g.usize_in(2, 20);
+            let flows: Vec<(f64, usize, f64)> = g.vec(nflows, |g| {
+                (
+                    g.f64_in(1e6, 1e9),
+                    g.usize_in(0, TrafficClass::COUNT - 1),
+                    g.f64_in(0.1, 8.0),
+                )
+            });
+            (cap, floors, flows)
+        },
+        |(cap, floors, flows)| {
+            let mut sim = Sim::new();
+            let link = sim.resource("l", *cap);
+            for &(c, frac) in floors {
+                sim.set_class_floor(link, TrafficClass::ALL[c], frac * cap);
+            }
+            for &(bytes, class, weight) in flows {
+                sim.flow_weighted(bytes, 0.0, &[link], TrafficClass::ALL[class], weight);
+            }
+            sim.advance(1e-9);
+            let trace = sim.op_trace();
+            let active: Vec<_> = trace.iter().filter(|e| !e.done).collect();
+            if active.len() != flows.len() {
+                return false;
+            }
+            let total: f64 = active.iter().map(|e| e.rate).sum();
+            if total > cap * (1.0 + 1e-9) + 1e-6 {
+                return false;
+            }
+            for &(c, frac) in floors {
+                let class = TrafficClass::ALL[c];
+                let members: Vec<_> =
+                    active.iter().filter(|e| e.class == class).collect();
+                if members.is_empty() {
+                    continue; // no demand: nothing to guarantee
+                }
+                let agg: f64 = members.iter().map(|e| e.rate).sum();
+                if agg + 1e-6 < frac * cap * (1.0 - 1e-9) {
+                    return false; // floor violated despite demand
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_qos_default_weights_match_reference_engine() {
+    // The engine regression gate: flows issued through the classed API
+    // with default weights, no floors and no ceilings must reproduce the
+    // naive reference engine's completion times within 1e-9 — classes
+    // alone may not change behavior.
+    check(
+        cfg(100),
+        |g| {
+            let nres = g.usize_in(1, 3);
+            let caps: Vec<f64> = g.vec(nres, |g| g.f64_in(1e8, 5e9));
+            let n = g.usize_in(1, 16);
+            let flows: Vec<(f64, f64, usize, usize)> = g.vec(n, |g| {
+                (
+                    g.f64_in(1.0, 1e9),
+                    g.f64_in(0.0, 0.01),
+                    g.usize_in(1, (1 << nres) - 1),
+                    g.usize_in(0, TrafficClass::COUNT - 1),
+                )
+            });
+            (caps, flows)
+        },
+        |(caps, flows)| {
+            let mut sim = Sim::new();
+            let mut reference = RefSim::new();
+            let res: Vec<_> = (0..caps.len())
+                .map(|i| sim.resource(format!("r{i}"), caps[i]))
+                .collect();
+            let rres: Vec<_> = caps.iter().map(|&c| reference.resource(c)).collect();
+            let mut ids = Vec::new();
+            let mut rids = Vec::new();
+            for &(bytes, delay, mask, class) in flows {
+                let route: Vec<_> = res
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| mask >> i & 1 == 1)
+                    .map(|(_, &r)| r)
+                    .collect();
+                let rroute: Vec<_> = rres
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| mask >> i & 1 == 1)
+                    .map(|(_, &r)| r)
+                    .collect();
+                ids.push(sim.flow_classed(bytes, delay, &route, TrafficClass::ALL[class]));
+                rids.push(reference.flow(bytes, delay, &rroute));
+            }
+            let a = sim.wait_each(&ids);
+            let b = reference.wait_each(&rids);
+            a.iter()
+                .zip(&b)
+                .all(|(x, y)| (x - y).abs() <= 1e-9 * x.abs().max(1.0))
         },
     );
 }

@@ -39,6 +39,7 @@ fn compute_only_mix(seed: u64) -> Vec<JobSpec> {
             cp_interval: 0,
             ckpt: CkptStrategy::None,
             priority: rng.next_below(3) as u32,
+            qos: None,
         })
         .collect()
 }
