@@ -13,7 +13,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test lint fmt clippy doc figures bench bench-smoke bench-scale bench-fleet bench-qos artifacts clean
+.PHONY: verify build test lint fmt clippy doc figures bench bench-smoke bench-scale bench-fleet bench-qos bench-zoo artifacts clean
 
 verify: build test
 
@@ -68,6 +68,14 @@ bench-fleet: build
 bench-qos: build
 	$(CARGO) run --release --bin repro -- bench qos --csv --seed 1 --json BENCH_qos.json
 	@echo "wrote BENCH_qos.json"
+
+# Topology-zoo variants of the qos and scale exhibits on the 2:1
+# oversubscribed fat-tree (DESIGN.md §13); artifacts are written next to
+# the flat-machine ones, never over them.
+bench-zoo: build
+	$(CARGO) run --release --bin repro -- bench qos --csv --seed 1 --topology fat-tree:2 --json BENCH_qos_fat-tree.json
+	$(CARGO) run --release --bin repro -- bench scale --csv --seed 1 --topology fat-tree:2 --json BENCH_sim_scale_fat-tree.json
+	@echo "wrote BENCH_qos_fat-tree.json BENCH_sim_scale_fat-tree.json"
 
 artifacts:
 	python3 python/compile/aot.py --out-dir artifacts

@@ -137,9 +137,14 @@ impl BeeGfs {
                 + CLIENT_OP_COST * chunks_per_target as f64
                 + m.servers[server_idx].device.params.op_latency;
             let route = if write {
-                [client.tx, m.fabric.backplane(), srv.rx, dev_res]
+                let mut r = m.fabric.path(m.nodes[node].ep, srv_ep);
+                r.push(dev_res);
+                r
             } else {
-                [dev_res, srv.tx, m.fabric.backplane(), client.rx]
+                // Data path server -> client, fronted by the device read.
+                let mut r = vec![dev_res];
+                r.extend(m.fabric.path(srv_ep, m.nodes[node].ep));
+                r
             };
             flows.push(m.sim.flow(per_target, lat, &route));
         }

@@ -13,7 +13,7 @@ use std::collections::BTreeMap;
 use crate::apps::{self, run_iterations, run_iterations_multilevel, IterationJob, RunStats};
 use crate::beegfs::beeond::{concurrent_cache_write, concurrent_global_write, CacheDevice};
 use crate::beegfs::{BeeGfs, BeeOnd, CacheMode};
-use crate::fabric::TOURMALET_BW;
+use crate::fabric::{TopologySpec, TOURMALET_BW};
 use crate::metrics::{
     fmt_bytes, fmt_bw, fmt_rate, fmt_time, p50, p95, p99, Figure, KvTable, Series,
 };
@@ -30,7 +30,7 @@ use crate::sim::{Op, ResId, Sim, TrafficClass};
 use crate::sionlib::{write_sionlib, write_task_local};
 use crate::storage::DeviceParams;
 use crate::system::failure::FailurePlan;
-use crate::system::{presets, Machine, NodeKind};
+use crate::system::{presets, zoo, Machine, MachineSpec, NodeKind};
 use crate::util::json::Json;
 
 /// Seed used when the CLI does not pass `--seed` (any fixed value keeps
@@ -553,6 +553,15 @@ pub fn by_name(name: &str, seed: u64) -> Option<Vec<Exhibit>> {
     }
 }
 
+/// Resolve an optional `--topology` name to its zoo machine spec.
+/// `None` keeps an exhibit's historical flat scenario byte-for-byte.
+/// The CLI validates names before building a config, so a failure here is
+/// a programmer error, not user input.
+fn resolve_topology(name: &Option<String>) -> Option<MachineSpec> {
+    name.as_ref()
+        .map(|n| zoo::by_name(n).expect("--topology names are validated before bench configs"))
+}
+
 // ----------------------------------------------------------------------
 // `repro bench scale` — the engine-throughput exhibit (DESIGN.md §10)
 // ----------------------------------------------------------------------
@@ -568,11 +577,19 @@ pub struct ScaleConfig {
     /// timed on points up to this many flows; larger points report the
     /// optimized engine alone.
     pub baseline_max: usize,
+    /// Optional `system::zoo` topology name: route the workload over that
+    /// machine's fabric instead of the synthetic flat layout.
+    pub topology: Option<String>,
 }
 
 impl Default for ScaleConfig {
     fn default() -> Self {
-        Self { sweep: vec![1_000, 10_000, 100_000], seed: DEFAULT_SEED, baseline_max: 10_000 }
+        Self {
+            sweep: vec![1_000, 10_000, 100_000],
+            seed: DEFAULT_SEED,
+            baseline_max: 10_000,
+            topology: None,
+        }
     }
 }
 
@@ -647,6 +664,48 @@ fn scale_workload(n_flows: usize, seed: u64) -> ScaleWorkload {
     ScaleWorkload { caps, flows }
 }
 
+/// Same flow mix, routed over a zoo machine's real fabric: ~90% of flows
+/// hit the issuing node's local NVMe channel, ~10% stream to a storage
+/// server through the topology interior, so leaf crossbars, rails,
+/// bridges and spine links all appear in the engine's components.  The
+/// machine's resources are compacted to a dense index space so both
+/// engines replay the identical workload.
+fn scale_workload_zoo(n_flows: usize, seed: u64, mspec: MachineSpec) -> ScaleWorkload {
+    let m = Machine::build(mspec);
+    let n_nodes = m.nodes.len();
+    let mut rng = SplitMix64::new(seed ^ (n_flows as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    let mut index: BTreeMap<ResId, usize> = BTreeMap::new();
+    let mut caps: Vec<f64> = Vec::new();
+    let mut flows = Vec::with_capacity(n_flows);
+    for i in 0..n_flows {
+        let node = i % n_nodes;
+        let bytes = 64e6 + rng.next_f64() * 192e6;
+        let delay = rng.next_f64() * 0.25;
+        let route: Vec<ResId> = if i % 10 == 0 {
+            let srv = &m.servers[(i / 10) % m.servers.len()];
+            let mut r = m.fabric.path(m.nodes[node].ep, srv.ep);
+            r.push(srv.device.write_res());
+            r
+        } else if let Some(d) = &m.nodes[node].nvme {
+            vec![d.write_res()]
+        } else {
+            // Device-less node: a fabric put to its neighbor instead.
+            m.fabric.path(m.nodes[node].ep, m.nodes[(node + 1) % n_nodes].ep)
+        };
+        let compact: Vec<usize> = route
+            .iter()
+            .map(|&r| {
+                *index.entry(r).or_insert_with(|| {
+                    caps.push(m.sim.capacity(r));
+                    caps.len() - 1
+                })
+            })
+            .collect();
+        flows.push((bytes, delay, compact));
+    }
+    ScaleWorkload { caps, flows }
+}
+
 fn run_scale_optimized(w: &ScaleWorkload) -> (ScaleMeasurement, usize) {
     let ((last_finish, events, peak), wall) = microbench::time_once(|| {
         let mut sim = Sim::new();
@@ -692,7 +751,10 @@ pub fn scale_points(cfg: &ScaleConfig) -> Vec<ScalePoint> {
     cfg.sweep
         .iter()
         .map(|&n| {
-            let w = scale_workload(n, cfg.seed);
+            let w = match resolve_topology(&cfg.topology) {
+                Some(mspec) => scale_workload_zoo(n, cfg.seed, mspec),
+                None => scale_workload(n, cfg.seed),
+            };
             let (engine, peak_component) = run_scale_optimized(&w);
             let baseline = (n <= cfg.baseline_max).then(|| run_scale_baseline(&w));
             if let Some(b) = &baseline {
@@ -723,6 +785,12 @@ fn scale_json(cfg: &ScaleConfig, points: &[ScalePoint]) -> Json {
     doc.insert("bench".into(), Json::Str("sim_scale".into()));
     doc.insert("schema_version".into(), Json::Num(1.0));
     doc.insert("seed".into(), Json::Num(cfg.seed as f64));
+    doc.insert(
+        "topology".into(),
+        resolve_topology(&cfg.topology)
+            .map(|s| Json::Str(s.topology.label()))
+            .unwrap_or(Json::Null),
+    );
     doc.insert(
         "sweep".into(),
         Json::Arr(cfg.sweep.iter().map(|&n| Json::Num(n as f64)).collect()),
@@ -842,11 +910,14 @@ pub struct FleetBenchConfig {
     /// Optional exponential per-node MTBF, to exercise the
     /// failure→restart→requeue path inside the sweep.
     pub mtbf_node: Option<f64>,
+    /// Optional `system::zoo` topology name: run the fleet on that
+    /// machine instead of the flat DEEP-ER prototype.
+    pub topology: Option<String>,
 }
 
 impl Default for FleetBenchConfig {
     fn default() -> Self {
-        Self { sweep: vec![2, 4, 8, 16], seed: DEFAULT_SEED, mtbf_node: None }
+        Self { sweep: vec![2, 4, 8, 16], seed: DEFAULT_SEED, mtbf_node: None, topology: None }
     }
 }
 
@@ -859,7 +930,8 @@ pub struct FleetPoint {
 }
 
 /// Run the sweep: every job count under both policies, same seed, on a
-/// fresh DEEP-ER prototype machine each time.
+/// fresh machine each time (the DEEP-ER prototype, or the `--topology`
+/// zoo member when one is selected).
 pub fn fleet_points(cfg: &FleetBenchConfig) -> Vec<FleetPoint> {
     let mut out = Vec::new();
     for &n in &cfg.sweep {
@@ -870,8 +942,12 @@ pub fn fleet_points(cfg: &FleetBenchConfig) -> Vec<FleetPoint> {
                 mtbf_node: cfg.mtbf_node,
                 ..FleetConfig::default()
             };
-            let report = sched::run_fleet(sched::synthetic_jobs(n, cfg.seed), fleet_cfg)
-                .expect("synthetic jobs fit the DEEP-ER prototype");
+            let jobs = sched::synthetic_jobs(n, cfg.seed);
+            let report = match resolve_topology(&cfg.topology) {
+                Some(mspec) => sched::run_fleet_on(mspec, jobs, fleet_cfg),
+                None => sched::run_fleet(jobs, fleet_cfg),
+            }
+            .expect("synthetic jobs fit the sweep machine");
             out.push(FleetPoint { jobs: n, policy, report });
         }
     }
@@ -883,6 +959,12 @@ fn fleet_json(cfg: &FleetBenchConfig, points: &[FleetPoint]) -> Json {
     doc.insert("bench".into(), Json::Str("fleet".into()));
     doc.insert("schema_version".into(), Json::Num(1.0));
     doc.insert("seed".into(), Json::Num(cfg.seed as f64));
+    doc.insert(
+        "topology".into(),
+        resolve_topology(&cfg.topology)
+            .map(|s| Json::Str(s.topology.label()))
+            .unwrap_or(Json::Null),
+    );
     doc.insert(
         "mtbf_node_s".into(),
         cfg.mtbf_node.map(Json::Num).unwrap_or(Json::Null),
@@ -1004,6 +1086,10 @@ pub struct QosBenchConfig {
     pub exchange_floor_frac: f64,
     /// Shaped run: Exchange class weight (Bulk stays 1.0).
     pub exchange_weight: f64,
+    /// Optional `system::zoo` topology name: stage the scenario on that
+    /// machine's fabric instead of the flat oversubscribed switch; the
+    /// ceiling/floor fractions then apply to every fabric-core resource.
+    pub topology: Option<String>,
 }
 
 impl Default for QosBenchConfig {
@@ -1014,6 +1100,7 @@ impl Default for QosBenchConfig {
             flush_ceiling_frac: 0.4,
             exchange_floor_frac: 0.3,
             exchange_weight: 4.0,
+            topology: None,
         }
     }
 }
@@ -1037,15 +1124,31 @@ const QOS_FLUSH_DEPTH: usize = 2;
 /// Victim compute time between exchanges, seconds.
 const QOS_COMPUTE_GAP: f64 = 0.01;
 
-/// The scenario machine: the DEEP-ER prototype with an oversubscribed
-/// fabric and a flash-era storage backend (4 fast OSS), so the *switch*
-/// — not the spinning disks — is where flush and exchange traffic meet.
-fn qos_machine() -> Machine {
-    let mut spec = presets::deep_er();
-    spec.backplane_bw = QOS_BACKPLANE_BW;
+/// The scenario machine: by default the DEEP-ER prototype with an
+/// oversubscribed flat fabric; with `--topology`, the selected zoo member
+/// (whose interior is the contended part).  Either way the storage
+/// backend is flash-era (4 fast OSS), so the *fabric* — not the spinning
+/// disks — is where flush and exchange traffic meet.
+fn qos_machine(cfg: &QosBenchConfig) -> Machine {
+    let mut spec = match resolve_topology(&cfg.topology) {
+        Some(s) => s,
+        None => {
+            let mut s = presets::deep_er();
+            s.topology = TopologySpec::Flat { backplane_bw: QOS_BACKPLANE_BW };
+            s
+        }
+    };
     spec.n_storage_servers = 4;
     spec.server_device = DeviceParams::qpace3_global();
-    Machine::build(spec)
+    let m = Machine::build(spec);
+    assert!(
+        m.nodes.len() >= QOS_FLUSHERS.end,
+        "qos bench scenario needs at least {} nodes (topology {} has {})",
+        QOS_FLUSHERS.end,
+        m.spec.topology.label(),
+        m.nodes.len()
+    );
+    m
 }
 
 /// Shaping applied to the contended run.
@@ -1093,6 +1196,10 @@ pub struct QosBenchResult {
     pub isolated_s: Vec<f64>,
     pub unshaped: QosRun,
     pub shaped: QosRun,
+    /// Canonical topology label of the scenario machine.
+    pub topology: String,
+    /// Aggregate capacity of the shaped fabric-core resources.
+    pub core_bw: f64,
 }
 
 /// Run the victim's exchange loop, optionally against the flushing
@@ -1102,12 +1209,15 @@ fn qos_exchange_times(
     cfg: &QosBenchConfig,
     mode: Option<QosMode>,
 ) -> (Vec<f64>, usize, Vec<ClassLatency>) {
-    let mut m = qos_machine();
+    let mut m = qos_machine(cfg);
     if mode == Some(QosMode::Shaped) {
-        let bp = m.fabric.backplane();
-        let cap = m.sim.capacity(bp);
-        m.sim.set_class_ceiling(bp, TrafficClass::CkptFlush, cfg.flush_ceiling_frac * cap);
-        m.sim.set_class_floor(bp, TrafficClass::Exchange, cfg.exchange_floor_frac * cap);
+        // Shape every fabric-core resource (the one backplane on the flat
+        // scenario; uplinks/rails/bridges on zoo topologies).
+        for r in m.fabric.core_resources() {
+            let cap = m.sim.capacity(r);
+            m.sim.set_class_ceiling(r, TrafficClass::CkptFlush, cfg.flush_ceiling_frac * cap);
+            m.sim.set_class_floor(r, TrafficClass::Exchange, cfg.exchange_floor_frac * cap);
+        }
         m.sim.set_class_weight(TrafficClass::Exchange, cfg.exchange_weight);
     }
     let victim = Comm::of((0..QOS_VICTIM_NODES).collect());
@@ -1178,6 +1288,11 @@ fn qos_exchange_times(
 /// shaped contended run (same seed everywhere).
 pub fn qos_points(cfg: &QosBenchConfig) -> QosBenchResult {
     assert!(cfg.iterations > 0, "qos bench needs at least one iteration");
+    let (topology, core_bw) = {
+        let m = qos_machine(cfg);
+        let core_bw = m.fabric.core_resources().iter().map(|&r| m.sim.capacity(r)).sum();
+        (m.spec.topology.label(), core_bw)
+    };
     let (isolated_s, _, _) = qos_exchange_times(cfg, None);
     let run = |mode: QosMode, name: &'static str| {
         let (exchange_s, flushes_issued, class_latency) = qos_exchange_times(cfg, Some(mode));
@@ -1192,6 +1307,8 @@ pub fn qos_points(cfg: &QosBenchConfig) -> QosBenchResult {
         unshaped: run(QosMode::Unshaped, "unshaped"),
         shaped: run(QosMode::Shaped, "shaped"),
         isolated_s,
+        topology,
+        core_bw,
     }
 }
 
@@ -1228,7 +1345,8 @@ fn qos_json(cfg: &QosBenchConfig, r: &QosBenchResult) -> Json {
         Json::Obj(o)
     };
     let mut scenario = BTreeMap::new();
-    scenario.insert("backplane_bw".into(), Json::Num(QOS_BACKPLANE_BW));
+    scenario.insert("topology".into(), Json::Str(r.topology.clone()));
+    scenario.insert("backplane_bw".into(), Json::Num(r.core_bw));
     scenario.insert("halo_bytes".into(), Json::Num(QOS_HALO_BYTES));
     scenario.insert("flush_bytes".into(), Json::Num(QOS_FLUSH_BYTES));
     scenario.insert("victim_nodes".into(), Json::Num(QOS_VICTIM_NODES as f64));
@@ -1286,11 +1404,12 @@ pub fn qos_report(cfg: &QosBenchConfig) -> (Vec<Exhibit>, Json) {
     t.row(
         "scenario",
         format!(
-            "{} victim ranks vs {} flushers x {} deep, {} switch",
+            "{} victim ranks vs {} flushers x {} deep, {} fabric core ({})",
             QOS_VICTIM_NODES,
             QOS_FLUSHERS.len(),
             QOS_FLUSH_DEPTH,
-            fmt_bw(QOS_BACKPLANE_BW)
+            fmt_bw(r.core_bw),
+            r.topology
         ),
     );
     t.row(

@@ -8,11 +8,15 @@
 //! on.
 //!
 //! Model: every endpoint owns a TX and an RX port resource at link speed;
-//! a switch backplane resource carries aggregate traffic (non-blocking for
-//! the 24-node prototype, capacity-limited for the 672-node QPACE3 torus).
-//! A transfer is a [`crate::sim`] flow routed `src.tx -> backplane -> dst.rx`, so
-//! incast (many nodes writing to two storage servers, Fig. 6) and the
-//! NAM's two-link bound (Fig. 9) emerge from resource contention.
+//! the switch *interior* between the ports is a [`TopologySpec`] — one
+//! shared backplane for the 24-node prototype, or a generated shape from
+//! the topology zoo (fat-tree leaves + oversubscribed uplinks, dragonfly
+//! groups + tapered globals, parallel rails, an asymmetric Cluster/Booster
+//! split behind a bridge, or a two-tier leaf/top switch).  A transfer is a
+//! [`crate::sim`] flow routed `src.tx -> interior… -> dst.rx`, so incast
+//! (many nodes writing to two storage servers, Fig. 6), spine
+//! oversubscription and the NAM's two-link bound (Fig. 9) all emerge from
+//! resource contention.
 
 pub mod ring;
 
@@ -27,6 +31,73 @@ pub const LAT_BOOSTER: SimTime = 1.8e-6;
 /// Per-message software/NIC injection overhead (descriptor + doorbell).
 pub const MSG_OVERHEAD: SimTime = 0.15e-6;
 
+/// Named, parameterized fabric interior shape (DESIGN.md section 13).
+///
+/// Endpoints are grouped by their registration index (leaf = `index /
+/// arity`, group = `index / group_size`, …), which is deterministic
+/// because [`crate::system::Machine::build`] registers nodes in a fixed
+/// order.  [`TopologySpec::label`] renders the canonical
+/// `family[:params]` name that `system::zoo::by_name` parses back.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TopologySpec {
+    /// One shared switching resource — the original single-backplane model.
+    Flat {
+        /// Aggregate switching capacity, bytes/s.
+        backplane_bw: f64,
+    },
+    /// Two-level fat-tree: `arity` endpoints per leaf crossbar (the xbar is
+    /// non-blocking at `arity * link_bw`); each leaf's uplink into the
+    /// spine carries `arity * link_bw / oversub`, so `oversub > 1` models
+    /// spine oversubscription.  Cross-leaf routes traverse both leaves'
+    /// xbars and uplinks.
+    FatTree { arity: usize, link_bw: f64, oversub: f64 },
+    /// Dragonfly groups: `group_size` endpoints per group router
+    /// (`group_size * link_bw`); the group's global-link budget is the
+    /// router capacity divided by `taper`.  Inter-group routes traverse
+    /// both routers and both global-link budgets.
+    Dragonfly { group_size: usize, link_bw: f64, taper: f64 },
+    /// `rails` parallel backplanes of `rail_bw` each; a transfer is pinned
+    /// to rail `(src + dst) % rails`, so floors/ceilings must be enforced
+    /// per rail rather than on one shared resource.
+    MultiRail { rails: usize, rail_bw: f64 },
+    /// Asymmetric Cluster/Booster split: endpoints in
+    /// `booster_start..booster_end` sit behind the booster-side switch,
+    /// everything else (cluster nodes, storage, MDS, NAM) behind the
+    /// cluster-side switch; cross-side traffic funnels through a bridge of
+    /// `bridge_bw`.
+    Split {
+        booster_start: usize,
+        booster_end: usize,
+        cluster_bw: f64,
+        booster_bw: f64,
+        bridge_bw: f64,
+    },
+    /// Tiered two-level switch: `leaf_ports` endpoints per leaf switch of
+    /// `leaf_bw`; all cross-leaf traffic shares one top switch of `top_bw`.
+    Tiered { leaf_ports: usize, leaf_bw: f64, top_bw: f64 },
+}
+
+impl TopologySpec {
+    /// Canonical `family[:params]` label.  `system::zoo::by_name`
+    /// round-trips every label this produces.
+    pub fn label(&self) -> String {
+        match self {
+            TopologySpec::Flat { .. } => "flat".to_string(),
+            TopologySpec::FatTree { arity, oversub, .. } => {
+                format!("fat-tree:{oversub},{arity}")
+            }
+            TopologySpec::Dragonfly { group_size, taper, .. } => {
+                format!("dragonfly:{group_size},{taper}")
+            }
+            TopologySpec::MultiRail { rails, .. } => format!("multi-rail:{rails}"),
+            TopologySpec::Split { booster_start, booster_end, .. } => {
+                format!("split:{},{}", booster_start, booster_end - booster_start)
+            }
+            TopologySpec::Tiered { leaf_ports, .. } => format!("tiered:{leaf_ports}"),
+        }
+    }
+}
+
 /// One fabric endpoint (a node NIC, a storage server NIC, a NAM link pair).
 #[derive(Debug, Clone, Copy)]
 pub struct Endpoint {
@@ -36,10 +107,51 @@ pub struct Endpoint {
     pub latency: SimTime,
 }
 
-/// The fabric: endpoints plus a shared backplane.
+/// The realized switch interior: the sim resources backing a
+/// [`TopologySpec`].  Leaf/group resources are created lazily as endpoint
+/// registration crosses each arity boundary, so the same spec works for
+/// any machine size.
+#[derive(Debug)]
+enum Interior {
+    Flat {
+        backplane: ResId,
+    },
+    FatTree {
+        arity: usize,
+        link_bw: f64,
+        oversub: f64,
+        xbars: Vec<ResId>,
+        uplinks: Vec<ResId>,
+    },
+    Dragonfly {
+        group_size: usize,
+        link_bw: f64,
+        taper: f64,
+        routers: Vec<ResId>,
+        globals: Vec<ResId>,
+    },
+    MultiRail {
+        rails: Vec<ResId>,
+    },
+    Split {
+        booster_start: usize,
+        booster_end: usize,
+        cluster: ResId,
+        booster: ResId,
+        bridge: ResId,
+    },
+    Tiered {
+        leaf_ports: usize,
+        leaf_bw: f64,
+        leaves: Vec<ResId>,
+        top: ResId,
+    },
+}
+
+/// The fabric: endpoints plus the switch interior between them.
 #[derive(Debug)]
 pub struct Fabric {
-    backplane: ResId,
+    interior: Interior,
     endpoints: Vec<Endpoint>,
 }
 
@@ -48,12 +160,58 @@ pub struct Fabric {
 pub struct EpId(pub usize);
 
 impl Fabric {
-    /// `backplane_bw`: aggregate switching capacity.  The 24-node DEEP-ER
-    /// rack is non-blocking (set >= sum of links); QPACE3's torus bisection
-    /// is capacity-limited.
+    /// Flat fabric: `backplane_bw` is the aggregate switching capacity.
+    /// The 24-node DEEP-ER rack is non-blocking (set >= sum of links);
+    /// QPACE3's torus bisection is capacity-limited.
     pub fn new(sim: &mut Sim, backplane_bw: f64) -> Self {
-        let backplane = sim.resource("fabric:backplane", backplane_bw);
-        Self { backplane, endpoints: Vec::new() }
+        Self::with_topology(sim, &TopologySpec::Flat { backplane_bw })
+    }
+
+    /// Build the switch interior for `spec`.  Per-leaf/per-group resources
+    /// are created lazily as endpoints register; rails, split switches and
+    /// the tiered top switch exist up front.
+    pub fn with_topology(sim: &mut Sim, spec: &TopologySpec) -> Self {
+        let interior = match *spec {
+            TopologySpec::Flat { backplane_bw } => Interior::Flat {
+                backplane: sim.resource("fabric:backplane", backplane_bw),
+            },
+            TopologySpec::FatTree { arity, link_bw, oversub } => {
+                assert!(arity >= 1 && oversub > 0.0, "fat-tree: arity >= 1, oversub > 0");
+                Interior::FatTree { arity, link_bw, oversub, xbars: Vec::new(), uplinks: Vec::new() }
+            }
+            TopologySpec::Dragonfly { group_size, link_bw, taper } => {
+                assert!(group_size >= 1 && taper > 0.0, "dragonfly: group_size >= 1, taper > 0");
+                Interior::Dragonfly { group_size, link_bw, taper, routers: Vec::new(), globals: Vec::new() }
+            }
+            TopologySpec::MultiRail { rails, rail_bw } => {
+                assert!(rails >= 1, "multi-rail: rails >= 1");
+                Interior::MultiRail {
+                    rails: (0..rails)
+                        .map(|i| sim.resource(format!("fabric:rail{i}"), rail_bw))
+                        .collect(),
+                }
+            }
+            TopologySpec::Split { booster_start, booster_end, cluster_bw, booster_bw, bridge_bw } => {
+                assert!(booster_start <= booster_end, "split: empty or forward booster range");
+                Interior::Split {
+                    booster_start,
+                    booster_end,
+                    cluster: sim.resource("fabric:cluster-sw", cluster_bw),
+                    booster: sim.resource("fabric:booster-sw", booster_bw),
+                    bridge: sim.resource("fabric:bridge", bridge_bw),
+                }
+            }
+            TopologySpec::Tiered { leaf_ports, leaf_bw, top_bw } => {
+                assert!(leaf_ports >= 1, "tiered: leaf_ports >= 1");
+                Interior::Tiered {
+                    leaf_ports,
+                    leaf_bw,
+                    leaves: Vec::new(),
+                    top: sim.resource("fabric:top", top_bw),
+                }
+            }
+        };
+        Self { interior, endpoints: Vec::new() }
     }
 
     /// Register an endpoint with `link_bw` per direction and endpoint latency.
@@ -61,11 +219,115 @@ impl Fabric {
         let tx = sim.resource(format!("{label}:tx"), link_bw);
         let rx = sim.resource(format!("{label}:rx"), link_bw);
         self.endpoints.push(Endpoint { tx, rx, latency });
+        self.grow(sim);
         EpId(self.endpoints.len() - 1)
+    }
+
+    /// Create any leaf/group interior resources the latest endpoint needs.
+    fn grow(&mut self, sim: &mut Sim) {
+        let n = self.endpoints.len();
+        match &mut self.interior {
+            Interior::FatTree { arity, link_bw, oversub, xbars, uplinks } => {
+                while xbars.len() < n.div_ceil(*arity) {
+                    let l = xbars.len();
+                    let xbar_bw = *arity as f64 * *link_bw;
+                    xbars.push(sim.resource(format!("fabric:leaf{l}:xbar"), xbar_bw));
+                    uplinks.push(sim.resource(format!("fabric:leaf{l}:up"), xbar_bw / *oversub));
+                }
+            }
+            Interior::Dragonfly { group_size, link_bw, taper, routers, globals } => {
+                while routers.len() < n.div_ceil(*group_size) {
+                    let gi = routers.len();
+                    let router_bw = *group_size as f64 * *link_bw;
+                    routers.push(sim.resource(format!("fabric:grp{gi}:router"), router_bw));
+                    globals.push(sim.resource(format!("fabric:grp{gi}:global"), router_bw / *taper));
+                }
+            }
+            Interior::Tiered { leaf_ports, leaf_bw, leaves, .. } => {
+                while leaves.len() < n.div_ceil(*leaf_ports) {
+                    let l = leaves.len();
+                    leaves.push(sim.resource(format!("fabric:leaf{l}"), *leaf_bw));
+                }
+            }
+            Interior::Flat { .. } | Interior::MultiRail { .. } | Interior::Split { .. } => {}
+        }
     }
 
     pub fn endpoint_info(&self, ep: EpId) -> Endpoint {
         self.endpoints[ep.0]
+    }
+
+    /// The interior resources a `src -> dst` transfer traverses between
+    /// `src.tx` and `dst.rx` (in traversal order).  Call sites that append
+    /// extra hops (a device, a NAM memory port) build their route as
+    /// `[s.tx] + interior + [d.rx, extra…]`.
+    pub fn interior(&self, src: EpId, dst: EpId) -> Vec<ResId> {
+        match &self.interior {
+            Interior::Flat { backplane } => vec![*backplane],
+            Interior::FatTree { arity, xbars, uplinks, .. } => {
+                let (ls, ld) = (src.0 / arity, dst.0 / arity);
+                if ls == ld {
+                    vec![xbars[ls]]
+                } else {
+                    vec![xbars[ls], uplinks[ls], uplinks[ld], xbars[ld]]
+                }
+            }
+            Interior::Dragonfly { group_size, routers, globals, .. } => {
+                let (gs, gd) = (src.0 / group_size, dst.0 / group_size);
+                if gs == gd {
+                    vec![routers[gs]]
+                } else {
+                    vec![routers[gs], globals[gs], globals[gd], routers[gd]]
+                }
+            }
+            Interior::MultiRail { rails } => vec![rails[(src.0 + dst.0) % rails.len()]],
+            Interior::Split { booster_start, booster_end, cluster, booster, bridge } => {
+                let booster_side = |e: usize| e >= *booster_start && e < *booster_end;
+                match (booster_side(src.0), booster_side(dst.0)) {
+                    (false, false) => vec![*cluster],
+                    (true, true) => vec![*booster],
+                    (false, true) => vec![*cluster, *bridge, *booster],
+                    (true, false) => vec![*booster, *bridge, *cluster],
+                }
+            }
+            Interior::Tiered { leaf_ports, leaves, top } => {
+                let (ls, ld) = (src.0 / leaf_ports, dst.0 / leaf_ports);
+                if ls == ld {
+                    vec![leaves[ls]]
+                } else {
+                    vec![leaves[ls], *top, leaves[ld]]
+                }
+            }
+        }
+    }
+
+    /// Full data route of a `src -> dst` transfer: `src.tx`, the interior,
+    /// `dst.rx`.
+    pub fn path(&self, src: EpId, dst: EpId) -> Vec<ResId> {
+        let s = self.endpoints[src.0];
+        let d = self.endpoints[dst.0];
+        let mut route = Vec::with_capacity(6);
+        route.push(s.tx);
+        route.extend(self.interior(src, dst));
+        route.push(d.rx);
+        route
+    }
+
+    /// The interior resources the topology can be contended/shaped on: the
+    /// flat backplane, fat-tree uplinks, dragonfly globals, the rails, the
+    /// split's three switches, or the tiered top switch.  QoS budgets and
+    /// class floors/ceilings are installed per core resource.
+    pub fn core_resources(&self) -> Vec<ResId> {
+        match &self.interior {
+            Interior::Flat { backplane } => vec![*backplane],
+            Interior::FatTree { uplinks, .. } => uplinks.clone(),
+            Interior::Dragonfly { globals, .. } => globals.clone(),
+            Interior::MultiRail { rails } => rails.clone(),
+            Interior::Split { cluster, booster, bridge, .. } => {
+                vec![*cluster, *bridge, *booster]
+            }
+            Interior::Tiered { top, .. } => vec![*top],
+        }
     }
 
     /// RDMA put: `bytes` from `src` into `dst` memory.  Completion fires a
@@ -75,16 +337,17 @@ impl Fabric {
         let s = self.endpoints[src.0];
         let d = self.endpoints[dst.0];
         let lat = s.latency + d.latency + MSG_OVERHEAD;
-        sim.flow(bytes, lat, &[s.tx, self.backplane, d.rx])
+        sim.flow(bytes, lat, &self.path(src, dst))
     }
 
     /// RDMA get: `bytes` pulled by `src` from `dst` memory.  One extra
-    /// request half-round-trip before data flows back.
+    /// request half-round-trip before data flows back (data path is
+    /// `dst -> src`).
     pub fn get(&self, sim: &mut Sim, src: EpId, dst: EpId, bytes: f64) -> FlowId {
         let s = self.endpoints[src.0];
         let d = self.endpoints[dst.0];
         let lat = 2.0 * d.latency + s.latency + MSG_OVERHEAD;
-        sim.flow(bytes, lat, &[d.tx, self.backplane, s.rx])
+        sim.flow(bytes, lat, &self.path(dst, src))
     }
 
     /// Zero-byte notification (doorbell) from `src` to `dst`.
@@ -102,8 +365,17 @@ impl Fabric {
         s.latency + d.latency + MSG_OVERHEAD + bytes / bw
     }
 
+    /// The single shared backplane of a [`TopologySpec::Flat`] fabric.
+    /// Panics on any other topology — multi-resource interiors have no one
+    /// backplane; use [`Fabric::core_resources`] / [`Fabric::interior`].
     pub fn backplane(&self) -> ResId {
-        self.backplane
+        match &self.interior {
+            Interior::Flat { backplane } => *backplane,
+            _ => panic!(
+                "Fabric::backplane() is only defined for the flat topology; \
+                 use core_resources()/interior() on zoo topologies"
+            ),
+        }
     }
 
     pub fn n_endpoints(&self) -> usize {
@@ -195,5 +467,110 @@ mod tests {
         let t = sim.wait_all(&flows);
         let agg_bw = 4e9 / t;
         assert!(agg_bw < 20.5e9, "agg={agg_bw:e}");
+    }
+
+    fn zoo_fabric(spec: TopologySpec, n: usize) -> (Sim, Fabric, Vec<EpId>) {
+        let mut sim = Sim::new();
+        let mut fab = Fabric::with_topology(&mut sim, &spec);
+        let eps: Vec<_> = (0..n)
+            .map(|i| fab.endpoint(&mut sim, &format!("n{i}"), TOURMALET_BW, LAT_CLUSTER))
+            .collect();
+        (sim, fab, eps)
+    }
+
+    #[test]
+    fn fat_tree_intra_leaf_avoids_uplink_and_cross_leaf_is_oversubscribed() {
+        // arity 4, 2:1 oversub: uplink = 4 * 12.5 / 2 = 25 GB/s.
+        let spec = TopologySpec::FatTree { arity: 4, link_bw: TOURMALET_BW, oversub: 2.0 };
+        let (mut sim, fab, eps) = zoo_fabric(spec, 8);
+        let intra = fab.interior(eps[0], eps[1]);
+        assert_eq!(intra.len(), 1, "same leaf: xbar only");
+        let cross = fab.interior(eps[0], eps[5]);
+        assert_eq!(cross.len(), 4, "cross leaf: xbar, up, up, xbar");
+        // 4 cross-leaf senders from leaf 0 share its 25 GB/s uplink.
+        let flows: Vec<_> = (0..4).map(|i| fab.put(&mut sim, eps[i], eps[i + 4], 1e9)).collect();
+        let t = sim.wait_all(&flows);
+        let agg = 4e9 / t;
+        assert!(agg < 25.5e9, "uplink must cap the aggregate: {agg:e}");
+        assert!(agg > 24.0e9, "uplink should be the only binding hop: {agg:e}");
+    }
+
+    #[test]
+    fn multi_rail_pins_transfers_by_endpoint_pair() {
+        let spec = TopologySpec::MultiRail { rails: 3, rail_bw: 10e9 };
+        let (_sim, fab, eps) = zoo_fabric(spec, 6);
+        assert_eq!(fab.core_resources().len(), 3);
+        let r03 = fab.interior(eps[0], eps[3]);
+        let r14 = fab.interior(eps[1], eps[4]);
+        let r04 = fab.interior(eps[0], eps[4]);
+        assert_eq!(r03, r14, "(0+3)%3 == (1+4)%3: same rail");
+        assert_ne!(r03, r04, "(0+3)%3 != (0+4)%3: different rails");
+    }
+
+    #[test]
+    fn split_bridge_limits_cross_side_traffic_only() {
+        let spec = TopologySpec::Split {
+            booster_start: 2,
+            booster_end: 4,
+            cluster_bw: 100e9,
+            booster_bw: 100e9,
+            bridge_bw: 5e9,
+        };
+        let (mut sim, fab, eps) = zoo_fabric(spec, 4);
+        assert_eq!(fab.interior(eps[0], eps[1]).len(), 1, "cluster-side stays local");
+        assert_eq!(fab.interior(eps[2], eps[3]).len(), 1, "booster-side stays local");
+        assert_eq!(fab.interior(eps[0], eps[2]).len(), 3, "cross side crosses the bridge");
+        let f = fab.put(&mut sim, eps[0], eps[2], 1e9);
+        let t = sim.wait_all(&[f]);
+        let bw = 1e9 / t;
+        assert!(bw < 5.1e9, "bridge must cap cross traffic: {bw:e}");
+    }
+
+    #[test]
+    fn dragonfly_and_tiered_route_shapes() {
+        let spec = TopologySpec::Dragonfly { group_size: 2, link_bw: TOURMALET_BW, taper: 4.0 };
+        let (mut sim, fab, eps) = zoo_fabric(spec, 4);
+        assert_eq!(fab.interior(eps[0], eps[1]).len(), 1, "intra-group: router only");
+        assert_eq!(fab.interior(eps[0], eps[3]).len(), 4, "inter-group: router+global x2");
+        assert_eq!(fab.core_resources().len(), 2, "one global budget per group");
+        // Tapered global: 2 * 12.5 / 4 = 6.25 GB/s caps an inter-group put.
+        let f = fab.put(&mut sim, eps[0], eps[3], 1e9);
+        let t = sim.wait_all(&[f]);
+        assert!(1e9 / t < 6.5e9);
+
+        let (_sim2, fab2, eps2) =
+            zoo_fabric(TopologySpec::Tiered { leaf_ports: 2, leaf_bw: 25e9, top_bw: 10e9 }, 4);
+        assert_eq!(fab2.interior(eps2[0], eps2[1]).len(), 1);
+        assert_eq!(fab2.interior(eps2[0], eps2[2]).len(), 3);
+        assert_eq!(fab2.core_resources().len(), 1, "tiered core is the top switch");
+    }
+
+    #[test]
+    fn topology_labels_are_canonical() {
+        assert_eq!(TopologySpec::Flat { backplane_bw: 1e9 }.label(), "flat");
+        assert_eq!(
+            TopologySpec::FatTree { arity: 8, link_bw: 1e9, oversub: 2.0 }.label(),
+            "fat-tree:2,8"
+        );
+        assert_eq!(
+            TopologySpec::Dragonfly { group_size: 8, link_bw: 1e9, taper: 4.0 }.label(),
+            "dragonfly:8,4"
+        );
+        assert_eq!(TopologySpec::MultiRail { rails: 4, rail_bw: 1e9 }.label(), "multi-rail:4");
+        assert_eq!(
+            TopologySpec::Split {
+                booster_start: 8,
+                booster_end: 24,
+                cluster_bw: 1e9,
+                booster_bw: 1e9,
+                bridge_bw: 1e9
+            }
+            .label(),
+            "split:8,16"
+        );
+        assert_eq!(
+            TopologySpec::Tiered { leaf_ports: 8, leaf_bw: 1e9, top_bw: 1e9 }.label(),
+            "tiered:8"
+        );
     }
 }

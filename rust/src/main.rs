@@ -19,7 +19,7 @@ use deeper::sched::{self, FleetConfig, Policy};
 use deeper::scr::multilevel::{MultiLevelConfig, MultiLevelScr};
 use deeper::scr::{Scr, Strategy};
 use deeper::system::failure::FailurePlan;
-use deeper::system::{presets, Machine, NodeKind};
+use deeper::system::{presets, zoo, Machine, NodeKind};
 use deeper::util::cli::Args;
 
 const USAGE: &str = "\
@@ -28,14 +28,16 @@ repro — DEEP-ER Cluster-Booster I/O + resiliency reproduction
 USAGE:
   repro show-config
   repro bench <fig3..fig10|fig8-async|table1..table3|cb-split|all> [--csv] [--seed N]
-  repro bench scale [--sweep N1,N2,..] [--baseline-max N] [--json PATH] [--csv] [--seed N]
-  repro bench qos [--iters N] [--json PATH] [--csv] [--seed N]
+  repro bench scale [--sweep N1,N2,..] [--baseline-max N] [--topology NAME]
+                    [--json PATH] [--csv] [--seed N]
+  repro bench qos [--iters N] [--topology NAME] [--json PATH] [--csv] [--seed N]
   repro run [--app nbody|xpic|gershwin|fwi] [--strategy single|partner|buddy|dist-xor|nam-xor]
             [--iterations N] [--cp-interval N] [--fail-at I] [--mtbf S] [--seed N]
-            [--nodes N] [--multilevel] [--async-flush]
+            [--nodes N] [--multilevel] [--async-flush] [--topology NAME]
   repro fleet [--jobs N] [--policy fcfs|backfill] [--seed S] [--mtbf S]
-              [--qos] [--json PATH]
-  repro bench fleet [--sweep N1,N2,..] [--mtbf S] [--json PATH] [--csv] [--seed N]
+              [--qos] [--topology NAME] [--json PATH]
+  repro bench fleet [--sweep N1,N2,..] [--mtbf S] [--topology NAME]
+                    [--json PATH] [--csv] [--seed N]
   repro split [--iterations N]          (Cluster-Booster division of labour)
   repro e2e [--artifacts DIR]
 
@@ -63,8 +65,20 @@ USAGE:
   shared fabric, with and without traffic shaping (CkptFlush ceiling +
   Exchange floor/weight), and writes BENCH_qos.json (--json PATH).
   --qos on `repro fleet` enables admission control: jobs' declared
-  exchange guarantees are admitted against a backplane budget at dispatch
-  and installed as rate floors while they run.
+  exchange guarantees are admitted against a fabric-core budget at
+  dispatch and installed as rate floors while they run.
+
+  --topology NAME selects a machine from the topology zoo (DESIGN.md
+  section 13) instead of the flat DEEP-ER prototype fabric.  Names are
+  `family[:params]`; missing parameters take defaults:
+    flat                     single shared backplane (the prototype)
+    fat-tree:OVERSUB,ARITY   leaf crossbars + oversubscribed uplinks
+    dragonfly:GROUP,TAPER    router groups + tapered global links
+    multi-rail:RAILS         parallel backplanes, pinned per node pair
+    split:NCLUSTER,NBOOSTER  asymmetric Cluster/Booster sides + bridge
+    tiered:PORTS             leaf switches under one top switch
+  e.g. `repro bench qos --topology fat-tree:2` (2:1 oversubscription).
+  The selected canonical name is recorded in every JSON artifact.
 ";
 
 fn parse_strategy(s: &str) -> anyhow::Result<Strategy> {
@@ -114,6 +128,19 @@ fn parse_sweep(args: &Args, noun: &str, default: &[usize]) -> anyhow::Result<Vec
     Ok(sweep)
 }
 
+/// Parse `--topology NAME`, validating it against the zoo registry so a
+/// typo errors out before any sweep runs.  Bench configs carry the raw
+/// name; the canonical label lands in the JSON artifacts downstream.
+fn parse_topology(args: &Args) -> anyhow::Result<Option<String>> {
+    match args.flag("topology") {
+        None => Ok(None),
+        Some(name) => {
+            zoo::by_name(name)?;
+            Ok(Some(name.to_string()))
+        }
+    }
+}
+
 fn cmd_bench_scale(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
     let defaults = bench::ScaleConfig::default();
     let sweep = parse_sweep(args, "flow count", &defaults.sweep)?;
@@ -121,6 +148,7 @@ fn cmd_bench_scale(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
         sweep,
         seed,
         baseline_max: args.get_usize("baseline-max", defaults.baseline_max),
+        topology: parse_topology(args)?,
     };
     let events_before = deeper::sim::events_total();
     let t0 = std::time::Instant::now();
@@ -143,7 +171,12 @@ fn cmd_bench_scale(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
 fn cmd_bench_fleet(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
     let defaults = bench::FleetBenchConfig::default();
     let sweep = parse_sweep(args, "job count", &defaults.sweep)?;
-    let cfg = bench::FleetBenchConfig { sweep, seed, mtbf_node: args.get_parsed::<f64>("mtbf")? };
+    let cfg = bench::FleetBenchConfig {
+        sweep,
+        seed,
+        mtbf_node: args.get_parsed::<f64>("mtbf")?,
+        topology: parse_topology(args)?,
+    };
     let (exhibits, json) = bench::fleet_report(&cfg);
     for e in exhibits {
         println!("{}", if csv { e.render_csv() } else { e.render() });
@@ -162,6 +195,7 @@ fn cmd_bench_qos(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
         // a default-configuration BENCH_qos.json.
         iterations: args.get_parsed::<usize>("iters")?.unwrap_or(defaults.iterations),
         seed,
+        topology: parse_topology(args)?,
         ..defaults
     };
     anyhow::ensure!(cfg.iterations > 0, "--iters must be positive");
@@ -216,12 +250,17 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     let mtbf = args.get_parsed::<f64>("mtbf")?;
     let qos = args.has("qos");
     let cfg = FleetConfig { policy, seed, mtbf_node: mtbf, qos, ..FleetConfig::default() };
-    let report = sched::run_fleet(sched::synthetic_jobs(n, seed), cfg)?;
+    let jobs = sched::synthetic_jobs(n, seed);
+    let report = match parse_topology(args)? {
+        Some(name) => sched::run_fleet_on(zoo::by_name(&name)?, jobs, cfg)?,
+        None => sched::run_fleet(jobs, cfg)?,
+    };
 
     println!(
-        "fleet         : {} jobs, policy {}, seed {seed}{}{}",
+        "fleet         : {} jobs, policy {}, topology {}, seed {seed}{}{}",
         report.jobs.len(),
         report.policy.name(),
+        report.topology,
         match report.mtbf_node {
             Some(m) => format!(", per-node MTBF {m} s"),
             None => ", no failure injection".into(),
@@ -281,7 +320,11 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let seed = args.get_u64("seed", bench::DEFAULT_SEED);
     let multilevel = args.has("multilevel") || args.has("async-flush");
 
-    let mut m = Machine::build(presets::deep_er());
+    let mspec = match parse_topology(args)? {
+        Some(name) => zoo::by_name(&name)?,
+        None => presets::deep_er(),
+    };
+    let mut m = Machine::build(mspec);
     let node_ids: Vec<usize> = m.nodes_of(NodeKind::Cluster).into_iter().take(nodes).collect();
     // Failure plan: a targeted --fail-at iteration wins; otherwise --mtbf
     // samples an exponential schedule reproducible from --seed.
@@ -329,6 +372,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         }
     );
     println!("nodes         : {}", node_ids.len());
+    println!("topology      : {}", m.spec.topology.label());
     println!("seed          : {seed}");
     println!("iterations    : {} (run {})", iterations, stats.iterations_run);
     println!("total time    : {}", fmt_time(stats.total_time));

@@ -66,7 +66,9 @@ impl NamDevice {
         let s = fabric.endpoint_info(src);
         let d = fabric.endpoint_info(self.ep);
         let lat = s.latency + d.latency + MSG_OVERHEAD + FPGA_JOB_OVERHEAD;
-        Op::single(sim.flow(bytes, lat, &[s.tx, fabric.backplane(), d.rx, self.hmc.write_res()]))
+        let mut route = fabric.path(src, self.ep);
+        route.push(self.hmc.write_res());
+        Op::single(sim.flow(bytes, lat, &route))
     }
 
     /// RDMA get from NAM memory as an [`Op`] handle.
@@ -74,7 +76,10 @@ impl NamDevice {
         let s = fabric.endpoint_info(dst);
         let d = fabric.endpoint_info(self.ep);
         let lat = 2.0 * d.latency + s.latency + MSG_OVERHEAD + FPGA_JOB_OVERHEAD;
-        Op::single(sim.flow(bytes, lat, &[self.hmc.read_res(), d.tx, fabric.backplane(), s.rx]))
+        // Data path NAM -> dst, fronted by the HMC read stage.
+        let mut route = vec![self.hmc.read_res()];
+        route.extend(fabric.path(self.ep, dst));
+        Op::single(sim.flow(bytes, lat, &route))
     }
 
     /// Flow-level shim over [`NamDevice::put_op`].
@@ -109,13 +114,11 @@ impl NamDevice {
             let s = fabric.endpoint_info(src);
             let d = fabric.endpoint_info(self.ep);
             let lat = 2.0 * d.latency + s.latency + MSG_OVERHEAD + FPGA_JOB_OVERHEAD;
-            // Route: source NIC tx -> backplane -> NAM links -> HMC write
-            // (XOR is folded at stream rate by the FPGA pipeline).
-            op.push(sim.flow(
-                bytes_per_node,
-                lat,
-                &[s.tx, fabric.backplane(), d.rx, self.hmc.write_res()],
-            ));
+            // Route: source NIC tx -> fabric interior -> NAM links -> HMC
+            // write (XOR is folded at stream rate by the FPGA pipeline).
+            let mut route = fabric.path(src, self.ep);
+            route.push(self.hmc.write_res());
+            op.push(sim.flow(bytes_per_node, lat, &route));
         }
         sim.set_issue_class(prev);
         Ok(op)

@@ -211,11 +211,8 @@ impl OmpssRuntime {
                     let sm = m.fabric.endpoint_info(m.nodes[self.master].ep);
                     let sw = m.fabric.endpoint_info(m.nodes[worker].ep);
                     let lat = sm.latency + sw.latency;
-                    let input = m.sim.flow(
-                        task.input_bytes,
-                        lat,
-                        &[sm.tx, m.fabric.backplane(), sw.rx],
-                    );
+                    let in_route = m.fabric.path(m.nodes[self.master].ep, m.nodes[worker].ep);
+                    let input = m.sim.flow(task.input_bytes, lat, &in_route);
                     m.sim.wait_all(&[input]);
                     let cpu = m.nodes[worker].cpu;
                     let eff_flops = if Some((tid, worker)) == wave_fail {
@@ -239,10 +236,11 @@ impl OmpssRuntime {
                     let task = &graph.tasks[tid];
                     let sm = m.fabric.endpoint_info(m.nodes[self.master].ep);
                     let sw = m.fabric.endpoint_info(m.nodes[worker].ep);
+                    let out_route = m.fabric.path(m.nodes[worker].ep, m.nodes[self.master].ep);
                     out_flows.push(m.sim.flow(
                         task.output_bytes,
                         sm.latency + sw.latency,
-                        &[sw.tx, m.fabric.backplane(), sm.rx],
+                        &out_route,
                     ));
                 }
                 if !out_flows.is_empty() {
@@ -299,19 +297,20 @@ impl OmpssRuntime {
                             let task = &graph.tasks[tid];
                             let sm = m.fabric.endpoint_info(m.nodes[self.master].ep);
                             let sw = m.fabric.endpoint_info(m.nodes[worker].ep);
-                            let input = m.sim.flow(
-                                task.input_bytes,
-                                sm.latency + sw.latency,
-                                &[sm.tx, m.fabric.backplane(), sw.rx],
-                            );
+                            let in_route =
+                                m.fabric.path(m.nodes[self.master].ep, m.nodes[worker].ep);
+                            let input =
+                                m.sim.flow(task.input_bytes, sm.latency + sw.latency, &in_route);
                             m.sim.wait_all(&[input]);
                             let cpu = m.nodes[worker].cpu;
                             let c = m.sim.flow(task.flops / 0.25, 0.0, &[cpu]);
                             m.sim.wait_all(&[c]);
+                            let out_route =
+                                m.fabric.path(m.nodes[worker].ep, m.nodes[self.master].ep);
                             let out = m.sim.flow(
                                 task.output_bytes,
                                 sm.latency + sw.latency,
-                                &[sw.tx, m.fabric.backplane(), sm.rx],
+                                &out_route,
                             );
                             m.sim.wait_all(&[out]);
                             tasks_run += 1;

@@ -38,9 +38,9 @@ use crate::qos;
 use crate::scr::multilevel::{MultiLevelConfig, MultiLevelScr};
 use crate::scr::{Scr, Strategy};
 use crate::sim::rng::SplitMix64;
-use crate::sim::{SimTime, TrafficClass};
+use crate::sim::{ResId, SimTime, TrafficClass};
 use crate::system::failure::{Failure, FailurePlan};
-use crate::system::{presets, Machine, MachineSpec, NodeKind};
+use crate::system::{presets, Machine, MachineSpec, NodeKind, NodeSpec};
 use crate::util::json::Json;
 use self::policy::{NodeReq, QueuedReq, RunningRes};
 pub use self::policy::Policy;
@@ -72,13 +72,17 @@ impl CkptStrategy {
 }
 
 /// A guarantee a fleet job may declare: an aggregate rate floor for one
-/// traffic class on the shared fabric backplane.  Admitted against the
-/// scheduler's guarantee budget at dispatch ([`qos::Policy`]); installed
-/// into the engine as a per-(resource, class) floor while the job runs.
+/// traffic class across the fabric's core switching resources.  Admitted
+/// against the scheduler's guarantee budget at dispatch ([`qos::Policy`]);
+/// installed into the engine as per-(resource, class) floors while the
+/// job runs.  On the flat prototype the core is the single backplane and
+/// the floor lands there verbatim; on zoo topologies it is split across
+/// the core resources (rails, uplinks, split switches) in proportion to
+/// their capacity.
 #[derive(Debug, Clone, Copy)]
 pub struct QosDemand {
     pub class: TrafficClass,
-    /// Requested floor on the fabric backplane, bytes/s.
+    /// Requested aggregate floor over the fabric core, bytes/s.
     pub backplane_floor: f64,
 }
 
@@ -126,11 +130,35 @@ pub fn estimate_runtime(spec: &JobSpec, m: &MachineSpec, from_iter: usize) -> Si
         }
     }
     assert!(peak.is_finite(), "job requests no schedulable partition");
+    // Heterogeneous pools: bound the exchange and checkpoint terms by the
+    // *slowest requested* partition's NIC and fastest local device, not
+    // unconditionally the cluster's (on the prototype both partitions are
+    // identical, so this is a no-op there).
+    let dev_bw = |ns: &NodeSpec| {
+        ns.nvme
+            .as_ref()
+            .or(ns.ramdisk.as_ref())
+            .or(ns.hdd.as_ref())
+            .map(|d| d.write_bw)
+            .unwrap_or(1e9)
+    };
+    let mut nic_bw = f64::INFINITY;
+    let mut ckpt_bw = f64::INFINITY;
+    if spec.cluster_nodes > 0 {
+        nic_bw = nic_bw.min(m.cluster.nic_bw);
+        ckpt_bw = ckpt_bw.min(dev_bw(&m.cluster));
+    }
+    if spec.booster_nodes > 0 {
+        if let Some(b) = &m.booster {
+            nic_bw = nic_bw.min(b.nic_bw);
+            ckpt_bw = ckpt_bw.min(dev_bw(b));
+        }
+    }
     let p = &spec.profile;
     let t_compute = p.flops_per_iter_per_node / (p.cpu_efficiency.clamp(1e-3, 1.0) * peak);
     let n_nodes = (spec.cluster_nodes + spec.booster_nodes) as f64;
     let t_exch = if p.halo_bytes > 0.0 && n_nodes > 1.0 {
-        2.0 * p.halo_bytes / m.cluster.nic_bw
+        2.0 * p.halo_bytes / nic_bw
     } else {
         0.0
     };
@@ -139,8 +167,7 @@ pub fn estimate_runtime(spec: &JobSpec, m: &MachineSpec, from_iter: usize) -> Si
     } else {
         (iters / spec.cp_interval as f64).floor()
     };
-    let nvme_bw = m.cluster.nvme.as_ref().map(|d| d.write_bw).unwrap_or(1e9);
-    let t_ckpt = 4.0 * p.ckpt_bytes_per_node / nvme_bw;
+    let t_ckpt = 4.0 * p.ckpt_bytes_per_node / ckpt_bw;
     // The tiny relative inflation keeps the estimate an upper bound under
     // floating-point drift on the exactly-predictable compute-only path.
     (iters * (t_compute + t_exch) + cps * t_ckpt) * (1.0 + 1e-9) + 1e-9
@@ -307,6 +334,9 @@ pub struct FleetReport {
     /// Total flows of doomed phase attempts cancelled at failure/requeue
     /// time across all jobs (the §11.4 fix's observable).
     pub flows_cancelled: usize,
+    /// Canonical label of the machine's fabric topology (`"flat"` for the
+    /// prototype presets; a zoo name like `"split:8,16"` otherwise).
+    pub topology: String,
 }
 
 impl FleetReport {
@@ -331,6 +361,7 @@ impl FleetReport {
         doc.insert("sim_events".into(), Json::Num(self.sim_events as f64));
         doc.insert("qos".into(), Json::Bool(self.qos));
         doc.insert("flows_cancelled".into(), Json::Num(self.flows_cancelled as f64));
+        doc.insert("topology".into(), Json::Str(self.topology.clone()));
         doc.insert(
             "finish_order".into(),
             Json::Arr(self.finish_order.iter().map(|&i| Json::Num(i as f64)).collect()),
@@ -415,9 +446,13 @@ impl Scheduler {
         // exponential sampler already is; explicit test plans may not be).
         failures.sort_by(|a, b| a.at.partial_cmp(&b.at).expect("finite failure times"));
         let qos_policy = cfg.qos.then(|| {
+            // One guarantee budget per core switching resource (the flat
+            // backplane, or every rail/uplink/split switch of a zoo
+            // topology), each a fixed fraction of that resource's capacity.
             let mut p = qos::Policy::new();
-            let bp = m.fabric.backplane();
-            p.set_budget(bp, QOS_BUDGET_FRAC * m.sim.capacity(bp));
+            for r in m.fabric.core_resources() {
+                p.set_budget(r, QOS_BUDGET_FRAC * m.sim.capacity(r));
+            }
             p
         });
         Self {
@@ -478,7 +513,13 @@ impl Scheduler {
                 "job {:?}: qos floor must be positive",
                 spec.name
             );
-            let budget = policy.budget(self.m.fabric.backplane()).unwrap_or(0.0);
+            let budget: f64 = self
+                .m
+                .fabric
+                .core_resources()
+                .iter()
+                .map(|&r| policy.budget(r).unwrap_or(0.0))
+                .sum();
             anyhow::ensure!(
                 d.backplane_floor <= budget,
                 "job {:?}: demanded floor {:.3e} B/s exceeds the qos budget {:.3e} B/s",
@@ -609,12 +650,25 @@ impl Scheduler {
         let Some(d) = self.jobs[id].spec.qos else {
             return true;
         };
-        let bp = self.m.fabric.backplane();
-        let demand = qos::Demand { class: d.class, floors: vec![(bp, d.backplane_floor)] };
+        // Split the aggregate floor across the fabric's core resources in
+        // proportion to their capacity; the single-core (flat) case keeps
+        // the floor bit-exact on the backplane.
+        let core = self.m.fabric.core_resources();
+        let floors: Vec<(ResId, f64)> = if core.len() == 1 {
+            vec![(core[0], d.backplane_floor)]
+        } else {
+            let total: f64 = core.iter().map(|&r| self.m.sim.capacity(r)).sum();
+            core.iter()
+                .map(|&r| (r, d.backplane_floor * self.m.sim.capacity(r) / total))
+                .collect()
+        };
+        let demand = qos::Demand { class: d.class, floors: floors.clone() };
         if !policy.try_admit(id as u64, &demand) {
             return false;
         }
-        self.m.sim.add_class_floor(bp, d.class, d.backplane_floor);
+        for (r, g) in floors {
+            self.m.sim.add_class_floor(r, d.class, g);
+        }
         self.jobs[id].granted = true;
         true
     }
@@ -835,6 +889,7 @@ impl Scheduler {
             policy: self.cfg.policy,
             seed: self.cfg.seed,
             mtbf_node: self.cfg.mtbf_node,
+            topology: self.m.spec.topology.label(),
             jobs,
             finish_order: self.finish_order,
             makespan,
@@ -850,14 +905,24 @@ impl Scheduler {
     }
 }
 
-/// Build the DEEP-ER prototype machine, submit `specs` and run the fleet.
-pub fn run_fleet(specs: Vec<JobSpec>, cfg: FleetConfig) -> crate::Result<FleetReport> {
-    let m = Machine::build(presets::deep_er());
+/// Build `mspec`, submit `specs` and run the fleet — the topology-generic
+/// entry point behind `--topology` (any `system::zoo` member works).
+pub fn run_fleet_on(
+    mspec: MachineSpec,
+    specs: Vec<JobSpec>,
+    cfg: FleetConfig,
+) -> crate::Result<FleetReport> {
+    let m = Machine::build(mspec);
     let mut s = Scheduler::new(m, cfg);
     for spec in specs {
         s.submit(spec)?;
     }
     Ok(s.run())
+}
+
+/// Build the DEEP-ER prototype machine, submit `specs` and run the fleet.
+pub fn run_fleet(specs: Vec<JobSpec>, cfg: FleetConfig) -> crate::Result<FleetReport> {
+    run_fleet_on(presets::deep_er(), specs, cfg)
 }
 
 /// A reproducible mixed workload over the five co-design applications:

@@ -16,8 +16,9 @@
 
 pub mod failure;
 pub mod presets;
+pub mod zoo;
 
-use crate::fabric::{EpId, Fabric};
+use crate::fabric::{EpId, Fabric, TopologySpec};
 use crate::nam::NamDevice;
 use crate::sim::{FlowId, ResId, Sim, SimTime};
 use crate::storage::{Device, DeviceParams};
@@ -64,7 +65,9 @@ pub struct MachineSpec {
     /// Metadata operation service time at the MDS (create/open/stat).
     pub mds_op_cost: SimTime,
     pub n_nam: usize,
-    pub backplane_bw: f64,
+    /// Fabric interior between the endpoint ports: the flat backplane of
+    /// the original presets or a generated shape from [`zoo`].
+    pub topology: TopologySpec,
 }
 
 impl MachineSpec {
@@ -126,8 +129,19 @@ pub struct Machine {
 impl Machine {
     /// Instantiate every resource for `spec`.
     pub fn build(spec: MachineSpec) -> Self {
+        // The Split topology partitions endpoints by registration index;
+        // nodes register cluster-first, so its booster range must be
+        // exactly the booster node block (storage/MDS/NAM endpoints come
+        // after and land cluster-side).
+        if let TopologySpec::Split { booster_start, booster_end, .. } = spec.topology {
+            assert_eq!(
+                (booster_start, booster_end),
+                (spec.n_cluster, spec.n_cluster + spec.n_booster),
+                "split topology range must match the machine's booster partition"
+            );
+        }
         let mut sim = Sim::new();
-        let mut fabric = Fabric::new(&mut sim, spec.backplane_bw);
+        let mut fabric = Fabric::with_topology(&mut sim, &spec.topology);
         let mut nodes = Vec::with_capacity(spec.total_nodes());
 
         let add_node = |sim: &mut Sim, fabric: &mut Fabric, ns: &NodeSpec, idx: usize| {

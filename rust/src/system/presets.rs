@@ -1,7 +1,7 @@
 //! Published machine configurations (paper Table I and Section V testbeds).
 
 use super::{MachineSpec, NodeKind, NodeSpec};
-use crate::fabric::{LAT_BOOSTER, LAT_CLUSTER, TOURMALET_BW};
+use crate::fabric::{TopologySpec, LAT_BOOSTER, LAT_CLUSTER, TOURMALET_BW};
 use crate::storage::DeviceParams;
 
 /// DEEP-ER prototype Cluster node (Table I, left column):
@@ -61,7 +61,7 @@ pub fn deep_er() -> MachineSpec {
         mds_op_cost: 0.8e-3,
         n_nam: 2,
         // 24 nodes + servers on a non-blocking Tourmalet switch group.
-        backplane_bw: 32.0 * TOURMALET_BW,
+        topology: TopologySpec::Flat { backplane_bw: 32.0 * TOURMALET_BW },
     }
 }
 
@@ -96,7 +96,8 @@ pub fn qpace3() -> MachineSpec {
         server_nic_bw: 40e9,
         mds_op_cost: 0.5e-3,
         n_nam: 0,
-        backplane_bw: 672.0 * 12.5e9 * 0.4, // torus bisection fraction
+        // torus bisection fraction
+        topology: TopologySpec::Flat { backplane_bw: 672.0 * 12.5e9 * 0.4 },
     }
 }
 
@@ -128,7 +129,7 @@ pub fn marenostrum3() -> MachineSpec {
         server_nic_bw: 5.0e9,
         mds_op_cost: 1.0e-3,
         n_nam: 0,
-        backplane_bw: 64.0 * 5.0e9,
+        topology: TopologySpec::Flat { backplane_bw: 64.0 * 5.0e9 },
     }
 }
 
@@ -140,7 +141,10 @@ mod tests {
     fn presets_are_consistent() {
         for spec in [deep_er(), qpace3(), marenostrum3()] {
             assert!(spec.n_cluster > 0);
-            assert!(spec.backplane_bw > 0.0);
+            match spec.topology {
+                TopologySpec::Flat { backplane_bw } => assert!(backplane_bw > 0.0),
+                ref t => panic!("published presets are flat, got {}", t.label()),
+            }
             assert!(spec.mds_op_cost > 0.0);
             if let Some(b) = &spec.booster {
                 assert!(spec.n_booster > 0);

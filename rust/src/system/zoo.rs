@@ -1,0 +1,181 @@
+//! Topology zoo: named, parameterized machine shapes (DESIGN.md §13).
+//!
+//! Every exhibit and invariant used to run on the one DEEP-ER prototype
+//! shape; the zoo turns the fabric interior into a swept axis.  Each entry
+//! is a [`MachineSpec`] built from the Table I node hardware with a
+//! generated [`TopologySpec`] interior, so `Machine::build`, the fleet
+//! scheduler, the QoS engine and the benches all work unchanged on any
+//! member.
+//!
+//! Names are `family[:params]` and round-trip through
+//! [`TopologySpec::label`]: `by_name(name).topology.label() == name` for
+//! every canonical name in [`NAMES`].  Partial parameter lists take
+//! defaults (`"fat-tree:2"` is canonicalized to `"fat-tree:2,8"`).
+//!
+//! Selection: `repro run/fleet/bench … --topology <name>` on the CLI;
+//! `testing::Config::topologies` + `check_zoo` in the property suites.
+
+use super::{presets, MachineSpec};
+use crate::fabric::{TopologySpec, TOURMALET_BW};
+
+/// Canonical names of every registry member, one per topology family.
+pub const NAMES: &[&str] = &[
+    "flat",
+    "fat-tree:2,8",
+    "dragonfly:8,4",
+    "multi-rail:4",
+    "split:8,16",
+    "tiered:8",
+];
+
+/// Every registry member as `(canonical_name, spec)`, in [`NAMES`] order.
+pub fn all() -> Vec<(String, MachineSpec)> {
+    NAMES
+        .iter()
+        .map(|n| (n.to_string(), by_name(n).expect("registry names resolve")))
+        .collect()
+}
+
+/// Resolve a `family[:params]` name to a machine spec.  Missing trailing
+/// parameters take the family defaults; unknown families and malformed
+/// parameters are errors (not panics) so the CLI can report them.
+pub fn by_name(name: &str) -> crate::Result<MachineSpec> {
+    let (family, params) = match name.split_once(':') {
+        Some((f, p)) => (f, p.split(',').collect::<Vec<_>>()),
+        None => (name, Vec::new()),
+    };
+    let usize_at = |i: usize, default: usize| -> crate::Result<usize> {
+        match params.get(i) {
+            None => Ok(default),
+            Some(s) => s
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("topology {name:?}: bad integer parameter {s:?}")),
+        }
+    };
+    let f64_at = |i: usize, default: f64| -> crate::Result<f64> {
+        match params.get(i) {
+            None => Ok(default),
+            Some(s) => s
+                .trim()
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("topology {name:?}: bad numeric parameter {s:?}")),
+        }
+    };
+
+    // All members share the Table I node/storage hardware; only the
+    // fabric interior (and, for split, the partition sizes) varies.
+    let mut spec = presets::deep_er();
+    match family {
+        "flat" => {
+            anyhow::ensure!(params.is_empty(), "topology \"flat\" takes no parameters");
+        }
+        "fat-tree" => {
+            let oversub = f64_at(0, 2.0)?;
+            let arity = usize_at(1, 8)?;
+            anyhow::ensure!(
+                oversub > 0.0 && arity >= 1,
+                "fat-tree needs oversub > 0 and arity >= 1"
+            );
+            spec.name = "zoo fat-tree";
+            spec.topology = TopologySpec::FatTree { arity, link_bw: TOURMALET_BW, oversub };
+        }
+        "dragonfly" => {
+            let group_size = usize_at(0, 8)?;
+            let taper = f64_at(1, 4.0)?;
+            anyhow::ensure!(
+                group_size >= 1 && taper > 0.0,
+                "dragonfly needs group_size >= 1 and taper > 0"
+            );
+            spec.name = "zoo dragonfly";
+            spec.topology = TopologySpec::Dragonfly { group_size, link_bw: TOURMALET_BW, taper };
+        }
+        "multi-rail" => {
+            let rails = usize_at(0, 4)?;
+            anyhow::ensure!(rails >= 1, "multi-rail needs rails >= 1");
+            spec.name = "zoo multi-rail";
+            spec.topology = TopologySpec::MultiRail { rails, rail_bw: 8.0 * TOURMALET_BW };
+        }
+        "split" => {
+            // Asymmetric Cluster/Booster partition: a thin cluster front
+            // feeding a wide booster through a constrained bridge.
+            let n_cluster = usize_at(0, 8)?;
+            let n_booster = usize_at(1, 16)?;
+            anyhow::ensure!(
+                n_cluster >= 1 && n_booster >= 1,
+                "split needs at least one node per side"
+            );
+            spec.name = "zoo split";
+            spec.n_cluster = n_cluster;
+            spec.n_booster = n_booster;
+            spec.topology = TopologySpec::Split {
+                booster_start: n_cluster,
+                booster_end: n_cluster + n_booster,
+                // Cluster side also hosts storage/MDS/NAM endpoints.
+                cluster_bw: (n_cluster as f64 + 8.0) * TOURMALET_BW,
+                booster_bw: n_booster as f64 * TOURMALET_BW,
+                bridge_bw: 4.0 * TOURMALET_BW,
+            };
+        }
+        "tiered" => {
+            let leaf_ports = usize_at(0, 8)?;
+            anyhow::ensure!(leaf_ports >= 1, "tiered needs leaf_ports >= 1");
+            spec.name = "zoo tiered";
+            spec.topology = TopologySpec::Tiered {
+                leaf_ports,
+                leaf_bw: leaf_ports as f64 * TOURMALET_BW,
+                top_bw: 12.0 * TOURMALET_BW,
+            };
+        }
+        _ => anyhow::bail!(
+            "unknown topology {name:?} (families: flat, fat-tree, dragonfly, multi-rail, split, tiered)"
+        ),
+    }
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_at_least_five_families_and_round_trips() {
+        assert!(NAMES.len() >= 5);
+        let entries = all();
+        assert_eq!(entries.len(), NAMES.len());
+        for (name, spec) in &entries {
+            assert_eq!(
+                &spec.topology.label(),
+                name,
+                "canonical name must round-trip through the topology label"
+            );
+        }
+    }
+
+    #[test]
+    fn partial_parameters_canonicalize() {
+        assert_eq!(by_name("fat-tree:2").unwrap().topology.label(), "fat-tree:2,8");
+        assert_eq!(by_name("fat-tree").unwrap().topology.label(), "fat-tree:2,8");
+        assert_eq!(by_name("dragonfly").unwrap().topology.label(), "dragonfly:8,4");
+        assert_eq!(by_name("split").unwrap().topology.label(), "split:8,16");
+        assert_eq!(by_name("multi-rail:2").unwrap().topology.label(), "multi-rail:2");
+    }
+
+    #[test]
+    fn split_resizes_the_partitions() {
+        let s = by_name("split:8,16").unwrap();
+        assert_eq!(s.n_cluster, 8);
+        assert_eq!(s.n_booster, 16);
+        let t = by_name("split:4,2").unwrap();
+        assert_eq!((t.n_cluster, t.n_booster), (4, 2));
+    }
+
+    #[test]
+    fn junk_names_error_cleanly() {
+        assert!(by_name("nope").is_err());
+        assert!(by_name("fat-tree:abc").is_err());
+        assert!(by_name("multi-rail:0").is_err());
+        assert!(by_name("flat:1").is_err());
+        assert!(by_name("split:0,4").is_err());
+    }
+}

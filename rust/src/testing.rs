@@ -4,8 +4,13 @@
 //! source, many cases per property, and on failure a greedy *shrink* pass
 //! that retries the property with smaller inputs before reporting the
 //! minimal failing case.  Used by rust/tests/prop_invariants.rs.
+//!
+//! [`check_zoo`] additionally sweeps machine-backed properties across the
+//! topology zoo: each case runs on a registry member, round-robin, and a
+//! failure names the topology alongside the case/seed.
 
 use crate::sim::rng::SplitMix64;
+use crate::system::{zoo, MachineSpec};
 
 /// Random value source handed to properties.
 #[derive(Debug)]
@@ -51,18 +56,21 @@ impl Gen {
     }
 }
 
-/// Configuration for [`check`].
+/// Configuration for [`check`] and [`check_zoo`].
 #[derive(Debug, Clone, Copy)]
 pub struct Config {
     /// Number of generated inputs to test the property on.
     pub cases: usize,
     /// Base seed; case `i` derives its own stream from `seed + i`.
     pub seed: u64,
+    /// Topology names [`check_zoo`] cycles through (ignored by the plain
+    /// runners); defaults to the whole registry.
+    pub topologies: &'static [&'static str],
 }
 
 impl Default for Config {
     fn default() -> Self {
-        Self { cases: 256, seed: 0xDEE9E5 }
+        Self { cases: 256, seed: 0xDEE9E5, topologies: zoo::NAMES }
     }
 }
 
@@ -108,6 +116,32 @@ pub fn check<T: Clone + std::fmt::Debug>(
     check_with(cfg, gen_input, |_| Vec::new(), prop);
 }
 
+/// Run a machine-backed property swept across the topology zoo: case `i`
+/// resolves `cfg.topologies[i % len]` to a [`MachineSpec`] and hands it
+/// to both closures (clone it to build machines — specs are cheap).  A
+/// failing case panics with the topology name so a swept suite pinpoints
+/// the family that broke.  No shrinking: machine inputs do not shrink
+/// meaningfully, the per-case seed reproduces everything.
+pub fn check_zoo<T: std::fmt::Debug>(
+    cfg: Config,
+    mut gen_input: impl FnMut(&mut Gen, &MachineSpec) -> T,
+    mut prop: impl FnMut(&MachineSpec, &T) -> bool,
+) {
+    assert!(!cfg.topologies.is_empty(), "check_zoo needs at least one topology");
+    for case in 0..cfg.cases {
+        let name = cfg.topologies[case % cfg.topologies.len()];
+        let spec = zoo::by_name(name).expect("Config::topologies entries resolve in the zoo");
+        let mut g = Gen::new(cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let input = gen_input(&mut g, &spec);
+        if !prop(&spec, &input) {
+            panic!(
+                "property failed on topology {name} (case {case}, seed {}):\n  input: {input:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,7 +150,7 @@ mod tests {
     fn passing_property_runs_all_cases() {
         let mut n = 0;
         check(
-            Config { cases: 50, seed: 1 },
+            Config { cases: 50, seed: 1, ..Config::default() },
             |g| g.usize_in(0, 100),
             |&x| {
                 n += 1;
@@ -129,7 +163,11 @@ mod tests {
     #[test]
     #[should_panic(expected = "property failed")]
     fn failing_property_panics() {
-        check(Config { cases: 64, seed: 2 }, |g| g.usize_in(0, 100), |&x| x < 90);
+        check(
+            Config { cases: 64, seed: 2, ..Config::default() },
+            |g| g.usize_in(0, 100),
+            |&x| x < 90,
+        );
     }
 
     #[test]
@@ -137,10 +175,36 @@ mod tests {
     fn shrinking_finds_minimal() {
         // Property fails for x >= 10; shrinking by -1 should land on 10.
         check_with(
-            Config { cases: 64, seed: 3 },
+            Config { cases: 64, seed: 3, ..Config::default() },
             |g| g.usize_in(0, 1000),
             |&x| if x > 0 { vec![x - 1, x / 2] } else { vec![] },
             |&x| x < 10,
+        );
+    }
+
+    #[test]
+    fn zoo_sweep_visits_every_topology_round_robin() {
+        let mut seen = Vec::new();
+        check_zoo(
+            Config { cases: zoo::NAMES.len() * 2, seed: 4, ..Config::default() },
+            |_, spec| spec.topology.label(),
+            |spec, label| {
+                seen.push(label.clone());
+                spec.total_nodes() > 0
+            },
+        );
+        for name in zoo::NAMES {
+            assert_eq!(seen.iter().filter(|l| l == name).count(), 2, "{name}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "on topology fat-tree:2,8")]
+    fn zoo_failure_names_the_topology() {
+        check_zoo(
+            Config { cases: 16, seed: 5, ..Config::default() },
+            |_, _| 0u32,
+            |spec, _| !matches!(spec.topology, crate::fabric::TopologySpec::FatTree { .. }),
         );
     }
 

@@ -1,11 +1,15 @@
 //! Integration: the multi-tenant fleet scheduler end to end — golden
 //! determinism of the JSON summary, the ISSUE 4 acceptance scenario
-//! (8 co-scheduled jobs under backfill with MTBF-driven failures), and
-//! the `repro bench fleet` schema contract.
+//! (8 co-scheduled jobs under backfill with MTBF-driven failures), the
+//! `repro bench fleet` schema contract, and the topology-zoo fleet
+//! goldens (asymmetric split machine, heterogeneous-pool backfill).
 
 use deeper::bench::{fleet_report, FleetBenchConfig};
 use deeper::sched::policy::Policy;
-use deeper::sched::{run_fleet, synthetic_jobs, FleetConfig, FleetReport};
+use deeper::sched::{
+    run_fleet, run_fleet_on, synthetic_jobs, CkptStrategy, FleetConfig, FleetReport, JobSpec,
+};
+use deeper::system::zoo;
 use deeper::util::json::{self, Json};
 
 fn run_once(policy: Policy, jobs: usize, seed: u64, mtbf: Option<f64>) -> FleetReport {
@@ -110,7 +114,7 @@ fn fleet_json_schema_round_trips() {
 
 #[test]
 fn bench_fleet_exhibits_and_schema() {
-    let cfg = FleetBenchConfig { sweep: vec![2, 3], seed: 5, mtbf_node: None };
+    let cfg = FleetBenchConfig { sweep: vec![2, 3], seed: 5, mtbf_node: None, topology: None };
     let (exhibits, json) = fleet_report(&cfg);
     assert_eq!(exhibits.len(), 4, "makespan fig, utilization fig, wait fig, summary");
     for e in &exhibits {
@@ -135,10 +139,82 @@ fn bench_fleet_exhibits_and_schema() {
 
 #[test]
 fn bench_fleet_is_deterministic() {
-    let cfg = FleetBenchConfig { sweep: vec![2], seed: 11, mtbf_node: Some(6_000.0) };
+    let cfg = FleetBenchConfig {
+        sweep: vec![2],
+        seed: 11,
+        mtbf_node: Some(6_000.0),
+        topology: None,
+    };
     let (_, a) = fleet_report(&cfg);
     let (_, b) = fleet_report(&cfg);
     assert_eq!(a.to_pretty_string(), b.to_pretty_string());
+}
+
+#[test]
+fn fleet_on_asymmetric_split_is_deterministic_and_labeled() {
+    // Topology-zoo golden: the same synthetic mix on the asymmetric
+    // split machine (8 cluster + 16 booster nodes behind a constrained
+    // bridge) is byte-deterministic per seed, and the report carries the
+    // canonical topology label.
+    let run = || {
+        run_fleet_on(
+            zoo::by_name("split:8,16").expect("zoo entry resolves"),
+            synthetic_jobs(6, 42),
+            FleetConfig { policy: Policy::Backfill, seed: 42, ..FleetConfig::default() },
+        )
+        .expect("synthetic jobs fit the split machine")
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(
+        a.to_json().to_pretty_string(),
+        b.to_json().to_pretty_string(),
+        "split-machine fleet JSON must be bit-identical per seed"
+    );
+    assert_eq!(a.topology, "split:8,16");
+    assert_eq!(a.to_json().get("topology").and_then(Json::as_str), Some("split:8,16"));
+    assert_eq!(a.finish_order.len(), 6, "every job must finish on the split machine");
+}
+
+#[test]
+fn backfill_never_delays_jobs_on_heterogeneous_pool() {
+    // On the split machine's heterogeneous pool (8 cluster + 16 booster
+    // nodes), compute-only jobs of mixed shapes: conservative backfill
+    // may only pull starts earlier than FCFS, never push one later.
+    let jobs = || -> Vec<JobSpec> {
+        (0..8)
+            .map(|i| JobSpec {
+                name: format!("job{i}"),
+                profile: deeper::apps::nbody::profile(),
+                cluster_nodes: 1 + i % 6,
+                booster_nodes: (i * 2) % 5,
+                iterations: 4 + i,
+                cp_interval: 0,
+                ckpt: CkptStrategy::None,
+                priority: 0,
+                qos: None,
+            })
+            .collect()
+    };
+    let run = |policy: Policy| {
+        run_fleet_on(
+            zoo::by_name("split:8,16").expect("zoo entry resolves"),
+            jobs(),
+            FleetConfig { policy, seed: 9, mtbf_node: None, ..FleetConfig::default() },
+        )
+        .expect("jobs fit the split machine")
+    };
+    let f = run(Policy::Fcfs);
+    let b = run(Policy::Backfill);
+    for (fj, bj) in f.jobs.iter().zip(&b.jobs) {
+        assert!(
+            bj.first_start <= fj.first_start + 1e-6,
+            "backfill delayed {}: {} vs fcfs {}",
+            fj.name,
+            bj.first_start,
+            fj.first_start
+        );
+    }
 }
 
 #[test]

@@ -8,7 +8,7 @@ use deeper::bench::{scale_points, scale_report, ScaleConfig};
 use deeper::util::json::{self, Json};
 
 fn small_cfg() -> ScaleConfig {
-    ScaleConfig { sweep: vec![64, 256], seed: 1, baseline_max: 256 }
+    ScaleConfig { sweep: vec![64, 256], seed: 1, baseline_max: 256, topology: None }
 }
 
 #[test]
@@ -27,6 +27,8 @@ fn scale_report_exhibits_and_schema() {
     assert_eq!(json.get("bench").and_then(Json::as_str), Some("sim_scale"));
     assert_eq!(json.get("schema_version").and_then(Json::as_f64), Some(1.0));
     assert_eq!(json.get("seed").and_then(Json::as_f64), Some(1.0));
+    // No --topology: the synthetic flat workload, recorded as null.
+    assert_eq!(json.get("topology"), Some(&Json::Null));
     let points = json.get("points").and_then(Json::as_arr).expect("points array");
     assert_eq!(points.len(), 2);
     for p in points {
@@ -77,7 +79,12 @@ fn scale_workload_keeps_components_bounded() {
     // The DEEP-ER-shaped workload is mostly node-local: the peak refill
     // component must stay well below the total flow count (that locality
     // is the whole point of component scoping).
-    let pts = scale_points(&ScaleConfig { sweep: vec![512], seed: 1, baseline_max: 0 });
+    let pts = scale_points(&ScaleConfig {
+        sweep: vec![512],
+        seed: 1,
+        baseline_max: 0,
+        topology: None,
+    });
     assert_eq!(pts.len(), 1);
     assert!(pts[0].baseline.is_none(), "512 > baseline_max 0: naive engine skipped");
     let peak = pts[0].peak_component;

@@ -1,0 +1,136 @@
+//! Integration: the topology zoo (DESIGN.md section 13) — every registry
+//! entry builds into a machine whose fabric shape matches its generator
+//! parameters, routes resolve end to end on every family, names
+//! round-trip, and the topology-selected bench exhibits stay
+//! byte-deterministic with the canonical label pinned in their JSON.
+
+use deeper::beegfs::BeeGfs;
+use deeper::bench::{qos_report, scale_points, scale_report, QosBenchConfig, ScaleConfig};
+use deeper::fabric::TopologySpec;
+use deeper::system::{zoo, Machine};
+use deeper::util::json::Json;
+
+#[test]
+fn every_zoo_entry_builds_with_matching_shape() {
+    for (name, spec) in zoo::all() {
+        let m = Machine::build(spec.clone());
+        assert_eq!(m.spec.topology.label(), name, "label must round-trip through the machine");
+        assert_eq!(m.nodes.len(), spec.n_cluster + spec.n_booster, "{name}: node count");
+        // Every fabric endpoint, in registration order: compute nodes,
+        // storage servers, the MDS, the NAM boards.
+        let eps = m.nodes.len() + m.servers.len() + 1 + m.nams.len();
+        let core = m.fabric.core_resources();
+        let caps: Vec<f64> = core.iter().map(|&r| m.sim.capacity(r)).collect();
+        match spec.topology {
+            TopologySpec::Flat { backplane_bw } => {
+                assert_eq!(core.len(), 1, "{name}: one backplane");
+                assert_eq!(caps[0], backplane_bw);
+            }
+            TopologySpec::FatTree { arity, link_bw, oversub } => {
+                assert_eq!(core.len(), eps.div_ceil(arity), "{name}: one uplink per leaf");
+                for &c in &caps {
+                    assert_eq!(c, arity as f64 * link_bw / oversub, "{name}: uplink capacity");
+                }
+            }
+            TopologySpec::Dragonfly { group_size, link_bw, taper } => {
+                assert_eq!(core.len(), eps.div_ceil(group_size), "{name}: one global per group");
+                for &c in &caps {
+                    assert_eq!(c, group_size as f64 * link_bw / taper, "{name}: global capacity");
+                }
+            }
+            TopologySpec::MultiRail { rails, rail_bw } => {
+                assert_eq!(core.len(), rails, "{name}: one core entry per rail");
+                for &c in &caps {
+                    assert_eq!(c, rail_bw, "{name}: rail capacity");
+                }
+            }
+            TopologySpec::Split { cluster_bw, booster_bw, bridge_bw, .. } => {
+                assert_eq!(core.len(), 3, "{name}: cluster switch, bridge, booster switch");
+                assert_eq!(caps, vec![cluster_bw, bridge_bw, booster_bw]);
+            }
+            TopologySpec::Tiered { top_bw, .. } => {
+                assert_eq!(core.len(), 1, "{name}: one top switch");
+                assert_eq!(caps[0], top_bw);
+            }
+        }
+    }
+}
+
+#[test]
+fn routes_resolve_end_to_end_on_every_topology() {
+    // Node-to-node puts (both directions plus a loopback pair) and
+    // striped writes from both partitions complete with finite times on
+    // every registry member — no family may strand a route.
+    for (name, spec) in zoo::all() {
+        let mut m = Machine::build(spec);
+        let n = m.nodes.len();
+        let mut flows = Vec::new();
+        for (src, dst) in [(0, n - 1), (n - 1, 0), (1, 1)] {
+            let route = m.fabric.path(m.nodes[src].ep, m.nodes[dst].ep);
+            assert!(route.len() >= 2, "{name}: path {src}->{dst} has tx and rx at least");
+            flows.push(m.sim.flow(1e8, 0.0, &route));
+        }
+        let mut fs = BeeGfs::new();
+        flows.extend(fs.write_striped(&mut m, 0, 5e8));
+        flows.extend(fs.write_striped(&mut m, n - 1, 5e8));
+        let t = m.sim.wait_all(&flows);
+        assert!(t > 0.0 && t.is_finite(), "{name}: transfers must complete, t={t}");
+    }
+}
+
+#[test]
+fn names_round_trip_and_junk_errors() {
+    for name in zoo::NAMES {
+        let spec = zoo::by_name(name).expect("canonical name resolves");
+        assert_eq!(&spec.topology.label(), name, "by_name must round-trip {name}");
+    }
+    // Partial parameter lists canonicalize to the full label.
+    assert_eq!(zoo::by_name("fat-tree:2").unwrap().topology.label(), "fat-tree:2,8");
+    for junk in ["nope", "fat-tree:zero", "flat:9", "multi-rail:0", ""] {
+        assert!(zoo::by_name(junk).is_err(), "{junk:?} must not resolve");
+    }
+}
+
+#[test]
+fn qos_bench_on_fat_tree_is_deterministic_and_labeled() {
+    // The acceptance pin: `repro bench qos --topology fat-tree:2` is
+    // byte-deterministic per seed and records the canonical label.
+    let cfg = QosBenchConfig {
+        iterations: 30,
+        seed: 3,
+        topology: Some("fat-tree:2".into()),
+        ..QosBenchConfig::default()
+    };
+    let (_, a) = qos_report(&cfg);
+    let (_, b) = qos_report(&cfg);
+    assert_eq!(
+        a.to_pretty_string(),
+        b.to_pretty_string(),
+        "fat-tree qos JSON must be byte-identical per seed"
+    );
+    let scenario = a.get("scenario").expect("scenario object");
+    assert_eq!(scenario.get("topology").and_then(Json::as_str), Some("fat-tree:2,8"));
+    assert!(scenario.get("backplane_bw").and_then(Json::as_f64).unwrap() > 0.0);
+    for key in ["p99_slowdown_unshaped", "p99_slowdown_shaped"] {
+        let v = a.get(key).and_then(Json::as_f64).unwrap();
+        assert!(v.is_finite() && v > 0.0, "{key}={v}");
+    }
+}
+
+#[test]
+fn scale_bench_runs_on_zoo_topology() {
+    // The zoo-routed scale workload passes the in-run differential oracle
+    // (scale_points panics on divergence) and records the label.
+    let cfg = ScaleConfig {
+        sweep: vec![64],
+        seed: 1,
+        baseline_max: 64,
+        topology: Some("multi-rail:4".into()),
+    };
+    let pts = scale_points(&cfg);
+    assert_eq!(pts.len(), 1);
+    assert!(pts[0].baseline.is_some(), "naive engine must run at 64 flows");
+    assert!(pts[0].engine.events > 0);
+    let (_, json) = scale_report(&cfg);
+    assert_eq!(json.get("topology").and_then(Json::as_str), Some("multi-rail:4"));
+}

@@ -8,12 +8,15 @@
 //! produce identical per-flow completion times and identical mid-flight
 //! `op_trace` rates to within 1e-9 relative.
 
+use std::collections::BTreeMap;
+
 use deeper::sim::reference::RefSim;
-use deeper::sim::{FlowId, Sim};
-use deeper::testing::{check, Config};
+use deeper::sim::{FlowId, ResId, Sim};
+use deeper::system::Machine;
+use deeper::testing::{check, check_zoo, Config};
 
 fn cfg(cases: usize) -> Config {
-    Config { cases, seed: 0xDEE9E5 }
+    Config { cases, seed: 0xDEE9E5, ..Config::default() }
 }
 
 /// (capacities, flows as (bytes, delay, resource bitmask))
@@ -86,6 +89,62 @@ fn prop_oracle_completion_times_match() {
             let (mut sim, ids) = build_optimized(caps, flows);
             let (mut rsim, rids) = build_reference(caps, flows);
             let a = sim.wait_each(&ids);
+            let b = rsim.wait_each(&rids);
+            a.iter().zip(&b).all(|(x, y)| close(*x, *y))
+        },
+    );
+}
+
+#[test]
+fn prop_oracle_matches_on_zoo_machine_traffic() {
+    // The same differential oracle, but over *real* machine routes from
+    // every topology-zoo member: node-to-node puts and node-to-storage
+    // streams whose routes cross leaf crossbars, uplinks, rails, bridges
+    // and device channels.  Each machine route is mirrored resource-for-
+    // resource into the naive engine; completion times must agree on all
+    // topologies.
+    check_zoo(
+        cfg(60),
+        |g, spec| {
+            let nodes = spec.total_nodes();
+            let n = g.usize_in(1, 24);
+            g.vec(n, |g| {
+                (
+                    g.usize_in(0, nodes - 1),
+                    g.usize_in(0, nodes - 1),
+                    g.f64_in(1e5, 5e8),
+                    g.f64_in(0.0, 0.02),
+                    g.bool(), // true: stream to a storage server instead
+                )
+            })
+        },
+        |spec, traffic| {
+            let mut m = Machine::build(spec.clone());
+            let mut rsim = RefSim::new();
+            let mut mirror: BTreeMap<ResId, ResId> = BTreeMap::new();
+            let mut ids = Vec::new();
+            let mut rids = Vec::new();
+            for &(src, dst, bytes, delay, to_server) in traffic {
+                let route = if to_server {
+                    let srv = &m.servers[dst % m.servers.len()];
+                    let mut r = m.fabric.path(m.nodes[src].ep, srv.ep);
+                    r.push(srv.device.write_res());
+                    r
+                } else {
+                    m.fabric.path(m.nodes[src].ep, m.nodes[dst].ep)
+                };
+                let rroute: Vec<ResId> = route
+                    .iter()
+                    .map(|&r| {
+                        *mirror
+                            .entry(r)
+                            .or_insert_with(|| rsim.resource(m.sim.capacity(r)))
+                    })
+                    .collect();
+                ids.push(m.sim.flow(bytes, delay, &route));
+                rids.push(rsim.flow(bytes, delay, &rroute));
+            }
+            let a = m.sim.wait_each(&ids);
             let b = rsim.wait_each(&rids);
             a.iter().zip(&b).all(|(x, y)| close(*x, *y))
         },

@@ -7,18 +7,21 @@
 //! fluid model, the traffic-class QoS invariants (weighted-fill
 //! conservation, floors/ceilings respected, default-weight equivalence
 //! with the reference engine — DESIGN.md section 12), and JSON parser
-//! robustness.
+//! robustness.  The `prop_zoo_*` properties sweep the machine-backed
+//! invariants across every topology-zoo family via `testing::check_zoo`
+//! (DESIGN.md section 13).
 
 use deeper::fabric::ring::RingBuffer;
 use deeper::scr::Scr;
 use deeper::sim::reference::RefSim;
 use deeper::sim::{Sim, TrafficClass};
 use deeper::sionlib;
-use deeper::testing::{check, check_with, Config};
+use deeper::system::Machine;
+use deeper::testing::{check, check_with, check_zoo, Config};
 use deeper::util::json;
 
 fn cfg(cases: usize) -> Config {
-    Config { cases, seed: 0xDEE9E5 }
+    Config { cases, seed: 0xDEE9E5, ..Config::default() }
 }
 
 #[test]
@@ -460,6 +463,164 @@ fn prop_qos_floor_respected_on_single_resource() {
                 }
             }
             true
+        },
+    );
+}
+
+#[test]
+fn prop_zoo_machine_traffic_conserves_capacity() {
+    // Real routed traffic swept across every zoo machine: mid-flight, the
+    // allocated rates on every touched resource (endpoint ports, leaf
+    // crossbars, uplinks, rails, bridges, device channels) sum to at most
+    // its capacity.
+    check_zoo(
+        cfg(60),
+        |g, spec| {
+            let nodes = spec.total_nodes();
+            let n = g.usize_in(2, 20);
+            g.vec(n, |g| {
+                (
+                    g.usize_in(0, nodes - 1),
+                    g.usize_in(0, nodes - 1),
+                    g.f64_in(1e7, 5e8),
+                    g.bool(), // true: stream to a storage server instead
+                )
+            })
+        },
+        |spec, traffic| {
+            let mut m = Machine::build(spec.clone());
+            for &(src, dst, bytes, to_server) in traffic {
+                let route = if to_server {
+                    let srv = &m.servers[dst % m.servers.len()];
+                    let mut r = m.fabric.path(m.nodes[src].ep, srv.ep);
+                    r.push(srv.device.write_res());
+                    r
+                } else {
+                    m.fabric.path(m.nodes[src].ep, m.nodes[dst].ep)
+                };
+                m.sim.flow(bytes, 0.0, &route);
+            }
+            // Activate everything; far too little time for any completion
+            // (>= 1e7 bytes against every capacity in the zoo).
+            m.sim.advance(1e-9);
+            let trace = m.sim.op_trace();
+            let active: Vec<_> = trace.iter().filter(|e| !e.done).collect();
+            if active.len() != traffic.len() {
+                return false;
+            }
+            let mut load: std::collections::HashMap<usize, f64> = Default::default();
+            for e in &active {
+                for r in &e.route {
+                    *load.entry(r.0).or_insert(0.0) += e.rate;
+                }
+            }
+            load.iter().all(|(&r, &l)| {
+                l <= m.sim.capacity(deeper::sim::ResId(r)) * (1.0 + 1e-9) + 1e-6
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_zoo_ceilings_bound_class_rates_on_core_resources() {
+    // A CkptFlush ceiling installed on every fabric-core resource of a
+    // zoo machine bounds that class's aggregate mid-flight rate on each,
+    // with Bulk cross-traffic contending on the same machine routes.
+    check_zoo(
+        cfg(60),
+        |g, spec| {
+            let nodes = spec.total_nodes();
+            let frac = g.f64_in(0.1, 0.6);
+            let n = g.usize_in(4, 24);
+            let transfers = g.vec(n, |g| {
+                (
+                    g.usize_in(0, nodes - 1),
+                    g.usize_in(0, nodes - 1),
+                    g.f64_in(1e7, 5e8),
+                    g.bool(), // true: CkptFlush, false: Bulk
+                )
+            });
+            (frac, transfers)
+        },
+        |spec, (frac, transfers)| {
+            let mut m = Machine::build(spec.clone());
+            let core = m.fabric.core_resources();
+            for &r in &core {
+                let cap = m.sim.capacity(r);
+                m.sim.set_class_ceiling(r, TrafficClass::CkptFlush, frac * cap);
+            }
+            for &(src, dst, bytes, flush) in transfers {
+                let route = m.fabric.path(m.nodes[src].ep, m.nodes[dst].ep);
+                let class =
+                    if flush { TrafficClass::CkptFlush } else { TrafficClass::Bulk };
+                m.sim.flow_classed(bytes, 0.0, &route, class);
+            }
+            m.sim.advance(1e-9);
+            let trace = m.sim.op_trace();
+            let active: Vec<_> = trace.iter().filter(|e| !e.done).collect();
+            if active.len() != transfers.len() {
+                return false;
+            }
+            core.iter().all(|&r| {
+                let cap = m.sim.capacity(r);
+                let agg: f64 = active
+                    .iter()
+                    .filter(|e| e.class == TrafficClass::CkptFlush && e.route.contains(&r))
+                    .map(|e| e.rate)
+                    .sum();
+                agg <= frac * cap * (1.0 + 1e-9) + 1e-6
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_zoo_floors_hold_on_every_core_resource() {
+    // An Exchange floor on each fabric-core resource of a zoo machine is
+    // honored under saturating contention: with Bulk competitors pinned
+    // to the same resource, the Exchange aggregate mid-flight rate is at
+    // least the floor.  Floors are per-resource reservations, not
+    // end-to-end guarantees, so the probe flows route through the floored
+    // resource alone (a multi-hop flow bottlenecked elsewhere may
+    // legitimately deliver less).
+    check_zoo(
+        cfg(60),
+        |g, _spec| {
+            (
+                g.f64_in(0.1, 0.5),  // floor fraction
+                g.usize_in(1, 4),    // exchange flows per core resource
+                g.usize_in(1, 6),    // bulk competitors per core resource
+            )
+        },
+        |spec, &(frac, n_ex, n_bulk)| {
+            let mut m = Machine::build(spec.clone());
+            let core = m.fabric.core_resources();
+            for &r in &core {
+                let cap = m.sim.capacity(r);
+                m.sim.set_class_floor(r, TrafficClass::Exchange, frac * cap);
+                for _ in 0..n_ex {
+                    m.sim.flow_classed(1e9, 0.0, &[r], TrafficClass::Exchange);
+                }
+                for _ in 0..n_bulk {
+                    m.sim.flow_classed(1e9, 0.0, &[r], TrafficClass::Bulk);
+                }
+            }
+            m.sim.advance(1e-9);
+            let trace = m.sim.op_trace();
+            let active: Vec<_> = trace.iter().filter(|e| !e.done).collect();
+            core.iter().all(|&r| {
+                let cap = m.sim.capacity(r);
+                let agg: f64 = active
+                    .iter()
+                    .filter(|e| {
+                        e.class == TrafficClass::Exchange
+                            && e.route.len() == 1
+                            && e.route[0] == r
+                    })
+                    .map(|e| e.rate)
+                    .sum();
+                agg + 1e-6 >= frac * cap * (1.0 - 1e-9)
+            })
         },
     );
 }
