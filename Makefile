@@ -13,7 +13,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test lint fmt clippy doc figures bench bench-smoke bench-scale bench-fleet bench-qos bench-zoo artifacts clean
+.PHONY: verify build test lint fmt clippy doc figures bench bench-smoke bench-scale bench-threads bench-fleet bench-qos bench-zoo artifacts clean
 
 verify: build test
 
@@ -55,6 +55,15 @@ bench-smoke: build
 bench-scale: build
 	$(CARGO) run --release --bin repro -- bench scale --csv --seed 1 --json BENCH_sim_scale.json
 	@echo "wrote BENCH_sim_scale.json"
+
+# Same sweep across the component-parallel engine's threads axis
+# (DESIGN.md §14); the run self-checks that every thread count agrees
+# with threads=1 on completion times before reporting anything, and the
+# schema-v2 artifact records per-thread-count events/sec plus per-worker
+# event counters.
+bench-threads: build
+	$(CARGO) run --release --bin repro -- bench scale --csv --seed 1 --threads 1,2,4 --json BENCH_sim_scale.json
+	@echo "wrote BENCH_sim_scale.json (threads axis 1,2,4)"
 
 # Fleet co-scheduling sweep (2/4/8/16 jobs under fcfs and backfill);
 # refreshes the BENCH_fleet.json trajectory artifact.

@@ -580,6 +580,13 @@ pub struct ScaleConfig {
     /// Optional `system::zoo` topology name: route the workload over that
     /// machine's fabric instead of the synthetic flat layout.
     pub topology: Option<String>,
+    /// Worker counts to sweep the optimized engine at (the `--threads`
+    /// axis of the schema-v2 artifact).  Every count must agree with the
+    /// first entry on the last completion time to within 1e-9 relative
+    /// (the serial engine merges near-simultaneous finishes *across*
+    /// components within its ~1 ns retirement epsilon, which a sharded
+    /// run cannot replicate — anything beyond that tolerance panics).
+    pub threads: Vec<usize>,
 }
 
 impl Default for ScaleConfig {
@@ -589,6 +596,7 @@ impl Default for ScaleConfig {
             seed: DEFAULT_SEED,
             baseline_max: 10_000,
             topology: None,
+            threads: vec![1],
         }
     }
 }
@@ -604,13 +612,32 @@ pub struct ScaleMeasurement {
     pub last_finish: f64,
 }
 
+/// The optimized engine measured at one worker count (one entry of a
+/// [`ScalePoint`]'s threads axis).
+#[derive(Debug, Clone)]
+pub struct ThreadRun {
+    /// Worker count the engine ran with ([`Sim::set_threads`]).
+    pub threads: usize,
+    pub engine: ScaleMeasurement,
+    /// Largest flow set one component-scoped refill touched.
+    pub peak_component: usize,
+    /// Events processed per worker ([`Sim::worker_events`]; sums to
+    /// `engine.events`).
+    pub worker_events: Vec<u64>,
+}
+
 /// One sweep point of the scale bench.
 #[derive(Debug, Clone)]
 pub struct ScalePoint {
     pub flows: usize,
+    /// The measurement at the first configured thread count (the anchor
+    /// the baseline oracle and the speedup headline compare against).
     pub engine: ScaleMeasurement,
-    /// Largest flow set one component-scoped refill touched.
+    /// Largest flow set one component-scoped refill touched (at the
+    /// first configured thread count).
     pub peak_component: usize,
+    /// One optimized-engine run per [`ScaleConfig::threads`] entry.
+    pub runs: Vec<ThreadRun>,
     /// Present when `flows <= baseline_max`.
     pub baseline: Option<ScaleMeasurement>,
 }
@@ -706,9 +733,10 @@ fn scale_workload_zoo(n_flows: usize, seed: u64, mspec: MachineSpec) -> ScaleWor
     ScaleWorkload { caps, flows }
 }
 
-fn run_scale_optimized(w: &ScaleWorkload) -> (ScaleMeasurement, usize) {
-    let ((last_finish, events, peak), wall) = microbench::time_once(|| {
+fn run_scale_optimized(w: &ScaleWorkload, threads: usize) -> ThreadRun {
+    let ((last_finish, events, peak, worker_events), wall) = microbench::time_once(|| {
         let mut sim = Sim::new();
+        sim.set_threads(threads);
         let res: Vec<ResId> = w.caps.iter().map(|&c| sim.resource("r", c)).collect();
         let mut route_buf: Vec<ResId> = Vec::new();
         for (bytes, delay, route) in &w.flows {
@@ -717,13 +745,20 @@ fn run_scale_optimized(w: &ScaleWorkload) -> (ScaleMeasurement, usize) {
             sim.flow(*bytes, *delay, &route_buf);
         }
         sim.run_until_idle();
-        (sim.now(), sim.events(), sim.peak_component_flows())
+        (sim.now(), sim.events(), sim.peak_component_flows(), sim.worker_events())
     });
     let wall_s = wall.as_secs_f64().max(1e-9);
-    (
-        ScaleMeasurement { wall_s, events, events_per_sec: events as f64 / wall_s, last_finish },
-        peak,
-    )
+    ThreadRun {
+        threads,
+        engine: ScaleMeasurement {
+            wall_s,
+            events,
+            events_per_sec: events as f64 / wall_s,
+            last_finish,
+        },
+        peak_component: peak,
+        worker_events,
+    }
 }
 
 fn run_scale_baseline(w: &ScaleWorkload) -> ScaleMeasurement {
@@ -746,8 +781,11 @@ fn run_scale_baseline(w: &ScaleWorkload) -> ScaleMeasurement {
 /// Run the sweep.  Every baselined point doubles as a runtime oracle: the
 /// optimized and naive engines must agree on the last completion time to
 /// within 1e-9 relative, or the measurement panics instead of reporting a
-/// speedup over a divergent simulation.
+/// speedup over a divergent simulation.  Every additional thread count is
+/// gated the same way against the first one, so a thread-count divergence
+/// can never be reported as a speedup either.
 pub fn scale_points(cfg: &ScaleConfig) -> Vec<ScalePoint> {
+    assert!(!cfg.threads.is_empty(), "scale bench needs at least one thread count");
     cfg.sweep
         .iter()
         .map(|&n| {
@@ -755,19 +793,40 @@ pub fn scale_points(cfg: &ScaleConfig) -> Vec<ScalePoint> {
                 Some(mspec) => scale_workload_zoo(n, cfg.seed, mspec),
                 None => scale_workload(n, cfg.seed),
             };
-            let (engine, peak_component) = run_scale_optimized(&w);
+            let runs: Vec<ThreadRun> =
+                cfg.threads.iter().map(|&t| run_scale_optimized(&w, t)).collect();
+            let anchor = &runs[0];
+            for r in &runs[1..] {
+                let rel = (r.engine.last_finish - anchor.engine.last_finish).abs()
+                    / anchor.engine.last_finish.abs().max(1.0);
+                assert!(
+                    rel < 1e-9,
+                    "thread-count divergence at {n} flows: threads={} finished at {} \
+                     vs threads={} at {}",
+                    r.threads,
+                    r.engine.last_finish,
+                    anchor.threads,
+                    anchor.engine.last_finish
+                );
+            }
             let baseline = (n <= cfg.baseline_max).then(|| run_scale_baseline(&w));
             if let Some(b) = &baseline {
-                let rel = (engine.last_finish - b.last_finish).abs()
-                    / engine.last_finish.abs().max(1.0);
+                let rel = (anchor.engine.last_finish - b.last_finish).abs()
+                    / anchor.engine.last_finish.abs().max(1.0);
                 assert!(
                     rel < 1e-9,
                     "engines diverged at {n} flows: optimized {} vs baseline {}",
-                    engine.last_finish,
+                    anchor.engine.last_finish,
                     b.last_finish
                 );
             }
-            ScalePoint { flows: n, engine, peak_component, baseline }
+            ScalePoint {
+                flows: n,
+                engine: anchor.engine.clone(),
+                peak_component: anchor.peak_component,
+                runs,
+                baseline,
+            }
         })
         .collect()
 }
@@ -783,7 +842,13 @@ fn scale_json(cfg: &ScaleConfig, points: &[ScalePoint]) -> Json {
     };
     let mut doc = BTreeMap::new();
     doc.insert("bench".into(), Json::Str("sim_scale".into()));
-    doc.insert("schema_version".into(), Json::Num(1.0));
+    // Schema v2 (ISSUE 7): a top-level `threads` axis plus a per-point
+    // `runs` array with one optimized measurement — including per-worker
+    // event counters — per thread count.  The v1 keys (`engine`,
+    // `peak_component_flows`, `baseline`, `speedup_events_per_sec`) are
+    // kept and anchored at the first thread count, so v1 trajectory
+    // tooling keeps parsing.
+    doc.insert("schema_version".into(), Json::Num(2.0));
     doc.insert("seed".into(), Json::Num(cfg.seed as f64));
     doc.insert(
         "topology".into(),
@@ -794,6 +859,10 @@ fn scale_json(cfg: &ScaleConfig, points: &[ScalePoint]) -> Json {
     doc.insert(
         "sweep".into(),
         Json::Arr(cfg.sweep.iter().map(|&n| Json::Num(n as f64)).collect()),
+    );
+    doc.insert(
+        "threads".into(),
+        Json::Arr(cfg.threads.iter().map(|&t| Json::Num(t as f64)).collect()),
     );
     doc.insert(
         "baseline_engine".into(),
@@ -811,6 +880,45 @@ fn scale_json(cfg: &ScaleConfig, points: &[ScalePoint]) -> Json {
                     o.insert(
                         "peak_component_flows".into(),
                         Json::Num(p.peak_component as f64),
+                    );
+                    o.insert(
+                        "runs".into(),
+                        Json::Arr(
+                            p.runs
+                                .iter()
+                                .map(|r| {
+                                    let mut ro = BTreeMap::new();
+                                    ro.insert("threads".into(), Json::Num(r.threads as f64));
+                                    ro.insert("wall_s".into(), Json::Num(r.engine.wall_s));
+                                    ro.insert(
+                                        "events".into(),
+                                        Json::Num(r.engine.events as f64),
+                                    );
+                                    ro.insert(
+                                        "events_per_sec".into(),
+                                        Json::Num(r.engine.events_per_sec),
+                                    );
+                                    ro.insert(
+                                        "last_finish_virtual_s".into(),
+                                        Json::Num(r.engine.last_finish),
+                                    );
+                                    ro.insert(
+                                        "peak_component_flows".into(),
+                                        Json::Num(r.peak_component as f64),
+                                    );
+                                    ro.insert(
+                                        "worker_events".into(),
+                                        Json::Arr(
+                                            r.worker_events
+                                                .iter()
+                                                .map(|&e| Json::Num(e as f64))
+                                                .collect(),
+                                        ),
+                                    );
+                                    Json::Obj(ro)
+                                })
+                                .collect(),
+                        ),
                     );
                     o.insert(
                         "baseline".into(),
@@ -857,10 +965,10 @@ pub fn scale_report(cfg: &ScaleConfig) -> (Vec<Exhibit>, Json) {
         "flows",
         "events/s",
     );
-    let mut s_opt = Series::new("optimized engine");
+    let mut s_opt = Series::new(format!("optimized engine (threads={})", cfg.threads[0]));
     let mut s_base = Series::new("naive baseline");
     let mut wall_fig = Figure::new("Engine scale: wall-clock per sweep point", "flows", "s");
-    let mut w_opt = Series::new("optimized engine");
+    let mut w_opt = Series::new(format!("optimized engine (threads={})", cfg.threads[0]));
     let mut w_base = Series::new("naive baseline");
     for p in &points {
         s_opt.push(p.flows as f64, p.engine.events_per_sec);
@@ -871,6 +979,15 @@ pub fn scale_report(cfg: &ScaleConfig) -> (Vec<Exhibit>, Json) {
         }
     }
     eps_fig.add(s_opt);
+    // One extra events/sec series per additional thread count — the
+    // threads axis of the schema-v2 artifact, rendered.
+    for (ti, &t) in cfg.threads.iter().enumerate().skip(1) {
+        let mut s = Series::new(format!("optimized engine (threads={t})"));
+        for p in &points {
+            s.push(p.flows as f64, p.runs[ti].engine.events_per_sec);
+        }
+        eps_fig.add(s);
+    }
     eps_fig.add(s_base);
     wall_fig.add(w_opt);
     wall_fig.add(w_base);
@@ -892,6 +1009,17 @@ pub fn scale_report(cfg: &ScaleConfig) -> (Vec<Exhibit>, Json) {
                 speedup
             ),
         );
+        for r in p.runs.iter().skip(1) {
+            t.row(
+                format!("{} flows, threads={}", p.flows, r.threads),
+                format!(
+                    "{} over {}, {} events",
+                    fmt_rate(r.engine.events_per_sec),
+                    fmt_time(r.engine.wall_s),
+                    r.engine.events,
+                ),
+            );
+        }
     }
     (vec![Exhibit::Fig(eps_fig), Exhibit::Fig(wall_fig), Exhibit::Table(t)], json)
 }
@@ -1090,6 +1218,11 @@ pub struct QosBenchConfig {
     /// machine's fabric instead of the flat oversubscribed switch; the
     /// ceiling/floor fractions then apply to every fabric-core resource.
     pub topology: Option<String>,
+    /// Worker threads handed to [`Sim::set_threads`].  The exhibit's
+    /// virtual-time results are thread-count independent (the scenario
+    /// waits on each exchange op, a standing merge barrier), so 1 — the
+    /// default — keeps committed goldens byte-identical.
+    pub threads: usize,
 }
 
 impl Default for QosBenchConfig {
@@ -1101,6 +1234,7 @@ impl Default for QosBenchConfig {
             exchange_floor_frac: 0.3,
             exchange_weight: 4.0,
             topology: None,
+            threads: 1,
         }
     }
 }
@@ -1210,6 +1344,7 @@ fn qos_exchange_times(
     mode: Option<QosMode>,
 ) -> (Vec<f64>, usize, Vec<ClassLatency>) {
     let mut m = qos_machine(cfg);
+    m.sim.set_threads(cfg.threads.max(1));
     if mode == Some(QosMode::Shaped) {
         // Shape every fabric-core resource (the one backplane on the flat
         // scenario; uplinks/rails/bridges on zoo topologies).
@@ -1360,6 +1495,7 @@ fn qos_json(cfg: &QosBenchConfig, r: &QosBenchResult) -> Json {
     doc.insert("bench".into(), Json::Str("qos".into()));
     doc.insert("schema_version".into(), Json::Num(1.0));
     doc.insert("seed".into(), Json::Num(cfg.seed as f64));
+    doc.insert("threads".into(), Json::Num(cfg.threads as f64));
     doc.insert("iterations".into(), Json::Num(cfg.iterations as f64));
     doc.insert("scenario".into(), Json::Obj(scenario));
     doc.insert("shaping".into(), Json::Obj(shaping));

@@ -9,7 +9,9 @@
 //!
 //! * [`sim`] — fluid-flow discrete-event engine: virtual clock, max-min
 //!   fair bandwidth sharing over shared resources, deterministic RNG;
-//!   lazy progression + component-scoped refills (DESIGN.md §10), with
+//!   lazy progression + component-scoped refills (DESIGN.md §10) and
+//!   component-parallel execution across scoped worker threads with a
+//!   bit-identical single-thread mode (DESIGN.md §14), with
 //!   [`sim::reference`] as the naive differential oracle.
 //! * [`system`] — node/topology models of the DEEP-ER prototype (Table I),
 //!   QPACE3 and MareNostrum 3, plus failure injection.

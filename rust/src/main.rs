@@ -21,6 +21,7 @@ use deeper::scr::{Scr, Strategy};
 use deeper::system::failure::FailurePlan;
 use deeper::system::{presets, zoo, Machine, NodeKind};
 use deeper::util::cli::Args;
+use deeper::util::json::Json;
 
 const USAGE: &str = "\
 repro — DEEP-ER Cluster-Booster I/O + resiliency reproduction
@@ -29,13 +30,14 @@ USAGE:
   repro show-config
   repro bench <fig3..fig10|fig8-async|table1..table3|cb-split|all> [--csv] [--seed N]
   repro bench scale [--sweep N1,N2,..] [--baseline-max N] [--topology NAME]
-                    [--json PATH] [--csv] [--seed N]
-  repro bench qos [--iters N] [--topology NAME] [--json PATH] [--csv] [--seed N]
+                    [--threads T1,T2,..] [--json PATH] [--csv] [--seed N]
+  repro bench qos [--iters N] [--topology NAME] [--threads N] [--json PATH]
+                  [--csv] [--seed N]
   repro run [--app nbody|xpic|gershwin|fwi] [--strategy single|partner|buddy|dist-xor|nam-xor]
             [--iterations N] [--cp-interval N] [--fail-at I] [--mtbf S] [--seed N]
-            [--nodes N] [--multilevel] [--async-flush] [--topology NAME]
+            [--nodes N] [--multilevel] [--async-flush] [--topology NAME] [--threads N]
   repro fleet [--jobs N] [--policy fcfs|backfill] [--seed S] [--mtbf S]
-              [--qos] [--topology NAME] [--json PATH]
+              [--qos] [--topology NAME] [--threads N] [--json PATH]
   repro bench fleet [--sweep N1,N2,..] [--mtbf S] [--topology NAME]
                     [--json PATH] [--csv] [--seed N]
   repro split [--iterations N]          (Cluster-Booster division of labour)
@@ -79,6 +81,14 @@ USAGE:
     tiered:PORTS             leaf switches under one top switch
   e.g. `repro bench qos --topology fat-tree:2` (2:1 oversubscription).
   The selected canonical name is recorded in every JSON artifact.
+
+  --threads N    worker threads for the component-parallel DES engine
+  (DESIGN.md section 14).  1 — the default — is bit-identical to the
+  serial engine; N>1 shards closed-horizon regions across connected
+  components with identical virtual-time results.  `bench scale` takes a
+  comma list and sweeps it (the `threads` axis of BENCH_sim_scale.json,
+  schema v2); with --csv the `# engine:` line appends per-worker event
+  counters.
 ";
 
 fn parse_strategy(s: &str) -> anyhow::Result<Strategy> {
@@ -141,6 +151,33 @@ fn parse_topology(args: &Args) -> anyhow::Result<Option<String>> {
     }
 }
 
+/// Parse `--threads N` (default 1): worker threads handed to the
+/// component-parallel DES engine (DESIGN.md section 14).
+fn parse_threads(args: &Args) -> anyhow::Result<usize> {
+    let n = args.get_parsed::<usize>("threads")?.unwrap_or(1);
+    anyhow::ensure!(n >= 1, "--threads must be at least 1");
+    Ok(n)
+}
+
+/// Parse a `--threads T1,T2,..` comma list — the scale bench's threads
+/// axis (default just 1, the bit-identical serial engine).
+fn parse_threads_list(args: &Args) -> anyhow::Result<Vec<usize>> {
+    let list: Vec<usize> = match args.flag("threads") {
+        Some(s) => s
+            .split(',')
+            .map(|w| {
+                let w = w.trim();
+                w.parse()
+                    .map_err(|_| anyhow::anyhow!("--threads: invalid thread count {w:?}"))
+            })
+            .collect::<anyhow::Result<_>>()?,
+        None => vec![1],
+    };
+    anyhow::ensure!(!list.is_empty(), "--threads needs a comma-separated list of counts");
+    anyhow::ensure!(list.iter().all(|&t| t >= 1), "--threads counts must be at least 1");
+    Ok(list)
+}
+
 fn cmd_bench_scale(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
     let defaults = bench::ScaleConfig::default();
     let sweep = parse_sweep(args, "flow count", &defaults.sweep)?;
@@ -149,6 +186,7 @@ fn cmd_bench_scale(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
         seed,
         baseline_max: args.get_usize("baseline-max", defaults.baseline_max),
         topology: parse_topology(args)?,
+        threads: parse_threads_list(args)?,
     };
     let events_before = deeper::sim::events_total();
     let t0 = std::time::Instant::now();
@@ -159,7 +197,32 @@ fn cmd_bench_scale(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
         println!("{}", if csv { e.render_csv() } else { e.render() });
     }
     if csv {
-        println!("# engine: {events} events, {:.3e} events/s", events as f64 / wall);
+        // Per-worker event counters of the largest sweep point's highest
+        // thread count, straight from the artifact (missing pieces — e.g.
+        // a pure-serial run — degrade to no suffix).
+        let workers = json
+            .get("points")
+            .and_then(Json::as_arr)
+            .and_then(<[Json]>::last)
+            .and_then(|p| p.get("runs"))
+            .and_then(Json::as_arr)
+            .and_then(<[Json]>::last)
+            .and_then(|r| r.get("worker_events"))
+            .and_then(Json::as_arr)
+            .map(|w| {
+                w.iter()
+                    .filter_map(Json::as_f64)
+                    .map(|n| format!("{}", n as u64))
+                    .collect::<Vec<_>>()
+                    .join("/")
+            })
+            .filter(|w| !w.is_empty())
+            .map(|w| format!(", worker events {w}"))
+            .unwrap_or_default();
+        println!(
+            "# engine: {events} events, {:.3e} events/s{workers}",
+            events as f64 / wall
+        );
     }
     let path = args.get_str("json", "BENCH_sim_scale.json");
     std::fs::write(path, json.to_pretty_string())
@@ -196,6 +259,7 @@ fn cmd_bench_qos(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
         iterations: args.get_parsed::<usize>("iters")?.unwrap_or(defaults.iterations),
         seed,
         topology: parse_topology(args)?,
+        threads: parse_threads(args)?,
         ..defaults
     };
     anyhow::ensure!(cfg.iterations > 0, "--iters must be positive");
@@ -249,7 +313,14 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     let seed = args.get_u64("seed", bench::DEFAULT_SEED);
     let mtbf = args.get_parsed::<f64>("mtbf")?;
     let qos = args.has("qos");
-    let cfg = FleetConfig { policy, seed, mtbf_node: mtbf, qos, ..FleetConfig::default() };
+    let cfg = FleetConfig {
+        policy,
+        seed,
+        mtbf_node: mtbf,
+        qos,
+        threads: parse_threads(args)?,
+        ..FleetConfig::default()
+    };
     let jobs = sched::synthetic_jobs(n, seed);
     let report = match parse_topology(args)? {
         Some(name) => sched::run_fleet_on(zoo::by_name(&name)?, jobs, cfg)?,
@@ -325,6 +396,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         None => presets::deep_er(),
     };
     let mut m = Machine::build(mspec);
+    m.sim.set_threads(parse_threads(args)?);
     let node_ids: Vec<usize> = m.nodes_of(NodeKind::Cluster).into_iter().take(nodes).collect();
     // Failure plan: a targeted --fail-at iteration wins; otherwise --mtbf
     // samples an exponential schedule reproducible from --seed.
@@ -373,6 +445,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     );
     println!("nodes         : {}", node_ids.len());
     println!("topology      : {}", m.spec.topology.label());
+    println!("threads       : {}", m.sim.threads());
     println!("seed          : {seed}");
     println!("iterations    : {} (run {})", iterations, stats.iterations_run);
     println!("total time    : {}", fmt_time(stats.total_time));

@@ -269,6 +269,14 @@ pub struct FleetConfig {
     /// ([`QOS_BUDGET_FRAC`] of its capacity), and admitted floors are
     /// installed into the engine while the job runs.
     pub qos: bool,
+    /// Worker count handed to the engine ([`crate::sim::Sim::set_threads`]) for
+    /// closed-horizon regions.  The scheduler's own loop polls jobs
+    /// between single events — a standing merge barrier — so fleet runs
+    /// are serial today regardless; the knob is plumbed so the `--threads`
+    /// surface is uniform across `repro run`/`fleet`/`bench` (DESIGN.md
+    /// section 14).  1 keeps the engine bit-identical to the
+    /// pre-partition behavior.
+    pub threads: usize,
 }
 
 /// Fraction of the backplane capacity grantable as QoS floors under
@@ -285,6 +293,7 @@ impl Default for FleetConfig {
             failure_horizon: 1e7,
             failure_plan: None,
             qos: false,
+            threads: 1,
         }
     }
 }
@@ -912,7 +921,8 @@ pub fn run_fleet_on(
     specs: Vec<JobSpec>,
     cfg: FleetConfig,
 ) -> crate::Result<FleetReport> {
-    let m = Machine::build(mspec);
+    let mut m = Machine::build(mspec);
+    m.sim.set_threads(cfg.threads.max(1));
     let mut s = Scheduler::new(m, cfg);
     for spec in specs {
         s.submit(spec)?;

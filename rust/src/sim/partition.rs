@@ -1,0 +1,937 @@
+//! Component-parallel event execution (DESIGN.md section 14).
+//!
+//! The engine state that belongs to *one connected component* — flows,
+//! the per-resource incidence lists, the pending/finish heaps, the
+//! refill scratch and the component clock — lives in an ownable
+//! [`ComponentState`].  [`super::Sim`] keeps exactly one monolithic core
+//! plus a **partition map** (a union-find over resources, unioned along
+//! every issued route), so at any serial point it knows a conservative
+//! component decomposition: the map only coarsens over time, which is
+//! what makes a new flow whose route bridges two partitions a
+//! deterministic **merge barrier** (from then on the two partitions are
+//! one group).
+//!
+//! Closed-horizon regions — [`super::Sim::run_until_idle`] and
+//! [`super::Sim::advance`] — are where parallelism engages: the core is
+//! split into per-component [`ComponentState`]s (local ids assigned in
+//! ascending global order, so every `(time, flow id)` tie-break is
+//! preserved), the components are advanced independently on
+//! `std::thread` scoped workers, and the results are merged back with
+//! order-independent operations (scalar copy-back to disjoint flows,
+//! saturating max of clocks, sums of event counters).  Interactive
+//! waits ([`super::Sim::wait_all`] / [`super::Sim::wait_any`] /
+//! [`super::Sim::step_event`]) stay serial — they *are* the merge
+//! barrier.  With `--threads 1` no split ever happens and execution is
+//! bit-identical to the pre-partition engine.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap};
+
+use super::{
+    FinishKey, Flow, FlowId, FlowState, PendingKey, ResId, Sim, SimTime, TrafficClass,
+};
+
+/// Pseudo-component for pure-delay flows (empty routes touch no
+/// resource, so they form their own timer component).
+const TIMER_ROOT: usize = usize::MAX;
+
+/// The per-component engine core: everything one connected component
+/// needs to advance its own events without reading any other
+/// component's rates, heap entries or clock (the invariant PR 3's
+/// component-scoped refill established).  `Sim` owns one monolithic
+/// instance; parallel regions split it into per-component instances and
+/// merge them back (all fields are owned plain data, so the type is
+/// `Send` and moves freely onto scoped worker threads).
+#[derive(Debug, Default)]
+pub(super) struct ComponentState {
+    pub(super) now: SimTime,
+    /// Resource capacities in bytes/s (names stay in `Sim`; workers
+    /// never need them).
+    pub(super) caps: Vec<f64>,
+    pub(super) flows: Vec<Flow>,
+    /// Incidence index: **active** flows on each resource (one entry per
+    /// route occurrence), maintained on activation/retirement.
+    pub(super) res_flows: Vec<Vec<FlowId>>,
+    /// Pending flows in a min-heap by (start_at, id).
+    pub(super) pending: BinaryHeap<Reverse<PendingKey>>,
+    /// Predicted finishes, lazy-deletion min-heap (DESIGN.md section 10).
+    finish: BinaryHeap<Reverse<FinishKey>>,
+    /// Flows whose activation/retirement triggered this event's refill.
+    pub(super) dirty: Vec<FlowId>,
+    /// Flows that completed during the most recent step.
+    pub(super) finished_step: Vec<FlowId>,
+    // Scratch buffers reused across rate recomputations (hot path).
+    scratch_residual: Vec<f64>,
+    scratch_unfixed: Vec<u32>,
+    scratch_wsum: Vec<f64>,
+    scratch_touched: Vec<ResId>,
+    comp_flows: Vec<FlowId>,
+    scratch_res_epoch: Vec<u64>,
+    scratch_comp_epoch: Vec<u64>,
+    scratch_fixed_epoch: Vec<u64>,
+    scratch_mcr_epoch: Vec<u64>,
+    scratch_pass1: Vec<f64>,
+    scratch_floor_w: HashMap<(usize, usize), f64>,
+    scratch_guar: Vec<(usize, f64)>,
+    epoch: u64,
+    /// Rate floors: (resource, class index) -> guaranteed bytes/s.
+    pub(super) floors: HashMap<(usize, usize), f64>,
+    /// Dense per-resource "has any floor" flag (see DESIGN.md §12).
+    pub(super) res_has_floor: Vec<bool>,
+    /// Events processed by this core (flushed to the process-wide
+    /// counter at region/wait boundaries, never from worker threads).
+    pub(super) events: u64,
+    /// Largest flow set a single refill had to touch (diagnostics).
+    pub(super) peak_component: usize,
+    /// Flow count of the most recent refill's closure (0 when the last
+    /// cancellation found no contenders and skipped the walk).
+    pub(super) last_refill_flows: usize,
+}
+
+impl ComponentState {
+    /// Earliest upcoming event: the pending-heap top or the first *valid*
+    /// finish-heap entry (stale entries — re-predicted finishes, and
+    /// pending flows cancelled before activation — are discarded on the
+    /// way).
+    fn next_event_time(&mut self) -> Option<SimTime> {
+        let start = loop {
+            match self.pending.peek() {
+                None => break f64::INFINITY,
+                Some(&Reverse(k)) => {
+                    if self.flows[k.1].state != FlowState::Pending {
+                        self.pending.pop(); // cancelled before activation
+                    } else {
+                        break k.time();
+                    }
+                }
+            }
+        };
+        let finish = loop {
+            match self.finish.peek() {
+                None => break f64::INFINITY,
+                Some(&Reverse(k)) => {
+                    let fl = &self.flows[k.1];
+                    if fl.state != FlowState::Active || fl.finish_at.to_bits() != k.0 {
+                        self.finish.pop(); // lazy deletion
+                    } else {
+                        break k.time();
+                    }
+                }
+            }
+        };
+        let t = start.min(finish);
+        t.is_finite().then_some(t)
+    }
+
+    /// Process one event; returns false when idle.  No per-flow sweep
+    /// happens here: progression is implicit in (remaining, touched_at,
+    /// rate), and only the flows whose state changes are settled.
+    pub(super) fn step(&mut self) -> bool {
+        self.finished_step.clear();
+        let Some(t) = self.next_event_time() else {
+            return false;
+        };
+        if t > self.now {
+            self.now = t;
+        }
+        self.events += 1;
+        self.dirty.clear();
+
+        // Activate pending flows whose latency elapsed (heap pops in
+        // (start_at, id) order, so activation order is deterministic).
+        while let Some(&Reverse(k)) = self.pending.peek() {
+            if k.time() > self.now + 1e-15 {
+                break;
+            }
+            self.pending.pop();
+            let f = k.id();
+            let fl = &mut self.flows[f.0];
+            if fl.state != FlowState::Pending {
+                continue; // cancelled before activation: stale heap entry
+            }
+            // Sub-nanobyte flows (and pure delays) complete on arrival —
+            // the same threshold the retirement check applies to a
+            // just-activated (rate 0) flow.
+            if fl.remaining <= 1e-9 {
+                fl.remaining = 0.0;
+                fl.state = FlowState::Done;
+                fl.finished_at = self.now;
+                self.finished_step.push(f);
+            } else {
+                fl.state = FlowState::Active;
+                fl.touched_at = self.now;
+                for &r in &self.flows[f.0].route {
+                    self.res_flows[r.0].push(f);
+                }
+                self.dirty.push(f);
+            }
+        }
+
+        // Retire due finishes: pop valid heap entries whose flows are
+        // within the completion epsilon of `now` (remaining <= 1e-9 *
+        // max(rate, 1) bytes — near-simultaneous finishes merge into one
+        // event, exactly like the eager engine's retirement scan did).
+        loop {
+            let Some(&Reverse(k)) = self.finish.peek() else {
+                break;
+            };
+            let f = FlowId(k.1);
+            {
+                let fl = &self.flows[f.0];
+                if fl.state != FlowState::Active || fl.finish_at.to_bits() != k.0 {
+                    self.finish.pop(); // stale
+                    continue;
+                }
+                let due = k.time() <= self.now
+                    || (k.time() - self.now) * fl.rate <= 1e-9 * fl.rate.max(1.0);
+                if !due {
+                    break;
+                }
+            }
+            self.finish.pop();
+            let fl = &mut self.flows[f.0];
+            fl.remaining = 0.0;
+            fl.touched_at = self.now;
+            fl.state = FlowState::Done;
+            fl.finished_at = self.now;
+            self.finished_step.push(f);
+            // One incidence entry is removed per route occurrence; the
+            // O(flows-on-resource) scan is dominated by the refill that
+            // must visit the same component anyway.
+            for &r in &self.flows[f.0].route {
+                let v = &mut self.res_flows[r.0];
+                if let Some(p) = v.iter().position(|&x| x == f) {
+                    v.swap_remove(p);
+                }
+            }
+            self.dirty.push(f);
+        }
+
+        if !self.dirty.is_empty() {
+            self.recompute_component();
+        }
+        true
+    }
+
+    /// Run until no pending/active flows remain.
+    fn run_idle(&mut self) {
+        while self.step() {}
+    }
+
+    /// Process every event up to and including absolute time `target`,
+    /// then park the clock there (the closed-horizon half of
+    /// [`super::Sim::advance`]).  Parking between events is safe: per-
+    /// flow progress is a function of (remaining, touched_at, rate), not
+    /// of the event the bytes were last settled at.
+    fn run_to(&mut self, target: SimTime) {
+        loop {
+            match self.next_event_time() {
+                Some(t) if t <= target => {
+                    if !self.step() {
+                        break;
+                    }
+                }
+                _ => break,
+            }
+        }
+        self.now = self.now.max(target);
+    }
+
+    /// Rebuild the incidence lists and both heaps from flow state (after
+    /// a parallel region merged scalar results back into this core).
+    /// Entries are regenerated in ascending flow-id order; by lazy
+    /// deletion this is observationally identical to the organically
+    /// grown heaps (only the entry whose bits match `finish_at` is ever
+    /// valid, and pending keys are a pure function of the flow).
+    fn rebuild_index(&mut self) {
+        let ComponentState { flows, res_flows, pending, finish, .. } = self;
+        for v in res_flows.iter_mut() {
+            v.clear();
+        }
+        pending.clear();
+        finish.clear();
+        for (i, fl) in flows.iter().enumerate() {
+            match fl.state {
+                FlowState::Pending => {
+                    pending.push(Reverse(PendingKey::new(fl.start_at, FlowId(i))));
+                }
+                FlowState::Active => {
+                    for &r in &fl.route {
+                        res_flows[r.0].push(FlowId(i));
+                    }
+                    if fl.finish_at.is_finite() {
+                        finish.push(Reverse(FinishKey::new(fl.finish_at, FlowId(i))));
+                    }
+                }
+                FlowState::Done => {}
+            }
+        }
+    }
+
+    /// Settle `f`'s progress at `now` and assign a new rate, refreshing
+    /// its predicted finish and finish-heap entry.  A no-op when the rate
+    /// is unchanged — the standing prediction and heap entry stay valid,
+    /// which is what keeps disjoint components entirely untouched.
+    ///
+    /// An associated function over the two fields it mutates, so callers
+    /// can invoke it while iterating the (disjoint) incidence lists.
+    fn assign_rate(
+        flows: &mut [Flow],
+        finish: &mut BinaryHeap<Reverse<FinishKey>>,
+        now: SimTime,
+        f: FlowId,
+        new_rate: f64,
+    ) {
+        let fl = &mut flows[f.0];
+        if fl.rate == new_rate {
+            return;
+        }
+        if fl.rate > 0.0 {
+            // Lazy-progression settlement: bank the bytes moved at the
+            // old rate since the flow was last touched.
+            fl.remaining = (fl.remaining - fl.rate * (now - fl.touched_at)).max(0.0);
+        }
+        fl.touched_at = now;
+        fl.rate = new_rate;
+        fl.finish_at = if new_rate > 0.0 {
+            now + fl.remaining / new_rate
+        } else {
+            f64::INFINITY
+        };
+        if fl.finish_at.is_finite() {
+            finish.push(Reverse(FinishKey::new(fl.finish_at, f)));
+        }
+    }
+
+    /// Component-scoped **weighted** progressive-filling max-min fair
+    /// allocation, with per-(resource, class) floors and ceilings.
+    ///
+    /// Hot-path notes (DESIGN.md section 10): starting from the routes of
+    /// this event's changed flows, the incidence index is walked to close
+    /// over the connected component(s) they touch; the fill then runs
+    /// over exactly that flow/resource set.  Rates, predictions and heap
+    /// entries of disjoint subsystems are untouched, and within the
+    /// component a flow whose refilled rate is unchanged keeps its
+    /// standing finish prediction (no settle, no heap churn).  All
+    /// bottlenecks tied at the minimum share fix in one pass (672
+    /// independent NVMe writers collapse to a single iteration), and the
+    /// "fixed"/"visited" marks are epoch-stamped so nothing is cleared or
+    /// re-allocated per call.
+    ///
+    /// QoS (DESIGN.md section 12): **pass 1** grants each guaranteed flow
+    /// its weight-share of the floors on its route, capped on unfloored
+    /// hops at the flow's plain fair share so guarantees never starve
+    /// best-effort traffic there (clamped to route residuals, granted in
+    /// flow-id order); **pass 2** is weighted progressive filling of the
+    /// remaining capacity over all flows, so a flow's rate is `pass-1
+    /// grant + weighted excess share`.  Ceilings need no code here at
+    /// all — they are shadow resources on the routes.  With no floored
+    /// resource in the component and all weights exactly 1.0, both
+    /// passes reduce bit-identically to the unweighted fill (weight sums
+    /// built from 1.0 increments equal the old integer counts, and
+    /// `x * 1.0` / `0.0 + x` are exact).
+    pub(super) fn recompute_component(&mut self) {
+        let nres = self.caps.len();
+        if self.scratch_residual.len() < nres {
+            self.scratch_residual.resize(nres, 0.0);
+            self.scratch_unfixed.resize(nres, 0);
+            self.scratch_wsum.resize(nres, 0.0);
+            self.scratch_res_epoch.resize(nres, 0);
+        }
+        let nflows = self.flows.len();
+        if self.scratch_fixed_epoch.len() < nflows {
+            self.scratch_fixed_epoch.resize(nflows, 0);
+            self.scratch_comp_epoch.resize(nflows, 0);
+            self.scratch_mcr_epoch.resize(nflows, 0);
+            self.scratch_pass1.resize(nflows, 0.0);
+        }
+        self.epoch += 1;
+        let epoch = self.epoch;
+        self.scratch_touched.clear();
+        self.comp_flows.clear();
+
+        // Seed the walk with the routes of the changed flows (finished
+        // flows are already out of the incidence lists but their resources
+        // must be refilled; activated flows are in and will be found).
+        for &f in &self.dirty {
+            for &r in &self.flows[f.0].route {
+                if self.scratch_res_epoch[r.0] != epoch {
+                    self.scratch_res_epoch[r.0] = epoch;
+                    self.scratch_wsum[r.0] = 0.0;
+                    self.scratch_touched.push(r);
+                }
+            }
+        }
+        // Close over the flow<->resource incidence: `scratch_touched`
+        // doubles as the BFS queue (cursor `i`).  Each (resource, flow)
+        // incidence pair is visited exactly once here, which is where the
+        // per-resource unfixed weight sums are accumulated.
+        let mut i = 0;
+        while i < self.scratch_touched.len() {
+            let r = self.scratch_touched[i];
+            i += 1;
+            for &f in &self.res_flows[r.0] {
+                self.scratch_wsum[r.0] += self.flows[f.0].weight;
+                if self.scratch_comp_epoch[f.0] != epoch {
+                    self.scratch_comp_epoch[f.0] = epoch;
+                    self.comp_flows.push(f);
+                    for &r2 in &self.flows[f.0].route {
+                        if self.scratch_res_epoch[r2.0] != epoch {
+                            self.scratch_res_epoch[r2.0] = epoch;
+                            self.scratch_wsum[r2.0] = 0.0;
+                            self.scratch_touched.push(r2);
+                        }
+                    }
+                }
+            }
+        }
+        if self.comp_flows.len() > self.peak_component {
+            self.peak_component = self.comp_flows.len();
+        }
+        self.last_refill_flows = self.comp_flows.len();
+
+        let mut comp_floored = false;
+        for &r in &self.scratch_touched {
+            self.scratch_residual[r.0] = self.caps[r.0];
+            self.scratch_unfixed[r.0] = self.res_flows[r.0].len() as u32;
+            comp_floored |= self.res_has_floor.get(r.0).copied().unwrap_or(false);
+        }
+
+        let now = self.now;
+
+        // --- pass 1: rate floors (guarantees) ------------------------------
+        //
+        // A guaranteed flow (>= 1 floored (resource, class) pair on its
+        // route) receives min over its route of `floor * w / W_class` on
+        // floored hops and its plain weighted fair share on unfloored
+        // hops (a guarantee is min(floor, achievable demand) end to end
+        // — it can never confiscate a hop that made no promise), clamped
+        // to route residuals, granted in flow-id order (deterministic).
+        let mut pass1_active = false;
+        if comp_floored {
+            self.scratch_floor_w.clear();
+            for &f in &self.comp_flows {
+                let fl = &self.flows[f.0];
+                let c = fl.class.index();
+                for &r in &fl.route {
+                    if self.floors.contains_key(&(r.0, c)) {
+                        *self.scratch_floor_w.entry((r.0, c)).or_insert(0.0) += fl.weight;
+                    }
+                }
+            }
+            self.scratch_guar.clear();
+            for &f in &self.comp_flows {
+                let fl = &self.flows[f.0];
+                let c = fl.class.index();
+                let mut mcr = f64::INFINITY;
+                let mut floored = false;
+                for &r in &fl.route {
+                    if let Some(&g) = self.floors.get(&(r.0, c)) {
+                        floored = true;
+                        let w_class = self.scratch_floor_w[&(r.0, c)];
+                        mcr = mcr.min(g * fl.weight / w_class);
+                    } else {
+                        // Unfloored hop: the guarantee may claim at most
+                        // the flow's plain weighted fair share there, so
+                        // pass 1 can never starve best-effort flows on a
+                        // hop that made no promise (the guarantee is
+                        // min(floor, achievable demand) end to end).
+                        mcr = mcr.min(
+                            self.caps[r.0] * fl.weight
+                                / self.scratch_wsum[r.0].max(1e-300),
+                        );
+                    }
+                }
+                if floored && mcr.is_finite() {
+                    self.scratch_guar.push((f.0, mcr));
+                }
+            }
+            if !self.scratch_guar.is_empty() {
+                pass1_active = true;
+                self.scratch_guar.sort_unstable_by_key(|&(id, _)| id);
+                for &(fid, mcr) in &self.scratch_guar {
+                    let mut grant = mcr;
+                    for &r in &self.flows[fid].route {
+                        grant = grant.min(self.scratch_residual[r.0]);
+                    }
+                    let grant = grant.max(0.0);
+                    self.scratch_mcr_epoch[fid] = epoch;
+                    self.scratch_pass1[fid] = grant;
+                    for &r in &self.flows[fid].route {
+                        self.scratch_residual[r.0] =
+                            (self.scratch_residual[r.0] - grant).max(0.0);
+                    }
+                }
+            }
+        }
+
+        // --- pass 2: weighted max-min over the residual capacity -----------
+        let mut remaining = self.comp_flows.len();
+        while remaining > 0 {
+            // Smallest per-unit-weight share among component resources
+            // with unfixed flows.
+            let mut min_share = f64::INFINITY;
+            for &r in &self.scratch_touched {
+                let n = self.scratch_unfixed[r.0];
+                if n == 0 {
+                    continue;
+                }
+                let share = self.scratch_residual[r.0] / self.scratch_wsum[r.0].max(1e-300);
+                if share < min_share {
+                    min_share = share;
+                }
+            }
+            if !min_share.is_finite() {
+                // Remaining flows have no loaded resource left: their
+                // pass-1 grant (0 without floors) is all they get.
+                for &f in &self.comp_flows {
+                    if self.scratch_fixed_epoch[f.0] != epoch {
+                        let base = if pass1_active && self.scratch_mcr_epoch[f.0] == epoch {
+                            self.scratch_pass1[f.0]
+                        } else {
+                            0.0
+                        };
+                        Self::assign_rate(&mut self.flows, &mut self.finish, now, f, base);
+                    }
+                }
+                break;
+            }
+            // Fix every unfixed flow on every bottleneck tied at min_share.
+            let eps = min_share * 1e-12 + 1e-30;
+            let mut progressed = false;
+            for &r in &self.scratch_touched {
+                let n = self.scratch_unfixed[r.0];
+                if n == 0 {
+                    continue;
+                }
+                let share = self.scratch_residual[r.0] / self.scratch_wsum[r.0].max(1e-300);
+                if share - min_share > eps {
+                    continue;
+                }
+                // This resource is a bottleneck: fix its unfixed flows.
+                for &f in &self.res_flows[r.0] {
+                    if self.scratch_fixed_epoch[f.0] == epoch {
+                        continue;
+                    }
+                    self.scratch_fixed_epoch[f.0] = epoch;
+                    let w = self.flows[f.0].weight;
+                    let extra = min_share * w;
+                    let rate = if pass1_active && self.scratch_mcr_epoch[f.0] == epoch {
+                        self.scratch_pass1[f.0] + extra
+                    } else {
+                        extra
+                    };
+                    Self::assign_rate(&mut self.flows, &mut self.finish, now, f, rate);
+                    remaining -= 1;
+                    progressed = true;
+                    for &fr in &self.flows[f.0].route {
+                        self.scratch_residual[fr.0] =
+                            (self.scratch_residual[fr.0] - extra).max(0.0);
+                        self.scratch_unfixed[fr.0] -= 1;
+                        self.scratch_wsum[fr.0] -= w;
+                    }
+                }
+            }
+            if !progressed {
+                // Numerical corner: nothing progressed; the rest keep
+                // only their pass-1 grants.
+                for &f in &self.comp_flows {
+                    if self.scratch_fixed_epoch[f.0] != epoch {
+                        let base = if pass1_active && self.scratch_mcr_epoch[f.0] == epoch {
+                            self.scratch_pass1[f.0]
+                        } else {
+                            0.0
+                        };
+                        Self::assign_rate(&mut self.flows, &mut self.finish, now, f, base);
+                    }
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// Union-find over resource ids, unioned along every issued route with
+/// **min-root-wins** (the smallest resource id of a merged set is its
+/// root), so component identity is a pure function of the issue history
+/// — independent of find() call order and of thread count.  The map
+/// only coarsens: a route bridging two partitions merges them for good,
+/// which is exactly the deterministic merge-barrier semantics DESIGN.md
+/// section 14 specifies (components may be *coarser* than the live
+/// incidence graph, never finer — coarser is always safe).
+#[derive(Debug, Default)]
+pub(super) struct Partition {
+    parent: Vec<usize>,
+}
+
+impl Partition {
+    /// Register the next resource as its own singleton component.
+    pub(super) fn push(&mut self) {
+        self.parent.push(self.parent.len());
+    }
+
+    /// Root of `x`'s component, with path compression.
+    fn find(&mut self, x: usize) -> usize {
+        let mut root = x;
+        while self.parent[root] != root {
+            root = self.parent[root];
+        }
+        let mut cur = x;
+        while self.parent[cur] != root {
+            let next = self.parent[cur];
+            self.parent[cur] = root;
+            cur = next;
+        }
+        root
+    }
+
+    /// Union every resource on `route` into one component (min root wins).
+    pub(super) fn union_route(&mut self, route: &[ResId]) {
+        let Some(&first) = route.first() else {
+            return;
+        };
+        let mut root = self.find(first.0);
+        for &r in &route[1..] {
+            let other = self.find(r.0);
+            if other != root {
+                let (lo, hi) = if other < root { (other, root) } else { (root, other) };
+                self.parent[hi] = lo;
+                root = lo;
+            }
+        }
+    }
+}
+
+/// One split-out component: its engine core plus the global flow ids its
+/// local flows map back to (`gids[local] = global`, ascending).
+struct Part {
+    state: ComponentState,
+    gids: Vec<usize>,
+}
+
+impl Sim {
+    /// Advance a closed-horizon region: to idle (`target` None) or up to
+    /// the absolute time `target` (the [`Sim::advance`] contract).  With
+    /// `threads > 1` and at least two live components the region runs
+    /// component-parallel on scoped workers; otherwise (and always with
+    /// `--threads 1`) it runs serially on the monolithic core — the
+    /// exact pre-partition code path, bit for bit.
+    pub(super) fn run_region(&mut self, target: Option<SimTime>) {
+        if !(self.threads > 1 && self.try_parallel_region(target)) {
+            match target {
+                None => self.core.run_idle(),
+                Some(t) => self.core.run_to(t),
+            }
+        }
+        self.flush_events();
+    }
+
+    /// Run one region component-parallel; false when the live flows span
+    /// fewer than two partition groups (caller falls back to serial).
+    fn try_parallel_region(&mut self, target: Option<SimTime>) -> bool {
+        let Some(parts) = self.split_region() else {
+            return false;
+        };
+        // Deterministic worker assignment: components in descending flow
+        // count (stable sort — equal sizes keep ascending-root order) go
+        // greedily to the least-loaded worker, ties to the lower index.
+        // Pure function of the split, so the event trace per component —
+        // and therefore every merged output — is independent of how the
+        // OS actually schedules the worker threads.
+        let nw = self.threads.min(parts.len());
+        let mut order: Vec<usize> = (0..parts.len()).collect();
+        order.sort_by_key(|&i| Reverse(parts[i].state.flows.len()));
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); nw];
+        let mut load = vec![0usize; nw];
+        for i in order {
+            let k = (0..nw).min_by_key(|&k| (load[k], k)).expect("nw >= 1");
+            load[k] += parts[i].state.flows.len();
+            buckets[k].push(i);
+        }
+        let mut slots: Vec<Option<Part>> = parts.into_iter().map(Some).collect();
+        let chunks: Vec<Vec<Part>> = buckets
+            .iter()
+            .map(|b| b.iter().map(|&i| slots[i].take().expect("assigned once")).collect())
+            .collect();
+        let done: Vec<Vec<Part>> = std::thread::scope(|s| {
+            let handles: Vec<_> = chunks
+                .into_iter()
+                .map(|mut chunk| {
+                    s.spawn(move || {
+                        for part in &mut chunk {
+                            match target {
+                                None => part.state.run_idle(),
+                                Some(t) => part.state.run_to(t),
+                            }
+                        }
+                        chunk
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
+                .collect()
+        });
+        self.merge_region(done, target);
+        true
+    }
+
+    /// Split the monolithic core into per-component [`Part`]s, grouped
+    /// by partition root over each live flow's first route hop (pure
+    /// delays go to the timer pseudo-component).  Local ids — both flow
+    /// and resource — are assigned in ascending global order, so they
+    /// are order-isomorphic to the global ids and every `(time, id)`
+    /// heap tie-break inside a component is preserved exactly.  Returns
+    /// None when fewer than two groups are live.
+    fn split_region(&mut self) -> Option<Vec<Part>> {
+        let Sim { partition, core, .. } = self;
+        let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, fl) in core.flows.iter().enumerate() {
+            if fl.state == FlowState::Done {
+                continue;
+            }
+            let root = match fl.route.first() {
+                None => TIMER_ROOT,
+                Some(&r) => partition.find(r.0),
+            };
+            groups.entry(root).or_default().push(i);
+        }
+        if groups.len() < 2 {
+            return None;
+        }
+        let mut parts = Vec::with_capacity(groups.len());
+        for gids in groups.into_values() {
+            let mut res_set: BTreeSet<usize> = BTreeSet::new();
+            for &gid in &gids {
+                for &r in &core.flows[gid].route {
+                    res_set.insert(r.0);
+                }
+            }
+            let mut st = ComponentState { now: core.now, ..ComponentState::default() };
+            let mut res_map: HashMap<usize, usize> = HashMap::with_capacity(res_set.len());
+            for (local, &g) in res_set.iter().enumerate() {
+                res_map.insert(g, local);
+                st.caps.push(core.caps[g]);
+                st.res_flows.push(Vec::new());
+                st.res_has_floor
+                    .push(core.res_has_floor.get(g).copied().unwrap_or(false));
+                for c in 0..TrafficClass::COUNT {
+                    if let Some(&v) = core.floors.get(&(g, c)) {
+                        st.floors.insert((local, c), v);
+                    }
+                }
+            }
+            for &gid in &gids {
+                let gf = &core.flows[gid];
+                let route: Vec<ResId> =
+                    gf.route.iter().map(|r| ResId(res_map[&r.0])).collect();
+                let lid = FlowId(st.flows.len());
+                st.flows.push(Flow { route, ..gf.clone() });
+                match gf.state {
+                    FlowState::Pending => {
+                        st.pending.push(Reverse(PendingKey::new(gf.start_at, lid)));
+                    }
+                    FlowState::Active => {
+                        for &r in &st.flows[lid.0].route {
+                            st.res_flows[r.0].push(lid);
+                        }
+                        if gf.finish_at.is_finite() {
+                            st.finish.push(Reverse(FinishKey::new(gf.finish_at, lid)));
+                        }
+                    }
+                    FlowState::Done => unreachable!("Done flows were filtered above"),
+                }
+            }
+            parts.push(Part { state: st, gids });
+        }
+        Some(parts)
+    }
+
+    /// Merge per-component results back into the monolithic core.  Every
+    /// operation here is order-independent across parts — scalar copies
+    /// to disjoint global flows, sums of event counters, maxes of clocks
+    /// and peaks — so the merged state is identical for every worker
+    /// count and bucket shape.  `chunks[w]` ran on worker `w` (feeds the
+    /// per-worker event counters the scale bench reports).
+    fn merge_region(&mut self, chunks: Vec<Vec<Part>>, target: Option<SimTime>) {
+        let Sim { core, worker_events, .. } = self;
+        let mut region_now = core.now;
+        for (w, chunk) in chunks.into_iter().enumerate() {
+            for part in chunk {
+                let st = part.state;
+                for (lid, &gid) in part.gids.iter().enumerate() {
+                    let lf = &st.flows[lid];
+                    let gf = &mut core.flows[gid];
+                    gf.remaining = lf.remaining;
+                    gf.touched_at = lf.touched_at;
+                    gf.state = lf.state;
+                    gf.finished_at = lf.finished_at;
+                    gf.rate = lf.rate;
+                    gf.finish_at = lf.finish_at;
+                }
+                core.events += st.events;
+                worker_events[w] += st.events;
+                if st.peak_component > core.peak_component {
+                    core.peak_component = st.peak_component;
+                }
+                if st.now > region_now {
+                    region_now = st.now;
+                }
+            }
+        }
+        core.now = match target {
+            Some(t) => region_now.max(t),
+            None => region_now,
+        };
+        core.rebuild_index();
+        core.dirty.clear();
+        core.finished_step.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Sim;
+    use super::Partition;
+    use crate::sim::ResId;
+
+    #[test]
+    fn union_find_min_root_wins_any_order() {
+        let mut a = Partition::default();
+        let mut b = Partition::default();
+        for _ in 0..6 {
+            a.push();
+            b.push();
+        }
+        // Same edges in different orders must yield the same roots.
+        a.union_route(&[ResId(4), ResId(2)]);
+        a.union_route(&[ResId(2), ResId(5)]);
+        a.union_route(&[ResId(1), ResId(3)]);
+        b.union_route(&[ResId(5), ResId(4)]);
+        b.union_route(&[ResId(3), ResId(1)]);
+        b.union_route(&[ResId(4), ResId(2)]);
+        for x in 0..6 {
+            assert_eq!(a.find(x), b.find(x), "root of {x}");
+        }
+        assert_eq!(a.find(5), 2, "min id of {{2,4,5}} is the root");
+        assert_eq!(a.find(3), 1);
+        assert_eq!(a.find(0), 0, "untouched singleton");
+    }
+
+    /// Two disjoint components: the sharded run must report the same
+    /// completion times and final clock as a serial twin.
+    fn two_component_workload(threads: usize) -> (Vec<f64>, f64, u64) {
+        let mut sim = Sim::new();
+        sim.set_threads(threads);
+        let a = sim.resource("a", 1e9);
+        let b = sim.resource("b", 2e9);
+        let mut flows = Vec::new();
+        for i in 0..4 {
+            flows.push(sim.flow(1e8 + 3e7 * i as f64, 1e-4 * i as f64, &[a]));
+            flows.push(sim.flow(2e8 + 5e7 * i as f64, 2e-4 * i as f64, &[b]));
+        }
+        flows.push(sim.delay(0.017));
+        sim.run_until_idle();
+        let times: Vec<f64> = flows.iter().map(|&f| sim.completed(f).unwrap()).collect();
+        (times, sim.now(), sim.events())
+    }
+
+    #[test]
+    fn parallel_region_matches_serial_exactly() {
+        let (t1, now1, _) = two_component_workload(1);
+        for threads in [2, 4, 8] {
+            let (tn, nown, _) = two_component_workload(threads);
+            assert_eq!(t1, tn, "completion times at threads={threads}");
+            assert_eq!(now1, nown, "final clock at threads={threads}");
+        }
+    }
+
+    #[test]
+    fn worker_event_counters_sum_to_engine_total() {
+        let mut sim = Sim::new();
+        sim.set_threads(3);
+        let a = sim.resource("a", 1e9);
+        let b = sim.resource("b", 1e9);
+        let c = sim.resource("c", 1e9);
+        for (i, &r) in [a, b, c].iter().enumerate() {
+            sim.flow(1e8, 1e-5 * i as f64, &[r]);
+            sim.flow(2e8, 2e-5 * i as f64, &[r]);
+        }
+        sim.run_until_idle();
+        let per_worker = sim.worker_events();
+        assert_eq!(per_worker.len(), 3);
+        assert_eq!(per_worker.iter().sum::<u64>(), sim.events());
+        assert!(per_worker.iter().all(|&e| e > 0), "three components on three workers: {per_worker:?}");
+    }
+
+    #[test]
+    fn advance_splits_and_reports_midflight_rates() {
+        // Mid-region advance: rates and settled progress after a
+        // sharded advance() equal the serial twin's, and the region can
+        // be re-entered (second advance + idle run) without drift.
+        let build = |threads: usize| {
+            let mut sim = Sim::new();
+            sim.set_threads(threads);
+            let a = sim.resource("a", 1e9);
+            let b = sim.resource("b", 4e9);
+            let f0 = sim.flow(5e8, 0.0, &[a]);
+            let f1 = sim.flow(7e8, 1e-3, &[a]);
+            let f2 = sim.flow(9e8, 0.0, &[b]);
+            (sim, [f0, f1, f2])
+        };
+        let (mut s1, fl1) = build(1);
+        let (mut s2, fl2) = build(2);
+        for s in [&mut s1, &mut s2] {
+            s.advance(0.05);
+        }
+        for (&x, &y) in fl1.iter().zip(fl2.iter()) {
+            assert_eq!(s1.flow_remaining(x), s2.flow_remaining(y), "remaining after advance");
+        }
+        let tr1 = s1.op_trace();
+        let tr2 = s2.op_trace();
+        for (e1, e2) in tr1.iter().zip(tr2.iter()) {
+            assert_eq!(e1.rate, e2.rate, "mid-flight rate of flow {:?}", e1.id);
+        }
+        s1.advance(0.1);
+        s2.advance(0.1);
+        s1.run_until_idle();
+        s2.run_until_idle();
+        assert_eq!(s1.now(), s2.now());
+        for (&x, &y) in fl1.iter().zip(fl2.iter()) {
+            assert_eq!(s1.completed(x), s2.completed(y));
+        }
+    }
+
+    #[test]
+    fn timer_only_workload_runs_serial_under_threads() {
+        let mut sim = Sim::new();
+        sim.set_threads(4);
+        let d1 = sim.delay(0.25);
+        let d2 = sim.delay(0.5);
+        sim.run_until_idle();
+        assert_eq!(sim.completed(d1), Some(0.25));
+        assert_eq!(sim.completed(d2), Some(0.5));
+        assert_eq!(sim.now(), 0.5);
+    }
+
+    #[test]
+    fn bridging_flow_is_a_merge_barrier() {
+        // Once a route bridges two partitions they stay one group: the
+        // run still completes and matches a serial twin even though the
+        // bridge flow finished long before the second region.
+        let run = |threads: usize| {
+            let mut sim = Sim::new();
+            sim.set_threads(threads);
+            let a = sim.resource("a", 1e9);
+            let b = sim.resource("b", 1e9);
+            let bridge = sim.flow(1e8, 0.0, &[a, b]);
+            sim.wait_all(&[bridge]);
+            let fa = sim.flow(3e8, 0.0, &[a]);
+            let fb = sim.flow(4e8, 0.0, &[b]);
+            sim.run_until_idle();
+            (sim.completed(fa).unwrap(), sim.completed(fb).unwrap())
+        };
+        assert_eq!(run(1), run(2));
+    }
+}

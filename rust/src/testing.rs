@@ -12,6 +12,11 @@
 use crate::sim::rng::SplitMix64;
 use crate::system::{zoo, MachineSpec};
 
+/// The thread counts the component-parallel engine is swept at by
+/// `rust/tests/prop_parallel.rs` (ISSUE 7: completion times must match
+/// `--threads 1` exactly at every count).
+pub const THREAD_SWEEP: &[usize] = &[1, 2, 4, 8];
+
 /// Random value source handed to properties.
 #[derive(Debug)]
 pub struct Gen {

@@ -8,7 +8,13 @@ use deeper::bench::{scale_points, scale_report, ScaleConfig};
 use deeper::util::json::{self, Json};
 
 fn small_cfg() -> ScaleConfig {
-    ScaleConfig { sweep: vec![64, 256], seed: 1, baseline_max: 256, topology: None }
+    ScaleConfig {
+        sweep: vec![64, 256],
+        seed: 1,
+        baseline_max: 256,
+        topology: None,
+        threads: vec![1, 2],
+    }
 }
 
 #[test]
@@ -25,10 +31,16 @@ fn scale_report_exhibits_and_schema() {
     let parsed = json::parse(&json.to_pretty_string()).expect("pretty JSON parses");
     assert_eq!(parsed, json);
     assert_eq!(json.get("bench").and_then(Json::as_str), Some("sim_scale"));
-    assert_eq!(json.get("schema_version").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(json.get("schema_version").and_then(Json::as_f64), Some(2.0));
     assert_eq!(json.get("seed").and_then(Json::as_f64), Some(1.0));
     // No --topology: the synthetic flat workload, recorded as null.
     assert_eq!(json.get("topology"), Some(&Json::Null));
+    // Schema v2: the top-level threads axis mirrors the config.
+    let threads = json.get("threads").and_then(Json::as_arr).expect("threads axis");
+    assert_eq!(
+        threads.iter().map(|t| t.as_f64().unwrap()).collect::<Vec<_>>(),
+        vec![1.0, 2.0]
+    );
     let points = json.get("points").and_then(Json::as_arr).expect("points array");
     assert_eq!(points.len(), 2);
     for p in points {
@@ -40,6 +52,30 @@ fn scale_report_exhibits_and_schema() {
         assert!(engine.get("wall_s").and_then(Json::as_f64).unwrap() > 0.0);
         assert!(engine.get("last_finish_virtual_s").and_then(Json::as_f64).unwrap() > 0.0);
         assert!(p.get("peak_component_flows").and_then(Json::as_f64).unwrap() >= 1.0);
+        // Schema v2: one run per thread count, each with per-worker event
+        // counters summing to that run's event total; virtual completion
+        // identical across counts (scale_points gates this at 1e-9, the
+        // artifact lets trajectory tooling re-check it exactly).
+        let runs = p.get("runs").and_then(Json::as_arr).expect("runs array");
+        assert_eq!(runs.len(), 2);
+        for (r, want_t) in runs.iter().zip([1.0, 2.0]) {
+            assert_eq!(r.get("threads").and_then(Json::as_f64), Some(want_t));
+            let events = r.get("events").and_then(Json::as_f64).unwrap();
+            assert!(events > 0.0);
+            let workers = r.get("worker_events").and_then(Json::as_arr).unwrap();
+            assert_eq!(workers.len(), want_t as usize);
+            let sum: f64 = workers.iter().map(|w| w.as_f64().unwrap()).sum();
+            assert_eq!(sum, events, "worker counters must sum to the run's events");
+        }
+        assert_eq!(
+            runs[0].get("last_finish_virtual_s").and_then(Json::as_f64),
+            runs[1].get("last_finish_virtual_s").and_then(Json::as_f64),
+        );
+        // The v1 anchor keys survive: `engine` is runs[0]'s measurement.
+        assert_eq!(
+            engine.get("events").and_then(Json::as_f64),
+            runs[0].get("events").and_then(Json::as_f64),
+        );
         // Both sweep points sit inside baseline_max: the naive engine ran
         // and the speedup ratio is recorded (its magnitude is the
         // release-bench's business, not this test's).
@@ -84,6 +120,7 @@ fn scale_workload_keeps_components_bounded() {
         seed: 1,
         baseline_max: 0,
         topology: None,
+        threads: vec![1],
     });
     assert_eq!(pts.len(), 1);
     assert!(pts[0].baseline.is_none(), "512 > baseline_max 0: naive engine skipped");
@@ -104,6 +141,7 @@ fn committed_trajectory_artifact_parses() {
     let text = std::fs::read_to_string(path).expect("BENCH_sim_scale.json exists");
     let doc = json::parse(&text).expect("artifact parses");
     assert_eq!(doc.get("bench").and_then(Json::as_str), Some("sim_scale"));
-    assert_eq!(doc.get("schema_version").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(doc.get("schema_version").and_then(Json::as_f64), Some(2.0));
+    assert!(doc.get("threads").and_then(Json::as_arr).is_some());
     assert!(doc.get("points").and_then(Json::as_arr).is_some());
 }

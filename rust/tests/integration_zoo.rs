@@ -126,6 +126,7 @@ fn scale_bench_runs_on_zoo_topology() {
         seed: 1,
         baseline_max: 64,
         topology: Some("multi-rail:4".into()),
+        threads: vec![1, 2],
     };
     let pts = scale_points(&cfg);
     assert_eq!(pts.len(), 1);

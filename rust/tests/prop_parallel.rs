@@ -1,0 +1,311 @@
+//! Thread-count equivalence sweep for the component-parallel DES engine
+//! (DESIGN.md section 14).
+//!
+//! Every workload below runs at each thread count in
+//! [`deeper::testing::THREAD_SWEEP`] ({1, 2, 4, 8}).  Completion times
+//! and `op_trace` rates must match threads=1 *exactly* — the partitioned
+//! engine performs the identical per-component arithmetic, so any
+//! divergence is a partitioning bug, not float noise — and the naive
+//! `RefSim` differential oracle must agree to 1e-9 relative.  The last
+//! property replays real machine routes across the whole topology zoo.
+
+use std::collections::BTreeMap;
+
+use deeper::sim::reference::RefSim;
+use deeper::sim::{FlowId, ResId, Sim, SimTime};
+use deeper::system::Machine;
+use deeper::testing::{check, check_zoo, Config, Gen, THREAD_SWEEP};
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, seed: 0xDEE9E5, ..Config::default() }
+}
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
+}
+
+/// Run every flow to completion and collect the observables the sweep
+/// compares: per-flow completion times plus final `op_trace` rates.
+fn observe(mut sim: Sim, ids: Vec<FlowId>) -> (Vec<SimTime>, Vec<f64>) {
+    let times = sim.wait_each(&ids);
+    let trace = sim.op_trace();
+    let rates = ids.iter().map(|&f| trace[f.0].rate).collect();
+    (times, rates)
+}
+
+/// Check a builder against the whole sweep: threads=1 is the baseline,
+/// every other count must reproduce it bit-for-bit.
+fn sweep_matches(build: impl Fn(usize) -> (Sim, Vec<FlowId>)) -> bool {
+    let (sim, ids) = build(THREAD_SWEEP[0]);
+    let base = observe(sim, ids);
+    THREAD_SWEEP[1..].iter().all(|&t| {
+        let (sim, ids) = build(t);
+        observe(sim, ids) == base
+    })
+}
+
+// ----------------------------------------------------------------------
+// Incast: private per-flow NICs into a few shared backends plus
+// local-only flows — many single-flow components around a few big ones.
+// ----------------------------------------------------------------------
+
+/// (backend capacities, flows as (bytes, delay, incast?, backend)).
+type IncastWl = (Vec<f64>, Vec<(f64, f64, bool, usize)>);
+
+fn gen_incast(g: &mut Gen) -> IncastWl {
+    let n_backends = g.usize_in(1, 3);
+    let caps: Vec<f64> = g.vec(n_backends, |g| g.f64_in(1e9, 5e9));
+    let n = g.usize_in(2, 32);
+    let flows = g.vec(n, |g| {
+        (
+            g.f64_in(1e6, 5e8),
+            g.f64_in(0.0, 0.05),
+            g.bool(),
+            g.usize_in(0, n_backends - 1),
+        )
+    });
+    (caps, flows)
+}
+
+fn build_incast(wl: &IncastWl, threads: usize) -> (Sim, Vec<FlowId>) {
+    let (caps, flows) = wl;
+    let mut sim = Sim::new();
+    sim.set_threads(threads);
+    let backends: Vec<_> = caps.iter().map(|&c| sim.resource("oss", c)).collect();
+    let ids = flows
+        .iter()
+        .map(|&(bytes, delay, incast, b)| {
+            let nic = sim.resource("nic", 12.5e9);
+            if incast {
+                sim.flow(bytes, delay, &[nic, backends[b]])
+            } else {
+                sim.flow(bytes, delay, &[nic])
+            }
+        })
+        .collect();
+    (sim, ids)
+}
+
+#[test]
+fn prop_parallel_incast_matches_serial_and_oracle() {
+    check(cfg(60), gen_incast, |wl| {
+        // Oracle first: threads=1 must track the naive engine to 1e-9.
+        let (caps, flows) = wl;
+        let mut rsim = RefSim::new();
+        let rbackends: Vec<_> = caps.iter().map(|&c| rsim.resource(c)).collect();
+        let rids: Vec<_> = flows
+            .iter()
+            .map(|&(bytes, delay, incast, b)| {
+                let rnic = rsim.resource(12.5e9);
+                if incast {
+                    rsim.flow(bytes, delay, &[rnic, rbackends[b]])
+                } else {
+                    rsim.flow(bytes, delay, &[rnic])
+                }
+            })
+            .collect();
+        let tref = rsim.wait_each(&rids);
+        let (sim, ids) = build_incast(wl, 1);
+        let (t1, _) = observe(sim, ids);
+        t1.iter().zip(&tref).all(|(a, b)| close(*a, *b))
+            && sweep_matches(|t| build_incast(wl, t))
+    });
+}
+
+// ----------------------------------------------------------------------
+// Disjoint: k independent groups, each a shared resource fed by its own
+// members' NICs — the embarrassingly parallel case.
+// ----------------------------------------------------------------------
+
+/// (group capacities, flows as (bytes, delay, group)).
+type DisjointWl = (Vec<f64>, Vec<(f64, f64, usize)>);
+
+fn gen_disjoint(g: &mut Gen) -> DisjointWl {
+    let k = g.usize_in(2, 8);
+    let caps: Vec<f64> = g.vec(k, |g| g.f64_in(5e8, 8e9));
+    let n = g.usize_in(2, 40);
+    let flows = g.vec(n, |g| {
+        (g.f64_in(1e5, 3e8), g.f64_in(0.0, 0.03), g.usize_in(0, k - 1))
+    });
+    (caps, flows)
+}
+
+fn build_disjoint(wl: &DisjointWl, threads: usize) -> (Sim, Vec<FlowId>) {
+    let (caps, flows) = wl;
+    let mut sim = Sim::new();
+    sim.set_threads(threads);
+    let groups: Vec<_> = caps.iter().map(|&c| sim.resource("grp", c)).collect();
+    let ids = flows
+        .iter()
+        .map(|&(bytes, delay, k)| {
+            let nic = sim.resource("nic", 12.5e9);
+            sim.flow(bytes, delay, &[nic, groups[k]])
+        })
+        .collect();
+    (sim, ids)
+}
+
+#[test]
+fn prop_parallel_disjoint_components_match_serial_and_oracle() {
+    check(cfg(60), gen_disjoint, |wl| {
+        let (caps, flows) = wl;
+        let mut rsim = RefSim::new();
+        let rgroups: Vec<_> = caps.iter().map(|&c| rsim.resource(c)).collect();
+        let rids: Vec<_> = flows
+            .iter()
+            .map(|&(bytes, delay, k)| {
+                let rnic = rsim.resource(12.5e9);
+                rsim.flow(bytes, delay, &[rnic, rgroups[k]])
+            })
+            .collect();
+        let tref = rsim.wait_each(&rids);
+        let (sim, ids) = build_disjoint(wl, 1);
+        let (t1, _) = observe(sim, ids);
+        t1.iter().zip(&tref).all(|(a, b)| close(*a, *b))
+            && sweep_matches(|t| build_disjoint(wl, t))
+    });
+}
+
+// ----------------------------------------------------------------------
+// Merge-heavy: phase 1 fills k disjoint groups, a parallel region runs
+// mid-flight, then phase 2 issues bridge flows whose routes span two
+// groups — each issue is a merge barrier coarsening the partition.
+// ----------------------------------------------------------------------
+
+/// (group capacities, phase-1 flows (bytes, delay, group), advance gap,
+/// bridges (bytes, delay, group a, group b)).
+type MergeWl = (Vec<f64>, Vec<(f64, f64, usize)>, f64, Vec<(f64, f64, usize, usize)>);
+
+fn gen_merge(g: &mut Gen) -> MergeWl {
+    let k = g.usize_in(2, 6);
+    let caps: Vec<f64> = g.vec(k, |g| g.f64_in(5e8, 8e9));
+    let n1 = g.usize_in(2, 24);
+    let phase1 = g.vec(n1, |g| {
+        (g.f64_in(1e6, 3e8), g.f64_in(0.0, 0.02), g.usize_in(0, k - 1))
+    });
+    let gap = g.f64_in(0.005, 0.05);
+    let nb = g.usize_in(1, 8);
+    let bridges = g.vec(nb, |g| {
+        (
+            g.f64_in(1e6, 3e8),
+            g.f64_in(0.0, 0.02),
+            g.usize_in(0, k - 1),
+            g.usize_in(0, k - 1),
+        )
+    });
+    (caps, phase1, gap, bridges)
+}
+
+/// Observables: mid-flight rates right after the parallel region (these
+/// catch a merge-back that loses or staleness-corrupts rates) plus the
+/// final completion times and rates of every flow.
+fn run_merge(wl: &MergeWl, threads: usize) -> (Vec<f64>, Vec<SimTime>, Vec<f64>) {
+    let (caps, phase1, gap, bridges) = wl;
+    let mut sim = Sim::new();
+    sim.set_threads(threads);
+    let groups: Vec<_> = caps.iter().map(|&c| sim.resource("grp", c)).collect();
+    let mut ids: Vec<FlowId> = phase1
+        .iter()
+        .map(|&(bytes, delay, k)| {
+            let nic = sim.resource("nic", 12.5e9);
+            sim.flow(bytes, delay, &[nic, groups[k]])
+        })
+        .collect();
+    sim.advance(*gap); // closed-horizon region: splits at threads > 1
+    let trace = sim.op_trace();
+    let mid: Vec<f64> = ids.iter().map(|&f| trace[f.0].rate).collect();
+    for &(bytes, delay, a, b) in bridges {
+        // Distinct groups: a bridge spanning one group is not a merge.
+        let b = if a == b { (a + 1) % groups.len() } else { b };
+        let nic = sim.resource("nic", 12.5e9);
+        ids.push(sim.flow(bytes, delay, &[nic, groups[a], groups[b]]));
+    }
+    let times = sim.wait_each(&ids);
+    let trace = sim.op_trace();
+    let rates = ids.iter().map(|&f| trace[f.0].rate).collect();
+    (mid, times, rates)
+}
+
+#[test]
+fn prop_parallel_merge_heavy_matches_serial() {
+    check(cfg(60), gen_merge, |wl| {
+        let base = run_merge(wl, THREAD_SWEEP[0]);
+        THREAD_SWEEP[1..].iter().all(|&t| run_merge(wl, t) == base)
+    });
+}
+
+// ----------------------------------------------------------------------
+// Zoo sweep: real machine routes — leaf crossbars, uplinks, rails,
+// bridges, device channels — on every topology family.
+// ----------------------------------------------------------------------
+
+fn route_of(m: &mut Machine, src: usize, dst: usize, to_server: bool) -> Vec<ResId> {
+    if to_server {
+        let srv = &m.servers[dst % m.servers.len()];
+        let mut r = m.fabric.path(m.nodes[src].ep, srv.ep);
+        r.push(srv.device.write_res());
+        r
+    } else {
+        m.fabric.path(m.nodes[src].ep, m.nodes[dst].ep)
+    }
+}
+
+#[test]
+fn prop_parallel_zoo_machine_traffic_matches_serial_and_oracle() {
+    check_zoo(
+        cfg(40),
+        |g, spec| {
+            let nodes = spec.total_nodes();
+            let n = g.usize_in(1, 20);
+            g.vec(n, |g| {
+                (
+                    g.usize_in(0, nodes - 1),
+                    g.usize_in(0, nodes - 1),
+                    g.f64_in(1e5, 5e8),
+                    g.f64_in(0.0, 0.02),
+                    g.bool(),
+                )
+            })
+        },
+        |spec, traffic| {
+            let run = |threads: usize| -> (Vec<SimTime>, Vec<f64>) {
+                let mut m = Machine::build(spec.clone());
+                m.sim.set_threads(threads);
+                let ids: Vec<_> = traffic
+                    .iter()
+                    .map(|&(src, dst, bytes, delay, to_server)| {
+                        let route = route_of(&mut m, src, dst, to_server);
+                        m.sim.flow(bytes, delay, &route)
+                    })
+                    .collect();
+                let times = m.sim.wait_each(&ids);
+                let trace = m.sim.op_trace();
+                let rates = ids.iter().map(|&f| trace[f.0].rate).collect();
+                (times, rates)
+            };
+            let base = run(THREAD_SWEEP[0]);
+            // RefSim oracle over a resource-for-resource mirror.
+            let mut m = Machine::build(spec.clone());
+            let mut rsim = RefSim::new();
+            let mut mirror: BTreeMap<ResId, ResId> = BTreeMap::new();
+            let rids: Vec<_> = traffic
+                .iter()
+                .map(|&(src, dst, bytes, delay, to_server)| {
+                    let route = route_of(&mut m, src, dst, to_server);
+                    let rroute: Vec<ResId> = route
+                        .iter()
+                        .map(|&r| {
+                            *mirror
+                                .entry(r)
+                                .or_insert_with(|| rsim.resource(m.sim.capacity(r)))
+                        })
+                        .collect();
+                    rsim.flow(bytes, delay, &rroute)
+                })
+                .collect();
+            let tref = rsim.wait_each(&rids);
+            base.0.iter().zip(&tref).all(|(a, b)| close(*a, *b))
+                && THREAD_SWEEP[1..].iter().all(|&t| run(t) == base)
+        },
+    );
+}
