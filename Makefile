@@ -13,7 +13,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test lint fmt clippy doc figures bench bench-smoke bench-scale bench-threads bench-fleet bench-qos bench-zoo artifacts clean
+.PHONY: verify build test lint fmt clippy doc figures bench bench-smoke bench-scale bench-threads bench-fleet bench-qos bench-resilience bench-zoo artifacts clean
 
 verify: build test
 
@@ -77,6 +77,13 @@ bench-fleet: build
 bench-qos: build
 	$(CARGO) run --release --bin repro -- bench qos --csv --seed 1 --json BENCH_qos.json
 	@echo "wrote BENCH_qos.json"
+
+# Degraded-mode resilience exhibit (DESIGN.md §15): the same co-scheduled
+# mix under one correlated degrade-then-die fault schedule, reactive vs
+# proactive; refreshes the BENCH_resilience.json trajectory artifact.
+bench-resilience: build
+	$(CARGO) run --release --bin repro -- bench resilience --csv --seed 1 --json BENCH_resilience.json
+	@echo "wrote BENCH_resilience.json"
 
 # Topology-zoo variants of the qos and scale exhibits on the 2:1
 # oversubscribed fat-tree (DESIGN.md §13); artifacts are written next to

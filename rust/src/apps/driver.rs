@@ -120,7 +120,11 @@ pub struct JobExec {
     phase: Phase,
     iter: usize,
     last_cp_iter: usize,
-    pending_failure: Option<usize>,
+    /// Boundary-failure victims queued and not yet processed.  A queue,
+    /// not an `Option`: two failures scheduled at the same iteration both
+    /// land (one per boundary check — the caller re-enters after each
+    /// rollback), instead of the second being silently dropped.
+    pending_failures: Vec<usize>,
     last_check_time: SimTime,
     bound_at: SimTime,
     phase_t0: SimTime,
@@ -137,7 +141,7 @@ impl JobExec {
             phase: Phase::Ready,
             iter: 0,
             last_cp_iter: 0,
-            pending_failure: None,
+            pending_failures: Vec::new(),
             last_check_time: 0.0,
             bound_at: 0.0,
             phase_t0: 0.0,
@@ -282,7 +286,7 @@ impl JobExec {
             CkptBackendRef::None => {}
             CkptBackendRef::Scr(scr) => {
                 let pending = scr
-                    .checkpoint_begin(m, &self.nodes, bytes)
+                    .checkpoint_begin_iter(m, &self.nodes, bytes, self.iter)
                     .expect("checkpoint failed");
                 self.phase = Phase::Ckpt(pending);
             }
@@ -297,37 +301,44 @@ impl JobExec {
         }
     }
 
-    /// The boundary failure check of the historical driver, verbatim:
-    /// iteration-keyed failures first, then the earliest time-keyed
-    /// failure since the last boundary.  Returns true when a failure was
-    /// handled (the caller re-runs the boundary).
+    /// The boundary failure check of the historical driver: iteration-
+    /// keyed failures first, then the earliest time-keyed failure since
+    /// the last boundary.  Every failure scheduled for this iteration is
+    /// queued (co-scheduled same-iteration failures are no longer
+    /// dropped); one victim is processed per check and the caller
+    /// re-enters the boundary, so the rest drain on subsequent checks.
+    /// Returns true when a failure was handled.
     fn check_boundary_failure(&mut self, m: &mut Machine, backend: &mut CkptBackendRef) -> bool {
-        if let Some(f) = self.job.failures.failure_at_iteration(self.iter) {
-            if self.pending_failure.is_none()
-                && self.stats.failures_hit < self.job.failures.at_iterations.len()
-            {
-                self.pending_failure = Some(self.nodes[f.node % self.nodes.len()]);
+        if self.pending_failures.is_empty() {
+            for f in self.job.failures.failures_at_iteration(self.iter) {
+                // Cap total iteration-keyed hits at the plan length, so a
+                // rollback that re-crosses the failure iteration does not
+                // re-inject it.
+                if self.stats.failures_hit + self.pending_failures.len()
+                    < self.job.failures.at_iterations.len()
+                {
+                    self.pending_failures.push(self.nodes[f.node % self.nodes.len()]);
+                }
             }
         }
         let now = m.sim.now();
-        if self.pending_failure.is_none() {
+        if self.pending_failures.is_empty() {
             if let Some(f) = self
                 .job
                 .failures
                 .failures_between(self.last_check_time, now)
                 .first()
             {
-                self.pending_failure = Some(self.nodes[f.node % self.nodes.len()]);
+                self.pending_failures.push(self.nodes[f.node % self.nodes.len()]);
             }
         }
         self.last_check_time = now;
-        match self.pending_failure.take() {
-            Some(victim) => {
-                self.handle_failure(m, backend, victim);
-                true
-            }
-            None => false,
+        if self.pending_failures.is_empty() {
+            return false;
         }
+        let victim = self.pending_failures.remove(0);
+        self.handle_failure(m, backend, victim);
+        true
     }
 
     /// Kill `victim`, run PMD detection/isolation, restart from the
@@ -358,14 +369,25 @@ impl JobExec {
         match backend {
             CkptBackendRef::Multi(ml) => match ml.restart_detailed(m, &self.nodes, Some(victim)) {
                 // Roll back to the iteration of the level that served the
-                // restart — the deepest *settled* checkpoint.
-                Ok(outcome) => self.iter = outcome.iter,
+                // restart — the deepest *settled and verified* checkpoint.
+                Ok(outcome) => {
+                    self.iter = outcome.iter;
+                    self.last_cp_iter = outcome.iter;
+                }
                 // No level covers a lost node yet: full restart.
-                Err(_) => self.iter = 0,
+                Err(_) => {
+                    self.iter = 0;
+                    self.last_cp_iter = 0;
+                }
             },
             CkptBackendRef::Scr(scr) => match scr.restart(m, &self.nodes, Some(victim)) {
-                // Roll back to the last checkpointed iteration.
-                Ok(_) => self.iter = self.last_cp_iter,
+                // Roll back to the iteration of the record actually
+                // served — corruption can push this below the newest
+                // checkpoint taken.
+                Ok(r) => {
+                    self.iter = r.iter;
+                    self.last_cp_iter = r.iter;
+                }
                 // No usable checkpoint: full restart.
                 Err(_) => {
                     self.iter = 0;
@@ -382,6 +404,59 @@ impl JobExec {
         if !matches!(self.phase, Phase::Done) {
             self.phase = Phase::Ready;
         }
+    }
+
+    /// Proactive-migration step 1: take an off-cadence **blocking**
+    /// checkpoint at the current iteration, on the current (possibly
+    /// degraded) node set, before the scheduler evacuates the job.  Any
+    /// phase op in flight belongs to the abandoned attempt and is
+    /// cancelled first — its partial iteration is the (small) price of
+    /// migrating, versus losing a whole checkpoint interval to the kill
+    /// the precursor foreshadows.  No-op for unprotected jobs.
+    pub fn migrate_checkpoint(&mut self, m: &mut Machine, backend: &mut CkptBackendRef) {
+        assert!(!self.nodes.is_empty(), "migrate_checkpoint on an unbound job");
+        if self.is_done() {
+            return;
+        }
+        if let Some(op) = self.front_op() {
+            self.stats.flows_cancelled += m.sim.cancel_op(&op);
+        }
+        self.phase = Phase::Ready;
+        let bytes = self.job.profile.ckpt_bytes_per_node;
+        let taken = match backend {
+            CkptBackendRef::None => None,
+            CkptBackendRef::Scr(scr) => scr
+                .checkpoint_iter(m, &self.nodes, bytes, self.iter)
+                .ok()
+                .map(|r| r.blocked),
+            CkptBackendRef::Multi(ml) => {
+                ml.force_checkpoint(m, &self.nodes, bytes, self.iter).ok()
+            }
+        };
+        if let Some(blocked) = taken {
+            self.stats.ckpt_time += blocked;
+            self.stats.checkpoints_taken += 1;
+            self.last_cp_iter = self.iter;
+        }
+    }
+
+    /// Proactive-migration step 2: after the scheduler rebinds the job on
+    /// its new node set, charge the state-transfer cost — a full restart
+    /// read of the freshly taken checkpoint.  The iteration counter is
+    /// untouched: migration, unlike failure, loses no committed work.
+    pub fn migrate_restore(&mut self, m: &mut Machine, backend: &mut CkptBackendRef) {
+        assert!(!self.nodes.is_empty(), "migrate_restore on an unbound job");
+        let t0 = m.sim.now();
+        match backend {
+            CkptBackendRef::None => {}
+            CkptBackendRef::Scr(scr) => {
+                let _ = scr.restart(m, &self.nodes, None);
+            }
+            CkptBackendRef::Multi(ml) => {
+                let _ = ml.restart_detailed(m, &self.nodes, None);
+            }
+        }
+        self.stats.restart_time += m.sim.now() - t0;
     }
 
     /// Job-end bookkeeping: drain background flushes (multilevel), fill
@@ -645,6 +720,35 @@ mod tests {
         let stats = run_iterations(&mut m, &nodes, &job, Some(&mut scr));
         assert_eq!(stats.failures_hit, 1);
         // 12 before failure + (12-10)=2 re-run + 8 remaining = 22.
+        assert_eq!(stats.iterations_run, 22);
+        assert!(stats.restart_time > 0.0);
+    }
+
+    #[test]
+    fn two_same_iteration_failures_both_hit() {
+        // Regression: `failure_at_iteration` (singular) returned only the
+        // first match, so a second failure scheduled at the same iteration
+        // was silently dropped.  Both must now land: the first rolls the
+        // run back to the checkpoint, the boundary re-check drains the
+        // second from the queue before any iteration re-runs.
+        let mut m = machine();
+        let nodes: Vec<usize> = (0..4).collect();
+        let mut job = fig8_job(true, true);
+        job.iterations = 20;
+        job.cp_interval = 5;
+        job.failures = FailurePlan {
+            at_iterations: vec![
+                crate::system::failure::Failure { node: 1, at: 12.0 },
+                crate::system::failure::Failure { node: 2, at: 12.0 },
+            ],
+            at_times: Vec::new(),
+        };
+        let mut scr = Scr::new(Strategy::Buddy);
+        let stats = run_iterations(&mut m, &nodes, &job, Some(&mut scr));
+        assert_eq!(stats.failures_hit, 2, "both same-iteration failures must hit");
+        // 12 before the double failure + (12-10)=2 re-run + 8 remaining = 22:
+        // the second failure drains at the same boundary, before any
+        // re-execution, so no extra iterations are lost.
         assert_eq!(stats.iterations_run, 22);
         assert!(stats.restart_time > 0.0);
     }

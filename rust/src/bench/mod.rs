@@ -30,6 +30,7 @@ use crate::sim::{Op, ResId, Sim, TrafficClass};
 use crate::sionlib::{write_sionlib, write_task_local};
 use crate::storage::DeviceParams;
 use crate::system::failure::FailurePlan;
+use crate::system::faults::FaultPlan;
 use crate::system::{presets, zoo, Machine, MachineSpec, NodeKind};
 use crate::util::json::Json;
 
@@ -1193,6 +1194,193 @@ pub fn fleet_report(cfg: &FleetBenchConfig) -> (Vec<Exhibit>, Json) {
         ],
         json,
     )
+}
+
+// ----------------------------------------------------------------------
+// `repro bench resilience` — reactive vs proactive degraded-mode handling
+// (DESIGN.md section 15)
+// ----------------------------------------------------------------------
+
+/// Configuration of the resilience exhibit: one synthetic co-scheduled
+/// mix, one seeded correlated fault schedule, run under both resilience
+/// policies.
+#[derive(Debug, Clone)]
+pub struct ResilienceBenchConfig {
+    /// Synthetic jobs in the co-scheduled mix.
+    pub jobs: usize,
+    /// Fault events in the correlated schedule (degradation windows with
+    /// paired kills, plus standalone checkpoint corruptions).
+    pub faults: usize,
+    pub seed: u64,
+    /// Optional `system::zoo` topology name (flat DEEP-ER prototype by
+    /// default).
+    pub topology: Option<String>,
+}
+
+impl Default for ResilienceBenchConfig {
+    fn default() -> Self {
+        Self { jobs: 8, faults: 6, seed: DEFAULT_SEED, topology: None }
+    }
+}
+
+/// One policy's outcome under the shared fault schedule.
+#[derive(Debug)]
+pub struct ResiliencePoint {
+    pub policy: sched::ResiliencePolicy,
+    pub report: FleetReport,
+}
+
+/// Run the exhibit: a fault-free probe sizes the fault horizon (so the
+/// schedule lands *inside* the run, not after it), then the identical
+/// mix + identical correlated plan runs under reactive and proactive.
+/// Returns the probe makespan, the plan horizon, and both points.
+pub fn resilience_points(
+    cfg: &ResilienceBenchConfig,
+) -> (f64, f64, Vec<ResiliencePoint>) {
+    let run = |fleet_cfg: FleetConfig| {
+        let jobs = sched::synthetic_jobs(cfg.jobs, cfg.seed);
+        match resolve_topology(&cfg.topology) {
+            Some(mspec) => sched::run_fleet_on(mspec, jobs, fleet_cfg),
+            None => sched::run_fleet(jobs, fleet_cfg),
+        }
+        .expect("synthetic jobs fit the resilience machine")
+    };
+    let probe = run(FleetConfig { seed: cfg.seed, ..FleetConfig::default() });
+    let mspec = resolve_topology(&cfg.topology).unwrap_or_else(presets::deep_er);
+    let nodes = mspec.n_cluster + mspec.n_booster;
+    // 80 % of the healthy makespan: late-schedule faults still fire even
+    // though faults stretch the run they land in.
+    let horizon = probe.makespan * 0.8;
+    let plan = FaultPlan::correlated(nodes, cfg.faults, horizon, cfg.seed);
+    let points = sched::ResiliencePolicy::ALL
+        .iter()
+        .map(|&policy| ResiliencePoint {
+            policy,
+            report: run(FleetConfig {
+                seed: cfg.seed,
+                fault_plan: Some(plan.clone()),
+                resilience: policy,
+                ..FleetConfig::default()
+            }),
+        })
+        .collect();
+    (probe.makespan, horizon, points)
+}
+
+fn resilience_json(
+    cfg: &ResilienceBenchConfig,
+    probe_makespan: f64,
+    horizon: f64,
+    points: &[ResiliencePoint],
+) -> Json {
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("resilience".into()));
+    doc.insert("schema_version".into(), Json::Num(1.0));
+    doc.insert("seed".into(), Json::Num(cfg.seed as f64));
+    doc.insert("jobs".into(), Json::Num(cfg.jobs as f64));
+    doc.insert("faults".into(), Json::Num(cfg.faults as f64));
+    doc.insert(
+        "topology".into(),
+        resolve_topology(&cfg.topology)
+            .map(|s| Json::Str(s.topology.label()))
+            .unwrap_or(Json::Null),
+    );
+    doc.insert("healthy_makespan_s".into(), Json::Num(probe_makespan));
+    doc.insert("fault_horizon_s".into(), Json::Num(horizon));
+    doc.insert(
+        "points".into(),
+        Json::Arr(
+            points
+                .iter()
+                .map(|p| {
+                    let rs = p.report.resilience.as_ref().expect("fault plan was active");
+                    let requeues: usize = p.report.jobs.iter().map(|j| j.requeues).sum();
+                    let mut o = BTreeMap::new();
+                    o.insert("policy".into(), Json::Str(p.policy.name().into()));
+                    o.insert("makespan_s".into(), Json::Num(p.report.makespan));
+                    o.insert("utilization".into(), Json::Num(p.report.utilization));
+                    o.insert(
+                        "wasted_iterations".into(),
+                        Json::Num(rs.wasted_iterations as f64),
+                    );
+                    o.insert("migrations".into(), Json::Num(rs.migrations as f64));
+                    o.insert("requeues".into(), Json::Num(requeues as f64));
+                    o.insert(
+                        "failures_injected".into(),
+                        Json::Num(p.report.failures_injected as f64),
+                    );
+                    o.insert(
+                        "idle_failures".into(),
+                        Json::Num(p.report.idle_failures as f64),
+                    );
+                    o.insert("suspects".into(), Json::Num(rs.suspects as f64));
+                    o.insert("link_degrades".into(), Json::Num(rs.link_degrades as f64));
+                    o.insert("stragglers".into(), Json::Num(rs.stragglers as f64));
+                    o.insert("corruptions".into(), Json::Num(rs.corruptions as f64));
+                    o.insert("sim_events".into(), Json::Num(p.report.sim_events as f64));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    // Headline: the wasted-work saving of acting on precursors.
+    let wasted = |policy: sched::ResiliencePolicy| {
+        points
+            .iter()
+            .find(|p| p.policy == policy)
+            .and_then(|p| p.report.resilience.as_ref())
+            .map(|rs| rs.wasted_iterations as f64)
+    };
+    let headline = match (
+        wasted(sched::ResiliencePolicy::Reactive),
+        wasted(sched::ResiliencePolicy::Proactive),
+    ) {
+        (Some(r), Some(p)) => Json::Num(r - p),
+        _ => Json::Null,
+    };
+    doc.insert("proactive_wasted_iteration_saving".into(), headline);
+    Json::Obj(doc)
+}
+
+/// The `repro bench resilience` exhibit: the same co-scheduled mix under
+/// the same correlated degrade-then-die fault schedule, reactive vs
+/// proactive, reporting wasted work, migrations and makespan, and the
+/// `BENCH_resilience.json` document.
+pub fn resilience_report(cfg: &ResilienceBenchConfig) -> (Vec<Exhibit>, Json) {
+    let (probe_makespan, horizon, points) = resilience_points(cfg);
+    let json = resilience_json(cfg, probe_makespan, horizon, &points);
+
+    let mut t = KvTable::new(
+        "Resilience: reactive vs proactive under one correlated fault schedule",
+    );
+    t.row(
+        "scenario",
+        format!(
+            "{} jobs, {} faults over {} (healthy makespan {})",
+            cfg.jobs,
+            cfg.faults,
+            fmt_time(horizon),
+            fmt_time(probe_makespan)
+        ),
+    );
+    for p in &points {
+        let rs = p.report.resilience.as_ref().expect("fault plan was active");
+        let requeues: usize = p.report.jobs.iter().map(|j| j.requeues).sum();
+        t.row(
+            p.policy.name(),
+            format!(
+                "{} makespan, {} wasted iterations, {} migrations, {} requeues, {} kills landed ({} idle), {} suspects",
+                fmt_time(p.report.makespan),
+                rs.wasted_iterations,
+                rs.migrations,
+                requeues,
+                p.report.failures_injected,
+                p.report.idle_failures,
+                rs.suspects
+            ),
+        );
+    }
+    (vec![Exhibit::Table(t)], json)
 }
 
 // ----------------------------------------------------------------------

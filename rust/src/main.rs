@@ -19,6 +19,7 @@ use deeper::sched::{self, FleetConfig, Policy};
 use deeper::scr::multilevel::{MultiLevelConfig, MultiLevelScr};
 use deeper::scr::{Scr, Strategy};
 use deeper::system::failure::FailurePlan;
+use deeper::system::faults::FaultPlan;
 use deeper::system::{presets, zoo, Machine, NodeKind};
 use deeper::util::cli::Args;
 use deeper::util::json::Json;
@@ -37,9 +38,12 @@ USAGE:
             [--iterations N] [--cp-interval N] [--fail-at I] [--mtbf S] [--seed N]
             [--nodes N] [--multilevel] [--async-flush] [--topology NAME] [--threads N]
   repro fleet [--jobs N] [--policy fcfs|backfill] [--seed S] [--mtbf S]
-              [--qos] [--topology NAME] [--threads N] [--json PATH]
+              [--qos] [--faults N] [--resilience reactive|proactive]
+              [--topology NAME] [--threads N] [--json PATH]
   repro bench fleet [--sweep N1,N2,..] [--mtbf S] [--topology NAME]
                     [--json PATH] [--csv] [--seed N]
+  repro bench resilience [--jobs N] [--faults N] [--topology NAME]
+                         [--json PATH] [--csv] [--seed N]
   repro split [--iterations N]          (Cluster-Booster division of labour)
   repro e2e [--artifacts DIR]
 
@@ -69,6 +73,18 @@ USAGE:
   --qos on `repro fleet` enables admission control: jobs' declared
   exchange guarantees are admitted against a fabric-core budget at
   dispatch and installed as rate floors while they run.
+
+  --faults N injects a seeded *correlated* degraded-mode schedule
+  (DESIGN.md section 15): link degradations and straggler windows that
+  end in a fail-stop kill of the same node, plus standalone checkpoint
+  corruptions.  --resilience picks how the fleet responds: `reactive`
+  (default) waits for the kill and rolls back to the last verified
+  checkpoint; `proactive` treats degradations as precursors — a
+  health monitor raises per-node suspicion, suspect jobs are
+  preemptively checkpointed and migrated to healthy spares, and new
+  placements avoid suspects.  bench resilience runs the same mix under
+  the same schedule with both policies and writes BENCH_resilience.json
+  (wasted work, migrations, makespan, per-mode fault counts).
 
   --topology NAME selects a machine from the topology zoo (DESIGN.md
   section 13) instead of the flat DEEP-ER prototype fabric.  Names are
@@ -251,6 +267,27 @@ fn cmd_bench_fleet(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_bench_resilience(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
+    let defaults = bench::ResilienceBenchConfig::default();
+    let cfg = bench::ResilienceBenchConfig {
+        jobs: args.get_parsed::<usize>("jobs")?.unwrap_or(defaults.jobs),
+        faults: args.get_parsed::<usize>("faults")?.unwrap_or(defaults.faults),
+        seed,
+        topology: parse_topology(args)?,
+    };
+    anyhow::ensure!(cfg.jobs > 0, "--jobs must be positive");
+    anyhow::ensure!(cfg.faults > 0, "--faults must be positive");
+    let (exhibits, json) = bench::resilience_report(&cfg);
+    for e in exhibits {
+        println!("{}", if csv { e.render_csv() } else { e.render() });
+    }
+    let path = args.get_str("json", "BENCH_resilience.json");
+    std::fs::write(path, json.to_pretty_string())
+        .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+    println!("{}wrote {path}", if csv { "# " } else { "" });
+    Ok(())
+}
+
 fn cmd_bench_qos(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
     let defaults = bench::QosBenchConfig::default();
     let cfg = bench::QosBenchConfig {
@@ -291,6 +328,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     if name == "qos" {
         return cmd_bench_qos(args, csv, seed);
     }
+    if name == "resilience" {
+        return cmd_bench_resilience(args, csv, seed);
+    }
     if name == "all" {
         for n in bench::names() {
             println!("--- {n} ---");
@@ -300,7 +340,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     }
     print_exhibits(name, csv, seed).ok_or_else(|| {
         anyhow::anyhow!(
-            "unknown exhibit {name}; try fig3..fig10, fig8-async, table1..table3, cb-split, scale, fleet, qos, all"
+            "unknown exhibit {name}; try fig3..fig10, fig8-async, table1..table3, cb-split, scale, fleet, qos, resilience, all"
         )
     })?;
     Ok(())
@@ -313,19 +353,39 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     let seed = args.get_u64("seed", bench::DEFAULT_SEED);
     let mtbf = args.get_parsed::<f64>("mtbf")?;
     let qos = args.has("qos");
-    let cfg = FleetConfig {
+    let resilience = sched::ResiliencePolicy::parse(args.get_str("resilience", "reactive"))?;
+    let threads = parse_threads(args)?;
+    let topo = parse_topology(args)?;
+    let mspec = || -> anyhow::Result<deeper::system::MachineSpec> {
+        Ok(match &topo {
+            Some(name) => zoo::by_name(name)?,
+            None => presets::deep_er(),
+        })
+    };
+    let mk_cfg = |fault_plan| FleetConfig {
         policy,
         seed,
         mtbf_node: mtbf,
         qos,
-        threads: parse_threads(args)?,
+        threads,
+        fault_plan,
+        resilience,
         ..FleetConfig::default()
     };
-    let jobs = sched::synthetic_jobs(n, seed);
-    let report = match parse_topology(args)? {
-        Some(name) => sched::run_fleet_on(zoo::by_name(&name)?, jobs, cfg)?,
-        None => sched::run_fleet(jobs, cfg)?,
+    // --faults: a fault-free probe run sizes the correlated schedule's
+    // horizon so the degradation windows land inside the fleet's actual
+    // runtime (mirrors `repro bench resilience`).
+    let fault_plan = match args.get_parsed::<usize>("faults")? {
+        Some(k) => {
+            anyhow::ensure!(k > 0, "--faults must be positive");
+            let spec = mspec()?;
+            let nodes = spec.n_cluster + spec.n_booster;
+            let probe = sched::run_fleet_on(spec, sched::synthetic_jobs(n, seed), mk_cfg(None))?;
+            Some(FaultPlan::correlated(nodes, k, probe.makespan * 0.8, seed))
+        }
+        None => None,
     };
+    let report = sched::run_fleet_on(mspec()?, sched::synthetic_jobs(n, seed), mk_cfg(fault_plan))?;
 
     println!(
         "fleet         : {} jobs, policy {}, topology {}, seed {seed}{}{}",
@@ -366,6 +426,16 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         report.failures_injected, report.idle_failures
     );
     println!("cancelled     : {} in-flight flows at kill time", report.flows_cancelled);
+    if let Some(rs) = &report.resilience {
+        println!(
+            "resilience    : {} policy, {} migrations, {} wasted iterations, {} suspects",
+            rs.policy, rs.migrations, rs.wasted_iterations, rs.suspects
+        );
+        println!(
+            "faults applied: {} link degrades, {} stragglers, {} corruptions",
+            rs.link_degrades, rs.stragglers, rs.corruptions
+        );
+    }
     println!("finish order  : {:?}", report.finish_order);
     println!("sim events    : {}", report.sim_events);
     if let Some(path) = args.flag("json") {

@@ -1,0 +1,132 @@
+//! Fleet health monitoring and the resilience policy axis (DESIGN.md §15).
+//!
+//! The degraded-mode taxonomy ([`crate::system::faults`]) gives the
+//! scheduler something fail-stop failures never did: *warning*.  A link
+//! that dims or a node that straggles is, in the correlated fault model,
+//! a precursor to a kill.  The [`HealthMonitor`] turns those precursors
+//! into per-node **suspicion** scores; once a node crosses the threshold
+//! it is a *suspect*, and under [`ResiliencePolicy::Proactive`] the
+//! scheduler (a) preemptively checkpoints and migrates the job running on
+//! it, and (b) steers new allocations away from it.  Under
+//! [`ResiliencePolicy::Reactive`] the monitor still watches (the counters
+//! feed the bench exhibit) but the scheduler waits for the kill and pays
+//! the rollback — the DEEP-ER baseline.
+//!
+//! Suspicion is **sticky**: the correlated model has no rehabilitation
+//! signal, so a node that degraded once stays suspect.  That is the
+//! conservative choice for a spare-capacity machine; a decay model is a
+//! straightforward extension once the fault model earns one.
+
+use crate::system::faults::FaultKind;
+
+/// How the fleet responds to degraded-mode precursors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResiliencePolicy {
+    /// DEEP-ER baseline: wait for the kill, roll back to the last
+    /// verified checkpoint, requeue.
+    Reactive,
+    /// Health-triggered: on suspicion, preemptively checkpoint the
+    /// afflicted job, migrate it to healthy nodes, and avoid suspects in
+    /// future placements.
+    Proactive,
+}
+
+impl ResiliencePolicy {
+    pub const ALL: [ResiliencePolicy; 2] =
+        [ResiliencePolicy::Reactive, ResiliencePolicy::Proactive];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ResiliencePolicy::Reactive => "reactive",
+            ResiliencePolicy::Proactive => "proactive",
+        }
+    }
+
+    /// Parse a CLI spelling (`--resilience reactive|proactive`).
+    pub fn parse(s: &str) -> crate::Result<ResiliencePolicy> {
+        Ok(match s {
+            "reactive" => ResiliencePolicy::Reactive,
+            "proactive" => ResiliencePolicy::Proactive,
+            other => anyhow::bail!("unknown resilience policy {other}; try reactive or proactive"),
+        })
+    }
+}
+
+/// Per-node suspicion accumulator.
+#[derive(Debug, Clone)]
+pub struct HealthMonitor {
+    suspicion: Vec<f64>,
+    threshold: f64,
+}
+
+impl HealthMonitor {
+    /// Default suspicion threshold: one strong precursor (degradation) or
+    /// two weak ones (corruptions) make a node suspect.
+    pub const DEFAULT_THRESHOLD: f64 = 1.0;
+
+    pub fn new(nodes: usize) -> Self {
+        Self { suspicion: vec![0.0; nodes], threshold: Self::DEFAULT_THRESHOLD }
+    }
+
+    /// Record a precursor on `node`; returns whether the node is (now)
+    /// suspect.
+    pub fn observe(&mut self, node: usize, kind: &FaultKind) -> bool {
+        self.suspicion[node] += kind.suspicion_weight();
+        self.is_suspect(node)
+    }
+
+    pub fn is_suspect(&self, node: usize) -> bool {
+        self.suspicion[node] >= self.threshold
+    }
+
+    /// All currently suspect nodes, ascending — the allocation avoid-list.
+    pub fn suspects(&self) -> Vec<usize> {
+        (0..self.suspicion.len()).filter(|&i| self.is_suspect(i)).collect()
+    }
+
+    /// Number of suspect nodes (report/bench counter).
+    pub fn suspect_count(&self) -> usize {
+        self.suspicion.iter().filter(|&&s| s >= self.threshold).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in ResiliencePolicy::ALL {
+            assert_eq!(ResiliencePolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(ResiliencePolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn strong_precursor_makes_node_suspect_immediately() {
+        let mut h = HealthMonitor::new(4);
+        assert!(!h.is_suspect(2));
+        assert!(h.observe(2, &FaultKind::Straggler { factor: 4.0 }));
+        assert!(h.is_suspect(2));
+        assert_eq!(h.suspects(), vec![2]);
+        assert_eq!(h.suspect_count(), 1);
+    }
+
+    #[test]
+    fn weak_precursors_accumulate() {
+        let mut h = HealthMonitor::new(4);
+        assert!(!h.observe(1, &FaultKind::CkptCorrupt), "0.5 < threshold");
+        assert!(h.observe(1, &FaultKind::CkptCorrupt), "1.0 reaches threshold");
+        // Sticky: no rehabilitation.
+        assert!(h.is_suspect(1));
+        assert_eq!(h.suspects(), vec![1]);
+    }
+
+    #[test]
+    fn suspects_listed_ascending() {
+        let mut h = HealthMonitor::new(8);
+        h.observe(5, &FaultKind::LinkDegrade { fraction: 0.2 });
+        h.observe(3, &FaultKind::Straggler { factor: 2.0 });
+        assert_eq!(h.suspects(), vec![3, 5]);
+    }
+}

@@ -28,6 +28,7 @@
 //!
 //! [`Sim::step_event`]: crate::sim::Sim::step_event
 
+pub mod health;
 pub mod policy;
 
 use std::collections::BTreeMap;
@@ -40,9 +41,12 @@ use crate::scr::{Scr, Strategy};
 use crate::sim::rng::SplitMix64;
 use crate::sim::{ResId, SimTime, TrafficClass};
 use crate::system::failure::{Failure, FailurePlan};
+use crate::system::faults::{Fault, FaultEvent, FaultKind, FaultPlan};
 use crate::system::{presets, Machine, MachineSpec, NodeKind, NodeSpec};
 use crate::util::json::Json;
+use self::health::HealthMonitor;
 use self::policy::{NodeReq, QueuedReq, RunningRes};
+pub use self::health::ResiliencePolicy;
 pub use self::policy::Policy;
 
 /// How a fleet job protects itself against failures.
@@ -235,6 +239,9 @@ struct JobState {
     open_seg: Option<usize>,
     /// Holds an admitted QoS grant (floors installed in the engine).
     granted: bool,
+    /// Evacuated by a proactive migration: the next bind must charge the
+    /// state-transfer restore before the job resumes.
+    migrated: bool,
 }
 
 /// One contiguous interval during which a job held a concrete node set —
@@ -277,6 +284,14 @@ pub struct FleetConfig {
     /// section 14).  1 keeps the engine bit-identical to the
     /// pre-partition behavior.
     pub threads: usize,
+    /// Degraded-mode fault schedule ([`crate::system::faults`]): link
+    /// degradations, stragglers and checkpoint corruption, with the
+    /// correlated fail-stop kills merged into the failure stream.  None
+    /// keeps the fleet byte-identical to the taxonomy-free scheduler.
+    pub fault_plan: Option<FaultPlan>,
+    /// How the fleet responds to degraded-mode precursors
+    /// ([`health::ResiliencePolicy`]); irrelevant without a fault plan.
+    pub resilience: ResiliencePolicy,
 }
 
 /// Fraction of the backplane capacity grantable as QoS floors under
@@ -294,8 +309,31 @@ impl Default for FleetConfig {
             failure_plan: None,
             qos: false,
             threads: 1,
+            fault_plan: None,
+            resilience: ResiliencePolicy::Reactive,
         }
     }
+}
+
+/// Degraded-mode outcome of a fleet run; present only when a fault plan
+/// was active (so no-fault reports stay byte-identical to the
+/// taxonomy-free scheduler's).
+#[derive(Debug, Clone)]
+pub struct ResilienceSummary {
+    /// Active [`ResiliencePolicy`] name.
+    pub policy: &'static str,
+    /// Proactive evacuations performed (checkpoint + re-dispatch).
+    pub migrations: usize,
+    /// Iterations re-executed after rollbacks, summed over all jobs —
+    /// the wasted-work metric the reactive/proactive comparison is about.
+    pub wasted_iterations: usize,
+    /// Nodes over the suspicion threshold at the end of the run.
+    pub suspects: usize,
+    /// Per-mode counts of faults actually applied before the fleet
+    /// drained (scheduled faults past the makespan never fire).
+    pub link_degrades: usize,
+    pub stragglers: usize,
+    pub corruptions: usize,
 }
 
 /// Per-job outcome in the fleet report.
@@ -346,6 +384,8 @@ pub struct FleetReport {
     /// Canonical label of the machine's fabric topology (`"flat"` for the
     /// prototype presets; a zoo name like `"split:8,16"` otherwise).
     pub topology: String,
+    /// Degraded-mode outcome; Some only when a fault plan was active.
+    pub resilience: Option<ResilienceSummary>,
 }
 
 impl FleetReport {
@@ -371,6 +411,17 @@ impl FleetReport {
         doc.insert("qos".into(), Json::Bool(self.qos));
         doc.insert("flows_cancelled".into(), Json::Num(self.flows_cancelled as f64));
         doc.insert("topology".into(), Json::Str(self.topology.clone()));
+        if let Some(rs) = &self.resilience {
+            let mut o = BTreeMap::new();
+            o.insert("policy".into(), Json::Str(rs.policy.into()));
+            o.insert("migrations".into(), Json::Num(rs.migrations as f64));
+            o.insert("wasted_iterations".into(), Json::Num(rs.wasted_iterations as f64));
+            o.insert("suspects".into(), Json::Num(rs.suspects as f64));
+            o.insert("link_degrades".into(), Json::Num(rs.link_degrades as f64));
+            o.insert("stragglers".into(), Json::Num(rs.stragglers as f64));
+            o.insert("corruptions".into(), Json::Num(rs.corruptions as f64));
+            doc.insert("resilience".into(), Json::Obj(o));
+        }
         doc.insert(
             "finish_order".into(),
             Json::Arr(self.finish_order.iter().map(|&i| Json::Num(i as f64)).collect()),
@@ -439,6 +490,17 @@ pub struct Scheduler {
     /// QoS admission ledger (present when [`FleetConfig::qos`]); grants
     /// are charged at dispatch and refunded on completion/requeue.
     qos_policy: Option<qos::Policy>,
+    /// Degraded-mode faults and their time-sorted apply/revert events
+    /// (the cursor mirrors `next_failure`); empty without a fault plan.
+    faults: Vec<Fault>,
+    fault_events: Vec<FaultEvent>,
+    next_fault: usize,
+    /// Per-node suspicion accumulated from applied precursors.
+    health: HealthMonitor,
+    migrations: usize,
+    link_degrades_applied: usize,
+    stragglers_applied: usize,
+    corruptions_applied: usize,
 }
 
 impl Scheduler {
@@ -450,6 +512,15 @@ impl Scheduler {
                     .at_times
             }
             (None, None) => Vec::new(),
+        };
+        // The degraded-mode plan's correlated kills join the ordinary
+        // failure stream — a kill is a kill, whatever foreshadowed it.
+        let (faults, fault_events) = match &cfg.fault_plan {
+            Some(plan) => {
+                failures.extend(plan.kills.iter().copied());
+                (plan.faults.clone(), plan.timeline())
+            }
+            None => (Vec::new(), Vec::new()),
         };
         // The cursor in process_due_failures assumes time order (the
         // exponential sampler already is; explicit test plans may not be).
@@ -464,6 +535,7 @@ impl Scheduler {
             }
             p
         });
+        let health = HealthMonitor::new(m.nodes.len());
         Self {
             m,
             cfg,
@@ -476,6 +548,14 @@ impl Scheduler {
             finish_order: Vec::new(),
             allocations: Vec::new(),
             qos_policy,
+            faults,
+            fault_events,
+            next_fault: 0,
+            health,
+            migrations: 0,
+            link_degrades_applied: 0,
+            stragglers_applied: 0,
+            corruptions_applied: 0,
         }
     }
 
@@ -563,6 +643,7 @@ impl Scheduler {
             node_seconds: 0.0,
             open_seg: None,
             granted: false,
+            migrated: false,
         });
         self.queue.push(id);
         Ok(id)
@@ -574,6 +655,10 @@ impl Scheduler {
         let events0 = self.m.sim.events();
         self.dispatch();
         loop {
+            // Precursors before kills: a degradation landing in the same
+            // event gap as its correlated kill must be observed first —
+            // that ordering is what gives the proactive policy its window.
+            self.process_due_faults();
             self.process_due_failures();
             // The running job whose front op completed earliest (ties by
             // job id) gets control; jobs at a boundary count as ready now.
@@ -727,6 +812,90 @@ impl Scheduler {
         }
     }
 
+    /// Apply every degraded-mode fault event the clock has passed: link
+    /// and compute degradations rescale the victim node's resource
+    /// capacities in place (and revert at window end); checkpoint
+    /// corruption flips the owning job's newest verified record, so its
+    /// next restart falls back a level/record deeper.  Every applied
+    /// precursor feeds the health monitor; under
+    /// [`ResiliencePolicy::Proactive`] a node crossing the suspicion
+    /// threshold triggers preemptive checkpoint + migration of the job
+    /// running on it.
+    fn process_due_faults(&mut self) {
+        while self.next_fault < self.fault_events.len() {
+            let ev = self.fault_events[self.next_fault];
+            if ev.at > self.m.sim.now() {
+                break;
+            }
+            self.next_fault += 1;
+            let f = self.faults[ev.fault];
+            let victim = f.node % self.m.nodes.len();
+            if !ev.apply {
+                match f.kind {
+                    FaultKind::LinkDegrade { .. } => self.m.set_node_link_scale(victim, 1.0),
+                    FaultKind::Straggler { .. } => self.m.set_node_compute_scale(victim, 1.0),
+                    FaultKind::CkptCorrupt => {}
+                }
+                continue;
+            }
+            match f.kind {
+                FaultKind::LinkDegrade { fraction } => {
+                    self.m.set_node_link_scale(victim, fraction);
+                    self.link_degrades_applied += 1;
+                }
+                FaultKind::Straggler { factor } => {
+                    self.m.set_node_compute_scale(victim, 1.0 / factor);
+                    self.stragglers_applied += 1;
+                }
+                FaultKind::CkptCorrupt => {
+                    self.corruptions_applied += 1;
+                    if let Some(owner) = self.m.node_owner(victim) {
+                        match &mut self.jobs[owner as usize].backend {
+                            CkptBackend::Scr(s) => {
+                                s.corrupt_latest();
+                            }
+                            CkptBackend::Multi(ml) => {
+                                ml.corrupt_latest();
+                            }
+                            CkptBackend::None => {}
+                        }
+                    }
+                }
+            }
+            let suspect = self.health.observe(victim, &f.kind);
+            if suspect && self.cfg.resilience == ResiliencePolicy::Proactive {
+                self.try_migrate(victim);
+            }
+        }
+    }
+
+    /// Evacuate the job running on a suspect node: take a preemptive
+    /// blocking checkpoint on the (degraded) current nodes, then release
+    /// and immediately re-dispatch — the proactive allocator avoids
+    /// suspects, so the job lands on healthy spares whenever any exist.
+    /// The rebind charges a restart read (state transfer); the iteration
+    /// counter is untouched, so a migration wastes at most the partial
+    /// iteration that was in flight — versus the up-to-a-full-checkpoint-
+    /// interval a reactive rollback loses to the correlated kill.
+    fn try_migrate(&mut self, suspect: usize) {
+        let Some(owner) = self.m.node_owner(suspect) else {
+            return;
+        };
+        let id = owner as usize;
+        if self.jobs[id].status != JobStatus::Running {
+            return;
+        }
+        {
+            let job = &mut self.jobs[id];
+            job.migrated = true;
+            let JobState { exec, backend, .. } = job;
+            let mut bref = backend.as_backend_ref();
+            exec.migrate_checkpoint(&mut self.m, &mut bref);
+        }
+        self.migrations += 1;
+        self.requeue(id);
+    }
+
     fn requeue(&mut self, id: usize) {
         let now = self.m.sim.now();
         let (held, seg) = {
@@ -827,11 +996,11 @@ impl Scheduler {
             return StartResult::NoGrant; // budget exhausted; stays queued
         }
         let (c, b) = (self.jobs[id].spec.cluster_nodes, self.jobs[id].spec.booster_nodes);
-        let Some(mut nodes) = self.m.try_allocate(NodeKind::Cluster, c, id as u64) else {
+        let Some(mut nodes) = self.allocate(NodeKind::Cluster, c, id) else {
             self.release_grant(id);
             return StartResult::NoNodes;
         };
-        match self.m.try_allocate(NodeKind::Booster, b, id as u64) {
+        match self.allocate(NodeKind::Booster, b, id) {
             Some(more) => nodes.extend(more),
             None => {
                 self.m.release_nodes(&nodes, id as u64);
@@ -858,8 +1027,32 @@ impl Scheduler {
         job.held = nodes;
         job.status = JobStatus::Running;
         job.open_seg = Some(seg);
+        if job.migrated {
+            // Landed after a proactive evacuation: charge the
+            // state-transfer restore on the new node set before resuming.
+            job.migrated = false;
+            let JobState { exec, backend, .. } = job;
+            let mut bref = backend.as_backend_ref();
+            exec.migrate_restore(&mut self.m, &mut bref);
+        }
         self.queue.retain(|&q| q != id);
         StartResult::Started
+    }
+
+    /// Node allocation behind [`Scheduler::start_job`]: plain
+    /// lowest-index-first, except under the proactive policy with suspects
+    /// on record, where healthy free nodes are preferred
+    /// ([`Machine::try_allocate_avoiding`]).  The no-suspect path calls
+    /// [`Machine::try_allocate`] verbatim, keeping fault-free runs
+    /// bit-identical to the taxonomy-free scheduler.
+    fn allocate(&mut self, kind: NodeKind, count: usize, id: usize) -> Option<Vec<usize>> {
+        if self.cfg.resilience == ResiliencePolicy::Proactive {
+            let avoid = self.health.suspects();
+            if !avoid.is_empty() {
+                return self.m.try_allocate_avoiding(kind, count, id as u64, &avoid);
+            }
+        }
+        self.m.try_allocate(kind, count, id as u64)
     }
 
     fn into_report(self, t0: SimTime, events0: u64) -> FleetReport {
@@ -874,6 +1067,22 @@ impl Scheduler {
         let n_jobs = self.jobs.len().max(1) as f64;
         let avg_wait = self.jobs.iter().map(|j| j.wait_time).sum::<f64>() / n_jobs;
         let flows_cancelled = self.jobs.iter().map(|j| j.exec.stats.flows_cancelled).sum();
+        // Wasted work: every iteration executed beyond the job's target
+        // was a re-execution forced by a rollback.
+        let wasted_iterations: usize = self
+            .jobs
+            .iter()
+            .map(|j| j.exec.stats.iterations_run.saturating_sub(j.spec.iterations))
+            .sum();
+        let resilience = self.cfg.fault_plan.as_ref().map(|_| ResilienceSummary {
+            policy: self.cfg.resilience.name(),
+            migrations: self.migrations,
+            wasted_iterations,
+            suspects: self.health.suspect_count(),
+            link_degrades: self.link_degrades_applied,
+            stragglers: self.stragglers_applied,
+            corruptions: self.corruptions_applied,
+        });
         let jobs = self
             .jobs
             .iter()
@@ -910,6 +1119,7 @@ impl Scheduler {
             allocations: self.allocations,
             qos: self.cfg.qos,
             flows_cancelled,
+            resilience,
         }
     }
 }

@@ -98,6 +98,14 @@ pub struct CkptRecord {
     pub bytes_per_node: f64,
     pub nodes: Vec<usize>,
     pub taken_at: SimTime,
+    /// Application iteration this checkpoint snapshots (the roll-back
+    /// target restart reports).
+    pub iter: usize,
+    /// CRC-style verification failed (storage-side corruption injection,
+    /// DESIGN.md §15): the record stays in the database — SCR only learns
+    /// a checkpoint is bad when restart *verifies* it — but
+    /// [`Scr::latest_usable`] will never serve it.
+    pub corrupted: bool,
     /// Which NAM board holds the parity (NamXor only).
     pub nam_index: Option<usize>,
 }
@@ -119,6 +127,10 @@ pub struct RestartReport {
     pub time: SimTime,
     /// True when data for the failed node had to be reconstructed.
     pub rebuilt: bool,
+    /// Iteration of the checkpoint actually served — when corruption
+    /// forces a fall-back to an older record, this is older than the
+    /// newest checkpoint taken.
+    pub iter: usize,
 }
 
 /// A checkpoint that has been **issued but not yet sealed**: its flows are
@@ -186,12 +198,31 @@ impl Scr {
         &self.db
     }
 
-    /// Latest checkpoint usable after losing `failed` (None = none usable).
+    /// Latest *verified* checkpoint usable after losing `failed` (None =
+    /// none usable).  Records that failed CRC verification are skipped —
+    /// restart falls back to the deepest verified one, never a corrupted
+    /// one.
     pub fn latest_usable(&self, failed: Option<usize>) -> Option<&CkptRecord> {
-        self.db.iter().rev().find(|r| match failed {
-            None => true,
-            Some(_) => r.strategy.survives_node_loss(),
+        self.db.iter().rev().find(|r| {
+            !r.corrupted
+                && match failed {
+                    None => true,
+                    Some(_) => r.strategy.survives_node_loss(),
+                }
         })
+    }
+
+    /// Corruption injection: the newest still-verified checkpoint fails
+    /// its CRC.  Repeated calls walk backwards through the database one
+    /// record at a time; returns `false` once nothing verified remains.
+    pub fn corrupt_latest(&mut self) -> bool {
+        match self.db.iter_mut().rev().find(|r| !r.corrupted) {
+            Some(r) => {
+                r.corrupted = true;
+                true
+            }
+            None => false,
+        }
     }
 
     /// Issue a checkpoint of `bytes_per_node` on `nodes` **without
@@ -209,6 +240,19 @@ impl Scr {
         m: &mut Machine,
         nodes: &[usize],
         bytes_per_node: f64,
+    ) -> crate::Result<PendingCkpt> {
+        self.checkpoint_begin_iter(m, nodes, bytes_per_node, 0)
+    }
+
+    /// [`Scr::checkpoint_begin`] with the application iteration stamped
+    /// into the record, so restart can report the exact roll-back target
+    /// even after corruption forces a fall-back to an older checkpoint.
+    pub fn checkpoint_begin_iter(
+        &mut self,
+        m: &mut Machine,
+        nodes: &[usize],
+        bytes_per_node: f64,
+        iter: usize,
     ) -> crate::Result<PendingCkpt> {
         assert!(!nodes.is_empty());
         let issued_at = m.sim.now();
@@ -237,6 +281,8 @@ impl Scr {
             bytes_per_node,
             nodes: nodes.to_vec(),
             taken_at: f64::INFINITY, // filled in at commit
+            iter,
+            corrupted: false,
             nam_index,
         };
         self.next_id += 1;
@@ -287,6 +333,19 @@ impl Scr {
         Ok(self.checkpoint_finish(m, pending))
     }
 
+    /// Blocking checkpoint with the iteration stamped into the record
+    /// (see [`Scr::checkpoint_begin_iter`]).
+    pub fn checkpoint_iter(
+        &mut self,
+        m: &mut Machine,
+        nodes: &[usize],
+        bytes_per_node: f64,
+        iter: usize,
+    ) -> crate::Result<CkptReport> {
+        let pending = self.checkpoint_begin_iter(m, nodes, bytes_per_node, iter)?;
+        Ok(self.checkpoint_finish(m, pending))
+    }
+
     /// Restart after `failed_node` died (replacement node = same index,
     /// revived by the caller).  Reads back the newest usable checkpoint.
     pub fn restart(
@@ -329,7 +388,7 @@ impl Scr {
                 self.xor_rebuild(m, nodes, f, rec.bytes_per_node, rec.nam_index)
             }
         };
-        Ok(RestartReport { time: end - t0, rebuilt: failed_node.is_some() })
+        Ok(RestartReport { time: end - t0, rebuilt: failed_node.is_some(), iter: rec.iter })
     }
 
     // ------------------------------------------------------------------
@@ -753,6 +812,26 @@ mod tests {
             assert!(r.rebuilt, "{strat:?}");
             assert!(r.time > 0.0, "{strat:?}");
         }
+    }
+
+    #[test]
+    fn corrupted_checkpoint_falls_back_to_previous_verified() {
+        let mut m = machine();
+        let nodes = cluster_nodes(&m);
+        let mut scr = Scr::new(Strategy::Buddy);
+        scr.checkpoint_iter(&mut m, &nodes, 1e9, 10).unwrap();
+        scr.checkpoint_iter(&mut m, &nodes, 1e9, 20).unwrap();
+        assert_eq!(scr.latest_usable(None).unwrap().iter, 20);
+        assert!(scr.corrupt_latest());
+        // Restart skips the corrupted iter-20 record and serves iter 10.
+        assert_eq!(scr.latest_usable(None).unwrap().iter, 10);
+        let r = scr.restart(&mut m, &nodes, Some(nodes[2])).unwrap();
+        assert_eq!(r.iter, 10);
+        // Corrupt the remaining record: nothing verified is left.
+        assert!(scr.corrupt_latest(), "walks back to the iter-10 record");
+        assert!(!scr.corrupt_latest(), "database exhausted");
+        assert!(scr.latest_usable(None).is_none());
+        assert!(scr.restart(&mut m, &nodes, None).is_err());
     }
 
     #[test]

@@ -183,11 +183,15 @@ pub struct MultiLevelScr {
     pub stats: LevelStats,
     l1_since_l2: usize,
     l2_since_l3: usize,
-    /// Iteration of the latest L1 / deepest settled L2 / flushed L3
-    /// checkpoint (roll-back targets per level).
-    last_l1_iter: usize,
-    settled_l2_iter: usize,
+    /// Iteration of the last flushed L3 checkpoint (its roll-back
+    /// target).  L1/L2 roll-back targets come from the per-record `iter`
+    /// stamps instead — corruption can force a fall-back to an *older*
+    /// record than a newest-iter tracker would point at.
     l3_iter: usize,
+    /// The global (L3) copy failed verification — restart must not trust
+    /// the parallel file system either (DAOS-style detectable storage
+    /// corruption).
+    l3_corrupted: bool,
 }
 
 impl MultiLevelScr {
@@ -201,9 +205,8 @@ impl MultiLevelScr {
             stats: LevelStats::default(),
             l1_since_l2: 0,
             l2_since_l3: 0,
-            last_l1_iter: 0,
-            settled_l2_iter: 0,
             l3_iter: 0,
+            l3_corrupted: false,
             config,
         }
     }
@@ -235,10 +238,9 @@ impl MultiLevelScr {
         }
         let t0 = m.sim.now();
         // L1: always taken when due (cheap, local, blocking).
-        let r1 = self.l1.checkpoint(m, nodes, bytes_per_node)?;
+        let r1 = self.l1.checkpoint_iter(m, nodes, bytes_per_node, iter)?;
         self.stats.l1_count += 1;
         self.stats.l1_time += r1.blocked;
-        self.last_l1_iter = iter;
         self.l1_since_l2 += 1;
 
         // L2: every l2_every L1s.
@@ -249,7 +251,7 @@ impl MultiLevelScr {
                 // first (back-pressure), then issue the next one into the
                 // background and return to compute.
                 self.settle_flush(m);
-                let pending = self.l2.checkpoint_begin(m, nodes, bytes_per_node)?;
+                let pending = self.l2.checkpoint_begin_iter(m, nodes, bytes_per_node, iter)?;
                 self.flush = FlushState::InFlight {
                     pending,
                     iter,
@@ -257,16 +259,39 @@ impl MultiLevelScr {
                     bytes_per_node,
                 };
             } else {
-                let r2 = self.l2.checkpoint(m, nodes, bytes_per_node)?;
+                let r2 = self.l2.checkpoint_iter(m, nodes, bytes_per_node, iter)?;
                 self.stats.l2_count += 1;
                 self.stats.l2_time += r2.blocked;
-                self.settled_l2_iter = iter;
                 self.l2_since_l3 += 1;
                 if self.l2_since_l3 >= self.config.l3_every {
                     self.issue_l3(m, nodes, bytes_per_node, iter);
                 }
             }
         }
+        Ok(m.sim.now() - t0)
+    }
+
+    /// Off-cadence forced checkpoint (proactive migration): settle any
+    /// in-flight promotion, then take a **blocking** L1 + L2 stamped with
+    /// `iter`, so the job's state survives the node set it is about to be
+    /// evacuated from.  Cadence counters are untouched — this is an
+    /// out-of-band checkpoint, not a scheduled one.  Returns the blocked
+    /// time.
+    pub fn force_checkpoint(
+        &mut self,
+        m: &mut Machine,
+        nodes: &[usize],
+        bytes_per_node: f64,
+        iter: usize,
+    ) -> crate::Result<SimTime> {
+        let t0 = m.sim.now();
+        self.settle_flush(m);
+        let r1 = self.l1.checkpoint_iter(m, nodes, bytes_per_node, iter)?;
+        self.stats.l1_count += 1;
+        self.stats.l1_time += r1.blocked;
+        let r2 = self.l2.checkpoint_iter(m, nodes, bytes_per_node, iter)?;
+        self.stats.l2_count += 1;
+        self.stats.l2_time += r2.blocked;
         Ok(m.sim.now() - t0)
     }
 
@@ -308,7 +333,6 @@ impl MultiLevelScr {
         self.stats.l2_time += blocked;
         self.stats.flush_blocked += blocked;
         self.stats.flush_overlap += (r2.blocked - blocked).max(0.0);
-        self.settled_l2_iter = iter;
         self.l2_since_l3 += 1;
         if self.l2_since_l3 >= self.config.l3_every {
             self.issue_l3(m, &nodes, bytes_per_node, iter);
@@ -354,7 +378,10 @@ impl MultiLevelScr {
     /// `failed=None` -> L1.  `failed=Some(_)` -> the deepest **settled**
     /// L2 (an in-flight promotion is aborted, never restored from); if no
     /// L2 record survives node loss, fall back to L3 (global read), else
-    /// error.
+    /// error.  Every level only serves *verified* records: a corrupted
+    /// checkpoint is skipped and the chain keeps walking — L1's older
+    /// records, then L2, then L3 — so restart always lands on the deepest
+    /// verified checkpoint, never a corrupted one (DESIGN.md §15).
     pub fn restart_detailed(
         &mut self,
         m: &mut Machine,
@@ -365,9 +392,26 @@ impl MultiLevelScr {
             None => {
                 // Transient process error: node state (and any in-flight
                 // promotion, which only reads node-local sources) is
-                // intact; L1 covers it.
-                let time = self.l1.restart(m, nodes, None)?.time;
-                Ok(RestartOutcome { time, level: RestartLevel::L1, iter: self.last_l1_iter })
+                // intact; L1 covers it — unless every L1 record failed
+                // verification, in which case the deeper levels serve the
+                // same role they do for node loss.
+                if self.l1.latest_usable(None).is_some() {
+                    let rep = self.l1.restart(m, nodes, None)?;
+                    return Ok(RestartOutcome {
+                        time: rep.time,
+                        level: RestartLevel::L1,
+                        iter: rep.iter,
+                    });
+                }
+                if self.l2.latest_usable(None).is_some() {
+                    let rep = self.l2.restart(m, nodes, None)?;
+                    return Ok(RestartOutcome {
+                        time: rep.time,
+                        level: RestartLevel::L2,
+                        iter: rep.iter,
+                    });
+                }
+                self.l3_restart(m, nodes)
             }
             Some(f) => {
                 // Anything still in flight was invalidated by the node
@@ -382,38 +426,82 @@ impl MultiLevelScr {
                 // before injecting the kill).
                 self.abort_flush(m);
                 if self.l2.latest_usable(Some(f)).is_some() {
-                    let time = self.l2.restart(m, nodes, Some(f))?.time;
+                    let rep = self.l2.restart(m, nodes, Some(f))?;
                     Ok(RestartOutcome {
-                        time,
+                        time: rep.time,
                         level: RestartLevel::L2,
-                        iter: self.settled_l2_iter,
-                    })
-                } else if self.stats.l3_count > 0 {
-                    // Global read-back for every node.
-                    let t0 = m.sim.now();
-                    // Drain pending flushes first (consistency point).
-                    self.l3.wait_all(&mut m.sim);
-                    let bytes = self
-                        .l1
-                        .database()
-                        .last()
-                        .map(|r| r.bytes_per_node)
-                        .unwrap_or(0.0);
-                    let prev = m.sim.default_issue_class(TrafficClass::CkptFlush);
-                    let mut read = crate::sim::Op::done();
-                    for &n in nodes {
-                        read.join(self.global.read_striped_op(m, n, bytes));
-                    }
-                    m.sim.set_issue_class(prev);
-                    let t = m.sim.wait_op(&read);
-                    Ok(RestartOutcome {
-                        time: t - t0,
-                        level: RestartLevel::L3,
-                        iter: self.l3_iter,
+                        iter: rep.iter,
                     })
                 } else {
-                    anyhow::bail!("no checkpoint level covers a lost node yet")
+                    self.l3_restart(m, nodes)
                 }
+            }
+        }
+    }
+
+    /// Last-resort global read-back (the end of the verified-fallback
+    /// chain).  Errors when no L3 flush ever completed — or when the
+    /// global copy itself failed verification.
+    fn l3_restart(&mut self, m: &mut Machine, nodes: &[usize]) -> crate::Result<RestartOutcome> {
+        if self.stats.l3_count == 0 || self.l3_corrupted {
+            anyhow::bail!("no verified checkpoint at any level covers this failure");
+        }
+        let t0 = m.sim.now();
+        // Drain pending flushes first (consistency point).
+        self.l3.wait_all(&mut m.sim);
+        let bytes = self
+            .l1
+            .database()
+            .last()
+            .map(|r| r.bytes_per_node)
+            .unwrap_or(0.0);
+        let prev = m.sim.default_issue_class(TrafficClass::CkptFlush);
+        let mut read = crate::sim::Op::done();
+        for &n in nodes {
+            read.join(self.global.read_striped_op(m, n, bytes));
+        }
+        m.sim.set_issue_class(prev);
+        let t = m.sim.wait_op(&read);
+        Ok(RestartOutcome { time: t - t0, level: RestartLevel::L3, iter: self.l3_iter })
+    }
+
+    /// Corruption injection for the fleet scheduler: the newest committed
+    /// (verified) record across L1/L2 fails its CRC.  Prefers L2 on a
+    /// commit-time tie — corrupting the deeper level is the damaging
+    /// case.  Returns the level hit, or `None` when nothing verifiable
+    /// remains to corrupt.
+    pub fn corrupt_latest(&mut self) -> Option<RestartLevel> {
+        let newest = |scr: &Scr| scr.database().iter().rev().find(|r| !r.corrupted).map(|r| r.taken_at);
+        match (newest(&self.l1), newest(&self.l2)) {
+            (Some(a), Some(b)) if b >= a => {
+                self.l2.corrupt_latest();
+                Some(RestartLevel::L2)
+            }
+            (Some(_), _) => {
+                self.l1.corrupt_latest();
+                Some(RestartLevel::L1)
+            }
+            (None, Some(_)) => {
+                self.l2.corrupt_latest();
+                Some(RestartLevel::L2)
+            }
+            (None, None) => None,
+        }
+    }
+
+    /// Level-targeted corruption (the property-test sweep's injection
+    /// point): mark the newest record of one tier unverifiable.  Returns
+    /// whether anything was actually corrupted.
+    pub fn corrupt_level(&mut self, level: RestartLevel) -> bool {
+        match level {
+            RestartLevel::L1 => self.l1.corrupt_latest(),
+            RestartLevel::L2 => self.l2.corrupt_latest(),
+            RestartLevel::L3 => {
+                if self.stats.l3_count == 0 || self.l3_corrupted {
+                    return false;
+                }
+                self.l3_corrupted = true;
+                true
             }
         }
     }
@@ -653,6 +741,62 @@ mod tests {
         assert!(!ml.flush_in_flight(), "in-flight promotion must be aborted");
         assert_eq!(ml.stats.flush_aborted, 1);
         assert_eq!(ml.l2_records().len(), 1, "aborted promotion never committed");
+    }
+
+    #[test]
+    fn corruption_walks_down_the_verified_chain() {
+        let mut m = machine();
+        let nodes = m.nodes_of(NodeKind::Cluster);
+        let mut ml = MultiLevelScr::new(MultiLevelConfig {
+            l1_every: 1,
+            l2_every: 2,
+            l3_every: 2,
+            ..MultiLevelConfig::default()
+        });
+        // L1 at 1..=4, L2 at 2 and 4, L3 at 4.
+        for iter in 1..=4 {
+            ml.checkpoint_at(&mut m, &nodes, 1e9, iter).unwrap();
+        }
+        // Healthy: node loss restores the iter-4 L2.
+        m.kill_node(nodes[1]);
+        m.revive_node(nodes[1]);
+        let r = ml.restart_detailed(&mut m, &nodes, Some(nodes[1])).unwrap();
+        assert_eq!((r.level, r.iter), (RestartLevel::L2, 4));
+        // Newest L2 corrupted: fall back to the iter-2 L2.
+        assert_eq!(ml.corrupt_latest(), Some(RestartLevel::L2));
+        let r = ml.restart_detailed(&mut m, &nodes, Some(nodes[1])).unwrap();
+        assert_eq!((r.level, r.iter), (RestartLevel::L2, 2));
+        // Both L2s corrupted: only the global copy is left.
+        assert!(ml.corrupt_level(RestartLevel::L2));
+        let r = ml.restart_detailed(&mut m, &nodes, Some(nodes[1])).unwrap();
+        assert_eq!((r.level, r.iter), (RestartLevel::L3, 4));
+        // Global copy corrupted too: nothing verified covers node loss.
+        assert!(ml.corrupt_level(RestartLevel::L3));
+        assert!(!ml.corrupt_level(RestartLevel::L3), "re-corrupting is a no-op");
+        assert!(ml.restart_detailed(&mut m, &nodes, Some(nodes[1])).is_err());
+        // Transient errors still restart: verified L1 records remain.
+        let r = ml.restart_detailed(&mut m, &nodes, None).unwrap();
+        assert_eq!((r.level, r.iter), (RestartLevel::L1, 4));
+    }
+
+    #[test]
+    fn transient_restart_falls_back_when_l1_corrupted() {
+        let mut m = machine();
+        let nodes = m.nodes_of(NodeKind::Cluster);
+        let mut ml = MultiLevelScr::new(MultiLevelConfig {
+            l1_every: 1,
+            l2_every: 2,
+            l3_every: 100,
+            ..MultiLevelConfig::default()
+        });
+        ml.checkpoint_at(&mut m, &nodes, 1e9, 1).unwrap();
+        ml.checkpoint_at(&mut m, &nodes, 1e9, 2).unwrap(); // + L2
+        // Corrupt every L1 record: a transient error must restore from
+        // the verified L2 instead of trusting a bad local checkpoint.
+        assert!(ml.corrupt_level(RestartLevel::L1));
+        assert!(ml.corrupt_level(RestartLevel::L1));
+        let r = ml.restart_detailed(&mut m, &nodes, None).unwrap();
+        assert_eq!((r.level, r.iter), (RestartLevel::L2, 2));
     }
 
     #[test]

@@ -490,6 +490,46 @@ impl Sim {
         self.core.caps[r.0]
     }
 
+    /// Change a resource's capacity mid-run — the enabling primitive for
+    /// degraded-mode fault injection (link degradation, straggler
+    /// compute; DESIGN.md section 15).  Active flows on the resource are
+    /// settled at the current clock and the **owning component** is
+    /// refilled immediately, reusing the cancellation path's machinery:
+    /// the changed resource's active flows seed the closure walk, so
+    /// disjoint components keep their rates, predictions and heap entries
+    /// untouched.  Setting the capacity to its current value is a strict
+    /// no-op (nothing settles, no refill, no heap churn — bit-identical
+    /// to never having called this), and a capacity change on a resource
+    /// with no active flows only swaps the stored value (pending flows
+    /// pick it up at activation, exactly as if the resource had been
+    /// registered with the new capacity).
+    ///
+    /// QoS note: class floors are validated against capacity at install
+    /// time ([`Sim::set_class_floor`]), not re-checked here — a degraded
+    /// link may drop below its installed floors.  The refill stays safe
+    /// (pass-1 grants clamp to route residuals), guarantees simply become
+    /// best-effort on the degraded hop for the window's duration.
+    pub fn set_resource_capacity(&mut self, r: ResId, capacity: f64) {
+        assert!(
+            capacity > 0.0 && capacity.is_finite(),
+            "resource capacity must be positive"
+        );
+        let core = &mut self.core;
+        if core.caps[r.0] == capacity {
+            return;
+        }
+        core.caps[r.0] = capacity;
+        if core.res_flows[r.0].is_empty() {
+            // No active flow routes through `r`: there is no rate to
+            // re-derive anywhere (pending flows get rates at activation).
+            core.last_refill_flows = 0;
+            return;
+        }
+        core.dirty.clear();
+        core.dirty.extend(core.res_flows[r.0].iter().copied());
+        core.recompute_component();
+    }
+
     /// Start a flow of `bytes` through `route`, beginning after `delay`
     /// seconds of latency (pure offset, consumes no bandwidth).  The flow
     /// is tagged with the ambient [`Sim::issue_class`].

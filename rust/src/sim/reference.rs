@@ -78,6 +78,20 @@ impl RefSim {
         ResId(self.capacities.len() - 1)
     }
 
+    /// Naive mirror of [`crate::sim::Sim::set_resource_capacity`]: swap
+    /// the stored capacity and redo the **global** fill.  Active flows'
+    /// `remaining` is already settled as of `self.now` (every `step`
+    /// sweeps the whole active set), so no extra settlement is needed —
+    /// the eager formulation is immune by construction.
+    pub fn set_capacity(&mut self, r: ResId, capacity: f64) {
+        assert!(capacity > 0.0 && capacity.is_finite());
+        if self.capacities[r.0] == capacity {
+            return;
+        }
+        self.capacities[r.0] = capacity;
+        self.recompute_rates();
+    }
+
     pub fn flow(&mut self, bytes: f64, delay: SimTime, route: &[ResId]) -> FlowId {
         assert!(bytes >= 0.0 && delay >= 0.0 && !route.is_empty());
         let id = self.flows.len();

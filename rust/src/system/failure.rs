@@ -68,12 +68,16 @@ impl FailurePlan {
         Self { at_iterations: Vec::new(), at_times }
     }
 
-    /// Failure (if any) scheduled for iteration `iter`.
-    pub fn failure_at_iteration(&self, iter: usize) -> Option<Failure> {
+    /// Every failure scheduled for iteration `iter`, in plan order.  Two
+    /// failures at the same iteration are both returned — the driver
+    /// queues them and processes one per boundary check, so co-scheduled
+    /// same-iteration hits are no longer silently dropped.
+    pub fn failures_at_iteration(&self, iter: usize) -> Vec<Failure> {
         self.at_iterations
             .iter()
-            .find(|f| f.at as usize == iter)
+            .filter(|f| f.at as usize == iter)
             .copied()
+            .collect()
     }
 
     /// Failures with time in `(t0, t1]`.
@@ -97,10 +101,26 @@ mod tests {
     #[test]
     fn targeted_failure_found_at_its_iteration() {
         let plan = FailurePlan::one_at_iteration(3, 60);
-        assert!(plan.failure_at_iteration(59).is_none());
-        let f = plan.failure_at_iteration(60).unwrap();
-        assert_eq!(f.node, 3);
-        assert!(plan.failure_at_iteration(61).is_none());
+        assert!(plan.failures_at_iteration(59).is_empty());
+        let fs = plan.failures_at_iteration(60);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].node, 3);
+        assert!(plan.failures_at_iteration(61).is_empty());
+    }
+
+    #[test]
+    fn same_iteration_failures_all_returned() {
+        let plan = FailurePlan {
+            at_iterations: vec![
+                Failure { node: 1, at: 60.0 },
+                Failure { node: 4, at: 60.0 },
+            ],
+            at_times: Vec::new(),
+        };
+        let fs = plan.failures_at_iteration(60);
+        assert_eq!(fs.len(), 2, "both same-iteration failures must surface");
+        assert_eq!(fs[0].node, 1);
+        assert_eq!(fs[1].node, 4);
     }
 
     #[test]

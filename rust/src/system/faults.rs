@@ -1,0 +1,240 @@
+//! Degraded-mode fault taxonomy: the failure modes *between* healthy and
+//! dead (DESIGN.md §15).
+//!
+//! [`super::failure::FailurePlan`] models fail-stop node death — the only
+//! mode the original reactive resiliency path knows.  Real exascale-class
+//! machines (and the HPC resilience pattern language, arXiv 1710.09074)
+//! also degrade: links dim before cables die, nodes straggle before DIMMs
+//! fail, and checkpoints rot silently in storage (DAOS, arXiv 1712.00423,
+//! treats detectable corruption as a first-class event).  This module
+//! names those modes and generates seeded *correlated* schedules — a
+//! degradation window that ends in a kill — which is exactly the signal a
+//! proactive health monitor can exploit and a reactive one cannot.
+//!
+//! A [`FaultPlan`] is consumed by the fleet scheduler
+//! ([`crate::sched::Scheduler`]): degradations apply/revert through
+//! [`crate::system::Machine::set_node_link_scale`] /
+//! [`set_node_compute_scale`](crate::system::Machine::set_node_compute_scale)
+//! (both built on [`crate::sim::Sim::set_resource_capacity`]), corruption
+//! flips the newest checkpoint record's verification flag, and the
+//! correlated kills merge into the scheduler's ordinary failure stream.
+
+use crate::sim::rng::SplitMix64;
+use crate::sim::SimTime;
+use crate::system::failure::Failure;
+
+/// One of the three degraded modes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The node's NIC tx/rx capacity drops to `fraction` of spec for the
+    /// fault window.
+    LinkDegrade { fraction: f64 },
+    /// The node's compute slows by `factor` (capacity becomes
+    /// `peak_flops / factor`) for the fault window.
+    Straggler { factor: f64 },
+    /// The newest committed checkpoint record covering the node's job
+    /// fails verification.  Instantaneous — there is no window to revert.
+    CkptCorrupt,
+}
+
+impl FaultKind {
+    /// Suspicion raised on the afflicted node when the precursor is
+    /// observed (DESIGN.md §15: degradations are strong kill precursors,
+    /// corruption is storage-side and only weakly implicates the node).
+    pub fn suspicion_weight(&self) -> f64 {
+        match self {
+            FaultKind::LinkDegrade { .. } | FaultKind::Straggler { .. } => 1.0,
+            FaultKind::CkptCorrupt => 0.5,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::LinkDegrade { .. } => "link_degrade",
+            FaultKind::Straggler { .. } => "straggler",
+            FaultKind::CkptCorrupt => "ckpt_corrupt",
+        }
+    }
+}
+
+/// A scheduled degraded-mode fault on one node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fault {
+    /// Machine node index (reduced modulo the node count by the consumer,
+    /// like [`Failure::node`]).
+    pub node: usize,
+    pub kind: FaultKind,
+    /// Virtual time the degradation begins (or the corruption lands).
+    pub from: SimTime,
+    /// Virtual time the degradation reverts; `until == from` for
+    /// instantaneous faults ([`FaultKind::CkptCorrupt`]).
+    pub until: SimTime,
+}
+
+/// One entry of a [`FaultPlan::timeline`]: apply or revert fault
+/// `fault` (an index into [`FaultPlan::faults`]) at time `at`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at: SimTime,
+    pub fault: usize,
+    pub apply: bool,
+}
+
+/// A full degraded-mode schedule: windowed faults plus the correlated
+/// fail-stop kills they foreshadow.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+    /// Fail-stop kills keyed by virtual time (merged into the scheduler's
+    /// failure stream alongside any `FleetConfig::failure_plan` entries).
+    pub kills: Vec<Failure>,
+}
+
+impl FaultPlan {
+    /// No faults.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty() && self.kills.is_empty()
+    }
+
+    /// Flatten the plan into a time-sorted apply/revert event list the
+    /// scheduler walks with a cursor.  Ordering is total and
+    /// deterministic: by time (`total_cmp`), then by fault index, with a
+    /// fault's apply preceding its revert (stable sort; apply is pushed
+    /// first and `from <= until`).
+    pub fn timeline(&self) -> Vec<FaultEvent> {
+        let mut ev = Vec::with_capacity(self.faults.len() * 2);
+        for (i, f) in self.faults.iter().enumerate() {
+            assert!(f.until >= f.from, "fault window must not be negative");
+            ev.push(FaultEvent { at: f.from, fault: i, apply: true });
+            if !matches!(f.kind, FaultKind::CkptCorrupt) {
+                ev.push(FaultEvent { at: f.until, fault: i, apply: false });
+            }
+        }
+        ev.sort_by(|a, b| a.at.total_cmp(&b.at).then(a.fault.cmp(&b.fault)));
+        ev
+    }
+
+    /// Seeded correlated schedule: `count` fault events spread evenly over
+    /// `horizon`, each picking a node uniformly.  Every 4th event is a
+    /// standalone checkpoint corruption; the rest alternate link
+    /// degradation (capacity drops to 10–50 % of spec) and straggling
+    /// (2–8x compute slowdown), each opening a precursor window that ends
+    /// in a correlated fail-stop kill of the same node — the
+    /// degrade-then-die signature the proactive policy is built to catch.
+    /// Deterministic per `(nodes, count, horizon, seed)`.
+    pub fn correlated(nodes: usize, count: usize, horizon: SimTime, seed: u64) -> Self {
+        assert!(nodes > 0, "correlated plan needs at least one node");
+        let mut rng = SplitMix64::new(seed ^ 0x0FA0_17D5);
+        let mut faults = Vec::with_capacity(count);
+        let mut kills = Vec::new();
+        let spacing = horizon / (count as f64 + 1.0);
+        for k in 1..=count {
+            let node = rng.next_below(nodes as u64) as usize;
+            // Jitter keeps windows off exact grid points without letting
+            // neighbouring windows overlap on the same node by accident.
+            let mid = spacing * k as f64 + spacing * 0.2 * (rng.next_f64() - 0.5);
+            if k % 4 == 0 {
+                faults.push(Fault { node, kind: FaultKind::CkptCorrupt, from: mid, until: mid });
+                continue;
+            }
+            let window = spacing * (0.3 + 0.2 * rng.next_f64());
+            let kind = if k % 2 == 1 {
+                FaultKind::LinkDegrade { fraction: 0.1 + 0.4 * rng.next_f64() }
+            } else {
+                FaultKind::Straggler { factor: 2.0 + 6.0 * rng.next_f64() }
+            };
+            faults.push(Fault { node, kind, from: mid - window, until: mid });
+            kills.push(Failure { node, at: mid });
+        }
+        Self { faults, kills }
+    }
+
+    /// Per-kind fault counts `(link_degrades, stragglers, corruptions)` —
+    /// the bench exhibit's per-mode columns.
+    pub fn count_by_kind(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for f in &self.faults {
+            match f.kind {
+                FaultKind::LinkDegrade { .. } => c.0 += 1,
+                FaultKind::Straggler { .. } => c.1 += 1,
+                FaultKind::CkptCorrupt => c.2 += 1,
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn correlated_deterministic_per_seed() {
+        let a = FaultPlan::correlated(24, 8, 1e6, 42);
+        let b = FaultPlan::correlated(24, 8, 1e6, 42);
+        assert_eq!(a.faults, b.faults);
+        assert_eq!(a.kills, b.kills);
+        let c = FaultPlan::correlated(24, 8, 1e6, 43);
+        assert_ne!(a.faults, c.faults, "different seeds must differ");
+    }
+
+    #[test]
+    fn correlated_pairs_degradations_with_kills() {
+        let plan = FaultPlan::correlated(24, 8, 1e6, 1);
+        let degradations = plan
+            .faults
+            .iter()
+            .filter(|f| !matches!(f.kind, FaultKind::CkptCorrupt))
+            .count();
+        assert_eq!(plan.kills.len(), degradations, "one kill per precursor window");
+        for (f, kill) in plan
+            .faults
+            .iter()
+            .filter(|f| !matches!(f.kind, FaultKind::CkptCorrupt))
+            .zip(&plan.kills)
+        {
+            assert_eq!(f.node, kill.node, "kill strikes the degraded node");
+            assert!((f.until - kill.at).abs() < 1e-9, "kill lands at window end");
+            assert!(f.from < f.until, "precursor opens before the kill");
+        }
+    }
+
+    #[test]
+    fn correlated_mixes_all_three_modes() {
+        let (links, stragglers, corruptions) =
+            FaultPlan::correlated(24, 8, 1e6, 1).count_by_kind();
+        assert!(links > 0 && stragglers > 0 && corruptions > 0);
+        assert_eq!(links + stragglers + corruptions, 8);
+    }
+
+    #[test]
+    fn timeline_sorted_with_apply_before_revert() {
+        let plan = FaultPlan::correlated(24, 12, 1e6, 5);
+        let tl = plan.timeline();
+        for w in tl.windows(2) {
+            assert!(w[0].at <= w[1].at, "timeline must be time-sorted");
+        }
+        for (i, f) in plan.faults.iter().enumerate() {
+            let apply = tl.iter().position(|e| e.fault == i && e.apply).unwrap();
+            match f.kind {
+                FaultKind::CkptCorrupt => {
+                    assert!(!tl.iter().any(|e| e.fault == i && !e.apply));
+                }
+                _ => {
+                    let revert = tl.iter().position(|e| e.fault == i && !e.apply).unwrap();
+                    assert!(apply < revert);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_plan_has_empty_timeline() {
+        assert!(FaultPlan::none().is_empty());
+        assert!(FaultPlan::none().timeline().is_empty());
+    }
+}

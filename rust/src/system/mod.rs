@@ -15,6 +15,7 @@
 //!   FWI/OmpSs experiments (Fig. 10).
 
 pub mod failure;
+pub mod faults;
 pub mod presets;
 pub mod zoo;
 
@@ -221,6 +222,34 @@ impl Machine {
     }
 
     // ------------------------------------------------------------------
+    // degraded-mode fault injection ([`faults`], DESIGN.md section 15)
+    // ------------------------------------------------------------------
+
+    /// Scale node `i`'s compute capacity to `scale` x its spec peak
+    /// (straggler injection: `scale < 1` stretches every compute phase on
+    /// the node; `scale = 1.0` restores the healthy rate).  Because the
+    /// scale is always applied against the *spec* value, apply/revert
+    /// pairs are idempotent and never accumulate rounding drift.
+    pub fn set_node_compute_scale(&mut self, i: usize, scale: f64) {
+        assert!(scale > 0.0 && scale.is_finite(), "compute scale must be positive");
+        let cap = self.nodes[i].spec.peak_flops * scale;
+        let cpu = self.nodes[i].cpu;
+        self.sim.set_resource_capacity(cpu, cap);
+    }
+
+    /// Scale node `i`'s NIC tx/rx capacity to `scale` x its spec bandwidth
+    /// (link-degradation injection).  Both directions degrade together —
+    /// the paper's EXTOLL links are full-duplex pairs on one physical
+    /// cable, so a marginal cable/connector dims both.
+    pub fn set_node_link_scale(&mut self, i: usize, scale: f64) {
+        assert!(scale > 0.0 && scale.is_finite(), "link scale must be positive");
+        let bw = self.nodes[i].spec.nic_bw * scale;
+        let ep = self.fabric.endpoint_info(self.nodes[i].ep);
+        self.sim.set_resource_capacity(ep.tx, bw);
+        self.sim.set_resource_capacity(ep.rx, bw);
+    }
+
+    // ------------------------------------------------------------------
     // partition allocation (the fleet scheduler's node ledger)
     // ------------------------------------------------------------------
 
@@ -249,6 +278,34 @@ impl Machine {
             return None;
         }
         let picked: Vec<usize> = free[..count].to_vec();
+        for &i in &picked {
+            assert!(self.owners[i].is_none(), "node {i} already allocated");
+            self.owners[i] = Some(owner);
+        }
+        Some(picked)
+    }
+
+    /// Like [`Machine::try_allocate`], but prefer free nodes *not* in
+    /// `avoid` (the health monitor's suspect set).  Healthy free nodes are
+    /// taken lowest-index-first; only when those run out does the pick
+    /// fall back to suspects — liveness beats placement, a job must never
+    /// starve because every spare is suspicious.
+    pub fn try_allocate_avoiding(
+        &mut self,
+        kind: NodeKind,
+        count: usize,
+        owner: u64,
+        avoid: &[usize],
+    ) -> Option<Vec<usize>> {
+        let free = self.free_nodes_of(kind);
+        if free.len() < count {
+            return None;
+        }
+        let mut picked: Vec<usize> = free.iter().copied().filter(|i| !avoid.contains(i)).collect();
+        if picked.len() < count {
+            picked.extend(free.iter().copied().filter(|i| avoid.contains(i)));
+        }
+        picked.truncate(count);
         for &i in &picked {
             assert!(self.owners[i].is_none(), "node {i} already allocated");
             self.owners[i] = Some(owner);

@@ -1,0 +1,150 @@
+//! Integration: proactive resilience end to end — the ISSUE 8 acceptance
+//! criterion (under the same seeded correlated fault schedule, proactive
+//! wastes strictly less work than reactive), byte-determinism of the
+//! `repro bench resilience` document, its schema contract, and the
+//! no-fault invariant (no fault plan -> no resilience block in the JSON).
+
+use deeper::bench::{resilience_points, resilience_report, ResilienceBenchConfig};
+use deeper::sched::{run_fleet, synthetic_jobs, FleetConfig, ResiliencePolicy};
+use deeper::system::faults::FaultPlan;
+use deeper::util::json::{self, Json};
+
+#[test]
+fn proactive_wastes_strictly_less_work_than_reactive() {
+    // The acceptance scenario: the default bench config (8 jobs, 6
+    // correlated faults sized to the healthy makespan) under both
+    // policies, sharing one fault schedule.
+    let cfg = ResilienceBenchConfig::default();
+    let (probe_makespan, horizon, points) = resilience_points(&cfg);
+    assert!(probe_makespan > 0.0 && horizon > 0.0 && horizon < probe_makespan);
+    assert_eq!(points.len(), 2);
+
+    let by = |policy: ResiliencePolicy| {
+        points
+            .iter()
+            .find(|p| p.policy == policy)
+            .expect("both policies ran")
+    };
+    let reactive = by(ResiliencePolicy::Reactive);
+    let proactive = by(ResiliencePolicy::Proactive);
+
+    let rs_reactive = reactive.report.resilience.as_ref().expect("fault plan active");
+    let rs_proactive = proactive.report.resilience.as_ref().expect("fault plan active");
+
+    // The schedule genuinely degraded the machine in both runs — same
+    // plan, so the same precursor mix.
+    for rs in [rs_reactive, rs_proactive] {
+        assert!(
+            rs.link_degrades + rs.stragglers + rs.corruptions > 0,
+            "correlated schedule must apply precursors inside the run"
+        );
+    }
+    assert_eq!(rs_reactive.link_degrades, rs_proactive.link_degrades);
+    assert_eq!(rs_reactive.stragglers, rs_proactive.stragglers);
+    assert!(
+        reactive.report.failures_injected + reactive.report.idle_failures > 0,
+        "paired kills must fire"
+    );
+
+    // Reactive never migrates; proactive acts on suspicion.
+    assert_eq!(rs_reactive.migrations, 0);
+    assert!(rs_proactive.migrations > 0, "precursors must trigger migration");
+    assert!(rs_proactive.suspects > 0);
+
+    // ISSUE 8 acceptance: strictly less wasted work when acting on
+    // precursors instead of waiting for the kill.
+    assert!(
+        rs_proactive.wasted_iterations < rs_reactive.wasted_iterations,
+        "proactive ({}) must waste strictly fewer iterations than reactive ({})",
+        rs_proactive.wasted_iterations,
+        rs_reactive.wasted_iterations
+    );
+}
+
+#[test]
+fn bench_resilience_is_byte_deterministic() {
+    let cfg = ResilienceBenchConfig { jobs: 4, faults: 3, seed: 11, topology: None };
+    let (_, a) = resilience_report(&cfg);
+    let (_, b) = resilience_report(&cfg);
+    assert_eq!(a.to_pretty_string(), b.to_pretty_string());
+
+    // The seed genuinely steers the schedule.
+    let (_, c) = resilience_report(&ResilienceBenchConfig { seed: 12, ..cfg });
+    assert_ne!(a.to_pretty_string(), c.to_pretty_string());
+}
+
+#[test]
+fn bench_resilience_exhibits_and_schema() {
+    let cfg = ResilienceBenchConfig { jobs: 4, faults: 3, seed: 5, topology: None };
+    let (exhibits, doc) = resilience_report(&cfg);
+    assert_eq!(exhibits.len(), 1, "one reactive-vs-proactive summary table");
+    for e in &exhibits {
+        assert!(!e.render().is_empty());
+        assert!(!e.render_csv().is_empty());
+    }
+
+    let parsed = json::parse(&doc.to_pretty_string()).expect("resilience JSON parses");
+    assert_eq!(parsed, doc);
+    assert_eq!(doc.get("bench").and_then(Json::as_str), Some("resilience"));
+    assert_eq!(doc.get("schema_version").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(doc.get("jobs").and_then(Json::as_f64), Some(4.0));
+    assert_eq!(doc.get("faults").and_then(Json::as_f64), Some(3.0));
+    assert!(doc.get("healthy_makespan_s").and_then(Json::as_f64).unwrap() > 0.0);
+    assert!(doc.get("fault_horizon_s").and_then(Json::as_f64).unwrap() > 0.0);
+    assert!(
+        doc.get("proactive_wasted_iteration_saving")
+            .and_then(Json::as_f64)
+            .is_some(),
+        "headline must be present when both policies ran"
+    );
+
+    let points = doc.get("points").and_then(Json::as_arr).expect("points array");
+    assert_eq!(points.len(), 2, "reactive + proactive");
+    for p in points {
+        let policy = p.get("policy").and_then(Json::as_str).unwrap();
+        assert!(policy == "reactive" || policy == "proactive");
+        assert!(p.get("makespan_s").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(p.get("utilization").and_then(Json::as_f64).unwrap() > 0.0);
+        for key in [
+            "wasted_iterations",
+            "migrations",
+            "requeues",
+            "failures_injected",
+            "idle_failures",
+            "suspects",
+            "link_degrades",
+            "stragglers",
+            "corruptions",
+            "sim_events",
+        ] {
+            assert!(
+                p.get(key).and_then(Json::as_f64).is_some(),
+                "point key {key} must be a number"
+            );
+        }
+    }
+}
+
+#[test]
+fn no_fault_plan_means_no_resilience_block() {
+    // The bit-identity guard: without a fault plan the report carries no
+    // resilience summary and the JSON document has no "resilience" key —
+    // the schema of healthy runs is unchanged by this subsystem.
+    let jobs = synthetic_jobs(3, 7);
+    let r = run_fleet(jobs, FleetConfig { seed: 7, ..FleetConfig::default() })
+        .expect("synthetic fleet fits the DEEP-ER prototype");
+    assert!(r.resilience.is_none());
+    assert!(r.to_json().get("resilience").is_none());
+
+    // And with one, the block appears (policy defaults to reactive).
+    let plan = FaultPlan::correlated(16, 2, r.makespan * 0.8, 7);
+    let jobs = synthetic_jobs(3, 7);
+    let r2 = run_fleet(
+        jobs,
+        FleetConfig { seed: 7, fault_plan: Some(plan), ..FleetConfig::default() },
+    )
+    .expect("synthetic fleet fits the DEEP-ER prototype");
+    let rs = r2.resilience.as_ref().expect("fault plan was active");
+    assert_eq!(rs.policy, "reactive");
+    assert!(r2.to_json().get("resilience").is_some());
+}

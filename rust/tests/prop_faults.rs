@@ -1,0 +1,234 @@
+//! Properties of the checkpoint-corruption taxonomy (DESIGN.md §15):
+//! restart always lands on the deepest *verified* checkpoint — never a
+//! corrupted record, never iteration 0 while a verified record exists —
+//! swept across every single-level SCR strategy and every multi-level
+//! tier.
+
+use deeper::scr::multilevel::{MultiLevelConfig, MultiLevelScr, RestartLevel};
+use deeper::scr::{Scr, Strategy};
+use deeper::system::{presets, Machine, NodeKind};
+use deeper::testing::{check, Config, Gen};
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, seed: 0xDEE9E5, ..Config::default() }
+}
+
+fn machine() -> Machine {
+    Machine::build(presets::deep_er())
+}
+
+/// One corruption scenario for the single-level sweep.
+#[derive(Debug, Clone)]
+struct SingleWl {
+    /// Checkpoints taken, stamped iters 10, 20, ... 10*n.
+    n_ckpts: usize,
+    /// `corrupt_latest` calls (may exceed `n_ckpts`: walks off the end).
+    corruptions: usize,
+    /// Transient restart (None) vs node loss (Some).
+    transient: bool,
+}
+
+fn gen_single(g: &mut Gen) -> SingleWl {
+    SingleWl {
+        n_ckpts: g.usize_in(1, 5),
+        corruptions: g.usize_in(0, 6),
+        transient: g.bool(),
+    }
+}
+
+/// Every strategy: corruption walks the restart target backwards through
+/// the database one verified record at a time, and restart errs exactly
+/// when nothing verified covers the failure.
+#[test]
+fn prop_every_strategy_restarts_from_deepest_verified() {
+    check(cfg(32), gen_single, |wl| {
+        for strat in Strategy::ALL {
+            let mut m = machine();
+            let nodes: Vec<usize> = m.nodes_of(NodeKind::Cluster)[..4].to_vec();
+            let mut scr = Scr::new(strat);
+            for k in 1..=wl.n_ckpts {
+                scr.checkpoint_iter(&mut m, &nodes, 1e8, 10 * k).unwrap();
+            }
+            let mut hits = 0;
+            for _ in 0..wl.corruptions {
+                if scr.corrupt_latest() {
+                    hits += 1;
+                }
+            }
+            // Corruption consumes exactly the verified records, newest
+            // first, and reports exhaustion honestly.
+            if hits != wl.corruptions.min(wl.n_ckpts) {
+                return false;
+            }
+            let survivors = wl.n_ckpts.saturating_sub(wl.corruptions);
+            let failed = if wl.transient {
+                None
+            } else {
+                m.kill_node(nodes[1]);
+                m.revive_node(nodes[1]);
+                Some(nodes[1])
+            };
+            let covered = survivors > 0
+                && (failed.is_none() || strat.survives_node_loss());
+            match scr.restart(&mut m, &nodes, failed) {
+                Ok(r) => {
+                    // Deepest verified record, by its iter stamp — and
+                    // never iteration 0 while one exists.
+                    if !covered || r.iter != 10 * survivors || r.iter == 0 {
+                        return false;
+                    }
+                }
+                Err(_) => {
+                    if covered {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+/// One corruption scenario for the multi-level tier sweep.
+#[derive(Debug, Clone)]
+struct TierWl {
+    /// Iterations run (L1 every iter, L2 every 2 L1s, L3 every 2 L2s).
+    iters: usize,
+    /// `corrupt_level(L1)` calls.
+    c1: usize,
+    /// `corrupt_level(L2)` calls.
+    c2: usize,
+    /// Corrupt the global (L3) copy too.
+    c3: bool,
+    /// Transient restart (None) vs node loss (Some).
+    transient: bool,
+}
+
+fn gen_tier(g: &mut Gen) -> TierWl {
+    let iters = g.usize_in(4, 12);
+    TierWl {
+        iters,
+        c1: g.usize_in(0, iters + 1),
+        c2: g.usize_in(0, iters / 2 + 1),
+        c3: g.bool(),
+        transient: g.bool(),
+    }
+}
+
+/// What the verified-fallback chain must serve, from the cadence model:
+/// newest verified L1, else newest verified L2, else the L3 copy.
+fn expected_tier(
+    wl: &TierWl,
+    skip_l1: bool,
+) -> Option<(RestartLevel, usize)> {
+    let l1: Vec<usize> = (1..=wl.iters).collect();
+    let l2: Vec<usize> = (1..=wl.iters).filter(|i| i % 2 == 0).collect();
+    let l3_iter = (wl.iters / 4) * 4; // every 2nd L2 = every 4th iter
+    if !skip_l1 {
+        if let Some(&i) = l1.get(l1.len().wrapping_sub(wl.c1 + 1)) {
+            return Some((RestartLevel::L1, i));
+        }
+    }
+    if let Some(&i) = l2.get(l2.len().wrapping_sub(wl.c2 + 1)) {
+        return Some((RestartLevel::L2, i));
+    }
+    if l3_iter > 0 && !wl.c3 {
+        return Some((RestartLevel::L3, l3_iter));
+    }
+    None
+}
+
+/// Multi-level: corrupting tiers walks restart down the L1 -> L2 -> L3
+/// chain level by level; it errs only once every tier is unverified.
+#[test]
+fn prop_multilevel_restart_walks_verified_tiers() {
+    check(cfg(32), gen_tier, |wl| {
+        let mut m = machine();
+        let nodes: Vec<usize> = m.nodes_of(NodeKind::Cluster)[..4].to_vec();
+        let config = MultiLevelConfig {
+            l1_every: 1,
+            l2_every: 2,
+            l3_every: 2,
+            ..MultiLevelConfig::default()
+        };
+        let mut ml = MultiLevelScr::new(config);
+        for i in 1..=wl.iters {
+            ml.checkpoint_at(&mut m, &nodes, 1e8, i).unwrap();
+        }
+        let n_l2 = wl.iters / 2;
+        for k in 0..wl.c1 {
+            let hit = ml.corrupt_level(RestartLevel::L1);
+            if hit != (k < wl.iters) {
+                return false; // exhaustion must be reported honestly
+            }
+        }
+        for k in 0..wl.c2 {
+            if ml.corrupt_level(RestartLevel::L2) != (k < n_l2) {
+                return false;
+            }
+        }
+        if wl.c3 {
+            // L3 exists iff at least one flush fired (iters >= 4 here).
+            if ml.corrupt_level(RestartLevel::L3) != (wl.iters >= 4) {
+                return false;
+            }
+        }
+        let failed = if wl.transient {
+            None
+        } else {
+            m.kill_node(nodes[1]);
+            m.revive_node(nodes[1]);
+            Some(nodes[1])
+        };
+        // Node loss skips L1 (node-local NVMe died with the node).
+        let want = expected_tier(wl, failed.is_some());
+        match ml.restart_detailed(&mut m, &nodes, failed) {
+            Ok(out) => match want {
+                Some((level, iter)) => {
+                    out.level == level && out.iter == iter && out.iter != 0
+                }
+                None => false,
+            },
+            Err(_) => want.is_none(),
+        }
+    });
+}
+
+/// `corrupt_latest` (the fleet scheduler's injection point) drains the
+/// L1/L2 databases completely — newest-first across levels — and restart
+/// then falls through to L3 or errs.
+#[test]
+fn prop_multilevel_corrupt_latest_drains_to_l3() {
+    check(cfg(24), |g| g.usize_in(2, 10), |&iters| {
+        let mut m = machine();
+        let nodes: Vec<usize> = m.nodes_of(NodeKind::Cluster)[..4].to_vec();
+        let config = MultiLevelConfig {
+            l1_every: 1,
+            l2_every: 2,
+            l3_every: 2,
+            ..MultiLevelConfig::default()
+        };
+        let mut ml = MultiLevelScr::new(config);
+        for i in 1..=iters {
+            ml.checkpoint_at(&mut m, &nodes, 1e8, i).unwrap();
+        }
+        let total = iters + iters / 2; // L1 records + L2 records
+        let mut drained = 0;
+        while ml.corrupt_latest().is_some() {
+            drained += 1;
+            if drained > total {
+                return false; // must terminate exactly at the db size
+            }
+        }
+        if drained != total {
+            return false;
+        }
+        let l3_iter = (iters / 4) * 4;
+        match ml.restart_detailed(&mut m, &nodes, None) {
+            Ok(out) => {
+                out.level == RestartLevel::L3 && out.iter == l3_iter && l3_iter > 0
+            }
+            Err(_) => l3_iter == 0,
+        }
+    });
+}

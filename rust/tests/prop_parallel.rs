@@ -235,6 +235,111 @@ fn prop_parallel_merge_heavy_matches_serial() {
 }
 
 // ----------------------------------------------------------------------
+// Mid-run capacity change (`set_resource_capacity`, the degraded-mode
+// enabler of DESIGN.md section 15): rescale shared resources while their
+// flows are in flight, then finish the run.
+// ----------------------------------------------------------------------
+
+/// (group capacities, flows (bytes, delay, group), advance gap,
+/// rescales (group, scale)).
+type DegradeWl = (Vec<f64>, Vec<(f64, f64, usize)>, f64, Vec<(usize, f64)>);
+
+fn gen_degrade(g: &mut Gen) -> DegradeWl {
+    let k = g.usize_in(2, 6);
+    let caps: Vec<f64> = g.vec(k, |g| g.f64_in(5e8, 8e9));
+    let n = g.usize_in(2, 32);
+    let flows = g.vec(n, |g| {
+        (g.f64_in(1e6, 3e8), g.f64_in(0.0, 0.02), g.usize_in(0, k - 1))
+    });
+    let gap = g.f64_in(0.005, 0.05);
+    let nr = g.usize_in(1, 4);
+    // Scales span degrade and upgrade; repeats on one group are fine
+    // (last write wins in both engines).
+    let rescales = g.vec(nr, |g| (g.usize_in(0, k - 1), g.f64_in(0.1, 3.0)));
+    (caps, flows, gap, rescales)
+}
+
+fn run_degrade(wl: &DegradeWl, threads: usize) -> (Vec<SimTime>, Vec<f64>) {
+    let (caps, flows, gap, rescales) = wl;
+    let mut sim = Sim::new();
+    sim.set_threads(threads);
+    let groups: Vec<_> = caps.iter().map(|&c| sim.resource("grp", c)).collect();
+    let ids: Vec<FlowId> = flows
+        .iter()
+        .map(|&(bytes, delay, k)| {
+            let nic = sim.resource("nic", 12.5e9);
+            sim.flow(bytes, delay, &[nic, groups[k]])
+        })
+        .collect();
+    sim.advance(*gap); // parallel region: capacities change mid-flight
+    for &(k, scale) in rescales {
+        sim.set_resource_capacity(groups[k], caps[k] * scale);
+    }
+    observe(sim, ids)
+}
+
+#[test]
+fn prop_parallel_capacity_change_matches_serial_and_oracle() {
+    check(cfg(60), gen_degrade, |wl| {
+        // Oracle: the naive engine applies the identical rescales at the
+        // identical virtual time.
+        let (caps, flows, gap, rescales) = wl;
+        let mut rsim = RefSim::new();
+        let rgroups: Vec<_> = caps.iter().map(|&c| rsim.resource(c)).collect();
+        let rids: Vec<_> = flows
+            .iter()
+            .map(|&(bytes, delay, k)| {
+                let rnic = rsim.resource(12.5e9);
+                rsim.flow(bytes, delay, &[rnic, rgroups[k]])
+            })
+            .collect();
+        rsim.advance(*gap);
+        for &(k, scale) in rescales {
+            rsim.set_capacity(rgroups[k], caps[k] * scale);
+        }
+        let tref = rsim.wait_each(&rids);
+        let base = run_degrade(wl, 1);
+        base.0.iter().zip(&tref).all(|(a, b)| close(*a, *b))
+            && THREAD_SWEEP[1..].iter().all(|&t| run_degrade(wl, t) == base)
+    });
+}
+
+#[test]
+fn prop_parallel_same_capacity_set_is_bit_identical_noop() {
+    // Re-installing the capacity a resource already has must not perturb
+    // the trajectory at all — the no-op path `set_resource_capacity`
+    // guarantees (a revert applied to a node that was never allocated,
+    // say) — at every thread count.
+    check(cfg(40), gen_disjoint, |wl| {
+        let run = |noop_sets: bool, threads: usize| {
+            let (caps, flows) = wl;
+            let mut sim = Sim::new();
+            sim.set_threads(threads);
+            let groups: Vec<_> = caps.iter().map(|&c| sim.resource("grp", c)).collect();
+            let ids: Vec<FlowId> = flows
+                .iter()
+                .map(|&(bytes, delay, k)| {
+                    let nic = sim.resource("nic", 12.5e9);
+                    sim.flow(bytes, delay, &[nic, groups[k]])
+                })
+                .collect();
+            sim.advance(0.002);
+            if noop_sets {
+                for (i, &c) in caps.iter().enumerate() {
+                    sim.set_resource_capacity(groups[i], c);
+                }
+            }
+            let times = sim.wait_each(&ids);
+            let events = sim.events();
+            (times, events)
+        };
+        THREAD_SWEEP
+            .iter()
+            .all(|&t| run(true, t) == run(false, t))
+    });
+}
+
+// ----------------------------------------------------------------------
 // Zoo sweep: real machine routes — leaf crossbars, uplinks, rails,
 // bridges, device channels — on every topology family.
 // ----------------------------------------------------------------------
