@@ -13,7 +13,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test lint fmt clippy doc figures bench bench-smoke bench-scale bench-threads bench-fleet bench-qos bench-resilience bench-zoo artifacts clean
+.PHONY: verify build test lint fmt clippy doc figures bench bench-smoke bench-scale bench-threads bench-fleet bench-qos bench-resilience bench-serve bench-zoo artifacts clean
 
 verify: build test
 
@@ -84,6 +84,14 @@ bench-qos: build
 bench-resilience: build
 	$(CARGO) run --release --bin repro -- bench resilience --csv --seed 1 --json BENCH_resilience.json
 	@echo "wrote BENCH_resilience.json"
+
+# Service-mode exhibit (DESIGN.md §16): an open-arrival Poisson stream
+# through rolling admission on the incremental backfill profile, with
+# per-window utilization and per-class p99 queue waits; refreshes the
+# BENCH_serve.json trajectory artifact.
+bench-serve: build
+	$(CARGO) run --release --bin repro -- serve --arrivals poisson --rate 1 --jobs 2000 --seed 1 --json BENCH_serve.json
+	@echo "wrote BENCH_serve.json"
 
 # Topology-zoo variants of the qos and scale exhibits on the 2:1
 # oversubscribed fat-tree (DESIGN.md §13); artifacts are written next to

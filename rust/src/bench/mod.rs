@@ -1197,6 +1197,139 @@ pub fn fleet_report(cfg: &FleetBenchConfig) -> (Vec<Exhibit>, Json) {
 }
 
 // ----------------------------------------------------------------------
+// `repro bench serve` — steady-state service mode (DESIGN.md section 16)
+// ----------------------------------------------------------------------
+
+/// Configuration of the service-mode exhibit: one open-arrival run under
+/// Poisson arrivals, reported through the rolling-window SLO lens.
+#[derive(Debug, Clone)]
+pub struct ServeBenchConfig {
+    /// Arrivals to draw before closing the door.
+    pub jobs: usize,
+    /// Poisson arrival rate, jobs per second.
+    pub rate_hz: f64,
+    /// Admission bound: arrivals beyond this queue depth are rejected.
+    pub queue_cap: usize,
+    pub seed: u64,
+    /// Optional `system::zoo` topology name (flat DEEP-ER prototype by
+    /// default).
+    pub topology: Option<String>,
+}
+
+impl Default for ServeBenchConfig {
+    fn default() -> Self {
+        Self {
+            jobs: 2000,
+            rate_hz: 1.0,
+            queue_cap: 1024,
+            seed: DEFAULT_SEED,
+            topology: None,
+        }
+    }
+}
+
+/// Run the service loop once and return its report.  The bench keeps the
+/// service defaults (backfill, reserve depth 32, allocation log off) —
+/// only the arrival process and admission bound come from `cfg`.
+pub fn serve_point(cfg: &ServeBenchConfig) -> sched::ServeReport {
+    let scfg = sched::ServeConfig {
+        fleet: FleetConfig {
+            seed: cfg.seed,
+            ..sched::ServeConfig::default().fleet
+        },
+        arrivals: sched::ArrivalSpec::Poisson { rate_hz: cfg.rate_hz },
+        jobs: cfg.jobs,
+        queue_cap: cfg.queue_cap,
+        ..sched::ServeConfig::default()
+    };
+    match resolve_topology(&cfg.topology) {
+        Some(mspec) => sched::serve_fleet_on(mspec, scfg),
+        None => sched::serve_fleet(scfg),
+    }
+    .expect("service defaults are valid")
+}
+
+/// The `repro bench serve` exhibit: one steady-state open-arrival run,
+/// rendered as rolling utilization / p99-wait series plus a summary
+/// table, and the `BENCH_serve.json` document (the [`sched::ServeReport`]
+/// serialization itself — same artifact `repro serve --json` writes).
+pub fn serve_report(cfg: &ServeBenchConfig) -> (Vec<Exhibit>, Json) {
+    let r = serve_point(cfg);
+    let json = r.to_json();
+
+    let mut ut_fig = Figure::new(
+        "Service: rolling machine utilization (open Poisson arrivals)",
+        "window end s",
+        "frac",
+    );
+    let mut ut = Series::new("utilization");
+    for w in &r.windows {
+        ut.push(w.t1_s, w.utilization);
+    }
+    ut_fig.add(ut);
+
+    let mut wait_fig = Figure::new(
+        "Service: per-class p99 queue wait per rolling window",
+        "window end s",
+        "s",
+    );
+    for c in 0..3usize {
+        let mut s = Series::new(format!("class {c}"));
+        for w in &r.windows {
+            if let Some(p) = w.p99_wait_s[c] {
+                s.push(w.t1_s, p);
+            }
+        }
+        wait_fig.add(s);
+    }
+
+    let mut t = KvTable::new("Service summary (steady-state SLOs)");
+    t.row(
+        "arrivals",
+        format!(
+            "{} arrived ({} {:?} Hz), {} admitted, {} rejected ({:.2} % rejection)",
+            r.jobs_arrived,
+            r.arrivals,
+            r.rate_hz.unwrap_or(0.0),
+            r.jobs_admitted,
+            r.jobs_rejected,
+            r.rejection_rate * 100.0
+        ),
+    );
+    t.row(
+        "drain",
+        format!(
+            "{} completed over {} ({} horizon), {:.1} % utilization",
+            r.jobs_completed,
+            fmt_time(r.makespan_s),
+            fmt_time(r.horizon_s),
+            r.utilization * 100.0
+        ),
+    );
+    for c in &r.classes {
+        t.row(
+            format!("class {} wait", c.class),
+            format!(
+                "p50 {}, p99 {}, max {} ({} completed, {} rejected)",
+                fmt_time(c.p50_wait_s),
+                fmt_time(c.p99_wait_s),
+                fmt_time(c.max_wait_s),
+                c.completed,
+                c.rejected
+            ),
+        );
+    }
+    t.row(
+        "resilience",
+        format!(
+            "{} failures, {} requeues, {} migrations, {} qos grants open",
+            r.failures_injected, r.requeues, r.migrations, r.qos_grants_open
+        ),
+    );
+    (vec![Exhibit::Fig(ut_fig), Exhibit::Fig(wait_fig), Exhibit::Table(t)], json)
+}
+
+// ----------------------------------------------------------------------
 // `repro bench resilience` — reactive vs proactive degraded-mode handling
 // (DESIGN.md section 15)
 // ----------------------------------------------------------------------

@@ -8,6 +8,7 @@
 //!           [--iterations N] [--cp-interval N] [--fail-at I] [--mtbf S] [--seed N]
 //!           [--nodes N] [--multilevel] [--async-flush]
 //! repro fleet [--jobs N] [--policy fcfs|backfill] [--seed S] [--mtbf S] [--qos] [--json PATH]
+//! repro serve [--jobs N] [--arrivals poisson|trace] [--rate HZ] [--queue-cap N] [--json PATH]
 //! repro e2e [--artifacts DIR]
 //! ```
 
@@ -40,7 +41,13 @@ USAGE:
   repro fleet [--jobs N] [--policy fcfs|backfill] [--seed S] [--mtbf S]
               [--qos] [--faults N] [--resilience reactive|proactive]
               [--topology NAME] [--threads N] [--json PATH]
+  repro serve [--jobs N] [--arrivals poisson|trace] [--rate HZ] [--trace PATH]
+              [--policy fcfs|backfill] [--queue-cap N] [--window S]
+              [--reserve-depth N] [--qos] [--faults N] [--seed S]
+              [--topology NAME] [--threads N] [--json PATH]
   repro bench fleet [--sweep N1,N2,..] [--mtbf S] [--topology NAME]
+                    [--json PATH] [--csv] [--seed N]
+  repro bench serve [--jobs N] [--rate HZ] [--queue-cap N] [--topology NAME]
                     [--json PATH] [--csv] [--seed N]
   repro bench resilience [--jobs N] [--faults N] [--topology NAME]
                          [--json PATH] [--csv] [--seed N]
@@ -59,6 +66,18 @@ USAGE:
   owning job, restart it from its best settled checkpoint and requeue it.
   bench fleet sweeps job counts under both policies and writes the
   BENCH_fleet.json trajectory artifact (--json PATH).
+
+  serve runs the fleet in *service mode* (DESIGN.md section 16): an open
+  arrival process — Poisson at --rate jobs/s, or a --trace file with one
+  arrival offset (seconds) per line — feeds --jobs synthetic submissions
+  through rolling admission.  An arrival finding --queue-cap jobs already
+  queued is rejected; admitted jobs run to completion under the chosen
+  policy (backfill plans against an incrementally maintained capacity
+  profile; --reserve-depth bounds how many queued jobs hold reservations
+  per round).  The report measures steady-state SLOs — per-class p50/p99
+  queue waits, rolling --window utilization windows, the rejection rate —
+  and `--json` writes the byte-deterministic BENCH_serve.json artifact.
+  bench serve wraps one such run as an exhibit with the same artifact.
 
   bench scale sweeps the DES engine over growing concurrent-flow counts
   (default 1000,10000,100000), timing it against the naive reference
@@ -288,6 +307,32 @@ fn cmd_bench_resilience(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()>
     Ok(())
 }
 
+fn cmd_bench_serve(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
+    let defaults = bench::ServeBenchConfig::default();
+    let cfg = bench::ServeBenchConfig {
+        jobs: args.get_parsed::<usize>("jobs")?.unwrap_or(defaults.jobs),
+        rate_hz: args.get_parsed::<f64>("rate")?.unwrap_or(defaults.rate_hz),
+        queue_cap: args.get_parsed::<usize>("queue-cap")?.unwrap_or(defaults.queue_cap),
+        seed,
+        topology: parse_topology(args)?,
+    };
+    anyhow::ensure!(cfg.jobs > 0, "--jobs must be positive");
+    anyhow::ensure!(
+        cfg.rate_hz.is_finite() && cfg.rate_hz > 0.0,
+        "--rate must be positive"
+    );
+    anyhow::ensure!(cfg.queue_cap > 0, "--queue-cap must be positive");
+    let (exhibits, json) = bench::serve_report(&cfg);
+    for e in exhibits {
+        println!("{}", if csv { e.render_csv() } else { e.render() });
+    }
+    let path = args.get_str("json", "BENCH_serve.json");
+    std::fs::write(path, json.to_pretty_string())
+        .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+    println!("{}wrote {path}", if csv { "# " } else { "" });
+    Ok(())
+}
+
 fn cmd_bench_qos(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
     let defaults = bench::QosBenchConfig::default();
     let cfg = bench::QosBenchConfig {
@@ -328,6 +373,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     if name == "qos" {
         return cmd_bench_qos(args, csv, seed);
     }
+    if name == "serve" {
+        return cmd_bench_serve(args, csv, seed);
+    }
     if name == "resilience" {
         return cmd_bench_resilience(args, csv, seed);
     }
@@ -340,7 +388,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     }
     print_exhibits(name, csv, seed).ok_or_else(|| {
         anyhow::anyhow!(
-            "unknown exhibit {name}; try fig3..fig10, fig8-async, table1..table3, cb-split, scale, fleet, qos, resilience, all"
+            "unknown exhibit {name}; try fig3..fig10, fig8-async, table1..table3, cb-split, scale, fleet, serve, qos, resilience, all"
         )
     })?;
     Ok(())
@@ -440,6 +488,151 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     println!("sim events    : {}", report.sim_events);
     if let Some(path) = args.flag("json") {
         std::fs::write(path, report.to_json().to_pretty_string())
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Parse `--arrivals poisson|trace` (with `--rate` / `--trace PATH`)
+/// into the service loop's arrival process.  A trace file holds one
+/// arrival offset in seconds per line; blank lines and `#` comments are
+/// skipped, and `sched::serve` validates ordering.
+fn parse_arrivals(args: &Args) -> anyhow::Result<sched::ArrivalSpec> {
+    match args.get_str("arrivals", "poisson") {
+        "poisson" => {
+            let rate_hz = args.get_parsed::<f64>("rate")?.unwrap_or(1.0);
+            anyhow::ensure!(
+                rate_hz.is_finite() && rate_hz > 0.0,
+                "--rate must be positive"
+            );
+            Ok(sched::ArrivalSpec::Poisson { rate_hz })
+        }
+        "trace" => {
+            let path = args
+                .flag("trace")
+                .ok_or_else(|| anyhow::anyhow!("--arrivals trace needs --trace PATH"))?;
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+            let times = text
+                .lines()
+                .map(str::trim)
+                .filter(|l| !l.is_empty() && !l.starts_with('#'))
+                .map(|l| {
+                    l.parse::<f64>()
+                        .map_err(|_| anyhow::anyhow!("{path}: bad arrival offset {l:?}"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            Ok(sched::ArrivalSpec::Trace { times })
+        }
+        other => anyhow::bail!("unknown arrival process {other}; try poisson or trace"),
+    }
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let defaults = sched::ServeConfig::default();
+    let jobs = args.get_parsed::<usize>("jobs")?.unwrap_or(defaults.jobs);
+    anyhow::ensure!(jobs > 0, "--jobs must be positive");
+    let seed = args.get_u64("seed", bench::DEFAULT_SEED);
+    let arrivals = parse_arrivals(args)?;
+    let policy = Policy::parse(args.get_str("policy", "backfill"))?;
+    let queue_cap = args.get_parsed::<usize>("queue-cap")?.unwrap_or(defaults.queue_cap);
+    let window_s = args.get_parsed::<f64>("window")?.unwrap_or(defaults.window_s);
+    let reserve_depth = args
+        .get_parsed::<usize>("reserve-depth")?
+        .unwrap_or(defaults.fleet.reserve_depth);
+    anyhow::ensure!(reserve_depth > 0, "--reserve-depth must be positive");
+    let qos = args.has("qos");
+    let threads = parse_threads(args)?;
+    let mspec = match parse_topology(args)? {
+        Some(name) => zoo::by_name(&name)?,
+        None => presets::deep_er(),
+    };
+    // --faults: the correlated schedule's horizon comes from the arrival
+    // process itself (expected Poisson horizon, or the last trace
+    // offset) — open-arrival mode needs no probe run.
+    let fault_plan = match args.get_parsed::<usize>("faults")? {
+        Some(k) => {
+            anyhow::ensure!(k > 0, "--faults must be positive");
+            let horizon = match &arrivals {
+                sched::ArrivalSpec::Poisson { rate_hz } => jobs as f64 / rate_hz,
+                sched::ArrivalSpec::Trace { times } => times.last().copied().unwrap_or(0.0),
+            };
+            anyhow::ensure!(horizon > 0.0, "--faults needs a positive arrival horizon");
+            let nodes = mspec.n_cluster + mspec.n_booster;
+            Some(FaultPlan::correlated(nodes, k, horizon, seed))
+        }
+        None => None,
+    };
+    let scfg = sched::ServeConfig {
+        fleet: FleetConfig {
+            policy,
+            seed,
+            qos,
+            threads,
+            fault_plan,
+            reserve_depth,
+            ..defaults.fleet.clone()
+        },
+        arrivals,
+        jobs,
+        queue_cap,
+        window_s,
+        ..defaults
+    };
+    let r = sched::serve_fleet_on(mspec, scfg)?;
+
+    println!(
+        "serve         : {} arrivals ({}{}), policy {}, topology {}, seed {seed}{}",
+        r.jobs_arrived,
+        r.arrivals,
+        match r.rate_hz {
+            Some(rate) => format!(" at {rate} Hz"),
+            None => String::new(),
+        },
+        r.policy.name(),
+        r.topology,
+        if r.qos { ", qos admission on" } else { "" }
+    );
+    println!(
+        "admission     : {} admitted, {} rejected ({:.2} %) at queue cap {}",
+        r.jobs_admitted,
+        r.jobs_rejected,
+        r.rejection_rate * 100.0,
+        r.queue_cap
+    );
+    println!(
+        "drain         : {} completed, horizon {}, makespan {}",
+        r.jobs_completed,
+        fmt_time(r.horizon_s),
+        fmt_time(r.makespan_s)
+    );
+    println!("utilization   : {:.1} %", r.utilization * 100.0);
+    println!("avg wait      : {}", fmt_time(r.avg_wait_s));
+    for c in &r.classes {
+        println!(
+            "class {} wait  : p50 {}, p99 {}, max {} ({} completed, {} rejected)",
+            c.class,
+            fmt_time(c.p50_wait_s),
+            fmt_time(c.p99_wait_s),
+            fmt_time(c.max_wait_s),
+            c.completed,
+            c.rejected
+        );
+    }
+    println!(
+        "failures      : {} on jobs, {} on idle nodes, {} requeues, {} migrations",
+        r.failures_injected, r.idle_failures, r.requeues, r.migrations
+    );
+    println!("qos grants    : {} still open after drain", r.qos_grants_open);
+    println!(
+        "windows       : {} x {} s (merged), sim events {}",
+        r.windows.len(),
+        r.window_s,
+        r.sim_events
+    );
+    if let Some(path) = args.flag("json") {
+        std::fs::write(path, r.to_json().to_pretty_string())
             .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
         println!("wrote {path}");
     }
@@ -601,6 +794,7 @@ fn main() -> anyhow::Result<()> {
         }
         Some("run") => cmd_run(&args),
         Some("fleet") => cmd_fleet(&args),
+        Some("serve") => cmd_serve(&args),
         Some("e2e") => cmd_e2e(&args),
         Some(other) => {
             eprintln!("unknown subcommand {other}\n{USAGE}");

@@ -159,6 +159,13 @@ impl Policy {
         self.grants.contains_key(&owner)
     }
 
+    /// Number of grants currently outstanding.  A drained fleet must
+    /// report 0 here — any residue is a refund leak (the service-mode
+    /// report surfaces this as `qos_grants_open`).
+    pub fn grant_count(&self) -> usize {
+        self.grants.len()
+    }
+
     /// Admit `demand` for `owner`: all-or-nothing.  Returns false (and
     /// charges nothing) when any resource lacks a budget or lacks
     /// headroom.  Panics if `owner` already holds a grant — release

@@ -30,8 +30,10 @@
 
 pub mod health;
 pub mod policy;
+pub mod profile;
+pub mod serve;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::apps::driver::{CkptBackendRef, JobExec};
 use crate::apps::{AppProfile, IterationJob, RunStats};
@@ -46,8 +48,10 @@ use crate::system::{presets, Machine, MachineSpec, NodeKind, NodeSpec};
 use crate::util::json::Json;
 use self::health::HealthMonitor;
 use self::policy::{NodeReq, QueuedReq, RunningRes};
+use self::profile::ProfileBook;
 pub use self::health::ResiliencePolicy;
 pub use self::policy::Policy;
+pub use self::serve::{serve_fleet, serve_fleet_on, ArrivalSpec, ServeConfig, ServeReport};
 
 /// How a fleet job protects itself against failures.
 #[derive(Debug, Clone)]
@@ -120,6 +124,28 @@ pub struct JobSpec {
 /// leans on.  `from_iter` estimates the *remaining* runtime of a
 /// partially executed (requeued) job.
 pub fn estimate_runtime(spec: &JobSpec, m: &MachineSpec, from_iter: usize) -> SimTime {
+    // x / 1.0 is bit-identical to x in IEEE arithmetic, so the healthy
+    // path through the scaled form reproduces the historical estimate
+    // exactly — fault-free runs keep their old planning inputs.
+    estimate_runtime_scaled(spec, m, from_iter, 1.0, 1.0)
+}
+
+/// [`estimate_runtime`] under degraded node capacity: `compute_scale`
+/// and `link_scale` are the victim allocation's *current* effective
+/// fractions of spec compute and NIC bandwidth (1.0 when healthy, e.g.
+/// 0.25 under a 4x straggler).  The compute term stretches by
+/// 1/compute_scale and the exchange term by 1/link_scale; the checkpoint
+/// term is left unscaled — it drains to the node-local device, which the
+/// fault taxonomy never degrades.  This is what the per-round est-end
+/// refresh feeds the backfill profile so reservations track degradation
+/// instead of planning against healthy-speed release times.
+pub fn estimate_runtime_scaled(
+    spec: &JobSpec,
+    m: &MachineSpec,
+    from_iter: usize,
+    compute_scale: f64,
+    link_scale: f64,
+) -> SimTime {
     let iters = spec.iterations.saturating_sub(from_iter) as f64;
     if iters == 0.0 {
         return 0.0;
@@ -159,10 +185,11 @@ pub fn estimate_runtime(spec: &JobSpec, m: &MachineSpec, from_iter: usize) -> Si
         }
     }
     let p = &spec.profile;
-    let t_compute = p.flops_per_iter_per_node / (p.cpu_efficiency.clamp(1e-3, 1.0) * peak);
+    let t_compute =
+        p.flops_per_iter_per_node / (p.cpu_efficiency.clamp(1e-3, 1.0) * peak) / compute_scale;
     let n_nodes = (spec.cluster_nodes + spec.booster_nodes) as f64;
     let t_exch = if p.halo_bytes > 0.0 && n_nodes > 1.0 {
-        2.0 * p.halo_bytes / nic_bw
+        2.0 * p.halo_bytes / nic_bw / link_scale
     } else {
         0.0
     };
@@ -235,6 +262,13 @@ struct JobState {
     held: Vec<usize>,
     bind_at: SimTime,
     est_end: SimTime,
+    /// Iteration count at the last completed-iteration boundary, and the
+    /// simulation time that boundary was crossed — the anchor the
+    /// per-round est-end refresh extrapolates from.  Anchoring at the
+    /// boundary (not `now`) keeps the refreshed estimate an upper bound
+    /// mid-iteration, which the backfill no-delay invariant leans on.
+    progress_iter: usize,
+    progress_at: SimTime,
     node_seconds: f64,
     open_seg: Option<usize>,
     /// Holds an admitted QoS grant (floors installed in the engine).
@@ -292,6 +326,19 @@ pub struct FleetConfig {
     /// How the fleet responds to degraded-mode precursors
     /// ([`health::ResiliencePolicy`]); irrelevant without a fault plan.
     pub resilience: ResiliencePolicy,
+    /// How many queued jobs each backfill planning round sees (and
+    /// reserves for).  `usize::MAX` (the default) plans the whole queue
+    /// in one round — the historical batch behavior, bit-identical.
+    /// Service mode sets a small window so per-round cost is bounded by
+    /// the window, not the 10^5-job queue; windowing is conservative
+    /// (beyond-window jobs hold no reservation but also cannot start, so
+    /// they delay nobody) and [`Scheduler::dispatch`] keeps planning
+    /// rounds going while they make progress.
+    pub reserve_depth: usize,
+    /// Record the per-allocation audit trail ([`AllocSegment`]).  On by
+    /// default (the oversubscription property tests read it); service
+    /// mode turns it off so memory stays bounded over 10^6 allocations.
+    pub track_allocations: bool,
 }
 
 /// Fraction of the backplane capacity grantable as QoS floors under
@@ -311,6 +358,8 @@ impl Default for FleetConfig {
             threads: 1,
             fault_plan: None,
             resilience: ResiliencePolicy::Reactive,
+            reserve_depth: usize::MAX,
+            track_allocations: true,
         }
     }
 }
@@ -479,7 +528,22 @@ pub struct Scheduler {
     m: Machine,
     cfg: FleetConfig,
     jobs: Vec<JobState>,
-    queue: Vec<usize>,
+    /// Queued job ids, ordered by `(!priority, id)` — the bitwise-not
+    /// sorts priority descending, ids ascending within a priority, which
+    /// is exactly the old sort_queue order.  A BTreeSet keeps admission,
+    /// start and requeue at O(log queue) each where the old Vec paid an
+    /// O(queue log queue) re-sort per round and an O(queue) retain per
+    /// start — fatal at service-mode queue depths.
+    queue: BTreeSet<(u32, usize)>,
+    /// Running job ids, so the ready-scan and the est-end refresh walk
+    /// O(running) entries, not every job ever submitted.
+    running: BTreeSet<usize>,
+    /// Maintained capacity profile (holds + per-round reservations) the
+    /// backfill planner runs on; [`policy::CapProfile`] is rebuilt from
+    /// scratch only as its debug-mode differential oracle.
+    book: ProfileBook,
+    /// Rolling busy-node-seconds windows; Some only in service mode.
+    serve_util: Option<serve::UtilWindows>,
     /// Time-ordered failure schedule and the cursor of the next due one.
     failures: Vec<Failure>,
     next_failure: usize,
@@ -540,7 +604,10 @@ impl Scheduler {
             m,
             cfg,
             jobs: Vec::new(),
-            queue: Vec::new(),
+            queue: BTreeSet::new(),
+            running: BTreeSet::new(),
+            book: ProfileBook::new(),
+            serve_util: None,
             failures,
             next_failure: 0,
             failures_injected: 0,
@@ -640,12 +707,15 @@ impl Scheduler {
             held: Vec::new(),
             bind_at: 0.0,
             est_end: 0.0,
+            progress_iter: 0,
+            progress_at: 0.0,
             node_seconds: 0.0,
             open_seg: None,
             granted: false,
             migrated: false,
         });
-        self.queue.push(id);
+        let key = self.queue_key(id);
+        self.queue.insert(key);
         Ok(id)
     }
 
@@ -660,39 +730,17 @@ impl Scheduler {
             // that ordering is what gives the proactive policy its window.
             self.process_due_faults();
             self.process_due_failures();
-            // The running job whose front op completed earliest (ties by
-            // job id) gets control; jobs at a boundary count as ready now.
-            let mut best: Option<(SimTime, usize)> = None;
-            for (id, j) in self.jobs.iter().enumerate() {
-                if j.status != JobStatus::Running {
-                    continue;
-                }
-                let t = match j.exec.front_op() {
-                    None => self.m.sim.now(),
-                    Some(op) => match self.m.sim.op_completion(&op) {
-                        Some(t) => t,
-                        None => continue,
-                    },
-                };
-                let better = match best {
-                    None => true,
-                    Some((bt, bid)) => t < bt || (t == bt && id < bid),
-                };
-                if better {
-                    best = Some((t, id));
-                }
-            }
-            if let Some((_, id)) = best {
+            if let Some(id) = self.ready_job() {
                 self.advance_job(id);
                 continue;
             }
-            if self.jobs.iter().all(|j| j.status != JobStatus::Running) {
+            if self.running.is_empty() {
                 if self.queue.is_empty() {
                     break;
                 }
                 self.dispatch();
                 assert!(
-                    self.jobs.iter().any(|j| j.status == JobStatus::Running),
+                    !self.running.is_empty(),
                     "scheduler stall: a queued job cannot be placed on an empty machine"
                 );
                 continue;
@@ -702,6 +750,31 @@ impl Scheduler {
             }
         }
         self.into_report(t0, events0)
+    }
+
+    /// The running job whose front op completed earliest (ties by job
+    /// id); jobs at a phase boundary count as ready now.  Walks the
+    /// running set, so the scan is O(running), not O(jobs ever seen).
+    fn ready_job(&mut self) -> Option<usize> {
+        let mut best: Option<(SimTime, usize)> = None;
+        for &id in &self.running {
+            let j = &self.jobs[id];
+            let t = match j.exec.front_op() {
+                None => self.m.sim.now(),
+                Some(op) => match self.m.sim.op_completion(&op) {
+                    Some(t) => t,
+                    None => continue,
+                },
+            };
+            let better = match best {
+                None => true,
+                Some((bt, bid)) => t < bt || (t == bt && id < bid),
+            };
+            if better {
+                best = Some((t, id));
+            }
+        }
+        best.map(|(_, id)| id)
     }
 
     /// Give one ready job control: settle its completed phase, issue the
@@ -714,6 +787,18 @@ impl Scheduler {
             exec.advance(&mut self.m, &mut bref);
             exec.is_done()
         };
+        {
+            // Anchor the progress clock at the last completed iteration
+            // so the est-end refresh only extrapolates genuinely
+            // remaining work (never the partially executed iteration).
+            let now = self.m.sim.now();
+            let job = &mut self.jobs[id];
+            let it = job.exec.current_iter();
+            if it != job.progress_iter {
+                job.progress_iter = it;
+                job.progress_at = now;
+            }
+        }
         if !done {
             return;
         }
@@ -722,9 +807,19 @@ impl Scheduler {
             let job = &mut self.jobs[id];
             job.status = JobStatus::Done;
             job.finished_at = Some(now);
-            job.node_seconds += job.held.len() as f64 * (now - job.bind_at);
+            let span_nodes = job.held.len();
+            job.node_seconds += span_nodes as f64 * (now - job.bind_at);
+            if let Some(w) = &mut self.serve_util {
+                w.add_span(job.bind_at, now, span_nodes);
+            }
+            // A finished job's checkpoint records are dead weight (nothing
+            // reads the backend after completion); dropping them keeps
+            // service-mode memory bounded over 10^6 jobs.
+            job.backend = CkptBackend::None;
             (std::mem::take(&mut job.held), job.open_seg.take())
         };
+        self.running.remove(&id);
+        self.book.hold_clear(id);
         if let Some(si) = seg {
             self.allocations[si].until = now;
         }
@@ -904,35 +999,98 @@ impl Scheduler {
             // rolled-back attempt's flows stop contending at kill time.
             let released = job.exec.unbind(&mut self.m);
             debug_assert_eq!(released, job.held);
-            job.node_seconds += job.held.len() as f64 * (now - job.bind_at);
+            let span_nodes = job.held.len();
+            job.node_seconds += span_nodes as f64 * (now - job.bind_at);
+            if let Some(w) = &mut self.serve_util {
+                w.add_span(job.bind_at, now, span_nodes);
+            }
             job.status = JobStatus::Queued;
             job.enqueued_at = now;
             job.requeues += 1;
             (std::mem::take(&mut job.held), job.open_seg.take())
         };
+        self.running.remove(&id);
+        self.book.hold_clear(id);
         if let Some(si) = seg {
             self.allocations[si].until = now;
         }
         self.m.release_nodes(&held, id as u64);
         self.release_grant(id);
-        self.queue.push(id);
+        let key = self.queue_key(id);
+        self.queue.insert(key);
         self.dispatch();
     }
 
-    /// Queue order: priority (descending), then submission id.
-    fn sort_queue(&mut self) {
-        let mut q = std::mem::take(&mut self.queue);
-        q.sort_by_key(|&id| (std::cmp::Reverse(self.jobs[id].spec.priority), id));
-        self.queue = q;
+    /// Queue order, encoded in the BTreeSet key: priority (descending —
+    /// the bitwise-not reverses the u32 order), then submission id.
+    fn queue_key(&self, id: usize) -> (u32, usize) {
+        (!self.jobs[id].spec.priority, id)
     }
 
-    /// Ask the policy which queued jobs start now, and start them.
-    fn dispatch(&mut self) {
-        if self.queue.is_empty() {
-            return;
+    /// Recompute every running job's estimated end from its progress
+    /// anchor and its held nodes' *current* compute/link scales, and
+    /// shift the corresponding profile holds (O(log n) each; unchanged
+    /// estimates are a comparison and no map touch).  This is the stale
+    /// est-end bugfix: before it, `est_end` was frozen at dispatch, so a
+    /// straggler or link degradation left backfill planning against
+    /// release times wrong by the slowdown factor — letting backfilled
+    /// jobs outlive the real release and delay the queue head.  Healthy
+    /// jobs reproduce their dispatch-time estimate bit-for-bit (the
+    /// scales are exactly 1.0 and x/1.0 is exact), with only the anchor
+    /// bookkeeping differing from the historical path.
+    fn refresh_est_ends(&mut self, now: SimTime) {
+        debug_assert!(now >= 0.0);
+        let ids: Vec<usize> = self.running.iter().copied().collect();
+        for id in ids {
+            let (cs, ls) = self.held_scales(id);
+            let j = &self.jobs[id];
+            let est = estimate_runtime_scaled(&j.spec, &self.m.spec, j.progress_iter, cs, ls);
+            let est_end = j.progress_at + est;
+            let req = NodeReq { cluster: j.spec.cluster_nodes, booster: j.spec.booster_nodes };
+            self.jobs[id].est_end = est_end;
+            self.book.hold_set(id, est_end, req);
         }
-        self.sort_queue();
+    }
+
+    /// Effective (compute, link) scale of job `id`'s held nodes: the
+    /// minimum across the allocation, since the slowest node paces a
+    /// bulk-synchronous iteration.  Healthy nodes report exactly 1.0.
+    /// The floor guards a dead-but-still-held node (capacity 0) from
+    /// producing an infinite estimate.
+    fn held_scales(&self, id: usize) -> (f64, f64) {
+        let mut cs = 1.0f64;
+        let mut ls = 1.0f64;
+        for &n in &self.jobs[id].held {
+            cs = cs.min(self.m.node_compute_scale(n));
+            ls = ls.min(self.m.node_link_scale(n));
+        }
+        (cs.max(1e-9), ls.max(1e-9))
+    }
+
+    /// Ask the policy which queued jobs start now, and start them.  With
+    /// a finite [`FleetConfig::reserve_depth`] each planning round only
+    /// sees the window at the head of the queue, so when a round makes
+    /// progress and jobs beyond the window exist, the next round gets a
+    /// chance at the jobs that just slid into view.  The batch default
+    /// (whole-queue window) runs exactly one round, as before.
+    fn dispatch(&mut self) {
+        loop {
+            let windowed = self.queue.len() > self.cfg.reserve_depth;
+            let started = self.dispatch_round();
+            if started == 0 || !windowed {
+                return;
+            }
+        }
+    }
+
+    /// One planning round over the maintained profile; returns how many
+    /// jobs actually started.
+    fn dispatch_round(&mut self) -> usize {
+        if self.queue.is_empty() {
+            return 0;
+        }
         let now = self.m.sim.now();
+        self.refresh_est_ends(now);
         let free = NodeReq {
             cluster: self.m.free_count(NodeKind::Cluster),
             booster: self.m.free_count(NodeKind::Booster),
@@ -940,7 +1098,8 @@ impl Scheduler {
         let queued: Vec<QueuedReq> = self
             .queue
             .iter()
-            .map(|&id| {
+            .take(self.cfg.reserve_depth.max(1))
+            .map(|&(_, id)| {
                 let j = &self.jobs[id];
                 QueuedReq {
                     id,
@@ -952,33 +1111,52 @@ impl Scheduler {
                 }
             })
             .collect();
-        let running: Vec<RunningRes> = self
-            .jobs
-            .iter()
-            .filter(|j| j.status == JobStatus::Running)
-            .map(|j| RunningRes {
-                req: NodeReq {
-                    cluster: j.spec.cluster_nodes,
-                    booster: j.spec.booster_nodes,
-                },
-                est_end: j.est_end.max(now),
-            })
-            .collect();
-        let starts = policy::plan_starts(self.cfg.policy, now, free, &queued, &running);
+        let starts =
+            profile::plan_starts_book(self.cfg.policy, now, free, &queued, &mut self.book);
+        // Differential oracle: every debug-build planning round is
+        // checked against a from-scratch CapProfile rebuild over the
+        // same inputs (skipped for big service windows, where the
+        // O(queue^2) rebuild would dominate the run).
+        #[cfg(debug_assertions)]
+        if queued.len() <= 256 {
+            let running: Vec<RunningRes> = self
+                .running
+                .iter()
+                .map(|&id| {
+                    let j = &self.jobs[id];
+                    RunningRes {
+                        req: NodeReq {
+                            cluster: j.spec.cluster_nodes,
+                            booster: j.spec.booster_nodes,
+                        },
+                        est_end: j.est_end.max(now),
+                    }
+                })
+                .collect();
+            let oracle = policy::plan_starts(self.cfg.policy, now, free, &queued, &running);
+            debug_assert_eq!(
+                starts, oracle,
+                "incremental profile diverged from the from-scratch oracle at t={now}"
+            );
+        }
         // QoS-budget FIFO: once an earlier-queued job's guarantee demand
         // is rejected for lack of budget, later *demanding* jobs must not
         // snatch the refunds out from under it (they would starve it —
         // the budget has no reservation profile the way nodes do).
         // Best-effort jobs charge nothing and may still start.
         let mut budget_blocked = false;
+        let mut started = 0;
         for id in starts {
             if budget_blocked && self.jobs[id].spec.qos.is_some() {
                 continue;
             }
-            if matches!(self.start_job(id, now), StartResult::NoGrant) {
-                budget_blocked = true;
+            match self.start_job(id, now) {
+                StartResult::Started => started += 1,
+                StartResult::NoGrant => budget_blocked = true,
+                StartResult::NoNodes => {}
             }
         }
+        started
     }
 
     /// Bind a planned start to concrete nodes.  A non-`Started` outcome
@@ -1008,25 +1186,29 @@ impl Scheduler {
                 return StartResult::NoNodes;
             }
         }
-        let est = estimate_runtime(&self.jobs[id].spec, &self.m.spec, self.jobs[id].exec.current_iter());
-        self.allocations.push(AllocSegment {
-            job: id,
-            nodes: nodes.clone(),
-            from: now,
-            until: f64::INFINITY,
-        });
-        let seg = self.allocations.len() - 1;
+        let seg = if self.cfg.track_allocations {
+            self.allocations.push(AllocSegment {
+                job: id,
+                nodes: nodes.clone(),
+                from: now,
+                until: f64::INFINITY,
+            });
+            Some(self.allocations.len() - 1)
+        } else {
+            None
+        };
         let job = &mut self.jobs[id];
         job.wait_time += now - job.enqueued_at;
         if job.first_start.is_none() {
             job.first_start = Some(now);
         }
         job.bind_at = now;
-        job.est_end = now + est;
         job.exec.bind(&self.m, nodes.clone());
         job.held = nodes;
         job.status = JobStatus::Running;
-        job.open_seg = Some(seg);
+        job.open_seg = seg;
+        job.progress_iter = job.exec.current_iter();
+        job.progress_at = now;
         if job.migrated {
             // Landed after a proactive evacuation: charge the
             // state-transfer restore on the new node set before resuming.
@@ -1035,7 +1217,20 @@ impl Scheduler {
             let mut bref = backend.as_backend_ref();
             exec.migrate_restore(&mut self.m, &mut bref);
         }
-        self.queue.retain(|&q| q != id);
+        let key = self.queue_key(id);
+        self.queue.remove(&key);
+        self.running.insert(id);
+        // Scale-aware initial estimate: a job landing on an
+        // already-degraded node plans against its real speed from the
+        // first round (healthy scales are exactly 1.0, reproducing the
+        // historical dispatch-time estimate bit-for-bit).
+        let (cs, ls) = self.held_scales(id);
+        let j = &self.jobs[id];
+        let est = estimate_runtime_scaled(&j.spec, &self.m.spec, j.progress_iter, cs, ls);
+        let est_end = now + est;
+        let req = NodeReq { cluster: j.spec.cluster_nodes, booster: j.spec.booster_nodes };
+        self.jobs[id].est_end = est_end;
+        self.book.hold_set(id, est_end, req);
         StartResult::Started
     }
 

@@ -56,7 +56,7 @@ pub struct NodeReq {
 }
 
 impl NodeReq {
-    fn fits(&self, free: NodeReq) -> bool {
+    pub(crate) fn fits(&self, free: NodeReq) -> bool {
         self.cluster <= free.cluster && self.booster <= free.booster
     }
 }
@@ -81,15 +81,21 @@ pub struct RunningRes {
 /// booster) node count from `pts[i].0` until the next breakpoint; the
 /// last segment extends to infinity.  Breakpoints only exist where
 /// capacity changes (releases and reservation edges).
+///
+/// Rebuilt from scratch every call — O(queue²) per planning round.
+/// Production dispatch runs on [`super::profile::ProfileBook`] instead;
+/// this structure is retained as the **differential oracle** the
+/// incremental profile is checked against (`rust/tests/prop_profile.rs`
+/// plus the debug assert in the scheduler's dispatch round).
 #[derive(Debug)]
-struct CapProfile {
+pub struct CapProfile {
     pts: Vec<(SimTime, isize, isize)>,
 }
 
 impl CapProfile {
     /// Profile seen at `now`: `free` nodes immediately, plus each running
     /// job's nodes returning at its estimated end.
-    fn new(now: SimTime, free: NodeReq, running: &[RunningRes]) -> Self {
+    pub fn new(now: SimTime, free: NodeReq, running: &[RunningRes]) -> Self {
         let mut p = Self { pts: vec![(now, free.cluster as isize, free.booster as isize)] };
         for r in running {
             p.add(r.est_end.max(now), r.req.cluster as isize, r.req.booster as isize);
@@ -129,7 +135,10 @@ impl CapProfile {
     }
 
     /// Does `req` fit in every segment overlapping `[t0, t0 + dur)`?
-    fn fits_window(&self, t0: SimTime, dur: SimTime, req: NodeReq) -> bool {
+    /// Half-open: a breakpoint at exactly `t0 + dur` is outside the
+    /// window (the `>= t1` break below), so a reservation ending at `t`
+    /// never conflicts with one starting at `t`.
+    pub fn fits_window(&self, t0: SimTime, dur: SimTime, req: NodeReq) -> bool {
         let t1 = t0 + dur;
         let mut i = self.seg_at(t0);
         loop {
@@ -147,7 +156,7 @@ impl CapProfile {
     /// Earliest `t >= now` at which `req` fits for `dur` — always exists
     /// because the final segment carries every release and reservation
     /// returned (callers validate that `req` fits the whole machine).
-    fn earliest_fit(&self, now: SimTime, dur: SimTime, req: NodeReq) -> SimTime {
+    pub fn earliest_fit(&self, now: SimTime, dur: SimTime, req: NodeReq) -> SimTime {
         if self.fits_window(now, dur, req) {
             return now;
         }
@@ -160,7 +169,7 @@ impl CapProfile {
     }
 
     /// Carve a reservation `[t0, t0 + dur)` out of the profile.
-    fn reserve(&mut self, t0: SimTime, dur: SimTime, req: NodeReq) {
+    pub fn reserve(&mut self, t0: SimTime, dur: SimTime, req: NodeReq) {
         self.add(t0, -(req.cluster as isize), -(req.booster as isize));
         self.add(t0 + dur, req.cluster as isize, req.booster as isize);
     }
@@ -309,6 +318,45 @@ mod tests {
         for p in Policy::ALL {
             assert_eq!(plan_starts(p, 0.0, req(16, 8), &queue, &[]), vec![0, 1]);
         }
+    }
+
+    #[test]
+    fn boundary_back_to_back_reservations_do_not_conflict() {
+        // Half-open [t0, t0+dur): a full-machine reservation over [0, 5)
+        // and a second over [5, 10) coexist; the shared breakpoint t=5
+        // belongs to the second window only.
+        let mut p = CapProfile::new(0.0, req(4, 0), &[]);
+        p.reserve(0.0, 5.0, req(4, 0));
+        assert!(
+            p.fits_window(5.0, 5.0, req(4, 0)),
+            "a window starting exactly where the previous one ends must fit"
+        );
+        p.reserve(5.0, 5.0, req(4, 0));
+        assert!(!p.fits_window(0.0, 1.0, req(1, 0)));
+        assert!(!p.fits_window(9.0, 1.0, req(1, 0)));
+        assert!(p.fits_window(10.0, 100.0, req(4, 0)));
+    }
+
+    #[test]
+    fn boundary_earliest_fit_returns_the_shared_breakpoint() {
+        // One running job releases the whole machine at t=5; the earliest
+        // fit for a full-machine request is exactly the release instant,
+        // bit-for-bit — not 5 + epsilon, not the next breakpoint.
+        let running = [RunningRes { req: req(4, 0), est_end: 5.0 }];
+        let p = CapProfile::new(0.0, req(0, 0), &running);
+        let t = p.earliest_fit(0.0, 3.0, req(4, 0));
+        assert_eq!(t.to_bits(), 5.0f64.to_bits());
+    }
+
+    #[test]
+    fn boundary_window_ignores_a_capacity_drop_at_its_end() {
+        // Free machine now, a reservation starting at t=5: a window
+        // [0, 5) must fit even though capacity vanishes at its endpoint.
+        let mut p = CapProfile::new(0.0, req(4, 0), &[]);
+        p.reserve(5.0, 10.0, req(4, 0));
+        assert!(p.fits_window(0.0, 5.0, req(4, 0)));
+        assert_eq!(p.earliest_fit(0.0, 5.0, req(4, 0)), 0.0);
+        assert!(!p.fits_window(0.0, 5.0 + 1e-9, req(4, 0)));
     }
 
     #[test]

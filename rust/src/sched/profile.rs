@@ -1,0 +1,404 @@
+//! Incremental capacity profile: the maintained ordered structure behind
+//! conservative backfill at service scale (DESIGN.md §16).
+//!
+//! [`super::policy::CapProfile`] rebuilds a step profile from scratch
+//! every dispatch round and scans it linearly, so one round costs
+//! O(queue²)–O(queue³).  Fine for an 8-job batch; fatal for an open
+//! arrival stream with 10^5–10^6 jobs.  [`IncProfile`] stores the same
+//! step profile as a BTreeMap of capacity **deltas** keyed by time, so a
+//! reservation insert/remove/shift is two O(log n) map updates, and
+//! `earliest_fit` is one forward sweep with running prefix sums.
+//!
+//! [`ProfileBook`] wraps the delta map with the bookkeeping the
+//! scheduler needs across rounds: persistent *holds* (running jobs'
+//! estimated releases, updated on start/finish/requeue/migration and on
+//! every est-end refresh) and per-round *reservations* (carved in queue
+//! order during planning, cleared at the next round's start).
+//!
+//! **Equivalence with the from-scratch rebuild** (the differential
+//! oracle `rust/tests/prop_profile.rs` checks): both structures answer
+//! `earliest_fit` with the earliest `t >= now` whose window `[t, t+dur)`
+//! clears every overlapping segment.  The from-scratch scan enumerates
+//! candidates {now} ∪ {breakpoints}; the sweep advances a candidate to
+//! the end of every insufficient segment.  Any fitting start's
+//! preceding capacity-change point also fits (segments between them are
+//! at least as available), so the earliest fit always lies on `now` or
+//! a breakpoint where capacity actually changes — zero-delta
+//! breakpoints (which the from-scratch profile keeps and the delta map
+//! drops) can never be the unique answer.  Overdue holds (`est_end <=
+//! now`) fold into the sweep's base availability, mirroring the
+//! `est_end.max(now)` clamp in [`super::policy::CapProfile::new`].
+//! Windows are half-open `[t0, t0+dur)` in both (pinned by the boundary
+//! tests here and in `policy.rs`): a reservation ending at `t` and one
+//! starting at `t` never conflict.
+
+use std::collections::BTreeMap;
+use std::ops::Bound;
+
+use crate::sim::SimTime;
+
+use super::policy::{NodeReq, Policy, QueuedReq};
+
+/// Map a simulation time to a BTreeMap key whose `u64` order matches
+/// `f64` order.  Valid for non-negative finite times only — which every
+/// release estimate and reservation edge is (asserted).  `-0.0` is
+/// normalised so it can never split the `t == 0.0` bucket.
+fn key(t: SimTime) -> u64 {
+    debug_assert!(t.is_finite() && t >= 0.0, "profile time {t} outside [0, inf)");
+    if t == 0.0 { 0.0f64.to_bits() } else { t.to_bits() }
+}
+
+/// Step-wise capacity profile stored as per-instant capacity *deltas*:
+/// `deltas[t] = (dc, db)` means the available (cluster, booster) count
+/// changes by that much at time `t`.  Absolute availability at any time
+/// is a base value plus the prefix sum of deltas — which is what the
+/// query sweeps compute.  Entries whose delta cancels to (0, 0) are
+/// removed, so the map size is bounded by live holds + reservations.
+#[derive(Debug, Default, Clone)]
+pub struct IncProfile {
+    deltas: BTreeMap<u64, (i64, i64)>,
+}
+
+impl IncProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of live breakpoints (diagnostics / tests).
+    pub fn len(&self) -> usize {
+        self.deltas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.deltas.is_empty()
+    }
+
+    /// Add a capacity delta at `t`; exact integer arithmetic, so an
+    /// insert followed by its inverse leaves no residue.
+    pub fn add_delta(&mut self, t: SimTime, dc: i64, db: i64) {
+        let e = self.deltas.entry(key(t)).or_insert((0, 0));
+        e.0 += dc;
+        e.1 += db;
+        if *e == (0, 0) {
+            self.deltas.remove(&key(t));
+        }
+    }
+
+    /// Carve a reservation `[t0, t0 + dur)`: capacity drops by `req` at
+    /// `t0` and returns at `t0 + dur`.  O(log n).
+    pub fn reserve(&mut self, t0: SimTime, dur: SimTime, req: NodeReq) {
+        self.add_delta(t0, -(req.cluster as i64), -(req.booster as i64));
+        self.add_delta(t0 + dur, req.cluster as i64, req.booster as i64);
+    }
+
+    /// Exact inverse of [`IncProfile::reserve`] with the same arguments.
+    pub fn unreserve(&mut self, t0: SimTime, dur: SimTime, req: NodeReq) {
+        self.add_delta(t0, req.cluster as i64, req.booster as i64);
+        self.add_delta(t0 + dur, -(req.cluster as i64), -(req.booster as i64));
+    }
+
+    /// Availability at `now`: `free` plus every delta at `t <= now`.
+    /// Folding past deltas into the base is what clamps overdue holds to
+    /// "released now", mirroring the from-scratch profile's
+    /// `est_end.max(now)`.
+    fn base_avail(&self, now: SimTime, free: NodeReq) -> (i64, i64) {
+        let mut c = free.cluster as i64;
+        let mut b = free.booster as i64;
+        for (_, &(dc, db)) in self.deltas.range(..=key(now)) {
+            c += dc;
+            b += db;
+        }
+        (c, b)
+    }
+
+    /// Does `req` fit in every segment overlapping `[t0, t0 + dur)`?
+    /// Half-open: a capacity drop at exactly `t0 + dur` is ignored.
+    /// `t0 >= now` required; availability is evaluated relative to
+    /// (`now`, `free`).
+    pub fn fits_window(
+        &self,
+        now: SimTime,
+        free: NodeReq,
+        t0: SimTime,
+        dur: SimTime,
+        req: NodeReq,
+    ) -> bool {
+        debug_assert!(t0 >= now, "window start {t0} precedes now {now}");
+        let (rc, rb) = (req.cluster as i64, req.booster as i64);
+        let (mut c, mut b) = self.base_avail(now, free);
+        for (_, &(dc, db)) in self
+            .deltas
+            .range((Bound::Excluded(key(now)), Bound::Included(key(t0))))
+        {
+            c += dc;
+            b += db;
+        }
+        if c < rc || b < rb {
+            return false;
+        }
+        let t1 = t0 + dur;
+        for (&k, &(dc, db)) in self.deltas.range((Bound::Excluded(key(t0)), Bound::Unbounded)) {
+            if f64::from_bits(k) >= t1 {
+                return true;
+            }
+            c += dc;
+            b += db;
+            if c < rc || b < rb {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Earliest `t >= now` at which `req` fits for `dur`: one forward
+    /// sweep.  The candidate starts at `now` and advances to the end of
+    /// every segment that cannot host the window; once the sweep is a
+    /// full window past the candidate (or runs out of breakpoints) the
+    /// candidate is the answer.  Panics if the request never fits —
+    /// callers validate requests against whole-machine capacity at
+    /// submit, and every hold/reservation returns its nodes.
+    pub fn earliest_fit(&self, now: SimTime, free: NodeReq, dur: SimTime, req: NodeReq) -> SimTime {
+        let (rc, rb) = (req.cluster as i64, req.booster as i64);
+        let (mut c, mut b) = self.base_avail(now, free);
+        let mut cand = now;
+        for (&k, &(dc, db)) in self.deltas.range((Bound::Excluded(key(now)), Bound::Unbounded)) {
+            let t = f64::from_bits(k);
+            if c < rc || b < rb {
+                cand = t; // segment ending at t cannot overlap the window
+            } else if t >= cand + dur {
+                return cand; // window cleared every segment it touches
+            }
+            c += dc;
+            b += db;
+        }
+        assert!(
+            c >= rc && b >= rb,
+            "request exceeds total machine capacity (validated at submit)"
+        );
+        cand
+    }
+}
+
+/// The scheduler-owned profile state that survives across dispatch
+/// rounds: the delta map, the per-running-job holds feeding it, and the
+/// reservations carved during the current planning round.
+#[derive(Debug, Default)]
+pub struct ProfileBook {
+    prof: IncProfile,
+    /// Running job id → (estimated release time, held node counts).
+    /// Exactly one `+req` delta per entry lives in the profile.
+    holds: BTreeMap<usize, (SimTime, NodeReq)>,
+    /// Reservations carved by the current round's planning, undone by
+    /// the next [`ProfileBook::begin_round`].
+    round: Vec<(SimTime, SimTime, NodeReq)>,
+}
+
+impl ProfileBook {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install or shift job `id`'s estimated release.  O(log n); a
+    /// no-op when nothing changed, so the per-round refresh of
+    /// unchanged jobs costs only the comparison.
+    pub fn hold_set(&mut self, id: usize, est_end: SimTime, req: NodeReq) {
+        if let Some(&(old_t, old_r)) = self.holds.get(&id) {
+            if old_t == est_end && old_r == req {
+                return;
+            }
+            self.prof
+                .add_delta(old_t, -(old_r.cluster as i64), -(old_r.booster as i64));
+        }
+        self.prof
+            .add_delta(est_end, req.cluster as i64, req.booster as i64);
+        self.holds.insert(id, (est_end, req));
+    }
+
+    /// Remove job `id`'s hold (finish, requeue, migration).  No-op when
+    /// no hold is on record.
+    pub fn hold_clear(&mut self, id: usize) {
+        if let Some((t, r)) = self.holds.remove(&id) {
+            self.prof
+                .add_delta(t, -(r.cluster as i64), -(r.booster as i64));
+        }
+    }
+
+    /// Live holds (tests / diagnostics).
+    pub fn hold_count(&self) -> usize {
+        self.holds.len()
+    }
+
+    /// Undo the previous round's reservations.  Every planning round
+    /// must begin here so queries never see stale queue reservations.
+    pub fn begin_round(&mut self) {
+        let round = std::mem::take(&mut self.round);
+        for (t0, dur, req) in round {
+            self.prof.unreserve(t0, dur, req);
+        }
+    }
+
+    /// Carve a reservation for the current round.
+    pub fn reserve(&mut self, t0: SimTime, dur: SimTime, req: NodeReq) {
+        self.prof.reserve(t0, dur, req);
+        self.round.push((t0, dur, req));
+    }
+
+    pub fn earliest_fit(&self, now: SimTime, free: NodeReq, dur: SimTime, req: NodeReq) -> SimTime {
+        self.prof.earliest_fit(now, free, dur, req)
+    }
+
+    pub fn fits_window(
+        &self,
+        now: SimTime,
+        free: NodeReq,
+        t0: SimTime,
+        dur: SimTime,
+        req: NodeReq,
+    ) -> bool {
+        self.prof.fits_window(now, free, t0, dur, req)
+    }
+}
+
+/// [`super::policy::plan_starts`] over the maintained book instead of a
+/// from-scratch rebuild.  The caller keeps the book's holds in sync with
+/// the running set (the scheduler refreshes them every dispatch round);
+/// this function owns the round reservations.  Output is identical to
+/// the from-scratch planner given the same inputs — the property the
+/// differential oracle pins.
+pub fn plan_starts_book(
+    policy: Policy,
+    now: SimTime,
+    free: NodeReq,
+    queue: &[QueuedReq],
+    book: &mut ProfileBook,
+) -> Vec<usize> {
+    match policy {
+        Policy::Fcfs => {
+            let mut avail = free;
+            let mut starts = Vec::new();
+            for q in queue {
+                if !q.req.fits(avail) {
+                    break; // head reservation: nobody overtakes
+                }
+                avail.cluster -= q.req.cluster;
+                avail.booster -= q.req.booster;
+                starts.push(q.id);
+            }
+            starts
+        }
+        Policy::Backfill => {
+            book.begin_round();
+            let mut starts = Vec::new();
+            for q in queue {
+                let t = book.earliest_fit(now, free, q.est, q.req);
+                book.reserve(t, q.est, q.req);
+                if t <= now {
+                    starts.push(q.id);
+                }
+            }
+            starts
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(c: usize, b: usize) -> NodeReq {
+        NodeReq { cluster: c, booster: b }
+    }
+
+    #[test]
+    fn boundary_reservation_ending_at_t_does_not_conflict_with_one_starting_at_t() {
+        // Satellite: half-open [t0, t0+dur) windows.  A full-machine
+        // reservation over [0, 5) and another over [5, 10) coexist; the
+        // shared breakpoint t=5 belongs to the second one only.
+        let mut p = IncProfile::new();
+        p.reserve(0.0, 5.0, req(4, 0));
+        assert!(
+            p.fits_window(0.0, req(4, 0), 5.0, 5.0, req(4, 0)),
+            "a window starting exactly at a release breakpoint must fit"
+        );
+        assert_eq!(p.earliest_fit(0.0, req(4, 0), 5.0, req(4, 0)), 5.0);
+        p.reserve(5.0, 5.0, req(4, 0));
+        // Both reservations live: nothing fits before 10, everything at 10.
+        assert_eq!(p.earliest_fit(0.0, req(4, 0), 1.0, req(1, 0)), 10.0);
+        assert!(p.fits_window(0.0, req(4, 0), 10.0, 100.0, req(4, 0)));
+    }
+
+    #[test]
+    fn earliest_fit_returns_the_shared_breakpoint() {
+        // A hold releasing 4 nodes at t=5 on an otherwise empty profile:
+        // the earliest fit for those 4 nodes is exactly 5.0, not 5+eps.
+        let mut p = IncProfile::new();
+        p.add_delta(5.0, 4, 0); // running job's estimated release
+        let t = p.earliest_fit(0.0, req(0, 0), 3.0, req(4, 0));
+        assert_eq!(t.to_bits(), 5.0f64.to_bits());
+    }
+
+    #[test]
+    fn overdue_holds_fold_into_the_base_availability() {
+        // A release estimated at t=3 queried at now=10 counts as free
+        // immediately — the est_end.max(now) clamp, delta-map style.
+        let mut p = IncProfile::new();
+        p.add_delta(3.0, 4, 0);
+        assert_eq!(p.earliest_fit(10.0, req(0, 0), 2.0, req(4, 0)), 10.0);
+        assert!(p.fits_window(10.0, req(0, 0), 10.0, 2.0, req(4, 0)));
+    }
+
+    #[test]
+    fn unreserve_leaves_no_residue() {
+        let mut p = IncProfile::new();
+        p.reserve(2.0, 3.0, req(3, 1));
+        p.reserve(2.0, 3.0, req(1, 0));
+        p.unreserve(2.0, 3.0, req(3, 1));
+        p.unreserve(2.0, 3.0, req(1, 0));
+        assert!(p.is_empty(), "exact integer deltas must cancel to nothing");
+    }
+
+    #[test]
+    fn zero_duration_reservations_are_inert() {
+        let mut p = IncProfile::new();
+        p.reserve(4.0, 0.0, req(2, 0));
+        assert!(p.is_empty());
+        assert_eq!(p.earliest_fit(0.0, req(2, 0), 1.0, req(2, 0)), 0.0);
+    }
+
+    #[test]
+    fn book_round_reservations_are_cleared_and_holds_persist() {
+        let mut book = ProfileBook::new();
+        book.hold_set(7, 10.0, req(4, 0));
+        let queue = [QueuedReq { id: 0, req: req(4, 0), est: 3.0 }];
+        // Free 0 now; the hold releases 4 at t=10 — reservation lands there.
+        let starts = plan_starts_book(Policy::Backfill, 0.0, req(0, 0), &queue, &mut book);
+        assert!(starts.is_empty());
+        // Next round at t=10: the hold is gone (job finished), the old
+        // round reservation must not linger.
+        book.hold_clear(7);
+        let starts = plan_starts_book(Policy::Backfill, 10.0, req(4, 0), &queue, &mut book);
+        assert_eq!(starts, vec![0]);
+        assert_eq!(book.hold_count(), 0);
+    }
+
+    #[test]
+    fn hold_shift_moves_the_release() {
+        let mut book = ProfileBook::new();
+        book.hold_set(1, 10.0, req(4, 0));
+        assert_eq!(book.earliest_fit(0.0, req(0, 0), 2.0, req(4, 0)), 10.0);
+        // Degradation stretched the estimate: shift the hold.
+        book.hold_set(1, 40.0, req(4, 0));
+        assert_eq!(book.earliest_fit(0.0, req(0, 0), 2.0, req(4, 0)), 40.0);
+        // And back (revert): no residue from the shifts.
+        book.hold_set(1, 10.0, req(4, 0));
+        assert_eq!(book.earliest_fit(0.0, req(0, 0), 2.0, req(4, 0)), 10.0);
+    }
+
+    #[test]
+    fn negative_zero_times_normalise() {
+        let mut p = IncProfile::new();
+        p.add_delta(-0.0, 2, 0);
+        p.add_delta(0.0, -2, 0);
+        assert!(p.is_empty(), "-0.0 and 0.0 must hit the same breakpoint");
+    }
+}

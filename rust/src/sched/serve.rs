@@ -1,0 +1,676 @@
+//! Service mode: an open-arrival fleet at production scale (DESIGN.md
+//! §16).
+//!
+//! The batch fleet ([`super::run_fleet`]) validates co-scheduling by
+//! draining a fixed job list — but DEEP-ER's stack was exercised by
+//! real codes *arriving continuously* on a shared machine.  `repro
+//! serve` reproduces that regime: a Poisson or trace-driven arrival
+//! process feeds 10^5–10^6 synthetic jobs through rolling admission (a
+//! bounded queue; QoS guarantee budgets still gate dispatch exactly as
+//! in batch mode), and the report measures steady-state SLOs — per-class
+//! queue-wait percentiles over rolling time windows, utilization, and
+//! the rejection rate — rather than closed-batch makespan.
+//!
+//! Determinism: arrivals come from a seeded [`SplitMix64`] stream (or a
+//! validated trace), the loop interleaves arrivals with engine events by
+//! racing [`Sim::next_event_time`] against the next arrival timestamp,
+//! and the report serializes through the same sorted-key JSON writer as
+//! every other exhibit — same seed, byte-identical `BENCH_serve.json`.
+//!
+//! [`Sim::next_event_time`]: crate::sim::Sim::next_event_time
+//! [`SplitMix64`]: crate::sim::rng::SplitMix64
+
+use std::collections::BTreeMap;
+
+use crate::metrics;
+use crate::sim::rng::SplitMix64;
+use crate::sim::SimTime;
+use crate::system::{presets, Machine, MachineSpec};
+use crate::util::json::Json;
+
+use super::{synthetic_jobs, FleetConfig, Policy, Scheduler};
+
+/// The arrival process driving service mode.
+#[derive(Debug, Clone)]
+pub enum ArrivalSpec {
+    /// Poisson process: i.i.d. exponential inter-arrival gaps at
+    /// `rate_hz` arrivals per second.
+    Poisson { rate_hz: f64 },
+    /// Trace-driven: explicit arrival offsets in seconds from run start;
+    /// must be finite, non-negative and non-decreasing.
+    Trace { times: Vec<SimTime> },
+}
+
+impl ArrivalSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalSpec::Poisson { .. } => "poisson",
+            ArrivalSpec::Trace { .. } => "trace",
+        }
+    }
+
+    pub fn rate_hz(&self) -> Option<f64> {
+        match self {
+            ArrivalSpec::Poisson { rate_hz } => Some(*rate_hz),
+            ArrivalSpec::Trace { .. } => None,
+        }
+    }
+}
+
+/// Materialize the first `n` arrival offsets of `spec` (seconds from run
+/// start, non-decreasing).  A trace shorter than `n` yields what it has.
+pub fn arrival_times(spec: &ArrivalSpec, n: usize, seed: u64) -> crate::Result<Vec<SimTime>> {
+    anyhow::ensure!(n > 0, "service mode needs at least one arrival");
+    match spec {
+        ArrivalSpec::Poisson { rate_hz } => {
+            anyhow::ensure!(
+                rate_hz.is_finite() && *rate_hz > 0.0,
+                "poisson arrival rate must be positive (got {rate_hz})"
+            );
+            let mut rng = SplitMix64::new(seed ^ 0x5EED_A221);
+            let mean = 1.0 / rate_hz;
+            let mut t = 0.0;
+            Ok((0..n)
+                .map(|_| {
+                    t += rng.next_exp(mean);
+                    t
+                })
+                .collect())
+        }
+        ArrivalSpec::Trace { times } => {
+            let mut out = times.clone();
+            out.truncate(n);
+            anyhow::ensure!(!out.is_empty(), "arrival trace is empty");
+            let mut prev = 0.0;
+            for &t in &out {
+                anyhow::ensure!(
+                    t.is_finite() && t >= prev,
+                    "trace arrivals must be finite, non-negative and sorted (got {t} after {prev})"
+                );
+                prev = t;
+            }
+            Ok(out)
+        }
+    }
+}
+
+/// Service-mode configuration on top of the fleet config.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub fleet: FleetConfig,
+    pub arrivals: ArrivalSpec,
+    /// How many arrivals to draw before closing the door (each is then
+    /// admitted or rejected; admitted jobs always run to completion).
+    pub jobs: usize,
+    /// Admission bound: an arrival finding this many jobs already queued
+    /// is rejected (counted per class in the report).
+    pub queue_cap: usize,
+    /// Rolling SLO window width, seconds.
+    pub window_s: f64,
+    /// Report-size bound: raw windows are merged into at most this many
+    /// groups before serialization (percentiles recomputed over the
+    /// merged samples, never averaged from per-window percentiles).
+    pub max_windows: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            fleet: FleetConfig {
+                policy: Policy::Backfill,
+                reserve_depth: 32,
+                track_allocations: false,
+                ..FleetConfig::default()
+            },
+            arrivals: ArrivalSpec::Poisson { rate_hz: 0.05 },
+            jobs: 2000,
+            queue_cap: 1024,
+            window_s: 600.0,
+            max_windows: 64,
+        }
+    }
+}
+
+/// Busy node-seconds bucketed into fixed windows, fed incrementally as
+/// jobs release nodes — so service-mode utilization needs no post-hoc
+/// allocation log (which is exactly the memory the mode cannot afford).
+#[derive(Debug)]
+pub(super) struct UtilWindows {
+    window_s: f64,
+    busy: Vec<f64>,
+}
+
+impl UtilWindows {
+    fn new(window_s: f64) -> Self {
+        Self { window_s, busy: Vec::new() }
+    }
+
+    /// Credit `nodes` busy nodes over `[from, until)` to the windows the
+    /// span crosses.
+    pub(super) fn add_span(&mut self, from: SimTime, until: SimTime, nodes: usize) {
+        if !(until > from) || nodes == 0 {
+            return;
+        }
+        let w = self.window_s;
+        let last = (until / w) as usize;
+        if self.busy.len() <= last {
+            self.busy.resize(last + 1, 0.0);
+        }
+        let mut i = (from / w) as usize;
+        let mut t = from;
+        while t < until {
+            let end = ((i + 1) as f64 * w).min(until);
+            if end <= t {
+                // Degenerate float spacing (window edge indistinguishable
+                // from t): credit the remainder here and stop.
+                self.busy[i.min(last)] += nodes as f64 * (until - t);
+                break;
+            }
+            self.busy[i] += nodes as f64 * (end - t);
+            t = end;
+            i += 1;
+        }
+    }
+}
+
+/// Per-class steady-state outcome (class = `min(priority, 2)`, so the
+/// synthetic workload's three priority levels map onto three classes).
+#[derive(Debug, Clone)]
+pub struct ClassReport {
+    pub class: u32,
+    pub arrived: usize,
+    pub rejected: usize,
+    pub completed: usize,
+    pub p50_wait_s: f64,
+    pub p99_wait_s: f64,
+    pub max_wait_s: f64,
+}
+
+/// One (possibly merged) rolling window in the report.
+#[derive(Debug, Clone)]
+pub struct WindowReport {
+    pub t0_s: f64,
+    pub t1_s: f64,
+    pub arrivals: usize,
+    pub rejected: usize,
+    /// Busy node-seconds over (total nodes x window span); the final
+    /// window's span is clipped to the makespan.
+    pub utilization: f64,
+    /// Per-class p99 queue wait of the jobs whose first start fell in
+    /// this window; None when the class saw no starts here.
+    pub p99_wait_s: [Option<f64>; 3],
+}
+
+/// Outcome of one service-mode run.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub policy: Policy,
+    pub seed: u64,
+    pub topology: String,
+    pub arrivals: String,
+    pub rate_hz: Option<f64>,
+    pub jobs_arrived: usize,
+    pub jobs_admitted: usize,
+    pub jobs_rejected: usize,
+    pub jobs_completed: usize,
+    pub queue_cap: usize,
+    pub window_s: f64,
+    pub reserve_depth: usize,
+    pub qos: bool,
+    /// Last arrival offset (the open-arrival horizon).
+    pub horizon_s: f64,
+    /// Run-start to last-drain span.
+    pub makespan_s: f64,
+    pub utilization: f64,
+    pub avg_wait_s: f64,
+    pub rejection_rate: f64,
+    pub classes: Vec<ClassReport>,
+    pub windows: Vec<WindowReport>,
+    pub failures_injected: usize,
+    pub idle_failures: usize,
+    pub requeues: usize,
+    pub migrations: usize,
+    pub flows_cancelled: usize,
+    pub sim_events: u64,
+    /// QoS grants still outstanding after the drain — must be 0 (a
+    /// refund-leak tripwire, surfaced rather than asserted so the
+    /// artifact records it).
+    pub qos_grants_open: usize,
+}
+
+impl ServeReport {
+    /// Deterministic JSON (sorted keys, shortest-round-trip floats):
+    /// byte-identical across same-seed runs — the acceptance property.
+    pub fn to_json(&self) -> Json {
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".into(), Json::Str("serve".into()));
+        doc.insert("schema_version".into(), Json::Num(1.0));
+        doc.insert("policy".into(), Json::Str(self.policy.name().into()));
+        doc.insert("seed".into(), Json::Num(self.seed as f64));
+        doc.insert("topology".into(), Json::Str(self.topology.clone()));
+        doc.insert("arrivals".into(), Json::Str(self.arrivals.clone()));
+        doc.insert("rate_hz".into(), self.rate_hz.map(Json::Num).unwrap_or(Json::Null));
+        doc.insert("jobs_arrived".into(), Json::Num(self.jobs_arrived as f64));
+        doc.insert("jobs_admitted".into(), Json::Num(self.jobs_admitted as f64));
+        doc.insert("jobs_rejected".into(), Json::Num(self.jobs_rejected as f64));
+        doc.insert("jobs_completed".into(), Json::Num(self.jobs_completed as f64));
+        doc.insert("queue_cap".into(), Json::Num(self.queue_cap as f64));
+        doc.insert("window_s".into(), Json::Num(self.window_s));
+        doc.insert(
+            "reserve_depth".into(),
+            if self.reserve_depth == usize::MAX {
+                Json::Null
+            } else {
+                Json::Num(self.reserve_depth as f64)
+            },
+        );
+        doc.insert("qos".into(), Json::Bool(self.qos));
+        doc.insert("horizon_s".into(), Json::Num(self.horizon_s));
+        doc.insert("makespan_s".into(), Json::Num(self.makespan_s));
+        doc.insert("utilization".into(), Json::Num(self.utilization));
+        doc.insert("avg_wait_s".into(), Json::Num(self.avg_wait_s));
+        doc.insert("rejection_rate".into(), Json::Num(self.rejection_rate));
+        doc.insert("failures_injected".into(), Json::Num(self.failures_injected as f64));
+        doc.insert("idle_failures".into(), Json::Num(self.idle_failures as f64));
+        doc.insert("requeues".into(), Json::Num(self.requeues as f64));
+        doc.insert("migrations".into(), Json::Num(self.migrations as f64));
+        doc.insert("flows_cancelled".into(), Json::Num(self.flows_cancelled as f64));
+        doc.insert("sim_events".into(), Json::Num(self.sim_events as f64));
+        doc.insert("qos_grants_open".into(), Json::Num(self.qos_grants_open as f64));
+        doc.insert(
+            "classes".into(),
+            Json::Arr(
+                self.classes
+                    .iter()
+                    .map(|c| {
+                        let mut o = BTreeMap::new();
+                        o.insert("class".into(), Json::Num(c.class as f64));
+                        o.insert("arrived".into(), Json::Num(c.arrived as f64));
+                        o.insert("rejected".into(), Json::Num(c.rejected as f64));
+                        o.insert("completed".into(), Json::Num(c.completed as f64));
+                        o.insert("p50_wait_s".into(), Json::Num(c.p50_wait_s));
+                        o.insert("p99_wait_s".into(), Json::Num(c.p99_wait_s));
+                        o.insert("max_wait_s".into(), Json::Num(c.max_wait_s));
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        doc.insert(
+            "windows".into(),
+            Json::Arr(
+                self.windows
+                    .iter()
+                    .map(|w| {
+                        let mut o = BTreeMap::new();
+                        o.insert("t0_s".into(), Json::Num(w.t0_s));
+                        o.insert("t1_s".into(), Json::Num(w.t1_s));
+                        o.insert("arrivals".into(), Json::Num(w.arrivals as f64));
+                        o.insert("rejected".into(), Json::Num(w.rejected as f64));
+                        o.insert("utilization".into(), Json::Num(w.utilization));
+                        o.insert(
+                            "p99_wait_s".into(),
+                            Json::Arr(
+                                w.p99_wait_s
+                                    .iter()
+                                    .map(|p| p.map(Json::Num).unwrap_or(Json::Null))
+                                    .collect(),
+                            ),
+                        );
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(doc)
+    }
+}
+
+/// Raw per-window accumulator before merge-down.
+#[derive(Debug, Default, Clone)]
+struct WinBuf {
+    arrivals: usize,
+    rejected: usize,
+    waits: [Vec<f64>; 3],
+}
+
+impl Scheduler {
+    /// Run the open-arrival service loop to drain and report.  The
+    /// scheduler must be freshly built (no jobs submitted) — service
+    /// mode owns the whole submission stream.
+    pub fn run_serve(mut self, scfg: &ServeConfig) -> crate::Result<ServeReport> {
+        anyhow::ensure!(self.jobs.is_empty(), "run_serve needs a fresh scheduler");
+        anyhow::ensure!(scfg.queue_cap > 0, "queue cap must be positive");
+        anyhow::ensure!(
+            scfg.window_s.is_finite() && scfg.window_s > 0.0,
+            "window width must be positive"
+        );
+        anyhow::ensure!(scfg.max_windows > 0, "report needs at least one window");
+        let arrivals = arrival_times(&scfg.arrivals, scfg.jobs, self.cfg.seed)?;
+        let mut specs = synthetic_jobs(arrivals.len(), self.cfg.seed).into_iter();
+        self.serve_util = Some(UtilWindows::new(scfg.window_s));
+        let t0 = self.m.sim.now();
+        let events0 = self.m.sim.events();
+        let mut next_arr = 0usize;
+        // Arrival offset per admitted job, indexed by job id (service
+        // mode owns every submit, so ids are dense admission indices).
+        let mut arr_of_job: Vec<SimTime> = Vec::new();
+        let mut rejects: Vec<(SimTime, u32)> = Vec::new();
+        loop {
+            self.process_due_faults();
+            self.process_due_failures();
+            // Admit (or reject) every arrival the clock has reached.
+            let now = self.m.sim.now();
+            let mut admitted_any = false;
+            while next_arr < arrivals.len() && t0 + arrivals[next_arr] <= now {
+                let at = arrivals[next_arr];
+                next_arr += 1;
+                let spec = specs.next().expect("one spec per arrival");
+                if self.queue.len() >= scfg.queue_cap {
+                    rejects.push((at, spec.priority.min(2)));
+                    continue;
+                }
+                self.submit(spec)?;
+                arr_of_job.push(at);
+                admitted_any = true;
+            }
+            if admitted_any {
+                self.dispatch();
+            }
+            if let Some(id) = self.ready_job() {
+                self.advance_job(id);
+                continue;
+            }
+            if self.running.is_empty() && !self.queue.is_empty() {
+                self.dispatch();
+                assert!(
+                    !self.running.is_empty(),
+                    "service stall: a queued job cannot be placed on an empty machine"
+                );
+                continue;
+            }
+            // Nothing ready: race the engine's next event against the
+            // next arrival, and advance whichever comes first.
+            let next_arrival = arrivals.get(next_arr).map(|&a| t0 + a);
+            match (self.m.sim.next_event_time(), next_arrival) {
+                (Some(te), Some(ta)) if ta <= te => self.m.sim.advance_until(ta),
+                (Some(_), _) => {
+                    if !self.m.sim.step_event() {
+                        panic!("service deadlock: a pending event refused to step");
+                    }
+                }
+                (None, Some(ta)) => {
+                    assert!(self.running.is_empty(), "running jobs with no engine events");
+                    self.m.sim.advance_until(ta);
+                }
+                (None, None) => {
+                    assert!(self.running.is_empty(), "running jobs with no engine events");
+                    break;
+                }
+            }
+        }
+        assert!(self.queue.is_empty(), "drained service loop left jobs queued");
+        Ok(self.into_serve_report(scfg, t0, events0, &arrivals, &arr_of_job, &rejects))
+    }
+
+    fn into_serve_report(
+        self,
+        scfg: &ServeConfig,
+        t0: SimTime,
+        events0: u64,
+        arrivals: &[SimTime],
+        arr_of_job: &[SimTime],
+        rejects: &[(SimTime, u32)],
+    ) -> ServeReport {
+        let makespan = self.m.sim.now() - t0;
+        let horizon = *arrivals.last().expect("at least one arrival");
+        let w = scfg.window_s;
+        let nwin = ((makespan / w).ceil() as usize).max(1);
+        let clamp = |i: usize| i.min(nwin - 1);
+
+        let mut arrived_c = [0usize; 3];
+        let mut rejected_c = [0usize; 3];
+        let mut completed_c = [0usize; 3];
+        let mut waits_c: [Vec<f64>; 3] = Default::default();
+        let mut bufs = vec![WinBuf::default(); nwin];
+        for (j, &at) in self.jobs.iter().zip(arr_of_job) {
+            let c = j.spec.priority.min(2) as usize;
+            arrived_c[c] += 1;
+            completed_c[c] += 1;
+            let fs = j.first_start.expect("drained job has started") - t0;
+            let wait = (fs - at).max(0.0);
+            waits_c[c].push(wait);
+            bufs[clamp((at / w) as usize)].arrivals += 1;
+            // SLO attribution: a wait is charged to the window the job
+            // finally *started* in — the window where the queueing delay
+            // materialized into service.
+            bufs[clamp((fs / w) as usize)].waits[c].push(wait);
+        }
+        for &(at, c) in rejects {
+            arrived_c[c as usize] += 1;
+            rejected_c[c as usize] += 1;
+            let b = &mut bufs[clamp((at / w) as usize)];
+            b.arrivals += 1;
+            b.rejected += 1;
+        }
+
+        let classes = (0u32..3)
+            .map(|c| {
+                let waits = &waits_c[c as usize];
+                let (p50, p99, max) = if waits.is_empty() {
+                    (0.0, 0.0, 0.0)
+                } else {
+                    (
+                        metrics::p50(waits),
+                        metrics::p99(waits),
+                        waits.iter().cloned().fold(0.0f64, f64::max),
+                    )
+                };
+                ClassReport {
+                    class: c,
+                    arrived: arrived_c[c as usize],
+                    rejected: rejected_c[c as usize],
+                    completed: completed_c[c as usize],
+                    p50_wait_s: p50,
+                    p99_wait_s: p99,
+                    max_wait_s: max,
+                }
+            })
+            .collect();
+
+        // Merge raw windows down to at most max_windows adjacent groups;
+        // percentiles are recomputed over the merged samples.
+        let busy = match &self.serve_util {
+            Some(u) => u.busy.clone(),
+            None => Vec::new(),
+        };
+        let total_nodes = self.m.nodes.len() as f64;
+        let group = nwin.div_ceil(scfg.max_windows);
+        let mut windows = Vec::new();
+        let mut gi = 0;
+        while gi < nwin {
+            let ge = (gi + group).min(nwin);
+            let t0_s = gi as f64 * w;
+            let t1_s = (ge as f64 * w).min(makespan);
+            let span = (t1_s - t0_s).max(1e-12);
+            let mut arrivals_n = 0;
+            let mut rejected_n = 0;
+            let mut busy_s = 0.0;
+            let mut waits: [Vec<f64>; 3] = Default::default();
+            for i in gi..ge {
+                arrivals_n += bufs[i].arrivals;
+                rejected_n += bufs[i].rejected;
+                busy_s += busy.get(i).copied().unwrap_or(0.0);
+                for c in 0..3 {
+                    waits[c].extend_from_slice(&bufs[i].waits[c]);
+                }
+            }
+            let p99_wait_s = [0, 1, 2].map(|c: usize| {
+                (!waits[c].is_empty()).then(|| metrics::p99(&waits[c]))
+            });
+            windows.push(WindowReport {
+                t0_s,
+                t1_s,
+                arrivals: arrivals_n,
+                rejected: rejected_n,
+                utilization: busy_s / (total_nodes * span),
+                p99_wait_s,
+            });
+            gi = ge;
+        }
+
+        let admitted = self.jobs.len();
+        let rejected = rejects.len();
+        let arrived = admitted + rejected;
+        let node_seconds: f64 = self.jobs.iter().map(|j| j.node_seconds).sum();
+        let avg_wait = if admitted > 0 {
+            waits_c.iter().flatten().sum::<f64>() / admitted as f64
+        } else {
+            0.0
+        };
+        ServeReport {
+            policy: self.cfg.policy,
+            seed: self.cfg.seed,
+            topology: self.m.spec.topology.label(),
+            arrivals: scfg.arrivals.name().into(),
+            rate_hz: scfg.arrivals.rate_hz(),
+            jobs_arrived: arrived,
+            jobs_admitted: admitted,
+            jobs_rejected: rejected,
+            jobs_completed: self.finish_order.len(),
+            queue_cap: scfg.queue_cap,
+            window_s: scfg.window_s,
+            reserve_depth: self.cfg.reserve_depth,
+            qos: self.cfg.qos,
+            horizon_s: horizon,
+            makespan_s: makespan,
+            utilization: if makespan > 0.0 {
+                node_seconds / (total_nodes * makespan)
+            } else {
+                0.0
+            },
+            avg_wait_s: avg_wait,
+            rejection_rate: if arrived > 0 { rejected as f64 / arrived as f64 } else { 0.0 },
+            classes,
+            windows,
+            failures_injected: self.failures_injected,
+            idle_failures: self.idle_failures,
+            requeues: self.jobs.iter().map(|j| j.requeues).sum(),
+            migrations: self.migrations,
+            flows_cancelled: self.jobs.iter().map(|j| j.exec.stats.flows_cancelled).sum(),
+            sim_events: self.m.sim.events() - events0,
+            qos_grants_open: self.qos_policy.as_ref().map(|p| p.grant_count()).unwrap_or(0),
+        }
+    }
+}
+
+/// Build `mspec`, and run the service loop on it — the topology-generic
+/// entry point behind `repro serve --topology`.
+pub fn serve_fleet_on(mspec: MachineSpec, scfg: ServeConfig) -> crate::Result<ServeReport> {
+    let mut m = Machine::build(mspec);
+    m.sim.set_threads(scfg.fleet.threads.max(1));
+    let s = Scheduler::new(m, scfg.fleet.clone());
+    s.run_serve(&scfg)
+}
+
+/// Service loop on the DEEP-ER prototype machine.
+pub fn serve_fleet(scfg: ServeConfig) -> crate::Result<ServeReport> {
+    serve_fleet_on(presets::deep_er(), scfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_arrivals_are_sorted_positive_and_deterministic() {
+        let a = arrival_times(&ArrivalSpec::Poisson { rate_hz: 0.5 }, 200, 7).unwrap();
+        let b = arrival_times(&ArrivalSpec::Poisson { rate_hz: 0.5 }, 200, 7).unwrap();
+        assert_eq!(a.len(), 200);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        let mut prev = 0.0;
+        for &t in &a {
+            assert!(t.is_finite() && t > prev, "gaps must be positive");
+            prev = t;
+        }
+        // Mean inter-arrival of a 0.5 Hz process is 2 s; 200 samples land
+        // within a loose factor-of-2 band.
+        let mean_gap = a.last().unwrap() / 200.0;
+        assert!(mean_gap > 1.0 && mean_gap < 4.0, "mean gap {mean_gap}");
+        let c = arrival_times(&ArrivalSpec::Poisson { rate_hz: 0.5 }, 200, 8).unwrap();
+        assert!(a.iter().zip(&c).any(|(x, y)| x != y), "seed must matter");
+    }
+
+    #[test]
+    fn trace_arrivals_validate() {
+        let ok = ArrivalSpec::Trace { times: vec![0.0, 1.0, 1.0, 5.0] };
+        assert_eq!(arrival_times(&ok, 3, 1).unwrap(), vec![0.0, 1.0, 1.0]);
+        let unsorted = ArrivalSpec::Trace { times: vec![1.0, 0.5] };
+        assert!(arrival_times(&unsorted, 2, 1).is_err());
+        let negative = ArrivalSpec::Trace { times: vec![-1.0] };
+        assert!(arrival_times(&negative, 1, 1).is_err());
+        let nan = ArrivalSpec::Trace { times: vec![f64::NAN] };
+        assert!(arrival_times(&nan, 1, 1).is_err());
+    }
+
+    #[test]
+    fn util_windows_split_spans_and_conserve_node_seconds() {
+        let mut u = UtilWindows::new(10.0);
+        u.add_span(5.0, 25.0, 2); // 2 nodes, 20 s -> windows 0,1,2
+        assert_eq!(u.busy.len(), 3);
+        assert!((u.busy[0] - 10.0).abs() < 1e-9);
+        assert!((u.busy[1] - 20.0).abs() < 1e-9);
+        assert!((u.busy[2] - 10.0).abs() < 1e-9);
+        let total: f64 = u.busy.iter().sum();
+        assert!((total - 40.0).abs() < 1e-9, "node-seconds must be conserved");
+        u.add_span(3.0, 3.0, 4); // empty span: no-op
+        assert!((u.busy.iter().sum::<f64>() - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tiny_serve_run_drains_and_reports() {
+        let scfg = ServeConfig {
+            jobs: 12,
+            arrivals: ArrivalSpec::Poisson { rate_hz: 0.05 },
+            ..ServeConfig::default()
+        };
+        let r = serve_fleet(scfg).unwrap();
+        assert_eq!(r.jobs_arrived, 12);
+        assert_eq!(r.jobs_admitted, 12, "capacious queue rejects nothing");
+        assert_eq!(r.jobs_completed, 12);
+        assert_eq!(r.jobs_rejected, 0);
+        assert_eq!(r.qos_grants_open, 0);
+        assert!(r.makespan_s >= r.horizon_s, "drain cannot precede the last arrival");
+        assert!(r.utilization > 0.0 && r.utilization <= 1.0);
+        assert_eq!(r.classes.len(), 3);
+        assert_eq!(
+            r.classes.iter().map(|c| c.arrived).sum::<usize>(),
+            r.jobs_arrived
+        );
+        assert!(!r.windows.is_empty() && r.windows.len() <= 64);
+        // Window series covers [0, makespan] without gaps.
+        assert_eq!(r.windows[0].t0_s, 0.0);
+        for p in r.windows.windows(2) {
+            assert_eq!(p[0].t1_s.to_bits(), p[1].t0_s.to_bits());
+        }
+        assert!((r.windows.last().unwrap().t1_s - r.makespan_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tiny_queue_cap_rejects_arrivals() {
+        // A burst trace: everything lands at t=0 against a queue bound of
+        // 2 — most arrivals must bounce, and the report must say so.
+        let scfg = ServeConfig {
+            jobs: 10,
+            arrivals: ArrivalSpec::Trace { times: vec![0.0; 10] },
+            queue_cap: 2,
+            ..ServeConfig::default()
+        };
+        let r = serve_fleet(scfg).unwrap();
+        assert_eq!(r.jobs_arrived, 10);
+        assert!(r.jobs_rejected > 0, "a 2-deep queue cannot absorb a 10-burst");
+        assert_eq!(r.jobs_admitted + r.jobs_rejected, 10);
+        assert_eq!(r.jobs_completed, r.jobs_admitted);
+        assert!((r.rejection_rate - r.jobs_rejected as f64 / 10.0).abs() < 1e-12);
+    }
+}

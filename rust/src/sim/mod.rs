@@ -1050,6 +1050,16 @@ impl Sim {
         self.flush_events();
         progressed
     }
+
+    /// Timestamp of the earliest upcoming event, without processing it;
+    /// None when the engine is idle.  Observationally pure (`&mut` only
+    /// because the peek discards lazily-deleted heap entries on the way).
+    /// The service-mode loop races this against the next job arrival to
+    /// decide whether to step the engine or jump the clock to the
+    /// arrival ([`Sim::advance_until`]).
+    pub fn next_event_time(&mut self) -> Option<SimTime> {
+        self.core.next_event_time()
+    }
 }
 
 #[cfg(test)]

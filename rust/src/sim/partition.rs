@@ -93,7 +93,7 @@ impl ComponentState {
     /// finish-heap entry (stale entries — re-predicted finishes, and
     /// pending flows cancelled before activation — are discarded on the
     /// way).
-    fn next_event_time(&mut self) -> Option<SimTime> {
+    pub(super) fn next_event_time(&mut self) -> Option<SimTime> {
         let start = loop {
             match self.pending.peek() {
                 None => break f64::INFINITY,

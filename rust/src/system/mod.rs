@@ -249,6 +249,22 @@ impl Machine {
         self.sim.set_resource_capacity(ep.rx, bw);
     }
 
+    /// Node `i`'s current compute capacity as a fraction of its spec peak
+    /// (the inverse read of [`Machine::set_node_compute_scale`]): exactly
+    /// 1.0 when healthy, the injected scale while a straggler window is
+    /// active.  The scheduler's est-end refresh reads this every dispatch
+    /// round instead of caching fault state of its own.
+    pub fn node_compute_scale(&self, i: usize) -> f64 {
+        self.sim.capacity(self.nodes[i].cpu) / self.nodes[i].spec.peak_flops
+    }
+
+    /// Node `i`'s current NIC tx capacity as a fraction of its spec
+    /// bandwidth (the inverse read of [`Machine::set_node_link_scale`]).
+    pub fn node_link_scale(&self, i: usize) -> f64 {
+        let ep = self.fabric.endpoint_info(self.nodes[i].ep);
+        self.sim.capacity(ep.tx) / self.nodes[i].spec.nic_bw
+    }
+
     // ------------------------------------------------------------------
     // partition allocation (the fleet scheduler's node ledger)
     // ------------------------------------------------------------------

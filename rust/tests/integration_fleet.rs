@@ -4,11 +4,13 @@
 //! `repro bench fleet` schema contract, and the topology-zoo fleet
 //! goldens (asymmetric split machine, heterogeneous-pool backfill).
 
+use deeper::apps::AppProfile;
 use deeper::bench::{fleet_report, FleetBenchConfig};
 use deeper::sched::policy::Policy;
 use deeper::sched::{
     run_fleet, run_fleet_on, synthetic_jobs, CkptStrategy, FleetConfig, FleetReport, JobSpec,
 };
+use deeper::system::faults::{Fault, FaultKind, FaultPlan};
 use deeper::system::zoo;
 use deeper::util::json::{self, Json};
 
@@ -215,6 +217,88 @@ fn backfill_never_delays_jobs_on_heterogeneous_pool() {
             fj.first_start
         );
     }
+}
+
+#[test]
+fn degraded_jobs_est_end_is_refreshed_so_backfill_windows_track_reality() {
+    // ISSUE 9 bugfix regression: running jobs' est_end must be recomputed
+    // every dispatch round from live iteration progress and the nodes'
+    // *current* compute/link scales.  A x4 straggler stretches J0 (8
+    // nodes, healthy estimate ~10 s) to ~34 s.  With the per-round
+    // refresh, the dispatch at F's completion (~2 s) re-prices J0's
+    // release, H's full-machine reservation moves to ~34 s, and B's 20 s
+    // window backfills the 8 freed nodes immediately.  On the old
+    // stale-estimate path H stays reserved at the healthy ~10 s release,
+    // B's window collides with it, and B idles until J0 actually drains
+    // — this test fails there.
+    let compute_only = AppProfile {
+        name: "stale-est-probe",
+        flops_per_iter_per_node: 2e12, // 2 s/iter on the 1 TF/s cluster node
+        cpu_efficiency: 1.0,
+        ckpt_bytes_per_node: 0.0,
+        halo_bytes: 0.0,
+        io_tasks_per_node: 1,
+        io_records_per_task: 1,
+        artifact: "",
+    };
+    let job = |name: &str, nodes: usize, iters: usize| JobSpec {
+        name: name.into(),
+        profile: compute_only.clone(),
+        cluster_nodes: nodes,
+        booster_nodes: 0,
+        iterations: iters,
+        cp_interval: 0,
+        ckpt: CkptStrategy::None,
+        priority: 0,
+        qos: None,
+    };
+    // Straggle node 0 (x4 compute) from t=1 for the whole run; no kill —
+    // this is pure degradation, the mode the stale path mispredicts.
+    let plan = FaultPlan {
+        faults: vec![Fault {
+            node: 0,
+            kind: FaultKind::Straggler { factor: 4.0 },
+            from: 1.0,
+            until: 1e6,
+        }],
+        kills: vec![],
+    };
+    let r = run_fleet(
+        vec![
+            job("J0", 8, 5),  // nodes 0-7: the straggler's victim
+            job("F", 8, 1),   // nodes 8-15, frees them at ~2 s
+            job("H", 16, 5),  // whole machine: must wait for J0
+            job("B", 8, 10),  // the backfill candidate behind H
+        ],
+        FleetConfig {
+            policy: Policy::Backfill,
+            fault_plan: Some(plan),
+            ..FleetConfig::default()
+        },
+    )
+    .expect("jobs fit the prototype");
+    assert_eq!(r.finish_order.len(), 4, "every job must finish");
+    assert!(
+        (r.jobs[1].finished_at - 2.0).abs() < 0.1,
+        "F must drain healthy at ~2 s, got {}",
+        r.jobs[1].finished_at
+    );
+    assert!(
+        r.jobs[0].finished_at > 30.0,
+        "the straggler must stretch J0 far past its 10 s estimate, got {}",
+        r.jobs[0].finished_at
+    );
+    assert!(
+        r.jobs[3].first_start < 5.0,
+        "B must backfill the freed nodes as soon as F drains (refreshed \
+         est_end), got {}",
+        r.jobs[3].first_start
+    );
+    assert!(
+        r.jobs[2].first_start > 30.0,
+        "H must wait for J0's actual drain, got {}",
+        r.jobs[2].first_start
+    );
 }
 
 #[test]

@@ -1,0 +1,168 @@
+//! Differential oracle for the incremental backfill profile (ISSUE 9).
+//!
+//! `sched::profile::ProfileBook` (BTreeMap capacity deltas, O(log n)
+//! insert/remove/shift, maintained across dispatch rounds) must answer
+//! **bit-identically** to `sched::policy::CapProfile`, the from-scratch
+//! rebuild it replaced — for `earliest_fit`, `fits_window`, and the full
+//! `plan_starts` output — under randomized hold insert/remove/shift
+//! churn, swept across the topology zoo.  The scheduler additionally
+//! cross-checks every debug-build dispatch round against the oracle;
+//! this suite drives the pair far harder than dispatch ever does.
+
+use deeper::sched::policy::{plan_starts, CapProfile, NodeReq, Policy, QueuedReq, RunningRes};
+use deeper::sched::profile::{plan_starts_book, ProfileBook};
+use deeper::testing::{check_zoo, Config, Gen};
+
+/// A request of at least one node fitting under the per-partition caps.
+fn gen_req(g: &mut Gen, max_c: usize, max_b: usize) -> NodeReq {
+    assert!(max_c + max_b > 0, "cannot request nodes from an empty pool");
+    let mut c = g.usize_in(0, max_c);
+    let mut b = g.usize_in(0, max_b);
+    if c + b == 0 {
+        if max_c > 0 {
+            c = 1;
+        } else {
+            b = 1;
+        }
+    }
+    NodeReq { cluster: c, booster: b }
+}
+
+#[test]
+fn incremental_profile_matches_the_from_scratch_oracle_across_rounds() {
+    check_zoo(
+        Config { cases: 96, ..Config::default() },
+        |g, _spec| g.u64(),
+        |spec, &case_seed| {
+            let mut g = Gen::new(case_seed);
+            let total = NodeReq { cluster: spec.n_cluster, booster: spec.n_booster };
+            // One long-lived book per case; the oracle is rebuilt from
+            // scratch every round — exactly the production arrangement.
+            let mut book = ProfileBook::new();
+            let mut holds: Vec<(usize, f64, NodeReq)> = Vec::new();
+            let mut next_id = 0usize;
+            let mut now = 0.0f64;
+            for _round in 0..6 {
+                now += g.f64_in(0.0, 20.0);
+                // Churn the running set: insert / remove / shift holds.
+                for _ in 0..g.usize_in(1, 4) {
+                    match g.usize_in(0, 2) {
+                        0 => {
+                            let (hc, hb) = holds
+                                .iter()
+                                .fold((0, 0), |a, h| (a.0 + h.2.cluster, a.1 + h.2.booster));
+                            let (fc, fb) = (total.cluster - hc, total.booster - hb);
+                            if fc + fb > 0 {
+                                let req = gen_req(&mut g, fc, fb);
+                                // Sometimes already overdue (est <= now):
+                                // the fold-into-base path must agree with
+                                // the oracle's est_end.max(now) clamp.
+                                let est = if g.bool() {
+                                    now + g.f64_in(0.0, 40.0)
+                                } else {
+                                    (now - g.f64_in(0.0, 10.0)).max(0.0)
+                                };
+                                book.hold_set(next_id, est, req);
+                                holds.push((next_id, est, req));
+                                next_id += 1;
+                            }
+                        }
+                        1 => {
+                            if !holds.is_empty() {
+                                let i = g.usize_in(0, holds.len() - 1);
+                                let (id, _, _) = holds.remove(i);
+                                book.hold_clear(id);
+                            }
+                        }
+                        _ => {
+                            if !holds.is_empty() {
+                                let i = g.usize_in(0, holds.len() - 1);
+                                holds[i].1 = now + g.f64_in(0.0, 60.0);
+                                book.hold_set(holds[i].0, holds[i].1, holds[i].2);
+                            }
+                        }
+                    }
+                }
+                let (hc, hb) = holds
+                    .iter()
+                    .fold((0, 0), |a, h| (a.0 + h.2.cluster, a.1 + h.2.booster));
+                let free = NodeReq { cluster: total.cluster - hc, booster: total.booster - hb };
+                let running: Vec<RunningRes> = holds
+                    .iter()
+                    .map(|&(_, t, r)| RunningRes { req: r, est_end: t })
+                    .collect();
+                let queue: Vec<QueuedReq> = (0..g.usize_in(0, 8))
+                    .map(|i| QueuedReq {
+                        id: i,
+                        req: gen_req(&mut g, total.cluster, total.booster),
+                        est: g.f64_in(0.1, 30.0),
+                    })
+                    .collect();
+                // Identical plan output under both policies.
+                for policy in Policy::ALL {
+                    let want = plan_starts(policy, now, free, &queue, &running);
+                    let got = plan_starts_book(policy, now, free, &queue, &mut book);
+                    if want != got {
+                        return false;
+                    }
+                }
+                // Bit-exact earliest_fit along the reservation chain the
+                // planner builds, plus random window probes.
+                let mut oracle = CapProfile::new(now, free, &running);
+                book.begin_round();
+                for q in &queue {
+                    let to = oracle.earliest_fit(now, q.est, q.req);
+                    let tb = book.earliest_fit(now, free, q.est, q.req);
+                    if to.to_bits() != tb.to_bits() {
+                        return false;
+                    }
+                    let t0 = now + g.f64_in(0.0, 60.0);
+                    let dur = g.f64_in(0.0, 30.0);
+                    if oracle.fits_window(t0, dur, q.req)
+                        != book.fits_window(now, free, t0, dur, q.req)
+                    {
+                        return false;
+                    }
+                    oracle.reserve(to, q.est, q.req);
+                    book.reserve(tb, q.est, q.req);
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn churned_book_drains_back_to_an_empty_profile() {
+    // Whatever sequence of holds, shifts and round reservations ran, a
+    // fully drained book (all holds cleared, round undone) must plan
+    // like a fresh one: integer deltas leave no floating residue.
+    let mut g = Gen::new(0x90F11E);
+    let total = NodeReq { cluster: 16, booster: 8 };
+    let mut book = ProfileBook::new();
+    let mut live: Vec<usize> = Vec::new();
+    for id in 0..40 {
+        let req = gen_req(&mut g, total.cluster, total.booster);
+        book.hold_set(id, g.f64_in(0.0, 100.0), req);
+        live.push(id);
+        if g.bool() {
+            book.hold_set(id, g.f64_in(0.0, 100.0), req); // shift
+        }
+        if g.bool() && live.len() > 1 {
+            let victim = live.remove(g.usize_in(0, live.len() - 2));
+            book.hold_clear(victim);
+        }
+        // A planning round on top of the churn (full machine free, so
+        // any generated request is guaranteed placeable).
+        let queue = [QueuedReq { id: 0, req: gen_req(&mut g, 16, 8), est: g.f64_in(0.1, 20.0) }];
+        let _ = plan_starts_book(Policy::Backfill, g.f64_in(0.0, 50.0), total, &queue, &mut book);
+    }
+    for id in live {
+        book.hold_clear(id);
+    }
+    book.begin_round();
+    assert_eq!(book.hold_count(), 0);
+    // An empty profile answers "now" for anything that fits the machine.
+    let t = book.earliest_fit(7.0, total, 5.0, NodeReq { cluster: 16, booster: 8 });
+    assert_eq!(t.to_bits(), 7.0f64.to_bits());
+}
