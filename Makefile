@@ -13,7 +13,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test lint fmt clippy doc figures bench bench-smoke bench-scale bench-threads bench-fleet bench-qos bench-resilience bench-serve bench-zoo artifacts clean
+.PHONY: verify build test lint fmt clippy doc figures bench bench-smoke bench-scale bench-threads bench-fleet bench-qos bench-resilience bench-serve bench-obs bench-zoo artifacts clean
 
 verify: build test
 
@@ -92,6 +92,15 @@ bench-resilience: build
 bench-serve: build
 	$(CARGO) run --release --bin repro -- serve --arrivals poisson --rate 1 --jobs 2000 --seed 1 --json BENCH_serve.json
 	@echo "wrote BENCH_serve.json"
+
+# Observability exhibit (DESIGN.md §17): the same co-scheduled fleet
+# with and without a trace installed — zero-perturbation check plus the
+# tracing wall-time overhead; refreshes the BENCH_obs.json trajectory
+# artifact and writes the Perfetto-loadable trace-fleet.json.
+bench-obs: build
+	$(CARGO) run --release --bin repro -- bench obs --csv --seed 1 --json BENCH_obs.json
+	$(CARGO) run --release --bin repro -- fleet --jobs 8 --qos --seed 1 --trace-out trace-fleet.json
+	@echo "wrote BENCH_obs.json trace-fleet.json"
 
 # Topology-zoo variants of the qos and scale exhibits on the 2:1
 # oversubscribed fat-tree (DESIGN.md §13); artifacts are written next to

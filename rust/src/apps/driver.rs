@@ -170,6 +170,7 @@ impl JobExec {
     pub fn unbind(&mut self, m: &mut Machine) -> Vec<usize> {
         assert!(!self.is_done(), "unbind after completion");
         assert!(!self.nodes.is_empty(), "unbind while not bound");
+        self.trace_close_phase(m);
         if let Some(op) = self.front_op() {
             self.stats.flows_cancelled += m.sim.cancel_op(&op);
         }
@@ -232,15 +233,36 @@ impl JobExec {
                     }
                     self.phase_t0 = m.sim.now();
                     let op = compute_op(m, &self.nodes, &self.job.profile);
+                    if let Some(tr) = m.sim.trace() {
+                        tr.begin(
+                            self.phase_t0,
+                            m.sim.trace_pid(),
+                            crate::obs::lane::MAIN,
+                            "phase.compute",
+                            vec![("iter", self.iter.into())],
+                        );
+                    }
                     self.phase = Phase::Compute(op);
                 }
                 Phase::Compute(op) => {
                     let done = m.sim.op_completion(&op).expect("compute op not settled");
                     self.stats.compute_time += done - self.phase_t0;
+                    if let Some(tr) = m.sim.trace() {
+                        tr.end(done, m.sim.trace_pid(), crate::obs::lane::MAIN, "phase.compute");
+                    }
                     if self.job.profile.halo_bytes > 0.0 && self.nodes.len() > 1 {
                         self.phase_t0 = m.sim.now();
                         let comm = self.comm.as_ref().expect("bound job has a comm");
                         let op = comm.ring_exchange_op(m, self.job.profile.halo_bytes);
+                        if let Some(tr) = m.sim.trace() {
+                            tr.begin(
+                                self.phase_t0,
+                                m.sim.trace_pid(),
+                                crate::obs::lane::MAIN,
+                                "phase.exchange",
+                                vec![("iter", self.iter.into())],
+                            );
+                        }
                         self.phase = Phase::Exchange(op);
                     } else {
                         self.post_iteration(m, backend);
@@ -249,6 +271,9 @@ impl JobExec {
                 Phase::Exchange(op) => {
                     let done = m.sim.op_completion(&op).expect("exchange op not settled");
                     self.stats.exchange_time += done - self.phase_t0;
+                    if let Some(tr) = m.sim.trace() {
+                        tr.end(done, m.sim.trace_pid(), crate::obs::lane::MAIN, "phase.exchange");
+                    }
                     self.post_iteration(m, backend);
                 }
                 Phase::Ckpt(pending) => {
@@ -256,6 +281,14 @@ impl JobExec {
                         CkptBackendRef::Scr(scr) => scr.checkpoint_commit(m, pending),
                         _ => unreachable!("Ckpt phase only exists for single-level SCR"),
                     };
+                    if let Some(tr) = m.sim.trace() {
+                        tr.end(
+                            m.sim.now(),
+                            m.sim.trace_pid(),
+                            crate::obs::lane::MAIN,
+                            "phase.ckpt",
+                        );
+                    }
                     self.stats.ckpt_time += report.blocked;
                     self.stats.checkpoints_taken += 1;
                     self.last_cp_iter = self.iter;
@@ -288,12 +321,33 @@ impl JobExec {
                 let pending = scr
                     .checkpoint_begin_iter(m, &self.nodes, bytes, self.iter)
                     .expect("checkpoint failed");
+                if let Some(tr) = m.sim.trace() {
+                    tr.begin(
+                        pending.issued_at(),
+                        m.sim.trace_pid(),
+                        crate::obs::lane::MAIN,
+                        "phase.ckpt",
+                        vec![("iter", self.iter.into())],
+                    );
+                }
                 self.phase = Phase::Ckpt(pending);
             }
             CkptBackendRef::Multi(ml) => {
+                if let Some(tr) = m.sim.trace() {
+                    tr.begin(
+                        m.sim.now(),
+                        m.sim.trace_pid(),
+                        crate::obs::lane::MAIN,
+                        "phase.ckpt",
+                        vec![("iter", self.iter.into())],
+                    );
+                }
                 let blocked = ml
                     .checkpoint_at(m, &self.nodes, bytes, self.iter)
                     .expect("multilevel checkpoint failed");
+                if let Some(tr) = m.sim.trace() {
+                    tr.end(m.sim.now(), m.sim.trace_pid(), crate::obs::lane::MAIN, "phase.ckpt");
+                }
                 self.stats.ckpt_time += blocked;
                 self.stats.checkpoints_taken += 1;
                 self.last_cp_iter = self.iter;
@@ -351,6 +405,16 @@ impl JobExec {
     /// failures at iteration boundaries where no phase is in flight).
     pub fn handle_failure(&mut self, m: &mut Machine, backend: &mut CkptBackendRef, victim: usize) {
         self.stats.failures_hit += 1;
+        self.trace_close_phase(m);
+        if let Some(tr) = m.sim.trace() {
+            tr.instant(
+                m.sim.now(),
+                m.sim.trace_pid(),
+                crate::obs::lane::MAIN,
+                "job.failure",
+                vec![("victim", victim.into()), ("iter", self.iter.into())],
+            );
+        }
         if let Some(op) = self.front_op() {
             self.stats.flows_cancelled += m.sim.cancel_op(&op);
         }
@@ -418,6 +482,7 @@ impl JobExec {
         if self.is_done() {
             return;
         }
+        self.trace_close_phase(m);
         if let Some(op) = self.front_op() {
             self.stats.flows_cancelled += m.sim.cancel_op(&op);
         }
@@ -457,6 +522,27 @@ impl JobExec {
             }
         }
         self.stats.restart_time += m.sim.now() - t0;
+    }
+
+    /// Close the open phase slice in the trace, if any.  Cancellation
+    /// sites (failure kill, requeue unbind, migration) end the abandoned
+    /// phase at the cancel time so Begin/End events stay balanced.
+    fn trace_close_phase(&self, m: &Machine) {
+        if let Some(tr) = m.sim.trace() {
+            let name = match &self.phase {
+                Phase::Compute(_) => "phase.compute",
+                Phase::Exchange(_) => "phase.exchange",
+                Phase::Ckpt(_) => "phase.ckpt",
+                Phase::Ready | Phase::Done => return,
+            };
+            let (now, pid) = (m.sim.now(), m.sim.trace_pid());
+            tr.end(now, pid, crate::obs::lane::MAIN, name);
+            if matches!(self.phase, Phase::Ckpt(_)) {
+                // The pending checkpoint dies with the phase; close its
+                // scr-lane slice too (it will never commit).
+                tr.end(now, pid, crate::obs::lane::SCR, "scr.ckpt");
+            }
+        }
     }
 
     /// Job-end bookkeeping: drain background flushes (multilevel), fill

@@ -77,6 +77,7 @@ impl BeeOnd {
             }
         };
         m.sim.set_issue_class(prev);
+        self.trace_flush(m, node, bytes);
         op
     }
 
@@ -101,7 +102,29 @@ impl BeeOnd {
             }
         };
         m.sim.set_issue_class(prev);
+        self.trace_flush(m, node, bytes);
         t
+    }
+
+    /// Trace the global-copy flush issue (both cache modes stripe the
+    /// same payload to BeeGFS; only the blocking behavior differs).
+    fn trace_flush(&self, m: &Machine, node: usize, bytes: f64) {
+        if let Some(tr) = m.sim.trace() {
+            let pid = m.sim.trace_pid();
+            let now = m.sim.now();
+            tr.with(|r| {
+                r.add("beeond_flushes_total", 1.0);
+                r.add("beeond_flush_bytes_total", bytes);
+                r.push(crate::obs::SpanEvent {
+                    t: now,
+                    kind: crate::obs::SpanKind::Instant,
+                    pid,
+                    tid: crate::obs::lane::IO,
+                    name: "beeond.flush",
+                    attrs: vec![("node", node.into()), ("bytes", bytes.into())],
+                });
+            });
+        }
     }
 
     /// Cache-local write flow without global copy (checkpoint strategies

@@ -15,7 +15,7 @@ use crate::beegfs::beeond::{concurrent_cache_write, concurrent_global_write, Cac
 use crate::beegfs::{BeeGfs, BeeOnd, CacheMode};
 use crate::fabric::{TopologySpec, TOURMALET_BW};
 use crate::metrics::{
-    fmt_bytes, fmt_bw, fmt_rate, fmt_time, p50, p95, p99, Figure, KvTable, Series,
+    fmt_bytes, fmt_bw, fmt_rate, fmt_time, p50, p95, p99, Figure, KvTable, Series, Summary,
 };
 use crate::microbench;
 use crate::nam::NamDevice;
@@ -1544,6 +1544,11 @@ pub struct QosBenchConfig {
     /// waits on each exchange op, a standing merge barrier), so 1 — the
     /// default — keeps committed goldens byte-identical.
     pub threads: usize,
+    /// Observability sink installed into every scenario machine (None —
+    /// the default — records nothing).  The zero-perturbation gate in
+    /// `rust/tests/integration_obs.rs` runs the bench traced and
+    /// untraced and asserts `BENCH_qos.json` is byte-identical.
+    pub trace: Option<crate::obs::Trace>,
 }
 
 impl Default for QosBenchConfig {
@@ -1556,6 +1561,7 @@ impl Default for QosBenchConfig {
             exchange_weight: 4.0,
             topology: None,
             threads: 1,
+            trace: None,
         }
     }
 }
@@ -1666,6 +1672,9 @@ fn qos_exchange_times(
 ) -> (Vec<f64>, usize, Vec<ClassLatency>) {
     let mut m = qos_machine(cfg);
     m.sim.set_threads(cfg.threads.max(1));
+    if let Some(tr) = &cfg.trace {
+        m.sim.set_trace(tr.clone());
+    }
     if mode == Some(QosMode::Shaped) {
         // Shape every fabric-core resource (the one backplane on the flat
         // scenario; uplinks/rails/bridges on zoo topologies).
@@ -1728,12 +1737,11 @@ fn qos_exchange_times(
     let class_latency = TrafficClass::ALL
         .iter()
         .filter_map(|&c| {
-            per_class.get(&c.index()).map(|v| ClassLatency {
-                class: c,
-                n: v.len(),
-                p50: p50(v),
-                p95: p95(v),
-                p99: p99(v),
+            per_class.get(&c.index()).map(|v| {
+                // Sort once for all three percentiles ([`Summary`]);
+                // bit-identical to the clone-per-call free functions.
+                let mut s = Summary::of(v);
+                ClassLatency { class: c, n: v.len(), p50: s.p50(), p95: s.p95(), p99: s.p99() }
             })
         })
         .collect();
@@ -1769,15 +1777,15 @@ pub fn qos_points(cfg: &QosBenchConfig) -> QosBenchResult {
 }
 
 fn dist_json(v: &[f64]) -> Json {
+    // One sort serves every order statistic; percentiles stay
+    // bit-identical to the nearest-rank free functions.
+    let mut s = Summary::of(v);
     let mut o = BTreeMap::new();
-    o.insert("p50".into(), Json::Num(p50(v)));
-    o.insert("p95".into(), Json::Num(p95(v)));
-    o.insert("p99".into(), Json::Num(p99(v)));
-    o.insert("max".into(), Json::Num(v.iter().copied().fold(f64::MIN, f64::max)));
-    o.insert(
-        "mean".into(),
-        Json::Num(v.iter().sum::<f64>() / v.len().max(1) as f64),
-    );
+    o.insert("p50".into(), Json::Num(s.p50()));
+    o.insert("p95".into(), Json::Num(s.p95()));
+    o.insert("p99".into(), Json::Num(s.p99()));
+    o.insert("max".into(), Json::Num(s.max()));
+    o.insert("mean".into(), Json::Num(s.mean()));
     Json::Obj(o)
 }
 
@@ -1921,6 +1929,120 @@ pub fn qos_report(cfg: &QosBenchConfig) -> (Vec<Exhibit>, Json) {
     }
 
     (vec![Exhibit::Fig(fig), Exhibit::Table(t), Exhibit::Table(ct)], json)
+}
+
+// ----------------------------------------------------------------------
+// `repro bench obs` — observability overhead exhibit (DESIGN.md §17)
+// ----------------------------------------------------------------------
+
+/// Configuration of the observability-overhead exhibit: one co-scheduled
+/// fleet run, measured untraced and traced with identical inputs.
+#[derive(Debug, Clone)]
+pub struct ObsBenchConfig {
+    /// Co-scheduled jobs in the measured fleet.
+    pub jobs: usize,
+    /// Seeds the synthetic job mix (and is echoed into the artifact).
+    pub seed: u64,
+    /// Wall-clock repetitions per arm; the minimum is reported, which
+    /// filters scheduler noise the way the scale bench does.
+    pub repeats: usize,
+    /// Span ring capacity for the traced arm.
+    pub span_cap: usize,
+}
+
+impl Default for ObsBenchConfig {
+    fn default() -> Self {
+        Self {
+            jobs: 8,
+            seed: DEFAULT_SEED,
+            repeats: 3,
+            span_cap: crate::obs::DEFAULT_SPAN_CAP,
+        }
+    }
+}
+
+/// One fleet run of the obs bench scenario (QoS admission on, so the
+/// trace exercises the qos lane too).
+fn obs_fleet(cfg: &ObsBenchConfig, trace: Option<crate::obs::Trace>) -> FleetReport {
+    let fleet_cfg = FleetConfig { seed: cfg.seed, qos: true, trace, ..FleetConfig::default() };
+    let jobs = sched::synthetic_jobs(cfg.jobs, cfg.seed);
+    sched::run_fleet(jobs, fleet_cfg).expect("synthetic jobs fit the prototype machine")
+}
+
+/// The `repro bench obs` exhibit: the same fleet run untraced and traced
+/// (same seed, same jobs), pinning the observability overhead — traced
+/// vs untraced wall time — and re-checking the zero-perturbation
+/// invariant (reports byte-identical).  Returns the printable exhibit
+/// plus the `BENCH_obs.json` document.  Wall-clock fields are
+/// machine-dependent (never asserted in tests); the span/counter shape
+/// is byte-deterministic for a fixed seed.
+pub fn obs_report(cfg: &ObsBenchConfig) -> (Vec<Exhibit>, Json) {
+    assert!(cfg.repeats > 0, "obs bench needs at least one repetition");
+    assert!(cfg.jobs > 0, "obs bench needs at least one job");
+    let mut wall_off = f64::INFINITY;
+    let mut report_off = None;
+    for _ in 0..cfg.repeats {
+        let (r, w) = microbench::time_once(|| obs_fleet(cfg, None));
+        wall_off = wall_off.min(w.as_secs_f64());
+        report_off = Some(r);
+    }
+    let mut wall_on = f64::INFINITY;
+    let mut report_on = None;
+    let mut trace = None;
+    for _ in 0..cfg.repeats {
+        let tr = crate::obs::Trace::with_capacity(cfg.span_cap);
+        let (r, w) = microbench::time_once(|| obs_fleet(cfg, Some(tr.clone())));
+        wall_on = wall_on.min(w.as_secs_f64());
+        report_on = Some(r);
+        trace = Some(tr);
+    }
+    let trace = trace.expect("repeats >= 1");
+    let report_off = report_off.expect("repeats >= 1").to_json().to_pretty_string();
+    let report_on = report_on.expect("repeats >= 1").to_json().to_pretty_string();
+    let identical = report_on == report_off;
+    let wall_off = wall_off.max(1e-9);
+    let wall_on = wall_on.max(1e-9);
+    let overhead = wall_on / wall_off - 1.0;
+    let spans = trace.span_count();
+    let dropped = trace.dropped();
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("obs".into()));
+    doc.insert("schema_version".into(), Json::Num(1.0));
+    doc.insert("seed".into(), Json::Num(cfg.seed as f64));
+    doc.insert("jobs".into(), Json::Num(cfg.jobs as f64));
+    doc.insert("repeats".into(), Json::Num(cfg.repeats as f64));
+    doc.insert("span_cap".into(), Json::Num(cfg.span_cap as f64));
+    doc.insert("spans".into(), Json::Num(spans as f64));
+    doc.insert("spans_dropped".into(), Json::Num(dropped as f64));
+    doc.insert("sim_events_total".into(), Json::Num(trace.counter("sim_events_total")));
+    doc.insert(
+        "scr_ckpts_begun_total".into(),
+        Json::Num(trace.counter("scr_ckpts_begun_total")),
+    );
+    doc.insert("qos_admits_total".into(), Json::Num(trace.counter("qos_admits_total")));
+    doc.insert("report_identical_traced_vs_untraced".into(), Json::Bool(identical));
+    doc.insert("wall_s_untraced".into(), Json::Num(wall_off));
+    doc.insert("wall_s_traced".into(), Json::Num(wall_on));
+    doc.insert("overhead_frac".into(), Json::Num(overhead));
+
+    let mut t = KvTable::new("Observability overhead (same fleet traced vs untraced)");
+    t.row("fleet", format!("{} jobs, seed {:#x}, qos admission on", cfg.jobs, cfg.seed));
+    t.row("spans recorded", format!("{spans} ({dropped} dropped, cap {})", cfg.span_cap));
+    t.row(
+        "counters",
+        format!(
+            "{} sim events, {} checkpoints begun, {} qos admits",
+            trace.counter("sim_events_total"),
+            trace.counter("scr_ckpts_begun_total"),
+            trace.counter("qos_admits_total")
+        ),
+    );
+    t.row("untraced wall", fmt_time(wall_off));
+    t.row("traced wall", fmt_time(wall_on));
+    t.row("overhead", format!("{:.1} %", overhead * 100.0));
+    t.row("report identical", if identical { "yes (zero perturbation)" } else { "NO" });
+    (vec![Exhibit::Table(t)], Json::Obj(doc))
 }
 
 #[cfg(test)]

@@ -40,6 +40,10 @@
 //!   control over per-resource guarantee budgets (DESIGN.md section 12).
 //! * [`runtime`] — PJRT executor for the AOT-lowered JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`); the only bridge to real compute.
+//! * [`obs`] — deterministic observability: virtual-clock spans +
+//!   counters/gauges/histograms in a bounded ring-buffer recorder, with
+//!   Chrome trace-event and Prometheus-style exporters (DESIGN.md
+//!   section 17); every layer above records through it when enabled.
 //! * [`bench`] — harnesses regenerating every paper figure/table.
 //! * [`metrics`] — series/table collection and fixed-width printers.
 
@@ -52,6 +56,7 @@ pub mod fabric;
 pub mod metrics;
 pub mod microbench;
 pub mod nam;
+pub mod obs;
 pub mod ompss;
 pub mod psmpi;
 pub mod qos;

@@ -4,17 +4,21 @@
 //! repro show-config
 //! repro bench <fig3..fig10|fig8-async|table1..table3|all> [--csv] [--seed N]
 //! repro bench qos [--iters N] [--csv] [--seed N] [--json PATH]
+//! repro bench obs [--jobs N] [--repeats N] [--csv] [--seed N] [--json PATH]
 //! repro run [--app nbody|xpic|gershwin|fwi] [--strategy single|partner|buddy|dist-xor|nam-xor]
 //!           [--iterations N] [--cp-interval N] [--fail-at I] [--mtbf S] [--seed N]
-//!           [--nodes N] [--multilevel] [--async-flush]
-//! repro fleet [--jobs N] [--policy fcfs|backfill] [--seed S] [--mtbf S] [--qos] [--json PATH]
-//! repro serve [--jobs N] [--arrivals poisson|trace] [--rate HZ] [--queue-cap N] [--json PATH]
+//!           [--nodes N] [--multilevel] [--async-flush] [--trace-out PATH]
+//! repro fleet [--jobs N] [--policy fcfs|backfill] [--seed S] [--mtbf S] [--qos]
+//!             [--json PATH] [--trace-out PATH]
+//! repro serve [--jobs N] [--arrivals poisson|trace] [--rate HZ] [--queue-cap N]
+//!             [--json PATH] [--trace-out PATH]
 //! repro e2e [--artifacts DIR]
 //! ```
 
 use deeper::apps::{self, run_iterations, run_iterations_multilevel, IterationJob, RunStats};
 use deeper::bench;
 use deeper::metrics::fmt_time;
+use deeper::obs;
 use deeper::runtime::{default_artifacts_dir, Runtime, Tensor};
 use deeper::sched::{self, FleetConfig, Policy};
 use deeper::scr::multilevel::{MultiLevelConfig, MultiLevelScr};
@@ -35,16 +39,19 @@ USAGE:
                     [--threads T1,T2,..] [--json PATH] [--csv] [--seed N]
   repro bench qos [--iters N] [--topology NAME] [--threads N] [--json PATH]
                   [--csv] [--seed N]
+  repro bench obs [--jobs N] [--repeats N] [--span-cap N] [--json PATH]
+                  [--csv] [--seed N]
   repro run [--app nbody|xpic|gershwin|fwi] [--strategy single|partner|buddy|dist-xor|nam-xor]
             [--iterations N] [--cp-interval N] [--fail-at I] [--mtbf S] [--seed N]
             [--nodes N] [--multilevel] [--async-flush] [--topology NAME] [--threads N]
+            [--trace-out PATH]
   repro fleet [--jobs N] [--policy fcfs|backfill] [--seed S] [--mtbf S]
               [--qos] [--faults N] [--resilience reactive|proactive]
-              [--topology NAME] [--threads N] [--json PATH]
+              [--topology NAME] [--threads N] [--json PATH] [--trace-out PATH]
   repro serve [--jobs N] [--arrivals poisson|trace] [--rate HZ] [--trace PATH]
               [--policy fcfs|backfill] [--queue-cap N] [--window S]
               [--reserve-depth N] [--qos] [--faults N] [--seed S]
-              [--topology NAME] [--threads N] [--json PATH]
+              [--topology NAME] [--threads N] [--json PATH] [--trace-out PATH]
   repro bench fleet [--sweep N1,N2,..] [--mtbf S] [--topology NAME]
                     [--json PATH] [--csv] [--seed N]
   repro bench serve [--jobs N] [--rate HZ] [--queue-cap N] [--topology NAME]
@@ -92,6 +99,17 @@ USAGE:
   --qos on `repro fleet` enables admission control: jobs' declared
   exchange guarantees are admitted against a fabric-core budget at
   dispatch and installed as rate floors while they run.
+
+  --trace-out PATH (on run/fleet/serve) records a deterministic trace
+  on the *virtual* sim clock (DESIGN.md section 17) and writes it as
+  Chrome trace-event JSON, loadable in Perfetto or chrome://tracing:
+  pid 0 is the system (scheduler / engine / serve / qos lanes), pid
+  j+1 is fleet job j (phase / scr / flush / io lanes).  Timestamps are
+  sim time, so the file is byte-deterministic for a fixed seed, and
+  tracing never perturbs results — reports are byte-identical traced
+  vs untraced.  bench obs measures that: it runs the same fleet with
+  and without a trace installed, checks report equality, and writes
+  BENCH_obs.json (traced vs untraced wall time, span/counter totals).
 
   --faults N injects a seeded *correlated* degraded-mode schedule
   (DESIGN.md section 15): link degradations and straggler windows that
@@ -356,6 +374,41 @@ fn cmd_bench_qos(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_bench_obs(args: &Args, csv: bool, seed: u64) -> anyhow::Result<()> {
+    let defaults = bench::ObsBenchConfig::default();
+    let cfg = bench::ObsBenchConfig {
+        jobs: args.get_parsed::<usize>("jobs")?.unwrap_or(defaults.jobs),
+        seed,
+        repeats: args.get_parsed::<usize>("repeats")?.unwrap_or(defaults.repeats),
+        span_cap: args.get_parsed::<usize>("span-cap")?.unwrap_or(defaults.span_cap),
+    };
+    anyhow::ensure!(cfg.jobs > 0, "--jobs must be positive");
+    anyhow::ensure!(cfg.repeats > 0, "--repeats must be positive");
+    anyhow::ensure!(cfg.span_cap > 0, "--span-cap must be positive");
+    let (exhibits, json) = bench::obs_report(&cfg);
+    for e in exhibits {
+        println!("{}", if csv { e.render_csv() } else { e.render() });
+    }
+    let path = args.get_str("json", "BENCH_obs.json");
+    std::fs::write(path, json.to_pretty_string())
+        .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+    println!("{}wrote {path}", if csv { "# " } else { "" });
+    Ok(())
+}
+
+/// Write a recorded trace as the Chrome trace-event artifact of
+/// `--trace-out` (shared by `repro run`/`fleet`/`serve`).
+fn write_trace(path: &str, tr: &obs::Trace) -> anyhow::Result<()> {
+    std::fs::write(path, tr.chrome_trace().to_pretty_string())
+        .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+    let dropped = match tr.dropped() {
+        0 => String::new(),
+        d => format!(", oldest {d} dropped at ring cap"),
+    };
+    println!("wrote {path} ({} span events{dropped})", tr.span_count());
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let name = args
         .positionals
@@ -379,6 +432,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     if name == "resilience" {
         return cmd_bench_resilience(args, csv, seed);
     }
+    if name == "obs" {
+        return cmd_bench_obs(args, csv, seed);
+    }
     if name == "all" {
         for n in bench::names() {
             println!("--- {n} ---");
@@ -388,7 +444,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     }
     print_exhibits(name, csv, seed).ok_or_else(|| {
         anyhow::anyhow!(
-            "unknown exhibit {name}; try fig3..fig10, fig8-async, table1..table3, cb-split, scale, fleet, serve, qos, resilience, all"
+            "unknown exhibit {name}; try fig3..fig10, fig8-async, table1..table3, cb-split, scale, fleet, serve, qos, resilience, obs, all"
         )
     })?;
     Ok(())
@@ -433,7 +489,13 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         }
         None => None,
     };
-    let report = sched::run_fleet_on(mspec()?, sched::synthetic_jobs(n, seed), mk_cfg(fault_plan))?;
+    // --trace-out: record the measured run (never the sizing probe)
+    // and export it as Chrome trace-event JSON after the report.
+    let trace_out = args.flag("trace-out");
+    let trace = trace_out.map(|_| obs::Trace::new());
+    let mut cfg = mk_cfg(fault_plan);
+    cfg.trace = trace.clone();
+    let report = sched::run_fleet_on(mspec()?, sched::synthetic_jobs(n, seed), cfg)?;
 
     println!(
         "fleet         : {} jobs, policy {}, topology {}, seed {seed}{}{}",
@@ -490,6 +552,9 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         std::fs::write(path, report.to_json().to_pretty_string())
             .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
         println!("wrote {path}");
+    }
+    if let (Some(path), Some(tr)) = (trace_out, &trace) {
+        write_trace(path, tr)?;
     }
     Ok(())
 }
@@ -564,6 +629,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
         None => None,
     };
+    let trace_out = args.flag("trace-out");
+    let trace = trace_out.map(|_| obs::Trace::new());
     let scfg = sched::ServeConfig {
         fleet: FleetConfig {
             policy,
@@ -572,6 +639,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             threads,
             fault_plan,
             reserve_depth,
+            trace: trace.clone(),
             ..defaults.fleet.clone()
         },
         arrivals,
@@ -636,6 +704,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
         println!("wrote {path}");
     }
+    if let (Some(path), Some(tr)) = (trace_out, &trace) {
+        write_trace(path, tr)?;
+    }
     Ok(())
 }
 
@@ -660,6 +731,22 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     };
     let mut m = Machine::build(mspec);
     m.sim.set_threads(parse_threads(args)?);
+    // --trace-out: solo runs trace as pid 1 (there is no scheduler, so
+    // scr/flush/io spans land on the job process; engine events on pid 0).
+    let trace_out = args.flag("trace-out");
+    let trace = trace_out.map(|_| obs::Trace::new());
+    if let Some(tr) = &trace {
+        m.sim.set_trace(tr.clone());
+        let _ = m.sim.set_trace_pid(1);
+        tr.set_process_name(0, "system");
+        tr.set_thread_name(0, obs::lane::MAIN, "sched");
+        tr.set_thread_name(0, obs::lane::ENGINE, "engine");
+        tr.set_process_name(1, format!("run {}", profile.name));
+        tr.set_thread_name(1, obs::lane::MAIN, "phase");
+        tr.set_thread_name(1, obs::lane::SCR, "scr");
+        tr.set_thread_name(1, obs::lane::FLUSH, "flush");
+        tr.set_thread_name(1, obs::lane::IO, "io");
+    }
     let node_ids: Vec<usize> = m.nodes_of(NodeKind::Cluster).into_iter().take(nodes).collect();
     // Failure plan: a targeted --fail-at iteration wins; otherwise --mtbf
     // samples an exponential schedule reproducible from --seed.
@@ -727,6 +814,9 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         fmt_time(stats.restart_time),
         stats.failures_hit
     );
+    if let (Some(path), Some(tr)) = (trace_out, &trace) {
+        write_trace(path, tr)?;
+    }
     Ok(())
 }
 

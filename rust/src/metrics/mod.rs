@@ -243,6 +243,163 @@ pub fn p99(samples: &[f64]) -> f64 {
     percentile(samples, 99.0)
 }
 
+/// Sort-once percentile summary: accumulate samples, sort lazily on the
+/// first query after an insert, answer every subsequent percentile in
+/// O(1).  Exact mode — queries are bit-identical to the nearest-rank
+/// [`percentile`] on the same samples (same `f64::total_cmp` sort, same
+/// `ceil(p/100 * n)` rank), without the clone-and-sort per call.  This is
+/// what `sched::serve` per-window p99s and the qos bench class summaries
+/// use instead of [`percentile`].
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    /// `samples` is sorted by IEEE total order up to this prefix length;
+    /// pushes past it mark the tail dirty without resorting eagerly.
+    sorted_len: usize,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build a summary over an existing sample set (sorts once, now).
+    pub fn of(samples: &[f64]) -> Self {
+        let mut s = Self { samples: samples.to_vec(), sorted_len: 0 };
+        s.ensure_sorted();
+        s
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if self.sorted_len != self.samples.len() {
+            self.samples.sort_by(f64::total_cmp);
+            self.sorted_len = self.samples.len();
+        }
+    }
+
+    /// Nearest-rank percentile, bit-identical to [`percentile`] on the
+    /// pushed samples.  Panics on an empty summary or `p` outside
+    /// [0, 100], exactly like the free function.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        assert!(!self.samples.is_empty(), "percentile of an empty sample set");
+        assert!((0.0..=100.0).contains(&p), "percentile {p} outside [0, 100]");
+        self.ensure_sorted();
+        if p <= 0.0 {
+            return self.samples[0];
+        }
+        let rank = (p / 100.0 * self.samples.len() as f64).ceil() as usize;
+        self.samples[rank.clamp(1, self.samples.len()) - 1]
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&mut self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Maximum sample (IEEE total order, same as `percentile(100)`).
+    pub fn max(&mut self) -> f64 {
+        self.percentile(100.0)
+    }
+
+    /// Arithmetic mean (0 on an empty summary).
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        }
+    }
+}
+
+/// Deterministic log-bucketed histogram of non-negative f64 samples —
+/// the O(1)-insert companion to [`Summary`] for unbounded streams (the
+/// `obs` recorder's histograms).  Buckets are powers of two keyed off
+/// the IEEE exponent bits (no `log2()` libm call, so bucketing is
+/// bit-deterministic across platforms): bucket `i` covers
+/// `[2^(i-32), 2^(i-31))`, clamped to 64 buckets, with zero/subnormal in
+/// bucket 0 and everything >= 2^32 (incl. inf/NaN) in bucket 63.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LogHist {
+    pub buckets: [u64; 64],
+    pub count: u64,
+}
+
+impl LogHist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bucket index of `v` (see the type docs for the mapping).
+    pub fn bucket_of(v: f64) -> usize {
+        let exp = ((v.to_bits() >> 52) & 0x7ff) as i64;
+        if exp == 0 {
+            return 0; // zero and subnormals
+        }
+        (exp - 1023 + 32).clamp(0, 63) as usize
+    }
+
+    /// Lower edge of bucket `i`, i.e. `2^(i-32)` (bucket 0 is the
+    /// zero/underflow bucket, so its edge is 0).
+    pub fn bucket_lo(i: usize) -> f64 {
+        if i == 0 {
+            0.0
+        } else {
+            (2.0f64).powi(i as i32 - 32)
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+    }
+
+    /// Nearest-rank percentile at bucket resolution: the **lower edge**
+    /// of the bucket holding the rank-`ceil(p/100 * n)` sample.  Within
+    /// a factor of 2 of the exact answer by construction; 0 on empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p), "percentile {p} outside [0, 100]");
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0 * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return Self::bucket_lo(i);
+            }
+        }
+        Self::bucket_lo(63)
+    }
+
+    /// Merge another histogram in (bucketwise sum).
+    pub fn merge(&mut self, other: &LogHist) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+    }
+}
+
 /// Human-readable seconds.
 pub fn fmt_time(s: f64) -> String {
     if s >= 1.0 {
@@ -335,6 +492,74 @@ mod tests {
     #[should_panic(expected = "empty sample set")]
     fn percentile_empty_panics() {
         let _ = percentile(&[], 50.0);
+    }
+
+    #[test]
+    fn summary_bit_equal_to_nearest_rank() {
+        // Exact mode must reproduce the free-function nearest-rank
+        // definition bit-for-bit, including after interleaved pushes.
+        let samples = [3.25, -0.0, 1e-300, 7.5, 7.5, f64::INFINITY, 2.0, -4.0, 0.125];
+        let mut s = Summary::new();
+        for &v in &samples[..4] {
+            s.push(v);
+        }
+        for p in [0.0, 5.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(s.percentile(p).to_bits(), percentile(&samples[..4], p).to_bits());
+        }
+        // Push more after querying (dirty tail) and re-check.
+        for &v in &samples[4..] {
+            s.push(v);
+        }
+        for p in [0.0, 5.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(s.percentile(p).to_bits(), percentile(&samples, p).to_bits());
+        }
+        let mut of = Summary::of(&samples);
+        assert_eq!(of.p99().to_bits(), p99(&samples).to_bits());
+        assert_eq!(of.p50().to_bits(), p50(&samples).to_bits());
+        assert_eq!(of.p95().to_bits(), p95(&samples).to_bits());
+        assert_eq!(of.len(), samples.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "empty sample set")]
+    fn summary_empty_panics() {
+        let _ = Summary::new().percentile(50.0);
+    }
+
+    #[test]
+    fn loghist_buckets_are_powers_of_two() {
+        assert_eq!(LogHist::bucket_of(0.0), 0);
+        assert_eq!(LogHist::bucket_of(1.0), 32); // [1, 2)
+        assert_eq!(LogHist::bucket_of(1.999), 32);
+        assert_eq!(LogHist::bucket_of(2.0), 33);
+        assert_eq!(LogHist::bucket_of(0.5), 31);
+        assert_eq!(LogHist::bucket_of(1e-300), 0); // clamped underflow
+        assert_eq!(LogHist::bucket_of(f64::INFINITY), 63);
+        assert_eq!(LogHist::bucket_lo(32), 1.0);
+        assert_eq!(LogHist::bucket_lo(33), 2.0);
+        assert_eq!(LogHist::bucket_lo(0), 0.0);
+    }
+
+    #[test]
+    fn loghist_percentile_within_bucket_resolution() {
+        let mut h = LogHist::new();
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        for &v in &samples {
+            h.record(v);
+        }
+        assert_eq!(h.count, 100);
+        // Nearest-rank at rank 99 is 99.0, whose bucket lower edge is 64.
+        let exact = p99(&samples);
+        let approx = h.percentile(99.0);
+        assert!(approx <= exact && exact < approx * 2.0, "{approx} vs {exact}");
+        assert_eq!(h.percentile(0.0), 1.0);
+        // Merge doubles every count but moves no percentile.
+        let before = h.percentile(50.0);
+        let other = h.clone();
+        h.merge(&other);
+        assert_eq!(h.count, 200);
+        assert_eq!(h.percentile(50.0), before);
+        assert_eq!(LogHist::new().percentile(99.0), 0.0);
     }
 
     #[test]

@@ -121,6 +121,25 @@ impl NamDevice {
             op.push(sim.flow(bytes_per_node, lat, &route));
         }
         sim.set_issue_class(prev);
+        if let Some(tr) = sim.trace() {
+            let pid = sim.trace_pid();
+            let now = sim.now();
+            tr.with(|r| {
+                r.add("nam_parity_pulls_total", 1.0);
+                r.add("nam_parity_bytes_total", sources.len() as f64 * bytes_per_node);
+                r.push(crate::obs::SpanEvent {
+                    t: now,
+                    kind: crate::obs::SpanKind::Instant,
+                    pid,
+                    tid: crate::obs::lane::IO,
+                    name: "nam.parity_pull",
+                    attrs: vec![
+                        ("sources", sources.len().into()),
+                        ("bytes_per_node", bytes_per_node.into()),
+                    ],
+                });
+            });
+        }
         Ok(op)
     }
 
@@ -136,6 +155,15 @@ impl NamDevice {
         let prev = sim.default_issue_class(TrafficClass::Parity);
         let op = self.get_op(sim, fabric, dst, bytes);
         sim.set_issue_class(prev);
+        if let Some(tr) = sim.trace() {
+            tr.instant(
+                sim.now(),
+                sim.trace_pid(),
+                crate::obs::lane::IO,
+                "nam.parity_push",
+                vec![("bytes", bytes.into())],
+            );
+        }
         op
     }
 }

@@ -1,0 +1,490 @@
+//! Deterministic observability: virtual-clock tracing + metrics
+//! (DESIGN.md section 17).
+//!
+//! One telemetry spine for every subsystem: span events (`begin`/`end`/
+//! `instant` with a small typed attribute set) and counters/gauges/
+//! log-bucket histograms, recorded into a bounded ring-buffer
+//! [`Recorder`] behind a cheaply-cloneable [`Trace`] handle.  Two
+//! exporters: Chrome trace-event JSON ([`Trace::chrome_trace`],
+//! loadable in Perfetto / `chrome://tracing` — jobs as processes,
+//! phases/ops as threads/slices) and a Prometheus-style text snapshot
+//! ([`Trace::prometheus_text`]).
+//!
+//! Design invariants:
+//!
+//! * **Virtual clock only.**  Every timestamp is sim time
+//!   ([`SimTime`], seconds), never wall clock, so traces are
+//!   byte-deterministic for a fixed seed.
+//! * **Zero-cost when disabled.**  The handle lives as an
+//!   `Option<Trace>` on [`crate::sim::Sim`]; every instrumentation
+//!   site is an `if let Some(..)` on it.  Untraced runs never
+//!   allocate, lock, or format.
+//! * **Observe, never disturb.**  Recording reads simulation state and
+//!   writes only into the recorder; it never advances the clock,
+//!   issues flows, or feeds back into any decision.  The
+//!   zero-perturbation gate in `rust/tests/integration_obs.rs` pins
+//!   reports byte-identical traced vs untraced.
+//! * **Serial recording.**  Only serial-phase code records (the
+//!   component-parallel workers of `sim::partition` count into their
+//!   own [`super::sim`] state, merged and flushed to the recorder at
+//!   region/wait barriers), so event order is deterministic.
+//! * **Bounded.**  The span ring drops the *oldest* events past
+//!   capacity and counts them in `obs_dropped_spans_total` — a
+//!   deterministic window over the tail of the run, never unbounded
+//!   memory.
+//!
+//! Naming conventions: span names are dotted (`scr.ckpt`,
+//! `phase.compute`, `sched.dispatch_round`), metric names are
+//! Prometheus-style snake_case with a unit-ish suffix
+//! (`sim_events_total`, `sched_queue_depth`).  Process id 0 is the
+//! system (scheduler/engine/serve/qos lanes); process id `job + 1` is
+//! fleet job `job`.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::LogHist;
+use crate::sim::SimTime;
+use crate::util::json::Json;
+
+/// Spans recorded before the ring starts dropping the oldest
+/// (per-recorder; see the module docs on boundedness).
+pub const DEFAULT_SPAN_CAP: usize = 1 << 16;
+
+/// Well-known thread lanes inside a trace process.  On pid 0 (the
+/// system process) the lanes are scheduler / engine / serve / qos; on a
+/// job process they are lifecycle phases / checkpoint / flush / io.
+pub mod lane {
+    /// pid 0: scheduler decisions.  Job pids: lifecycle phase slices.
+    pub const MAIN: u32 = 0;
+    /// pid 0: engine (region/merge events).  Job pids: SCR checkpoints.
+    pub const ENGINE: u32 = 1;
+    pub const SCR: u32 = 1;
+    /// pid 0: serve tumbling windows.  Job pids: multilevel flush tiers.
+    pub const SERVE: u32 = 2;
+    pub const FLUSH: u32 = 2;
+    /// pid 0: qos admission verdicts.  Job pids: other I/O (BeeOND/NAM).
+    pub const QOS: u32 = 3;
+    pub const IO: u32 = 3;
+}
+
+/// A typed attribute value (the `args` of a Chrome trace event).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttrVal {
+    U64(u64),
+    F64(f64),
+    Str(&'static str),
+}
+
+impl From<u64> for AttrVal {
+    fn from(v: u64) -> Self {
+        AttrVal::U64(v)
+    }
+}
+
+impl From<usize> for AttrVal {
+    fn from(v: usize) -> Self {
+        AttrVal::U64(v as u64)
+    }
+}
+
+impl From<f64> for AttrVal {
+    fn from(v: f64) -> Self {
+        AttrVal::F64(v)
+    }
+}
+
+impl From<&'static str> for AttrVal {
+    fn from(v: &'static str) -> Self {
+        AttrVal::Str(v)
+    }
+}
+
+impl AttrVal {
+    fn to_json(&self) -> Json {
+        match *self {
+            AttrVal::U64(v) => Json::Num(v as f64),
+            AttrVal::F64(v) => Json::Num(v),
+            AttrVal::Str(s) => Json::Str(s.into()),
+        }
+    }
+}
+
+/// Attribute list of one span event.  Static keys keep recording
+/// allocation-light and exporter output deterministic.
+pub type Attrs = Vec<(&'static str, AttrVal)>;
+
+/// What a [`SpanEvent`] marks: a slice opening (`Begin`), a slice
+/// closing (`End`), or a point event (`Instant`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    Begin,
+    End,
+    Instant,
+}
+
+impl SpanKind {
+    /// Chrome trace-event phase letter.
+    fn ph(self) -> &'static str {
+        match self {
+            SpanKind::Begin => "B",
+            SpanKind::End => "E",
+            SpanKind::Instant => "i",
+        }
+    }
+}
+
+/// One recorded trace event on the virtual clock.
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    /// Virtual time, seconds.
+    pub t: SimTime,
+    pub kind: SpanKind,
+    /// 0 = system (engine/sched/serve/qos); `job + 1` = fleet job `job`.
+    pub pid: u32,
+    /// Lane within the process (see [`lane`]).
+    pub tid: u32,
+    pub name: &'static str,
+    pub attrs: Attrs,
+}
+
+/// The bounded event store behind a [`Trace`] handle.
+#[derive(Debug)]
+pub struct Recorder {
+    cap: usize,
+    spans: VecDeque<SpanEvent>,
+    /// Oldest spans evicted past `cap` (exported as
+    /// `obs_dropped_spans_total`).
+    dropped: u64,
+    counters: BTreeMap<&'static str, f64>,
+    gauges: BTreeMap<&'static str, f64>,
+    hists: BTreeMap<&'static str, LogHist>,
+    proc_names: BTreeMap<u32, String>,
+    thread_names: BTreeMap<(u32, u32), &'static str>,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_SPAN_CAP)
+    }
+}
+
+impl Recorder {
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            spans: VecDeque::new(),
+            dropped: 0,
+            counters: BTreeMap::new(),
+            gauges: BTreeMap::new(),
+            hists: BTreeMap::new(),
+            proc_names: BTreeMap::new(),
+            thread_names: BTreeMap::new(),
+        }
+    }
+
+    pub fn push(&mut self, ev: SpanEvent) {
+        if self.spans.len() == self.cap {
+            self.spans.pop_front();
+            self.dropped += 1;
+        }
+        self.spans.push_back(ev);
+    }
+
+    pub fn add(&mut self, name: &'static str, delta: f64) {
+        *self.counters.entry(name).or_insert(0.0) += delta;
+    }
+
+    pub fn gauge_set(&mut self, name: &'static str, v: f64) {
+        self.gauges.insert(name, v);
+    }
+
+    pub fn observe(&mut self, name: &'static str, v: f64) {
+        self.hists.entry(name).or_default().record(v);
+    }
+
+    /// Direct histogram access for bucketwise delta merges (the engine
+    /// counter flush in [`crate::sim::Sim`]).
+    pub fn hist_mut(&mut self, name: &'static str) -> &mut LogHist {
+        self.hists.entry(name).or_default()
+    }
+
+    pub fn spans(&self) -> impl Iterator<Item = &SpanEvent> {
+        self.spans.iter()
+    }
+
+    pub fn span_count(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn counter(&self, name: &str) -> f64 {
+        self.counters.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    fn chrome_trace(&self) -> Json {
+        let mut events = Vec::new();
+        // Metadata first: process and thread names (BTreeMap iteration
+        // keeps them sorted, hence byte-stable).
+        for (&pid, name) in &self.proc_names {
+            let mut args = BTreeMap::new();
+            args.insert("name".to_string(), Json::Str(name.clone()));
+            let mut o = BTreeMap::new();
+            o.insert("ph".into(), Json::Str("M".into()));
+            o.insert("name".into(), Json::Str("process_name".into()));
+            o.insert("pid".into(), Json::Num(pid as f64));
+            o.insert("tid".into(), Json::Num(0.0));
+            o.insert("args".into(), Json::Obj(args));
+            events.push(Json::Obj(o));
+        }
+        for (&(pid, tid), &name) in &self.thread_names {
+            let mut args = BTreeMap::new();
+            args.insert("name".to_string(), Json::Str(name.into()));
+            let mut o = BTreeMap::new();
+            o.insert("ph".into(), Json::Str("M".into()));
+            o.insert("name".into(), Json::Str("thread_name".into()));
+            o.insert("pid".into(), Json::Num(pid as f64));
+            o.insert("tid".into(), Json::Num(tid as f64));
+            o.insert("args".into(), Json::Obj(args));
+            events.push(Json::Obj(o));
+        }
+        for ev in &self.spans {
+            let mut o = BTreeMap::new();
+            o.insert("ph".into(), Json::Str(ev.kind.ph().into()));
+            o.insert("name".into(), Json::Str(ev.name.into()));
+            o.insert("pid".into(), Json::Num(ev.pid as f64));
+            o.insert("tid".into(), Json::Num(ev.tid as f64));
+            // Virtual seconds -> trace microseconds.
+            o.insert("ts".into(), Json::Num(ev.t * 1e6));
+            if ev.kind == SpanKind::Instant {
+                // Thread-scoped instant (renders as a tick, not a line).
+                o.insert("s".into(), Json::Str("t".into()));
+            }
+            if !ev.attrs.is_empty() {
+                let mut args = BTreeMap::new();
+                for (k, v) in &ev.attrs {
+                    args.insert((*k).to_string(), v.to_json());
+                }
+                o.insert("args".into(), Json::Obj(args));
+            }
+            events.push(Json::Obj(o));
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("traceEvents".into(), Json::Arr(events));
+        doc.insert("displayTimeUnit".into(), Json::Str("ms".into()));
+        Json::Obj(doc)
+    }
+
+    fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# Deterministic snapshot on the virtual sim clock.\n");
+        out.push_str("# TYPE obs_dropped_spans_total counter\n");
+        out.push_str(&format!("obs_dropped_spans_total {}\n", self.dropped));
+        for (name, v) in &self.counters {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+        }
+        for (name, h) in &self.hists {
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut cum = 0u64;
+            for (i, &n) in h.buckets.iter().enumerate() {
+                if n == 0 {
+                    continue;
+                }
+                cum += n;
+                if i == 63 {
+                    continue; // folded into +Inf below
+                }
+                let le = LogHist::bucket_lo(i + 1);
+                out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+            }
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+            out.push_str(&format!("{name}_count {}\n", h.count));
+        }
+        out
+    }
+}
+
+/// Shared handle to a [`Recorder`]: clone-cheap (an `Arc`), records
+/// through `&self` (a `Mutex` inside), so immutable-machine contexts
+/// like `Scr::checkpoint_commit` can still record.
+#[derive(Clone, Default)]
+pub struct Trace(Arc<Mutex<Recorder>>);
+
+impl fmt::Debug for Trace {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // No lock in Debug: a trace may be debug-printed (e.g. inside a
+        // config dump) while a recording call holds the mutex.
+        f.write_str("Trace")
+    }
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Trace(Arc::new(Mutex::new(Recorder::with_capacity(cap))))
+    }
+
+    /// Run `f` against the locked recorder (bulk/batched recording).
+    pub fn with<R>(&self, f: impl FnOnce(&mut Recorder) -> R) -> R {
+        f(&mut self.0.lock().unwrap())
+    }
+
+    pub fn begin(&self, t: SimTime, pid: u32, tid: u32, name: &'static str, attrs: Attrs) {
+        self.with(|r| r.push(SpanEvent { t, kind: SpanKind::Begin, pid, tid, name, attrs }));
+    }
+
+    pub fn end(&self, t: SimTime, pid: u32, tid: u32, name: &'static str) {
+        self.with(|r| {
+            r.push(SpanEvent { t, kind: SpanKind::End, pid, tid, name, attrs: Vec::new() })
+        });
+    }
+
+    pub fn instant(&self, t: SimTime, pid: u32, tid: u32, name: &'static str, attrs: Attrs) {
+        self.with(|r| r.push(SpanEvent { t, kind: SpanKind::Instant, pid, tid, name, attrs }));
+    }
+
+    pub fn add(&self, name: &'static str, delta: f64) {
+        self.with(|r| r.add(name, delta));
+    }
+
+    pub fn gauge_set(&self, name: &'static str, v: f64) {
+        self.with(|r| r.gauge_set(name, v));
+    }
+
+    pub fn observe(&self, name: &'static str, v: f64) {
+        self.with(|r| r.observe(name, v));
+    }
+
+    pub fn set_process_name(&self, pid: u32, name: impl Into<String>) {
+        let name = name.into();
+        self.with(|r| {
+            r.proc_names.insert(pid, name);
+        });
+    }
+
+    pub fn set_thread_name(&self, pid: u32, tid: u32, name: &'static str) {
+        self.with(|r| {
+            r.thread_names.insert((pid, tid), name);
+        });
+    }
+
+    pub fn span_count(&self) -> usize {
+        self.with(|r| r.span_count())
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.with(|r| r.dropped())
+    }
+
+    pub fn counter(&self, name: &str) -> f64 {
+        self.with(|r| r.counter(name))
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.with(|r| r.gauge(name))
+    }
+
+    /// Export the whole recording as a Chrome trace-event JSON document
+    /// (the `--trace-out` artifact).
+    pub fn chrome_trace(&self) -> Json {
+        self.with(|r| r.chrome_trace())
+    }
+
+    /// Export counters/gauges/histograms as Prometheus-style text.
+    pub fn prometheus_text(&self) -> String {
+        self.with(|r| r.prometheus_text())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn ev(t: f64, name: &'static str) -> SpanEvent {
+        SpanEvent { t, kind: SpanKind::Instant, pid: 0, tid: 0, name, attrs: Vec::new() }
+    }
+
+    #[test]
+    fn ring_drops_oldest_deterministically() {
+        let tr = Trace::with_capacity(3);
+        for (i, name) in ["a", "b", "c", "d", "e"].iter().enumerate() {
+            tr.with(|r| r.push(ev(i as f64, name)));
+        }
+        assert_eq!(tr.span_count(), 3);
+        assert_eq!(tr.dropped(), 2);
+        let names: Vec<&str> = tr.with(|r| r.spans().map(|e| e.name).collect());
+        assert_eq!(names, ["c", "d", "e"]);
+        // The drop count is surfaced in both exporters.
+        assert!(tr.prometheus_text().contains("obs_dropped_spans_total 2"));
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_through_util_json() {
+        let tr = Trace::new();
+        tr.set_process_name(1, "job0");
+        tr.set_thread_name(1, lane::MAIN, "phase");
+        tr.begin(0.5, 1, lane::MAIN, "phase.compute", vec![("iter", 3usize.into())]);
+        tr.end(1.25, 1, lane::MAIN, "phase.compute");
+        tr.instant(1.25, 0, lane::QOS, "qos.admit", vec![("job", 0usize.into())]);
+        let doc = tr.chrome_trace();
+        let text = doc.to_pretty_string();
+        let parsed = json::parse(&text).expect("exporter emits valid JSON");
+        assert_eq!(parsed, doc, "chrome trace must round-trip byte-faithfully");
+        // Structural spot checks: phases, ts scaling, instant scope.
+        assert!(text.contains("\"ph\": \"B\""));
+        assert!(text.contains("\"ph\": \"E\""));
+        assert!(text.contains("\"ph\": \"M\""));
+        assert!(text.contains("\"ts\": 500000"));
+        assert!(text.contains("\"s\": \"t\""));
+        assert!(text.contains("displayTimeUnit"));
+    }
+
+    #[test]
+    fn export_is_byte_deterministic() {
+        let build = || {
+            let tr = Trace::new();
+            tr.add("sim_events_total", 7.0);
+            tr.gauge_set("sched_queue_depth", 2.0);
+            tr.observe("flush_blocked_s", 0.25);
+            tr.observe("flush_blocked_s", 3.0);
+            tr.begin(0.0, 0, 0, "x", Vec::new());
+            tr.end(2.0, 0, 0, "x");
+            (tr.chrome_trace().to_pretty_string(), tr.prometheus_text())
+        };
+        assert_eq!(build(), build());
+    }
+
+    #[test]
+    fn prometheus_text_shape() {
+        let tr = Trace::new();
+        tr.add("a_total", 2.0);
+        tr.add("a_total", 1.0);
+        tr.gauge_set("g", 5.5);
+        tr.observe("h", 1.5);
+        let text = tr.prometheus_text();
+        assert!(text.contains("# TYPE a_total counter\na_total 3\n"));
+        assert!(text.contains("# TYPE g gauge\ng 5.5\n"));
+        // 1.5 lands in the [1, 2) bucket -> le = 2.
+        assert!(text.contains("h_bucket{le=\"2\"} 1\n"));
+        assert!(text.contains("h_bucket{le=\"+Inf\"} 1\n"));
+        assert!(text.contains("h_count 1\n"));
+        assert_eq!(tr.counter("a_total"), 3.0);
+        assert_eq!(tr.gauge("g"), Some(5.5));
+        assert_eq!(tr.gauge("missing"), None);
+    }
+}

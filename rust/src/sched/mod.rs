@@ -339,6 +339,13 @@ pub struct FleetConfig {
     /// default (the oversubscription property tests read it); service
     /// mode turns it off so memory stays bounded over 10^6 allocations.
     pub track_allocations: bool,
+    /// Observability sink ([`crate::obs::Trace`], DESIGN.md section 17):
+    /// installed into the engine at construction so every layer (sim,
+    /// scr, sched, qos, serve) records spans and metrics on the virtual
+    /// clock.  None (the default) disables all recording — untraced
+    /// fleet runs stay byte-identical to the pre-observability
+    /// scheduler, pinned by `rust/tests/integration_obs.rs`.
+    pub trace: Option<crate::obs::Trace>,
 }
 
 /// Fraction of the backplane capacity grantable as QoS floors under
@@ -360,6 +367,7 @@ impl Default for FleetConfig {
             resilience: ResiliencePolicy::Reactive,
             reserve_depth: usize::MAX,
             track_allocations: true,
+            trace: None,
         }
     }
 }
@@ -568,7 +576,7 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
-    pub fn new(m: Machine, cfg: FleetConfig) -> Self {
+    pub fn new(mut m: Machine, cfg: FleetConfig) -> Self {
         let mut failures = match (&cfg.failure_plan, cfg.mtbf_node) {
             (Some(plan), _) => plan.at_times.clone(),
             (None, Some(mtbf)) => {
@@ -600,6 +608,17 @@ impl Scheduler {
             p
         });
         let health = HealthMonitor::new(m.nodes.len());
+        // Install the observability sink into the engine before anything
+        // records; pid 0 is the system process, with one lane per
+        // subsystem (jobs get their own processes at submit).
+        if let Some(tr) = &cfg.trace {
+            m.sim.set_trace(tr.clone());
+            tr.set_process_name(0, "system");
+            tr.set_thread_name(0, crate::obs::lane::MAIN, "sched");
+            tr.set_thread_name(0, crate::obs::lane::ENGINE, "engine");
+            tr.set_thread_name(0, crate::obs::lane::SERVE, "serve");
+            tr.set_thread_name(0, crate::obs::lane::QOS, "qos");
+        }
         Self {
             m,
             cfg,
@@ -685,6 +704,22 @@ impl Scheduler {
             );
         }
         let id = self.jobs.len();
+        if let Some(tr) = self.m.sim.trace() {
+            let pid = id as u32 + 1;
+            tr.set_process_name(pid, format!("job{id} {}", spec.name));
+            tr.set_thread_name(pid, crate::obs::lane::MAIN, "phase");
+            tr.set_thread_name(pid, crate::obs::lane::SCR, "scr");
+            tr.set_thread_name(pid, crate::obs::lane::FLUSH, "flush");
+            tr.set_thread_name(pid, crate::obs::lane::IO, "io");
+            tr.instant(
+                self.m.sim.now(),
+                pid,
+                crate::obs::lane::MAIN,
+                "job.submit",
+                vec![("priority", u64::from(spec.priority).into())],
+            );
+            tr.add("sched_jobs_submitted_total", 1.0);
+        }
         let job = IterationJob {
             profile: spec.profile.clone(),
             iterations: spec.iterations,
@@ -781,11 +816,17 @@ impl Scheduler {
     /// next one, and finish/release it when it completes.
     fn advance_job(&mut self, id: usize) {
         let done = {
+            // Ambient trace pid: everything the job's state machine
+            // records (phases, checkpoints, flushes) lands on its own
+            // trace process.
+            let prev = self.m.sim.set_trace_pid(id as u32 + 1);
             let job = &mut self.jobs[id];
             let JobState { exec, backend, .. } = job;
             let mut bref = backend.as_backend_ref();
             exec.advance(&mut self.m, &mut bref);
-            exec.is_done()
+            let done = exec.is_done();
+            self.m.sim.set_trace_pid(prev);
+            done
         };
         {
             // Anchor the progress clock at the last completed iteration
@@ -825,6 +866,16 @@ impl Scheduler {
         }
         self.m.release_nodes(&held, id as u64);
         self.release_grant(id);
+        if let Some(tr) = self.m.sim.trace() {
+            tr.instant(
+                now,
+                id as u32 + 1,
+                crate::obs::lane::MAIN,
+                "job.done",
+                vec![("requeues", self.jobs[id].requeues.into())],
+            );
+            tr.add("sched_jobs_finished_total", 1.0);
+        }
         self.finish_order.push(id);
         self.dispatch();
     }
@@ -834,9 +885,11 @@ impl Scheduler {
     /// without QoS or without a demand); false leaves nothing charged.
     fn try_grant(&mut self, id: usize) -> bool {
         let Some(policy) = &mut self.qos_policy else {
+            self.record_admission(id, true, false);
             return true;
         };
         let Some(d) = self.jobs[id].spec.qos else {
+            self.record_admission(id, true, false);
             return true;
         };
         // Split the aggregate floor across the fabric's core resources in
@@ -853,13 +906,39 @@ impl Scheduler {
         };
         let demand = qos::Demand { class: d.class, floors: floors.clone() };
         if !policy.try_admit(id as u64, &demand) {
+            self.record_admission(id, false, true);
             return false;
         }
         for (r, g) in floors {
             self.m.sim.add_class_floor(r, d.class, g);
         }
         self.jobs[id].granted = true;
+        self.record_admission(id, true, true);
         true
+    }
+
+    /// Record a QoS admission verdict on the system process' qos lane.
+    /// Every dispatch admission check records — including the trivial
+    /// no-policy / no-demand admits (`demanded` 0) — so a fleet trace
+    /// always carries the admission story.
+    fn record_admission(&self, id: usize, admitted: bool, demanded: bool) {
+        if let Some(tr) = self.m.sim.trace() {
+            let now = self.m.sim.now();
+            tr.with(|r| {
+                r.add(
+                    if admitted { "qos_admits_total" } else { "qos_rejects_total" },
+                    1.0,
+                );
+                r.push(crate::obs::SpanEvent {
+                    t: now,
+                    kind: crate::obs::SpanKind::Instant,
+                    pid: 0,
+                    tid: crate::obs::lane::QOS,
+                    name: if admitted { "qos.admit" } else { "qos.reject" },
+                    attrs: vec![("job", id.into()), ("demanded", u64::from(demanded).into())],
+                });
+            });
+        }
     }
 
     /// Refund job `id`'s QoS grant (completion or requeue) and remove
@@ -897,11 +976,23 @@ impl Scheduler {
             };
             let id = owner as usize;
             self.failures_injected += 1;
+            if let Some(tr) = self.m.sim.trace() {
+                tr.add("sched_failures_total", 1.0);
+                tr.instant(
+                    self.m.sim.now(),
+                    0,
+                    crate::obs::lane::MAIN,
+                    "sched.failure",
+                    vec![("node", victim.into()), ("job", id.into())],
+                );
+            }
             {
+                let prev = self.m.sim.set_trace_pid(id as u32 + 1);
                 let job = &mut self.jobs[id];
                 let JobState { exec, backend, .. } = job;
                 let mut bref = backend.as_backend_ref();
                 exec.handle_failure(&mut self.m, &mut bref, victim);
+                self.m.sim.set_trace_pid(prev);
             }
             self.requeue(id);
         }
@@ -980,12 +1071,24 @@ impl Scheduler {
         if self.jobs[id].status != JobStatus::Running {
             return;
         }
+        if let Some(tr) = self.m.sim.trace() {
+            tr.add("sched_migrations_total", 1.0);
+            tr.instant(
+                self.m.sim.now(),
+                0,
+                crate::obs::lane::MAIN,
+                "sched.migrate",
+                vec![("node", suspect.into()), ("job", id.into())],
+            );
+        }
         {
+            let prev = self.m.sim.set_trace_pid(id as u32 + 1);
             let job = &mut self.jobs[id];
             job.migrated = true;
             let JobState { exec, backend, .. } = job;
             let mut bref = backend.as_backend_ref();
             exec.migrate_checkpoint(&mut self.m, &mut bref);
+            self.m.sim.set_trace_pid(prev);
         }
         self.migrations += 1;
         self.requeue(id);
@@ -993,11 +1096,23 @@ impl Scheduler {
 
     fn requeue(&mut self, id: usize) {
         let now = self.m.sim.now();
+        if let Some(tr) = self.m.sim.trace() {
+            tr.add("sched_requeues_total", 1.0);
+            tr.instant(
+                now,
+                0,
+                crate::obs::lane::MAIN,
+                "sched.requeue",
+                vec![("job", id.into())],
+            );
+        }
         let (held, seg) = {
             let job = &mut self.jobs[id];
             // unbind cancels any phase op still in flight (§11.4): the
             // rolled-back attempt's flows stop contending at kill time.
+            let prev = self.m.sim.set_trace_pid(id as u32 + 1);
             let released = job.exec.unbind(&mut self.m);
+            self.m.sim.set_trace_pid(prev);
             debug_assert_eq!(released, job.held);
             let span_nodes = job.held.len();
             job.node_seconds += span_nodes as f64 * (now - job.bind_at);
@@ -1156,6 +1271,21 @@ impl Scheduler {
                 StartResult::NoNodes => {}
             }
         }
+        if let Some(tr) = self.m.sim.trace() {
+            let depth = self.queue.len();
+            tr.with(|r| {
+                r.add("sched_dispatch_rounds_total", 1.0);
+                r.gauge_set("sched_queue_depth", depth as f64);
+                r.push(crate::obs::SpanEvent {
+                    t: now,
+                    kind: crate::obs::SpanKind::Instant,
+                    pid: 0,
+                    tid: crate::obs::lane::MAIN,
+                    name: "sched.dispatch_round",
+                    attrs: vec![("queued", depth.into()), ("started", started.into())],
+                });
+            });
+        }
         started
     }
 
@@ -1213,9 +1343,11 @@ impl Scheduler {
             // Landed after a proactive evacuation: charge the
             // state-transfer restore on the new node set before resuming.
             job.migrated = false;
+            let prev = self.m.sim.set_trace_pid(id as u32 + 1);
             let JobState { exec, backend, .. } = job;
             let mut bref = backend.as_backend_ref();
             exec.migrate_restore(&mut self.m, &mut bref);
+            self.m.sim.set_trace_pid(prev);
         }
         let key = self.queue_key(id);
         self.queue.remove(&key);

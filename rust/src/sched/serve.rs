@@ -367,6 +367,16 @@ impl Scheduler {
                 next_arr += 1;
                 let spec = specs.next().expect("one spec per arrival");
                 if self.queue.len() >= scfg.queue_cap {
+                    if let Some(tr) = self.m.sim.trace() {
+                        tr.add("serve_rejected_total", 1.0);
+                        tr.instant(
+                            now,
+                            0,
+                            crate::obs::lane::SERVE,
+                            "serve.reject",
+                            vec![("class", u64::from(spec.priority.min(2)).into())],
+                        );
+                    }
                     rejects.push((at, spec.priority.min(2)));
                     continue;
                 }
@@ -460,11 +470,11 @@ impl Scheduler {
                 let (p50, p99, max) = if waits.is_empty() {
                     (0.0, 0.0, 0.0)
                 } else {
-                    (
-                        metrics::p50(waits),
-                        metrics::p99(waits),
-                        waits.iter().cloned().fold(0.0f64, f64::max),
-                    )
+                    // One sort serves all three statistics
+                    // ([`metrics::Summary`]), bit-identical to the old
+                    // per-call nearest-rank `percentile`.
+                    let mut s = metrics::Summary::of(waits);
+                    (s.p50(), s.p99(), s.max())
                 };
                 ClassReport {
                     class: c,
@@ -506,8 +516,18 @@ impl Scheduler {
                 }
             }
             let p99_wait_s = [0, 1, 2].map(|c: usize| {
-                (!waits[c].is_empty()).then(|| metrics::p99(&waits[c]))
+                (!waits[c].is_empty()).then(|| metrics::Summary::of(&waits[c]).p99())
             });
+            if let Some(tr) = self.m.sim.trace() {
+                tr.add("serve_windows_total", 1.0);
+                tr.instant(
+                    t0 + t1_s,
+                    0,
+                    crate::obs::lane::SERVE,
+                    "serve.window",
+                    vec![("arrivals", arrivals_n.into()), ("rejected", rejected_n.into())],
+                );
+            }
             windows.push(WindowReport {
                 t0_s,
                 t1_s,

@@ -286,6 +286,28 @@ impl Scr {
             nam_index,
         };
         self.next_id += 1;
+        // Trace: open the checkpoint slice on the owning job's SCR lane
+        // (closed by `checkpoint_commit`).  Pure observation — recorded
+        // after every flow of the checkpoint has been issued.
+        if let Some(tr) = m.sim.trace() {
+            tr.with(|r| {
+                r.add("scr_ckpts_begun_total", 1.0);
+                r.push(crate::obs::SpanEvent {
+                    t: issued_at,
+                    kind: crate::obs::SpanKind::Begin,
+                    pid: m.sim.trace_pid(),
+                    tid: crate::obs::lane::SCR,
+                    name: "scr.ckpt",
+                    attrs: vec![
+                        ("id", record.id.into()),
+                        ("strategy", record.strategy.name().into()),
+                        ("nodes", record.nodes.len().into()),
+                        ("bytes_per_node", record.bytes_per_node.into()),
+                        ("iter", record.iter.into()),
+                    ],
+                });
+            });
+        }
         Ok(PendingCkpt { op, record, issued_at, network_bytes })
     }
 
@@ -302,6 +324,23 @@ impl Scr {
         let blocked = done_at - pending.issued_at;
         let payload = pending.record.nodes.len() as f64 * pending.record.bytes_per_node;
         let network_bytes = pending.network_bytes;
+        // Trace: close the slice opened at begin (works through `&sim` —
+        // the recorder has interior mutability precisely so commit, which
+        // only holds `&Machine`, can record).
+        if let Some(tr) = m.sim.trace() {
+            tr.with(|r| {
+                r.add("scr_ckpts_committed_total", 1.0);
+                r.observe("scr_ckpt_blocked_s", blocked);
+                r.push(crate::obs::SpanEvent {
+                    t: done_at,
+                    kind: crate::obs::SpanKind::End,
+                    pid: m.sim.trace_pid(),
+                    tid: crate::obs::lane::SCR,
+                    name: "scr.ckpt",
+                    attrs: Vec::new(),
+                });
+            });
+        }
         self.db.push(pending.record);
         CkptReport {
             blocked,
@@ -388,6 +427,24 @@ impl Scr {
                 self.xor_rebuild(m, nodes, f, rec.bytes_per_node, rec.nam_index)
             }
         };
+        if let Some(tr) = m.sim.trace() {
+            tr.with(|r| {
+                r.add("scr_restarts_total", 1.0);
+                r.observe("scr_restart_s", end - t0);
+                r.push(crate::obs::SpanEvent {
+                    t: end,
+                    kind: crate::obs::SpanKind::Instant,
+                    pid: m.sim.trace_pid(),
+                    tid: crate::obs::lane::SCR,
+                    name: "scr.restart",
+                    attrs: vec![
+                        ("strategy", rec.strategy.name().into()),
+                        ("iter", rec.iter.into()),
+                        ("rebuilt", u64::from(failed_node.is_some()).into()),
+                    ],
+                });
+            });
+        }
         Ok(RestartReport { time: end - t0, rebuilt: failed_node.is_some(), iter: rec.iter })
     }
 

@@ -242,6 +242,9 @@ impl MultiLevelScr {
         self.stats.l1_count += 1;
         self.stats.l1_time += r1.blocked;
         self.l1_since_l2 += 1;
+        if let Some(tr) = m.sim.trace() {
+            tr.add("scr_l1_ckpts_total", 1.0);
+        }
 
         // L2: every l2_every L1s.
         if self.l1_since_l2 >= self.config.l2_every {
@@ -252,6 +255,17 @@ impl MultiLevelScr {
                 // background and return to compute.
                 self.settle_flush(m);
                 let pending = self.l2.checkpoint_begin_iter(m, nodes, bytes_per_node, iter)?;
+                // Trace: the InFlight window opens on the flush lane
+                // (closed by `commit_flush` or `abort_flush`).
+                if let Some(tr) = m.sim.trace() {
+                    tr.begin(
+                        pending.issued_at(),
+                        m.sim.trace_pid(),
+                        crate::obs::lane::FLUSH,
+                        "flush.l2",
+                        vec![("iter", iter.into()), ("bytes_per_node", bytes_per_node.into())],
+                    );
+                }
                 self.flush = FlushState::InFlight {
                     pending,
                     iter,
@@ -262,6 +276,9 @@ impl MultiLevelScr {
                 let r2 = self.l2.checkpoint_iter(m, nodes, bytes_per_node, iter)?;
                 self.stats.l2_count += 1;
                 self.stats.l2_time += r2.blocked;
+                if let Some(tr) = m.sim.trace() {
+                    tr.add("scr_l2_promotions_total", 1.0);
+                }
                 self.l2_since_l3 += 1;
                 if self.l2_since_l3 >= self.config.l3_every {
                     self.issue_l3(m, nodes, bytes_per_node, iter);
@@ -333,6 +350,25 @@ impl MultiLevelScr {
         self.stats.l2_time += blocked;
         self.stats.flush_blocked += blocked;
         self.stats.flush_overlap += (r2.blocked - blocked).max(0.0);
+        // Trace: InFlight -> Settled closes the flush-lane window at the
+        // commit point (state-machine time, not op-completion time).
+        if let Some(tr) = m.sim.trace() {
+            let pid = m.sim.trace_pid();
+            let now = m.sim.now();
+            tr.with(|r| {
+                r.add("scr_l2_promotions_total", 1.0);
+                r.observe("scr_flush_blocked_s", blocked);
+                r.observe("scr_flush_overlap_s", (r2.blocked - blocked).max(0.0));
+                r.push(crate::obs::SpanEvent {
+                    t: now,
+                    kind: crate::obs::SpanKind::End,
+                    pid,
+                    tid: crate::obs::lane::FLUSH,
+                    name: "flush.l2",
+                    attrs: Vec::new(),
+                });
+            });
+        }
         self.l2_since_l3 += 1;
         if self.l2_since_l3 >= self.config.l3_every {
             self.issue_l3(m, &nodes, bytes_per_node, iter);
@@ -347,11 +383,47 @@ impl MultiLevelScr {
     /// other tenants now, not drain unobserved to a phantom finish
     /// (DESIGN.md section 12.4).
     fn abort_flush(&mut self, m: &mut Machine) {
-        if let FlushState::InFlight { pending, .. } =
+        if let FlushState::InFlight { pending, iter, .. } =
             std::mem::replace(&mut self.flush, FlushState::Settled)
         {
             m.sim.cancel_op(&pending.op);
             self.stats.flush_aborted += 1;
+            // Trace: close the flush-lane window and mark the abort.
+            // The discarded pending record also leaves an `scr.ckpt`
+            // slice open (its begin was recorded by
+            // `checkpoint_begin_iter`, and it will never commit) — close
+            // it here so Begin/End events stay balanced.
+            if let Some(tr) = m.sim.trace() {
+                let pid = m.sim.trace_pid();
+                let now = m.sim.now();
+                tr.with(|r| {
+                    r.add("scr_flush_aborts_total", 1.0);
+                    r.push(crate::obs::SpanEvent {
+                        t: now,
+                        kind: crate::obs::SpanKind::End,
+                        pid,
+                        tid: crate::obs::lane::SCR,
+                        name: "scr.ckpt",
+                        attrs: Vec::new(),
+                    });
+                    r.push(crate::obs::SpanEvent {
+                        t: now,
+                        kind: crate::obs::SpanKind::End,
+                        pid,
+                        tid: crate::obs::lane::FLUSH,
+                        name: "flush.l2",
+                        attrs: Vec::new(),
+                    });
+                    r.push(crate::obs::SpanEvent {
+                        t: now,
+                        kind: crate::obs::SpanKind::Instant,
+                        pid,
+                        tid: crate::obs::lane::FLUSH,
+                        name: "flush.abort",
+                        attrs: vec![("iter", iter.into())],
+                    });
+                });
+            }
         }
     }
 
@@ -370,6 +442,24 @@ impl MultiLevelScr {
         self.l3_iter = iter;
         // Only the issue cost blocks; the transfer is background.
         self.stats.l3_blocked += m.sim.now() - t3;
+        if let Some(tr) = m.sim.trace() {
+            let pid = m.sim.trace_pid();
+            tr.with(|r| {
+                r.add("scr_l3_flushes_total", 1.0);
+                r.push(crate::obs::SpanEvent {
+                    t: t3,
+                    kind: crate::obs::SpanKind::Instant,
+                    pid,
+                    tid: crate::obs::lane::FLUSH,
+                    name: "flush.l3",
+                    attrs: vec![
+                        ("iter", iter.into()),
+                        ("nodes", nodes.len().into()),
+                        ("bytes_per_node", bytes_per_node.into()),
+                    ],
+                });
+            });
+        }
     }
 
     /// Restart after a failure from the cheapest level that covers it,

@@ -400,6 +400,30 @@ pub struct Sim {
     class_weight: ClassWeights,
     /// Shaping ceilings: (resource, class index) -> shadow resource.
     ceilings: HashMap<(usize, usize), ResId>,
+    /// Observability recorder (None = tracing disabled; every recording
+    /// site is gated on it, so untraced runs pay one branch).  Workers
+    /// never see this: engine counters accumulate in the core and are
+    /// delta-flushed serially (see [`Sim::flush_events`]).
+    obs: Option<crate::obs::Trace>,
+    /// Ambient trace process id spans are attributed to (0 = system;
+    /// the fleet scheduler sets `job + 1` around job execution, exactly
+    /// like the ambient `issue_class`).
+    obs_pid: u32,
+    /// Engine-counter values already flushed to the recorder.
+    obs_snap: ObsSnap,
+}
+
+/// Snapshot of the core's monotone engine counters at the last trace
+/// flush; [`Sim::flush_events`] pushes only the delta since, so the
+/// recorder sees each event exactly once regardless of how regions and
+/// waits interleave.
+#[derive(Debug, Clone, Copy, Default)]
+struct ObsSnap {
+    events: u64,
+    activations: u64,
+    finishes: u64,
+    refills: u64,
+    refill_size_log2: [u64; 32],
 }
 
 impl Default for Sim {
@@ -414,6 +438,9 @@ impl Default for Sim {
             issue_class: TrafficClass::default(),
             class_weight: ClassWeights::default(),
             ceilings: HashMap::new(),
+            obs: None,
+            obs_pid: 0,
+            obs_snap: ObsSnap::default(),
         }
     }
 }
@@ -468,6 +495,84 @@ impl Sim {
             EVENTS_TOTAL.fetch_add(delta, Ordering::Relaxed);
             self.events_flushed = self.core.events;
         }
+        // Trace flush rides the same serial boundary: push the engine
+        // counters' delta since the last flush into the recorder.  The
+        // counters accumulate inside the (possibly worker-owned) core,
+        // so workers never lock the recorder and the flushed totals are
+        // identical for every thread count.
+        if let Some(tr) = &self.obs {
+            let c = &self.core;
+            let s = &mut self.obs_snap;
+            if c.events != s.events
+                || c.activations != s.activations
+                || c.finishes != s.finishes
+                || c.refills != s.refills
+            {
+                tr.with(|r| {
+                    if c.events > s.events {
+                        r.add("sim_events_total", (c.events - s.events) as f64);
+                    }
+                    if c.activations > s.activations {
+                        r.add("sim_activations_total", (c.activations - s.activations) as f64);
+                    }
+                    if c.finishes > s.finishes {
+                        r.add("sim_finishes_total", (c.finishes - s.finishes) as f64);
+                    }
+                    if c.refills > s.refills {
+                        r.add("sim_refills_total", (c.refills - s.refills) as f64);
+                    }
+                    // Refill component-size histogram: the core buckets by
+                    // floor(log2) (index k = sizes in [2^(k-1), 2^k)), which
+                    // maps onto the LogHist bucket holding that power of two.
+                    let h = r.hist_mut("sim_refill_component_flows");
+                    for i in 0..32 {
+                        let d = c.refill_size_log2[i] - s.refill_size_log2[i];
+                        if d > 0 {
+                            let b = if i == 0 { 0 } else { (31 + i).min(63) };
+                            h.buckets[b] += d;
+                            h.count += d;
+                        }
+                    }
+                });
+                *s = ObsSnap {
+                    events: c.events,
+                    activations: c.activations,
+                    finishes: c.finishes,
+                    refills: c.refills,
+                    refill_size_log2: c.refill_size_log2,
+                };
+            }
+        }
+    }
+
+    /// Install an observability recorder: from here on, the engine and
+    /// every instrumented layer above record spans/counters into it on
+    /// the **virtual** clock (DESIGN.md section 17).  Recording is pure
+    /// observation — it never perturbs simulation state — and costs one
+    /// branch per site when no trace is installed.
+    pub fn set_trace(&mut self, tr: crate::obs::Trace) {
+        self.obs = Some(tr);
+    }
+
+    /// The installed trace handle, if tracing is enabled.  `&self`
+    /// access (the handle records through interior mutability), so
+    /// immutable-machine contexts can record too.
+    pub fn trace(&self) -> Option<&crate::obs::Trace> {
+        self.obs.as_ref()
+    }
+
+    /// Set the ambient trace process id (0 = system, `job + 1` = fleet
+    /// job) and return the previous one — the same scoped-override
+    /// pattern as [`Sim::set_issue_class`].  I/O layers read it via
+    /// [`Sim::trace_pid`] so their spans land on the owning job's track
+    /// without the layers knowing about jobs.
+    pub fn set_trace_pid(&mut self, pid: u32) -> u32 {
+        std::mem::replace(&mut self.obs_pid, pid)
+    }
+
+    /// Ambient trace process id spans are currently attributed to.
+    pub fn trace_pid(&self) -> u32 {
+        self.obs_pid
     }
 
     /// Current virtual time in seconds.

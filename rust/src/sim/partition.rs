@@ -86,6 +86,18 @@ pub(super) struct ComponentState {
     /// Flow count of the most recent refill's closure (0 when the last
     /// cancellation found no contenders and skipped the walk).
     pub(super) last_refill_flows: usize,
+    /// Event-kind counters for the trace recorder (DESIGN.md §17):
+    /// flows activated, flows finished, refills performed.  They live in
+    /// the ownable core so workers count locally; [`super::Sim`] merges
+    /// them by summation and delta-flushes serially, keeping totals
+    /// thread-count independent.
+    pub(super) activations: u64,
+    pub(super) finishes: u64,
+    pub(super) refills: u64,
+    /// Refill component-size histogram: bucket `k >= 1` counts refills
+    /// whose closure touched `[2^(k-1), 2^k)` flows (sizes >= 2^30 fold
+    /// into the last bucket; bucket 0 = empty closures).
+    pub(super) refill_size_log2: [u64; 32],
 }
 
 impl ComponentState {
@@ -157,6 +169,7 @@ impl ComponentState {
                 fl.state = FlowState::Done;
                 fl.finished_at = self.now;
                 self.finished_step.push(f);
+                self.finishes += 1;
             } else {
                 fl.state = FlowState::Active;
                 fl.touched_at = self.now;
@@ -164,6 +177,7 @@ impl ComponentState {
                     self.res_flows[r.0].push(f);
                 }
                 self.dirty.push(f);
+                self.activations += 1;
             }
         }
 
@@ -195,6 +209,7 @@ impl ComponentState {
             fl.state = FlowState::Done;
             fl.finished_at = self.now;
             self.finished_step.push(f);
+            self.finishes += 1;
             // One incidence entry is removed per route occurrence; the
             // O(flows-on-resource) scan is dominated by the refill that
             // must visit the same component anyway.
@@ -389,6 +404,10 @@ impl ComponentState {
             self.peak_component = self.comp_flows.len();
         }
         self.last_refill_flows = self.comp_flows.len();
+        self.refills += 1;
+        let n = self.comp_flows.len();
+        let bucket = if n == 0 { 0 } else { (usize::BITS - n.leading_zeros()).min(31) as usize };
+        self.refill_size_log2[bucket] += 1;
 
         let mut comp_floored = false;
         for &r in &self.scratch_touched {
@@ -617,6 +636,7 @@ impl Sim {
     /// `--threads 1`) it runs serially on the monolithic core — the
     /// exact pre-partition code path, bit for bit.
     pub(super) fn run_region(&mut self, target: Option<SimTime>) {
+        let events0 = self.core.events;
         if !(self.threads > 1 && self.try_parallel_region(target)) {
             match target {
                 None => self.core.run_idle(),
@@ -624,6 +644,21 @@ impl Sim {
             }
         }
         self.flush_events();
+        // Region instant (serial context, after the counter flush): one
+        // engine-lane tick per region that processed any events, so
+        // traces show where simulated activity clusters.
+        if let Some(tr) = &self.obs {
+            let delta = self.core.events - events0;
+            if delta > 0 {
+                tr.instant(
+                    self.core.now,
+                    0,
+                    crate::obs::lane::ENGINE,
+                    "sim.region",
+                    vec![("events", delta.into())],
+                );
+            }
+        }
     }
 
     /// Run one region component-parallel; false when the live flows span
@@ -673,7 +708,23 @@ impl Sim {
                 .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
                 .collect()
         });
+        let parts_run = done.iter().map(Vec::len).sum::<usize>();
         self.merge_region(done, target);
+        // Merge barrier (serial context): workers never record, so the
+        // per-worker shard sizes surface here, once per parallel region.
+        if let Some(tr) = &self.obs {
+            tr.with(|r| {
+                r.add("sim_merge_barriers_total", 1.0);
+                r.push(crate::obs::SpanEvent {
+                    t: self.core.now,
+                    kind: crate::obs::SpanKind::Instant,
+                    pid: 0,
+                    tid: crate::obs::lane::ENGINE,
+                    name: "sim.merge",
+                    attrs: vec![("workers", nw.into()), ("components", parts_run.into())],
+                });
+            });
+        }
         true
     }
 
@@ -772,6 +823,12 @@ impl Sim {
                 }
                 core.events += st.events;
                 worker_events[w] += st.events;
+                core.activations += st.activations;
+                core.finishes += st.finishes;
+                core.refills += st.refills;
+                for (a, b) in core.refill_size_log2.iter_mut().zip(st.refill_size_log2.iter()) {
+                    *a += b;
+                }
                 if st.peak_component > core.peak_component {
                     core.peak_component = st.peak_component;
                 }

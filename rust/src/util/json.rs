@@ -50,6 +50,14 @@ impl Json {
         }
     }
 
+    /// The boolean payload, if this is a `Bool`.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     /// The numeric payload truncated to `usize` (manifest dims/shapes).
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)

@@ -1,0 +1,218 @@
+//! Observability integration (ISSUE 10): the virtual-clock trace is
+//! byte-deterministic for a fixed seed, zero-perturbation (reports are
+//! byte-identical traced vs untraced), bounded (ring cap drops oldest,
+//! deterministically), and covers every instrumented layer.
+
+use deeper::bench::{self, QosBenchConfig};
+use deeper::obs::Trace;
+use deeper::sched::{
+    self, run_fleet, serve_fleet, synthetic_jobs, ArrivalSpec, FleetConfig, ServeConfig,
+};
+use deeper::util::json::{self, Json};
+
+/// A traced fleet config exercising every system lane: qos admission,
+/// failure injection (hence restart/requeue paths) and the multilevel
+/// checkpoint mix that `synthetic_jobs` draws.
+fn fleet_cfg(trace: Option<Trace>) -> FleetConfig {
+    FleetConfig { qos: true, mtbf_node: Some(4000.0), trace, ..FleetConfig::default() }
+}
+
+fn fleet_json(jobs: usize, trace: Option<Trace>) -> String {
+    let cfg = fleet_cfg(trace);
+    let specs = synthetic_jobs(jobs, cfg.seed);
+    run_fleet(specs, cfg).unwrap().to_json().to_pretty_string()
+}
+
+/// The zero-perturbation gate, fleet side: installing a trace must not
+/// change a single byte of the report.  Recording observes sim state but
+/// never advances the clock, issues flows, or feeds back into policy.
+#[test]
+fn fleet_report_is_byte_identical_traced_vs_untraced() {
+    let tr = Trace::new();
+    let traced = fleet_json(6, Some(tr.clone()));
+    let untraced = fleet_json(6, None);
+    assert_eq!(traced, untraced, "tracing must not perturb the fleet report");
+    assert!(tr.span_count() > 0, "the traced run must actually record spans");
+}
+
+/// Zero-perturbation, serve side: open-arrival service mode with qos
+/// admission and tumbling windows, traced vs untraced.
+#[test]
+fn serve_report_is_byte_identical_traced_vs_untraced() {
+    let mk = |trace: Option<Trace>| ServeConfig {
+        jobs: 40,
+        arrivals: ArrivalSpec::Poisson { rate_hz: 0.5 },
+        queue_cap: 4,
+        fleet: fleet_cfg(trace),
+        ..ServeConfig::default()
+    };
+    let tr = Trace::new();
+    let traced = serve_fleet(mk(Some(tr.clone()))).unwrap().to_json().to_pretty_string();
+    let untraced = serve_fleet(mk(None)).unwrap().to_json().to_pretty_string();
+    assert_eq!(traced, untraced, "tracing must not perturb the serve report");
+    assert!(tr.counter("serve_windows_total") > 0.0);
+}
+
+/// Zero-perturbation, bench side: BENCH_qos.json is a committed
+/// trajectory artifact, so its bytes must not depend on whether the
+/// measuring run carried a trace.
+#[test]
+fn qos_bench_artifact_is_byte_identical_traced_vs_untraced() {
+    let mk = |trace: Option<Trace>| QosBenchConfig {
+        iterations: 4,
+        trace,
+        ..QosBenchConfig::default()
+    };
+    let (_, traced) = bench::qos_report(&mk(Some(Trace::new())));
+    let (_, untraced) = bench::qos_report(&mk(None));
+    assert_eq!(
+        traced.to_pretty_string(),
+        untraced.to_pretty_string(),
+        "tracing must not perturb BENCH_qos.json"
+    );
+}
+
+/// The `--trace-out` acceptance property: two identical-seed traced
+/// fleet runs export byte-identical Chrome JSON and Prometheus text —
+/// every timestamp is virtual, every map is ordered.
+#[test]
+fn fleet_trace_is_byte_deterministic_across_runs() {
+    let run = || {
+        let tr = Trace::new();
+        let _ = fleet_json(4, Some(tr.clone()));
+        (tr.chrome_trace().to_pretty_string(), tr.prometheus_text())
+    };
+    let (a_json, a_prom) = run();
+    let (b_json, b_prom) = run();
+    assert_eq!(a_json, b_json, "chrome trace must be byte-deterministic");
+    assert_eq!(a_prom, b_prom, "prometheus text must be byte-deterministic");
+}
+
+/// Golden-shape check on a 2-job fleet at the default seed: the trace is
+/// valid Chrome trace-event JSON (round-trips through the repo's own
+/// parser) and covers spans from the sim engine, the scheduler, scr and
+/// qos admission, with jobs as processes.
+#[test]
+fn two_job_fleet_trace_covers_all_layers() {
+    let tr = Trace::new();
+    let _ = fleet_json(2, Some(tr.clone()));
+    let text = tr.chrome_trace().to_pretty_string();
+    let doc = json::parse(&text).expect("chrome trace parses with util::json");
+
+    let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    let names: Vec<&str> = events
+        .iter()
+        .filter_map(|e| e.get("name").and_then(Json::as_str))
+        .collect();
+    // One representative span per instrumented layer.
+    for needed in [
+        "sim.region",           // engine: closed-horizon region ticks
+        "sched.dispatch_round", // scheduler: dispatch loop
+        "job.submit",           // scheduler: job lifecycle
+        "job.done",
+        "phase.compute",        // driver: lifecycle slices
+        "scr.ckpt",             // scr: checkpoint begin/commit
+        "qos.admit",            // qos: admission verdicts
+    ] {
+        assert!(names.contains(&needed), "trace must contain {needed}: got {names:?}");
+    }
+    // Jobs render as their own trace processes (pid = job + 1), named.
+    let pids: Vec<f64> =
+        events.iter().filter_map(|e| e.get("pid").and_then(Json::as_f64)).collect();
+    assert!(pids.contains(&0.0) && pids.contains(&1.0) && pids.contains(&2.0));
+    assert!(text.contains("process_name") && text.contains("job0"));
+    // Begin/End balance per (pid, name): every slice opened is closed.
+    let mut open = std::collections::BTreeMap::new();
+    for e in events {
+        let ph = e.get("ph").and_then(Json::as_str).unwrap_or("");
+        let key = (
+            e.get("pid").and_then(Json::as_f64).unwrap_or(-1.0) as i64,
+            e.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+        );
+        match ph {
+            "B" => *open.entry(key).or_insert(0i64) += 1,
+            "E" => *open.entry(key).or_insert(0i64) -= 1,
+            _ => {}
+        }
+    }
+    assert!(
+        open.values().all(|&n| n == 0),
+        "unbalanced begin/end slices: {open:?}"
+    );
+    // Counters flushed from the engine agree with what ran.
+    assert!(tr.counter("sim_events_total") > 0.0);
+    assert!(tr.counter("sched_jobs_finished_total") == 2.0);
+}
+
+/// Boundedness: a tiny ring cap drops the *oldest* events, counts them,
+/// and stays deterministic — two identical runs drop identically.
+#[test]
+fn ring_cap_drops_oldest_deterministically_under_load() {
+    let run = || {
+        let tr = Trace::with_capacity(64);
+        let _ = fleet_json(3, Some(tr.clone()));
+        (tr.dropped(), tr.span_count(), tr.chrome_trace().to_pretty_string())
+    };
+    let (dropped_a, count_a, json_a) = run();
+    let (dropped_b, _, json_b) = run();
+    assert!(dropped_a > 0, "a 64-slot ring must overflow on a fleet run");
+    assert_eq!(count_a, 64, "ring holds exactly its capacity");
+    assert_eq!(dropped_a, dropped_b, "drop count must be deterministic");
+    assert_eq!(json_a, json_b, "the surviving tail must be deterministic");
+    // The drop count is surfaced in the metrics export.
+    let full = Trace::new();
+    let _ = fleet_json(3, Some(full.clone()));
+    assert_eq!(full.dropped(), 0);
+    assert!(full.prometheus_text().contains("obs_dropped_spans_total 0"));
+}
+
+/// `repro bench obs` artifact: schema fields present, the traced arm
+/// recorded spans, and the embedded zero-perturbation verdict holds.
+#[test]
+fn obs_bench_artifact_schema_and_verdict() {
+    let cfg = bench::ObsBenchConfig { jobs: 3, repeats: 1, ..bench::ObsBenchConfig::default() };
+    let (exhibits, jsonv) = bench::obs_report(&cfg);
+    assert!(!exhibits.is_empty());
+    let text = jsonv.to_pretty_string();
+    let doc = json::parse(&text).expect("BENCH_obs.json parses");
+    assert_eq!(doc.get("bench").and_then(Json::as_str), Some("obs"));
+    assert_eq!(doc.get("schema_version").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(
+        doc.get("report_identical_traced_vs_untraced").and_then(Json::as_bool),
+        Some(true),
+        "tracing must not perturb the measured fleet report"
+    );
+    assert!(doc.get("spans").and_then(Json::as_f64).unwrap_or(0.0) > 0.0);
+    assert!(doc.get("wall_s_traced").and_then(Json::as_f64).is_some());
+    assert!(doc.get("wall_s_untraced").and_then(Json::as_f64).is_some());
+}
+
+/// Threaded engines record through the same serial barriers, so the
+/// trace — not just the report — is identical across `--threads`.
+#[test]
+fn trace_is_identical_across_thread_counts() {
+    let run = |threads| {
+        let tr = Trace::new();
+        let cfg = FleetConfig { threads, ..fleet_cfg(Some(tr.clone())) };
+        let specs = synthetic_jobs(4, cfg.seed);
+        let report = sched::run_fleet(specs, cfg).unwrap().to_json().to_pretty_string();
+        (report, tr.chrome_trace().to_pretty_string())
+    };
+    let (r1, t1) = run(1);
+    let (r2, t2) = run(4);
+    assert_eq!(r1, r2, "threaded fleet reports must stay bit-identical");
+    // Worker merges add engine-lane barrier instants; everything else —
+    // every span the serial run records — must agree.  Compare after
+    // stripping the merge-only events.
+    let strip = |text: &str| {
+        let doc = json::parse(text).unwrap();
+        doc.get("traceEvents")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) != Some("sim.merge"))
+            .map(Json::to_pretty_string)
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(strip(&t1), strip(&t2), "traces must agree modulo merge barriers");
+}
